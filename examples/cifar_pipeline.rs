@@ -1,0 +1,68 @@
+//! CIFAR-10 pipeline (Table 2 / Figure 2 workload) on a conv model.
+//!
+//! Trains ResNet-20 (default; `--model vgg11` for the bigger one) with the
+//! l1 and Bl1 routines, tracing per-slice sparsity during training — the
+//! series Figure 2 plots — and prints the Table-2 style rows at the end.
+//!
+//! Conv training on the CPU backend is the slow path, so the default step
+//! counts are modest; scale `--steps` up on a real machine.
+//!
+//! Run: `cargo run --release --example cifar_pipeline -- --steps 80`
+
+use anyhow::Result;
+
+use bitslice_reram::config::{Method, RunConfig};
+use bitslice_reram::harness;
+use bitslice_reram::report;
+use bitslice_reram::runtime::{Engine, Manifest};
+use bitslice_reram::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let mut cfg = RunConfig::from_args(&args)?;
+    args.finish()?;
+    if cfg.model == "mlp" {
+        cfg.model = "resnet20".into(); // conv default for this example
+    }
+    cfg.dataset = "cifar10".into();
+    if cfg.trace_every == 0 {
+        cfg.trace_every = (cfg.steps / 20).max(1);
+    }
+    cfg.out_dir = std::path::PathBuf::from("runs/cifar");
+
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let engine = Engine::cpu()?;
+
+    let mut rows = Vec::new();
+    let mut traces = Vec::new();
+    for method in [Method::L1, Method::Bl1] {
+        let mut c = cfg.clone();
+        c.method = method;
+        let res = harness::run_training(&engine, &manifest, c, true)?;
+        traces.push((method.name().to_string(), res.trace.clone()));
+        rows.push(res.method_row());
+    }
+
+    println!(
+        "{}",
+        report::sparsity_table(
+            &format!("Table 2 (excerpt) — {} on CIFAR-10", cfg.model),
+            &rows
+        )
+    );
+
+    // Figure-2 style: show the sparsity trajectory head/tail per method.
+    println!("Figure 2 — average non-zero slice ratio during training:");
+    for (m, pts) in &traces {
+        print!("  {m}:");
+        for p in pts.iter().step_by((pts.len() / 6).max(1)) {
+            print!(" {:.1}%", p.ratios.iter().sum::<f64>() / 4.0 * 100.0);
+        }
+        println!();
+    }
+    let csv = report::fig2_csv(&traces);
+    let path = cfg.out_dir.join(format!("fig2-{}.csv", cfg.model));
+    std::fs::write(&path, csv)?;
+    println!("full series: {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! End-to-end driver (the repo's E2E validation workload).
+//!
+//! Exercises every layer of the stack on one real small workload:
+//!
+//!   1. load the AOT artifacts (L2 JAX graphs with L1 Pallas kernels)
+//!   2. train the MNIST MLP with the paper's Bl1 routine (l1 pretrain ->
+//!      bit-slice l1), logging the loss curve
+//!   3. evaluate quantized deployment accuracy
+//!   4. census the bit-slice sparsity (Table-1 row)
+//!   5. map the weights onto 128x128 ReRAM crossbars, derive the required
+//!      ADC resolutions, and print the Table-3 savings
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+//! The printed loss curve + final report are recorded in EXPERIMENTS.md.
+
+use anyhow::Result;
+
+use bitslice_reram::config::{Method, RunConfig};
+use bitslice_reram::coordinator::metrics::MetricsLog;
+use bitslice_reram::coordinator::{evaluator, Trainer};
+use bitslice_reram::data::Dataset;
+use bitslice_reram::harness;
+use bitslice_reram::report;
+use bitslice_reram::reram::ResolutionPolicy;
+use bitslice_reram::runtime::{Engine, Manifest};
+use bitslice_reram::sparsity;
+
+fn main() -> Result<()> {
+    let mut cfg = RunConfig::defaults("mlp");
+    cfg.method = Method::Bl1;
+    cfg.steps = 300;
+    cfg.pretrain_steps = 150;
+    cfg.out_dir = std::path::PathBuf::from("runs/quickstart");
+
+    println!("== bitslice-reram quickstart ==");
+    println!("1) loading artifacts + PJRT CPU client");
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let engine = Engine::cpu()?;
+    println!("   platform: {}", engine.platform());
+
+    println!(
+        "2) training {} with the Bl1 routine ({} + {} steps)",
+        cfg.model, cfg.pretrain_steps, cfg.steps
+    );
+    let train_ds = Dataset::auto(&cfg.dataset, &cfg.data_dir, true, cfg.train_examples, cfg.seed)?;
+    let test_ds =
+        Dataset::auto(&cfg.dataset, &cfg.data_dir, false, cfg.test_examples, cfg.seed + 1)?;
+    println!(
+        "   data: {} ({} train / {} test)",
+        train_ds.source,
+        train_ds.len(),
+        test_ds.len()
+    );
+
+    let mut log = MetricsLog::create(Some(&cfg.out_dir))?;
+    let mut trainer = Trainer::new(&engine, &manifest, cfg.clone())?;
+    let outcome = trainer.run(&train_ds, &mut log)?;
+
+    println!("   loss curve (every 30 steps):");
+    for m in log.history.iter().step_by(30) {
+        println!(
+            "     step {:>4} [{}] loss {:.4}  ce {:.4}  batch-acc {:.2}%",
+            m.step,
+            m.phase,
+            m.loss,
+            m.ce,
+            m.batch_accuracy * 100.0
+        );
+    }
+    println!(
+        "   {} steps, mean step latency {:.1} ms",
+        outcome.steps_run, outcome.mean_step_ms
+    );
+
+    println!("3) quantized deployment accuracy");
+    let eval = evaluator::evaluate(&engine, &manifest, &cfg.model, &trainer.state, &test_ds)?;
+    println!(
+        "   accuracy {:.2}% over {} examples",
+        eval.accuracy * 100.0,
+        eval.examples
+    );
+
+    println!("4) bit-slice sparsity census (Table-1 row)");
+    let stats = sparsity::census(&trainer.state.qws);
+    println!(
+        "{}",
+        report::sparsity_table(
+            "quickstart",
+            &[report::MethodRow {
+                method: "Bl1".into(),
+                accuracy: eval.accuracy,
+                stats: stats.clone(),
+            }]
+        )
+    );
+
+    println!("5) ReRAM deployment (128x128 crossbars, 2-bit cells)");
+    let entry = manifest.model(&cfg.model)?;
+    let deploy = harness::deploy_report(
+        &trainer.state.named_qws(entry),
+        ResolutionPolicy::Percentile(0.999),
+    )?;
+    println!(
+        "   {} crossbars; lossless ADC bits (LSB..MSB) {:?}; p99.9 {:?}",
+        deploy.crossbars, deploy.lossless_bits, deploy.deployed_bits
+    );
+    println!("{}", report::adc_table(&deploy.rows));
+    let (e, t, a) = deploy.savings;
+    println!(
+        "   whole-model ADC savings vs 8-bit baseline: energy {e:.1}x, time {t:.2}x, area {a:.1}x"
+    );
+
+    println!("quickstart OK");
+    Ok(())
+}

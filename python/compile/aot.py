@@ -1,0 +1,265 @@
+"""AOT exporter: lower every graph the Rust coordinator needs to HLO text.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which the pinned xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (under --out-dir, default ../artifacts):
+
+  <model>_train.hlo.txt      train_step  (Eq. 4; all three methods)
+  <model>_eval.hlo.txt       eval_step   (quantized deployment accuracy)
+  <model>_sparsity.hlo.txt   per-slice non-zero census (cross-checks Rust)
+  mlp_reram_paper.hlo.txt    ReRAM-sim inference, ADC = (3,3,3,1) LSB-first
+  mlp_reram_lossless.hlo.txt ReRAM-sim inference, ADC = (10,10,10,10)
+  kernel_*.hlo.txt           standalone kernel graphs for criterion benches
+  manifest.json              input/output specs + parameter layout for Rust
+
+Python runs ONCE at build time (`make artifacts`); nothing here is on the
+request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from . import train as train_lib
+from .kernels import bitslice as bs
+from .kernels import crossbar as xb
+from .kernels import quantize as qz
+
+F32 = "f32"
+I32 = "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(name, shape, dtype=F32):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _lower(fn, in_specs):
+    args = [
+        sds(s["shape"], jnp.int32 if s["dtype"] == I32 else jnp.float32)
+        for s in in_specs
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def _write(out_dir: pathlib.Path, fname: str, text: str) -> str:
+    path = out_dir / fname
+    path.write_text(text)
+    print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)")
+    return fname
+
+
+def export_model(model: model_lib.Model, batch: int, out_dir: pathlib.Path):
+    qw, tp, st = train_lib._groups(model)
+    x_shape = (batch,) + model.input_shape
+
+    def pspecs(prefix, specs_):
+        return [spec(f"{prefix}:{s.name}", s.shape) for s in specs_]
+
+    scalars = [spec(n, ()) for n in ("lr", "momentum", "alpha_l1", "alpha_bl1")]
+    train_in = (
+        pspecs("qw", qw)
+        + pspecs("tp", tp)
+        + pspecs("st", st)
+        + pspecs("vq", qw)
+        + pspecs("vt", tp)
+        + pspecs("mask", qw)
+        + [spec("x", x_shape), spec("y", (batch,), I32)]
+        + scalars
+    )
+    train_out = (
+        pspecs("qw", qw)
+        + pspecs("tp", tp)
+        + pspecs("st", st)
+        + pspecs("vq", qw)
+        + pspecs("vt", tp)
+        + [spec(n, ()) for n in ("loss", "ce", "l1", "bl1", "correct")]
+    )
+    eval_in = (
+        pspecs("qw", qw)
+        + pspecs("tp", tp)
+        + pspecs("st", st)
+        + pspecs("mask", qw)
+        + [spec("x", x_shape), spec("y", (batch,), I32)]
+    )
+    eval_out = [spec("loss", ()), spec("correct", ())]
+    sparsity_in = pspecs("qw", qw)
+    sparsity_out = [
+        spec(f"counts:{s.name}", (4,)) for s in qw
+    ] + [spec(f"numel:{s.name}", ()) for s in qw]
+
+    entry = {
+        "batch": batch,
+        "input_shape": list(model.input_shape),
+        "num_classes": model.num_classes,
+        "params": {
+            "qw": [
+                {"name": s.name, "shape": list(s.shape), "init_std": s.init_std,
+                 "init_const": s.init_const}
+                for s in qw
+            ],
+            "tp": [
+                {"name": s.name, "shape": list(s.shape), "init_std": s.init_std,
+                 "init_const": s.init_const}
+                for s in tp
+            ],
+            "st": [
+                {"name": s.name, "shape": list(s.shape), "init_std": s.init_std,
+                 "init_const": s.init_const}
+                for s in st
+            ],
+        },
+        "graphs": {},
+    }
+
+    print(f"[{model.name}] lowering train_step (batch={batch}) ...")
+    entry["graphs"]["train"] = {
+        "path": _write(
+            out_dir,
+            f"{model.name}_train.hlo.txt",
+            _lower(train_lib.make_train_step(model), train_in),
+        ),
+        "inputs": train_in,
+        "outputs": train_out,
+    }
+    print(f"[{model.name}] lowering eval_step ...")
+    entry["graphs"]["eval"] = {
+        "path": _write(
+            out_dir,
+            f"{model.name}_eval.hlo.txt",
+            _lower(train_lib.make_eval_step(model), eval_in),
+        ),
+        "inputs": eval_in,
+        "outputs": eval_out,
+    }
+    print(f"[{model.name}] lowering sparsity_report ...")
+    entry["graphs"]["sparsity"] = {
+        "path": _write(
+            out_dir,
+            f"{model.name}_sparsity.hlo.txt",
+            _lower(train_lib.make_sparsity_report(model), sparsity_in),
+        ),
+        "inputs": sparsity_in,
+        "outputs": sparsity_out,
+    }
+
+    if model.name == "mlp":
+        infer_in = [
+            spec("qw:fc1/w", (784, 300)),
+            spec("tp:fc1/b", (300,)),
+            spec("qw:fc2/w", (300, 10)),
+            spec("tp:fc2/b", (10,)),
+            spec("x", x_shape),
+        ]
+        infer_out = [spec("logits", (batch, 10))]
+        for tag, bits in (("paper", (3, 3, 3, 1)), ("lossless", (10, 10, 10, 10))):
+            print(f"[{model.name}] lowering reram_infer ({tag}) ...")
+            entry["graphs"][f"reram_{tag}"] = {
+                "path": _write(
+                    out_dir,
+                    f"mlp_reram_{tag}.hlo.txt",
+                    _lower(train_lib.make_reram_infer(model, bits), infer_in),
+                ),
+                "inputs": infer_in,
+                "outputs": infer_out,
+                "adc_bits": list(bits),
+            }
+    return entry
+
+
+def export_kernels(out_dir: pathlib.Path):
+    """Standalone kernel graphs for the Rust criterion micro-benches."""
+    kernels = {}
+
+    def k_quantize(w):
+        q, code, step = qz.quantize(w)
+        return (q, code, step)
+
+    kernels["quantize_1m"] = {
+        "path": _write(
+            out_dir,
+            "kernel_quantize_1m.hlo.txt",
+            _lower(k_quantize, [spec("w", (1024, 1024))]),
+        ),
+        "inputs": [spec("w", (1024, 1024))],
+        "outputs": [
+            spec("q", (1024, 1024)),
+            spec("code", (1024, 1024)),
+            spec("step", ()),
+        ],
+    }
+
+    def k_bl1(code):
+        return (bs.bl1_penalty(code),)
+
+    kernels["bl1_1m"] = {
+        "path": _write(
+            out_dir, "kernel_bl1_1m.hlo.txt", _lower(k_bl1, [spec("code", (1024, 1024))])
+        ),
+        "inputs": [spec("code", (1024, 1024))],
+        "outputs": [spec("bl1", ())],
+    }
+
+    def k_xbar(a, wp, wn):
+        return (xb.crossbar_mvm(a, wp, wn, adc_bits=3),)
+
+    shape = (xb.BATCH_BLOCK, xb.XBAR_ROWS)
+    wshape = (xb.XBAR_ROWS, xb.XBAR_COLS)
+    kernels["crossbar_tile"] = {
+        "path": _write(
+            out_dir,
+            "kernel_crossbar_tile.hlo.txt",
+            _lower(k_xbar, [spec("a", shape), spec("wp", wshape), spec("wn", wshape)]),
+        ),
+        "inputs": [spec("a", shape), spec("wp", wshape), spec("wn", wshape)],
+        "outputs": [spec("out", (xb.BATCH_BLOCK, xb.XBAR_COLS))],
+    }
+    return kernels
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="mlp,vgg11,resnet20")
+    ap.add_argument("--mlp-batch", type=int, default=128)
+    ap.add_argument("--cifar-batch", type=int, default=32)
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {"models": {}, "kernels": {}}
+    for name in [m for m in args.models.split(",") if m]:
+        model = model_lib.get_model(name)
+        batch = args.mlp_batch if name == "mlp" else args.cifar_batch
+        manifest["models"][name] = export_model(model, batch, out_dir)
+    manifest["kernels"] = export_kernels(out_dir)
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {out_dir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

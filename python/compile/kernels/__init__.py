@@ -1,0 +1,10 @@
+"""L1 — Pallas kernels for bit-slice sparsity training and ReRAM deployment.
+
+Modules:
+  quantize — dynamic fixed-point quantization (Eqs. 1-2) + STE wrapper
+  bitslice — 2-bit slice extraction + bit-slice l1 penalty (Eq. 3) + STE grad
+  crossbar — ReRAM crossbar MVM functional simulator (bit-serial DAC + ADC)
+  ref      — pure-jnp oracles every kernel is tested against
+"""
+
+from . import bitslice, crossbar, quantize, ref  # noqa: F401

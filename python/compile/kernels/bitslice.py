@@ -1,0 +1,134 @@
+"""Pallas kernels for bit-slicing and the bit-slice l1 regularizer (Eq. 3).
+
+  * ``bitslice``    — expand 8-bit codes into the four 2-bit slices the ReRAM
+                      mapper stores on separate crossbar groups.
+  * ``bl1_penalty`` — grid reduction of the digit sum  sum_{i,k} Bhat^{i,k}.
+  * ``bl1_ste``     — the regularizer as a differentiable scalar: exact value
+                      forward, straight-through surrogate gradient backward
+                      (see DESIGN.md §7 and ``ref.bl1_grad``).
+
+All element-wise slice math is VPU-shaped (no MXU); blocks are sized like the
+quantize kernels (256x256 f32) so a slice pass streams HBM->VMEM once.
+Lowered with ``interpret=True`` for the CPU PJRT backend.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+from .quantize import BLOCK, LANE, INTERPRET, _as2d, _pad2d
+
+
+def _bitslice_kernel(code_ref, s_ref):
+    code = code_ref[...]
+    # Unrolled over the 4 slices: (code >> 2k) & 3 in f32 arithmetic
+    # (exact for code <= 255).
+    for k in range(ref.N_SLICES):
+        s_ref[k, ...] = jnp.mod(
+            jnp.floor(code / ref.SLICE_BASE**k), ref.SLICE_BASE
+        )
+
+
+def bitslice(code: jnp.ndarray, block: int = BLOCK) -> jnp.ndarray:
+    """Slice codes (f32 ints in [0,255]) into (N_SLICES,)+code.shape, LSB
+    first — Pallas version of ``ref.bitslice``."""
+    orig_shape = code.shape
+    x = _as2d(code.astype(jnp.float32))
+    bm, bn = min(block, x.shape[0]), x.shape[1]
+    x = _pad2d(x, bm, bn)
+    m, n = x.shape
+    out = pl.pallas_call(
+        _bitslice_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec(
+            (ref.N_SLICES, bm, bn), lambda i, j: (0, i, j)
+        ),
+        out_shape=jax.ShapeDtypeStruct((ref.N_SLICES, m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x)
+    # un-pad and restore the original layout
+    n_elems = int(np.prod(orig_shape)) if orig_shape else 1
+    out = out.reshape(ref.N_SLICES, -1)[:, :n_elems]
+    return out.reshape((ref.N_SLICES,) + orig_shape)
+
+
+def _bl1_kernel(code_ref, o_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    code = code_ref[...]
+    # Digit-sum identity: sum of base-4 digits of B equals
+    #   B - 3 * (floor(B/4) + floor(B/16) + floor(B/64))
+    # — 3 floors instead of 4 (div, floor, mod) chains. (§Perf iteration 5.)
+    shifted = (
+        jnp.floor(code * (1.0 / 4.0))
+        + jnp.floor(code * (1.0 / 16.0))
+        + jnp.floor(code * (1.0 / 64.0))
+    )
+    total = jnp.sum(code - 3.0 * shifted)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _init():
+        o_ref[0, 0] = total
+
+    @pl.when(jnp.logical_or(i != 0, j != 0))
+    def _acc():
+        o_ref[0, 0] = o_ref[0, 0] + total
+
+
+def bl1_penalty(code: jnp.ndarray, block: int = BLOCK) -> jnp.ndarray:
+    """Digit-sum reduction: Bl1(W) = sum_{i,k} Bhat^{i,k} (Eq. 3), as a
+    sequential Pallas grid reduction. Zero padding contributes zero."""
+    x = _as2d(code.astype(jnp.float32))
+    bm, bn = min(block, x.shape[0]), x.shape[1]
+    x = _pad2d(x, bm, bn)
+    m, n = x.shape
+    out = pl.pallas_call(
+        _bl1_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=INTERPRET,
+    )(x)
+    return out[0, 0]
+
+
+@jax.custom_vjp
+def bl1_ste(q: jnp.ndarray, step: jnp.ndarray) -> jnp.ndarray:
+    """Bit-slice l1 penalty of a quantized weight tensor, differentiable.
+
+    Forward: the exact Eq. 3 digit sum of ``B = |q|/step`` (q is already a
+    multiple of step, so the division recovers the integer code exactly).
+    Backward: the straight-through surrogate ``sign(q) * (85/64) / step``
+    (``ref.bl1_grad``); ``step`` itself gets no gradient (stop-gradient, as
+    usual for dynamic-range parameters).
+    """
+    code = jnp.abs(q) / step
+    return bl1_penalty(code)
+
+
+def _bl1_fwd(q, step):
+    return bl1_ste(q, step), (q, step)
+
+
+def _bl1_bwd(res, g):
+    q, step = res
+    return (g * ref.bl1_grad(q, step), jnp.zeros_like(step))
+
+
+bl1_ste.defvjp(_bl1_fwd, _bl1_bwd)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def slice_nonzero_counts(code: jnp.ndarray, block: int = BLOCK) -> jnp.ndarray:
+    """Per-slice non-zero element counts (LSB-first, shape (4,)) — feeds the
+    sparsity columns of Tables 1/2. Built on the Pallas bitslice kernel."""
+    s = bitslice(code, block)
+    return jnp.sum((s != 0).astype(jnp.float32), axis=tuple(range(1, s.ndim)))

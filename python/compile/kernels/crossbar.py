@@ -1,0 +1,121 @@
+"""Pallas kernel for the ReRAM crossbar MVM functional simulator.
+
+This is the deployment-side hot spot: a 128x128 crossbar tile holding one
+2-bit weight slice (differential positive/negative arrays), driven bit-
+serially by the activation codes. Per input bit-plane the bitline currents
+are formed analog-style (an MXU-shaped (B,R)x(R,C) matmul over small-integer
+values, exact in f32), the ADC clips them at its full scale (2^N - 1 LSBs),
+and the digital shift-and-add recombines the planes.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the crossbar tile is the
+natural MXU tile (128x128); the bit-plane loop is a ``fori_loop`` inside the
+kernel so the tile stays VMEM-resident across all planes instead of being
+re-streamed from HBM per plane.
+
+Lowered with ``interpret=True`` for the CPU PJRT backend.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .quantize import INTERPRET
+
+# ReRAM array geometry (ISAAC-style): 128 wordlines x 128 bitlines.
+XBAR_ROWS = 128
+XBAR_COLS = 128
+# Batch tile: 128 keeps the activation block MXU-shaped as well.
+BATCH_BLOCK = 128
+
+
+def _xbar_kernel(a_ref, wp_ref, wn_ref, o_ref, *, a_bits: int, adc_bits: int):
+    a = a_ref[...]  # (bb, R) activation codes
+    wp = wp_ref[...]  # (R, bc) positive cells
+    wn = wn_ref[...]  # (R, bc) negative cells
+    full_scale = float(2**adc_bits - 1)
+
+    def plane(t, acc):
+        # t-th input bit-plane: the 1-bit DAC drive for this cycle.
+        bit = jnp.mod(jnp.floor(a / jnp.exp2(t.astype(jnp.float32))), 2.0)
+        # Analog bitline accumulation == integer matmul, exact in f32.
+        i_pos = jnp.clip(
+            jnp.dot(bit, wp, preferred_element_type=jnp.float32),
+            0.0,
+            full_scale,
+        )
+        i_neg = jnp.clip(
+            jnp.dot(bit, wn, preferred_element_type=jnp.float32),
+            0.0,
+            full_scale,
+        )
+        return acc + (i_pos - i_neg) * jnp.exp2(t.astype(jnp.float32))
+
+    o_ref[...] = jax.lax.fori_loop(
+        0, a_bits, plane, jnp.zeros_like(o_ref[...], jnp.float32)
+    )
+
+
+def crossbar_mvm(
+    a_code: jnp.ndarray,
+    w_pos: jnp.ndarray,
+    w_neg: jnp.ndarray,
+    adc_bits: int,
+    a_bits: int = ref.N_BITS,
+    batch_block: int = BATCH_BLOCK,
+) -> jnp.ndarray:
+    """One slice group's crossbar MVM; Pallas version of ``ref.crossbar_mvm``.
+
+    a_code (B, R) f32 integer codes; w_pos/w_neg (R, C) cells in [0, 3].
+    R must not exceed the crossbar row count (the mapper tiles larger layers
+    into multiple crossbars and sums digitally — see rust/src/reram).
+    """
+    b, r = a_code.shape
+    r2, c = w_pos.shape
+    assert r == r2, (r, r2)
+    assert r <= XBAR_ROWS, f"layer rows {r} exceed crossbar rows {XBAR_ROWS}"
+    pb = (-b) % batch_block
+    pc = (-c) % XBAR_COLS
+    a_p = jnp.pad(a_code.astype(jnp.float32), ((0, pb), (0, 0)))
+    wp_p = jnp.pad(w_pos.astype(jnp.float32), ((0, 0), (0, pc)))
+    wn_p = jnp.pad(w_neg.astype(jnp.float32), ((0, 0), (0, pc)))
+    bm = min(batch_block, a_p.shape[0])
+    bc = min(XBAR_COLS, wp_p.shape[1])
+    grid = (a_p.shape[0] // bm, wp_p.shape[1] // bc)
+    out = pl.pallas_call(
+        functools.partial(_xbar_kernel, a_bits=a_bits, adc_bits=adc_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((r, bc), lambda i, j: (0, j)),
+            pl.BlockSpec((r, bc), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a_p.shape[0], wp_p.shape[1]), jnp.float32),
+        interpret=INTERPRET,
+    )(a_p, wp_p, wn_p)
+    return out[:b, :c]
+
+
+def reram_linear(
+    a_code: jnp.ndarray,
+    slices_pos: jnp.ndarray,
+    slices_neg: jnp.ndarray,
+    adc_bits_per_slice,
+    w_step: jnp.ndarray,
+    a_step: jnp.ndarray,
+    a_bits: int = ref.N_BITS,
+) -> jnp.ndarray:
+    """Full ReRAM linear layer over all four slice groups (LSB-first), with
+    per-group ADC resolution — Pallas version of ``ref.reram_linear``."""
+    out = jnp.zeros((a_code.shape[0], slices_pos.shape[2]), dtype=jnp.float32)
+    for k in range(ref.N_SLICES):
+        contrib = crossbar_mvm(
+            a_code, slices_pos[k], slices_neg[k], int(adc_bits_per_slice[k]), a_bits
+        )
+        out = out + contrib * ref.SLICE_BASE**k
+    return out * w_step * a_step

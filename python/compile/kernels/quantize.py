@@ -1,0 +1,181 @@
+"""Pallas kernels for dynamic fixed-point quantization (paper Sec. 2.1).
+
+Two kernels:
+
+  * ``maxabs``   — grid reduction computing ``max_i |w_i|`` (feeds Eq. 1).
+  * ``quantize`` — element-wise Eq. 2: code ``B(w)`` and recovered ``Q(w)``.
+
+Both are written TPU-style (2-D blocks sized for VMEM, scalar operand in a
+(1,1) block) and lowered with ``interpret=True`` so they execute as plain HLO
+on the CPU PJRT backend — real-TPU lowering would emit a Mosaic custom call
+the CPU plugin cannot run (see DESIGN.md §Hardware-Adaptation).
+
+``quantize_ste`` wraps the whole thing in the straight-through estimator the
+training routine needs (paper Eq. 4): forward returns Q(w), backward passes
+gradients through unchanged (the master weights live in full precision).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# interpret=True is mandatory on this testbed (CPU PJRT); kept as a module
+# flag so a TPU build only flips one switch.
+INTERPRET = True
+
+# Default VMEM block: 512x1024 f32 = 2 MiB per operand block; with the two
+# outputs that is ~6 MiB resident, under the ~16 MiB VMEM budget and still
+# double-bufferable. (256 was the initial value; 512 halves the interpret
+# grid iterations for ~2x on CPU — EXPERIMENTS.md §Perf iteration 4.)
+BLOCK = 512
+LANE = 1024
+
+
+def _pad2d(x: jnp.ndarray, bm: int, bn: int) -> jnp.ndarray:
+    """Pad a 2-D array up to block multiples (zeros are neutral for both the
+    max-abs reduction and quantization, whose code for 0 is 0)."""
+    m, n = x.shape
+    pm = (-m) % bm
+    pn = (-n) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def _as2d(w: jnp.ndarray, lane: int = LANE) -> jnp.ndarray:
+    """Collapse an arbitrary-rank tensor to a lane-width 2-D layout.
+
+    Element-wise kernels do not care about the logical shape, so we flatten
+    and re-tile to rows of ``lane`` elements: padding waste is < ``lane``
+    elements regardless of the original shape (a (3, 3, 512, 512) conv kernel
+    reshaped naively to (3, 786432) would otherwise pad 3 rows up to a full
+    block). Zero-padded; callers slice the flat prefix back out.
+    """
+    flat = w.reshape(-1)
+    n = flat.shape[0]
+    width = min(lane, n) if n > 0 else 1
+    pad = (-n) % width
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, width)
+
+
+def _from2d(x2d: jnp.ndarray, orig_shape) -> jnp.ndarray:
+    """Inverse of ``_as2d`` + ``_pad2d``: drop padding, restore shape."""
+    import numpy as _np
+
+    n = int(_np.prod(orig_shape)) if orig_shape else 1
+    return x2d.reshape(-1)[:n].reshape(orig_shape)
+
+
+def _maxabs_kernel(x_ref, o_ref):
+    # Sequential grid: TPU (and interpret mode) iterate grid points in order,
+    # so accumulating into the single (1,1) output block is well-defined.
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    block_max = jnp.max(jnp.abs(x_ref[...]))
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _init():
+        o_ref[0, 0] = block_max
+
+    @pl.when(jnp.logical_or(i != 0, j != 0))
+    def _acc():
+        o_ref[0, 0] = jnp.maximum(o_ref[0, 0], block_max)
+
+
+def maxabs(w: jnp.ndarray, block: int = BLOCK) -> jnp.ndarray:
+    """max_i |w_i| as a Pallas grid reduction. Returns a f32 scalar."""
+    x = _as2d(w.astype(jnp.float32))
+    bm, bn = min(block, x.shape[0]), x.shape[1]
+    x = _pad2d(x, bm, bn)
+    m, n = x.shape
+    out = pl.pallas_call(
+        _maxabs_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=INTERPRET,
+    )(x)
+    return out[0, 0]
+
+
+def _quantize_kernel(x_ref, step_ref, q_ref, code_ref):
+    step = step_ref[0, 0]
+    x = x_ref[...]
+    code = jnp.clip(jnp.floor(jnp.abs(x) / step), 0.0, ref.CODE_MAX)
+    code_ref[...] = code
+    q_ref[...] = jnp.sign(x) * code * step
+
+
+def quantize_with_step(w: jnp.ndarray, step: jnp.ndarray, block: int = BLOCK):
+    """Element-wise Eq. 2 given a precomputed Qstep scalar.
+
+    Returns ``(q, code)`` with the original shape/dtype layout of ``w``
+    (both f32; codes are integers in [0, 255] stored exactly in f32).
+    """
+    orig_shape = w.shape
+    x = _as2d(w.astype(jnp.float32))
+    bm, bn = min(block, x.shape[0]), x.shape[1]
+    x = _pad2d(x, bm, bn)
+    m, n = x.shape
+    step2d = jnp.asarray(step, jnp.float32).reshape(1, 1)
+    q, code = pl.pallas_call(
+        _quantize_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(x, step2d)
+    return _from2d(q, orig_shape), _from2d(code, orig_shape)
+
+
+def quantize(w: jnp.ndarray, n_bits: int = ref.N_BITS, block: int = BLOCK):
+    """Full dynamic fixed-point quantization (Eqs. 1-2) via Pallas.
+
+    Returns ``(q, code, step)`` matching ``ref.quantize``.
+    """
+    m = jnp.maximum(maxabs(w, block), ref._EPS)
+    step = jnp.exp2(jnp.ceil(jnp.log2(m)) - n_bits)
+    q, code = quantize_with_step(w, step, block)
+    return q, code, step
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def quantize_ste(w: jnp.ndarray, n_bits: int = ref.N_BITS):
+    """Straight-through quantizer: forward Q(w), backward identity.
+
+    This is the ``w -> q`` arrow in the paper's Fig. 1 training routine: the
+    forward pass sees the quantized weight, while gradients flow back to the
+    full-precision master copy unmodified (Eq. 4 applies them at q).
+    """
+    q, _code, _step = quantize(w, n_bits)
+    return q
+
+
+def _quantize_ste_fwd(w, n_bits):
+    return quantize_ste(w, n_bits), None
+
+
+def _quantize_ste_bwd(n_bits, _res, g):
+    return (g,)
+
+
+quantize_ste.defvjp(_quantize_ste_fwd, _quantize_ste_bwd)

@@ -1,0 +1,164 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package is validated against these references by
+``python/tests/test_kernel.py`` (hypothesis sweeps shapes/dtypes and asserts
+allclose). The references implement the paper's equations directly:
+
+  Eq. 1   S(W)   = ceil(log2(max |w|))          (dynamic range)
+  Eq. 2   B(w)   = floor(|w| / Qstep)           (8-bit code, Qstep = 2^{S-n})
+          Q(w)   = sign(w) * B(w) * Qstep       (recovered weight)
+  Eq. 3   Bl1(W) = sum_{i,k} Bhat^{i,k}         (digit-sum over 2-bit slices)
+
+plus the ReRAM crossbar MVM with bit-serial inputs and an ADC transfer
+function (clip at 2^N - 1 LSBs), which the paper evaluates "in simulation".
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Paper constants: 8-bit dynamic fixed point, 2 bits/cell -> 4 slices.
+N_BITS = 8
+SLICE_BITS = 2
+N_SLICES = N_BITS // SLICE_BITS  # 4
+SLICE_BASE = float(2**SLICE_BITS)  # 4.0
+SLICE_MAX = SLICE_BASE - 1.0  # 3.0
+CODE_MAX = float(2**N_BITS - 1)  # 255.0
+
+# Guard for all-zero tensors: max|w| is clamped to 2^-20 so S(W) >= -20.
+_EPS = 2.0**-20
+
+
+def dynamic_range(w: jnp.ndarray) -> jnp.ndarray:
+    """S(W) = ceil(log2(max_i |w_i|)), Eq. 1. Scalar (f32)."""
+    m = jnp.maximum(jnp.max(jnp.abs(w)), _EPS)
+    return jnp.ceil(jnp.log2(m))
+
+
+def qstep(w: jnp.ndarray, n_bits: int = N_BITS) -> jnp.ndarray:
+    """Quantization step Qstep = 2^{S(W) - n}."""
+    return jnp.exp2(dynamic_range(w) - n_bits)
+
+
+def quantize_code(w: jnp.ndarray, step: jnp.ndarray) -> jnp.ndarray:
+    """B(w) = floor(|w| / Qstep), clipped into [0, 2^n - 1] (Eq. 2).
+
+    Codes are returned as f32: values <= 255 are exactly representable and
+    stay in the same dtype family as the surrounding graph.
+    """
+    return jnp.clip(jnp.floor(jnp.abs(w) / step), 0.0, CODE_MAX)
+
+
+def quantize(w: jnp.ndarray, n_bits: int = N_BITS):
+    """Full dynamic fixed-point quantization.
+
+    Returns ``(q, code, step)`` where ``q = sign(w) * code * step`` is the
+    recovered weight used in the forward pass (paper Sec. 2.3).
+    """
+    step = qstep(w, n_bits)
+    code = quantize_code(w, step)
+    q = jnp.sign(w) * code * step
+    return q, code, step
+
+
+def bitslice(code: jnp.ndarray) -> jnp.ndarray:
+    """Split 8-bit codes into 2-bit slices, LSB-first.
+
+    Input: codes in [0, 255] (f32). Output shape ``(N_SLICES,) + code.shape``
+    with ``out[k] = (code >> 2k) & 3`` so ``code = sum_k out[k] * 4^k``.
+    """
+    ks = jnp.arange(N_SLICES, dtype=code.dtype).reshape(
+        (N_SLICES,) + (1,) * code.ndim
+    )
+    return jnp.mod(jnp.floor(code[None, ...] / SLICE_BASE**ks), SLICE_BASE)
+
+
+def bl1_penalty(code: jnp.ndarray) -> jnp.ndarray:
+    """Bl1(W) = sum over elements and slices of the slice value (Eq. 3)."""
+    return jnp.sum(bitslice(code))
+
+
+# Sum_k 4^-k for k = 0..3: the STE surrogate slope of the digit sum w.r.t.
+# the code value (each slice passes floor/mod through as identity).
+STE_SLOPE = sum(SLICE_BASE**-k for k in range(N_SLICES))  # 85/64
+
+
+def bl1_grad(q: jnp.ndarray, step: jnp.ndarray) -> jnp.ndarray:
+    """Straight-through surrogate for d Bl1 / d q (see DESIGN.md Sec. 7).
+
+    Bhat^k = mod(floor(|q|/Qstep / 4^k), 4); passing floor and mod through
+    as identity gives d Bhat^k / d q = sign(q) / (Qstep * 4^k), hence
+    d Bl1 / d q = sign(q) * (sum_k 4^-k) / Qstep. The 1/Qstep factor is what
+    distinguishes Bl1 from a plain l1: the pull is proportional to the
+    layer's quantized-domain magnitude.
+    """
+    return jnp.sign(q) * (STE_SLOPE / step)
+
+
+def slice_nonzero_ratio(code: jnp.ndarray) -> jnp.ndarray:
+    """Per-slice ratio of non-zero elements, shape (N_SLICES,) — the paper's
+    Tables 1/2 columns Bhat^0..Bhat^3 (we return LSB-first)."""
+    s = bitslice(code)
+    return jnp.mean((s != 0).astype(jnp.float32), axis=tuple(range(1, s.ndim)))
+
+
+# ---------------------------------------------------------------------------
+# ReRAM crossbar MVM (functional simulator reference)
+# ---------------------------------------------------------------------------
+
+
+def adc(current: jnp.ndarray, adc_bits: int) -> jnp.ndarray:
+    """ADC transfer function: clip the (integer-valued) bitline current at
+    full-scale 2^N - 1 LSBs. 1 LSB = 1 unit of cell current (one minimum-
+    conductance cell driven by a '1' input bit)."""
+    return jnp.clip(current, 0.0, float(2**adc_bits - 1))
+
+
+def crossbar_mvm(
+    a_code: jnp.ndarray,
+    w_pos: jnp.ndarray,
+    w_neg: jnp.ndarray,
+    adc_bits: int,
+    a_bits: int = N_BITS,
+) -> jnp.ndarray:
+    """One bit-slice group's crossbar MVM with bit-serial inputs.
+
+    a_code: (B, R) activation codes in [0, 2^a_bits - 1] (f32 integers).
+    w_pos/w_neg: (R, C) cell conductances in [0, 3] — the positive and
+        negative differential crossbars holding one 2-bit slice.
+    Each input bit-plane drives one analog cycle; the bitline current is
+    ADC-quantized *per plane* (that is where the physical ADC sits), then
+    shift-added digitally.
+    Returns (B, C) recombined slice contribution (signed).
+    """
+    acc = jnp.zeros((a_code.shape[0], w_pos.shape[1]), dtype=jnp.float32)
+    for t in range(a_bits):
+        bit = jnp.mod(jnp.floor(a_code / 2.0**t), 2.0)
+        i_pos = adc(bit @ w_pos, adc_bits)
+        i_neg = adc(bit @ w_neg, adc_bits)
+        acc = acc + (i_pos - i_neg) * 2.0**t
+    return acc
+
+
+def reram_linear(
+    a_code: jnp.ndarray,
+    slices_pos: jnp.ndarray,
+    slices_neg: jnp.ndarray,
+    adc_bits_per_slice,
+    w_step: jnp.ndarray,
+    a_step: jnp.ndarray,
+    a_bits: int = N_BITS,
+) -> jnp.ndarray:
+    """Full ReRAM linear layer: recombine all slice groups.
+
+    slices_pos/neg: (N_SLICES, R, C); adc_bits_per_slice: sequence of 4 ints
+    (LSB-first; paper Table 3 uses 3-bit for XB_{2,1,0} and 1-bit for XB_3).
+    Result is rescaled back to real units with the weight/activation steps.
+    """
+    out = jnp.zeros((a_code.shape[0], slices_pos.shape[2]), dtype=jnp.float32)
+    for k in range(N_SLICES):
+        contrib = crossbar_mvm(
+            a_code, slices_pos[k], slices_neg[k], int(adc_bits_per_slice[k]), a_bits
+        )
+        out = out + contrib * SLICE_BASE**k
+    return out * w_step * a_step

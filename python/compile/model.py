@@ -1,0 +1,284 @@
+"""L2 — the paper's models in pure JAX (paper Sec. 3).
+
+Three models, matching the evaluation section:
+
+  * ``mlp``      — the MNIST "toy model consisting of two linear layers"
+                   (784-300-10).
+  * ``vgg11``    — VGG-11 (configuration A) adapted to CIFAR-10 32x32 inputs.
+  * ``resnet20`` — the standard CIFAR ResNet-20 (3 stages x 3 basic blocks,
+                   16/32/64 channels) with batch norm.
+
+Parameters are described by ``ParamSpec``s with a ``kind``:
+
+  qweight — conv / linear kernels: quantized to 8-bit dynamic fixed point and
+            bit-sliced onto ReRAM crossbars; the regularizers apply here.
+  bias    — digital-domain biases (full precision, trained).
+  bn_*    — batch-norm scale/bias (trained) and running mean/var (state,
+            updated by the forward pass, never by the optimizer).
+
+The ordering of ``param_specs`` is the canonical flattening used by the AOT
+manifest and the Rust coordinator — keep it deterministic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.1
+
+KIND_QWEIGHT = "qweight"
+KIND_BIAS = "bias"
+KIND_BN_SCALE = "bn_scale"
+KIND_BN_BIAS = "bn_bias"
+KIND_BN_MEAN = "bn_mean"
+KIND_BN_VAR = "bn_var"
+
+TRAINABLE_KINDS = (KIND_QWEIGHT, KIND_BIAS, KIND_BN_SCALE, KIND_BN_BIAS)
+STATE_KINDS = (KIND_BN_MEAN, KIND_BN_VAR)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One parameter tensor: canonical name, shape, role, init."""
+
+    name: str
+    shape: tuple
+    kind: str
+    # Gaussian init std (0.0 => constant init_const instead).
+    init_std: float = 0.0
+    init_const: float = 0.0
+
+    def init(self, key: jax.Array) -> jnp.ndarray:
+        if self.init_std > 0.0:
+            return self.init_std * jax.random.normal(
+                key, self.shape, jnp.float32
+            )
+        return jnp.full(self.shape, self.init_const, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """A model = canonical parameter list + a pure apply function.
+
+    ``apply(params, x, train)`` takes a dict name->array and returns
+    ``(logits, state_updates)`` where ``state_updates`` maps bn_mean/bn_var
+    names to their new running values (empty in eval mode or for BN-free
+    models).
+    """
+
+    name: str
+    input_shape: tuple  # per-example, e.g. (784,) or (32, 32, 3)
+    num_classes: int
+    param_specs: tuple
+    apply: Callable
+
+    def init_params(self, seed: int) -> dict:
+        key = jax.random.PRNGKey(seed)
+        keys = jax.random.split(key, len(self.param_specs))
+        return {
+            s.name: s.init(k) for s, k in zip(self.param_specs, keys)
+        }
+
+    def specs_of_kind(self, *kinds) -> list:
+        return [s for s in self.param_specs if s.kind in kinds]
+
+
+def _he_std(fan_in: int) -> float:
+    return math.sqrt(2.0 / fan_in)
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+
+def _linear(p, name, x):
+    return x @ p[f"{name}/w"] + p[f"{name}/b"]
+
+
+def _conv(p, name, x, stride=1):
+    # NHWC, HWIO, SAME padding — the CIFAR 3x3 workhorse.
+    return jax.lax.conv_general_dilated(
+        x,
+        p[f"{name}/w"],
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + p[f"{name}/b"]
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _batchnorm(p, name, x, train, updates):
+    scale = p[f"{name}/scale"]
+    bias = p[f"{name}/bias"]
+    if train:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        updates[f"{name}/mean"] = (
+            (1.0 - BN_MOMENTUM) * p[f"{name}/mean"] + BN_MOMENTUM * mean
+        )
+        updates[f"{name}/var"] = (
+            (1.0 - BN_MOMENTUM) * p[f"{name}/var"] + BN_MOMENTUM * var
+        )
+    else:
+        mean = p[f"{name}/mean"]
+        var = p[f"{name}/var"]
+    inv = jax.lax.rsqrt(var + BN_EPS)
+    return (x - mean) * inv * scale + bias
+
+
+def _linear_specs(name, din, dout):
+    return [
+        ParamSpec(f"{name}/w", (din, dout), KIND_QWEIGHT, _he_std(din)),
+        ParamSpec(f"{name}/b", (dout,), KIND_BIAS),
+    ]
+
+
+def _conv_specs(name, kh, kw, cin, cout):
+    return [
+        ParamSpec(
+            f"{name}/w", (kh, kw, cin, cout), KIND_QWEIGHT, _he_std(kh * kw * cin)
+        ),
+        ParamSpec(f"{name}/b", (cout,), KIND_BIAS),
+    ]
+
+
+def _bn_specs(name, c):
+    return [
+        ParamSpec(f"{name}/scale", (c,), KIND_BN_SCALE, 0.0, 1.0),
+        ParamSpec(f"{name}/bias", (c,), KIND_BN_BIAS, 0.0, 0.0),
+        ParamSpec(f"{name}/mean", (c,), KIND_BN_MEAN, 0.0, 0.0),
+        ParamSpec(f"{name}/var", (c,), KIND_BN_VAR, 0.0, 1.0),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# MNIST toy MLP (784-300-10)
+# ---------------------------------------------------------------------------
+
+
+def _mlp_apply(p, x, train):
+    del train
+    h = jax.nn.relu(_linear(p, "fc1", x))
+    return _linear(p, "fc2", h), {}
+
+
+def make_mlp(hidden: int = 300) -> Model:
+    specs = _linear_specs("fc1", 784, hidden) + _linear_specs("fc2", hidden, 10)
+    return Model("mlp", (784,), 10, tuple(specs), _mlp_apply)
+
+
+# ---------------------------------------------------------------------------
+# VGG-11 (configuration A) for CIFAR-10
+# ---------------------------------------------------------------------------
+
+_VGG11_CFG = (64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M")
+
+
+def _vgg11_apply(p, x, train):
+    del train
+    h = x
+    i = 0
+    for c in _VGG11_CFG:
+        if c == "M":
+            h = _maxpool(h)
+        else:
+            h = jax.nn.relu(_conv(p, f"conv{i}", h))
+            i += 1
+    h = h.reshape(h.shape[0], -1)  # 1x1x512
+    return _linear(p, "fc", h), {}
+
+
+def make_vgg11() -> Model:
+    specs = []
+    cin = 3
+    i = 0
+    for c in _VGG11_CFG:
+        if c == "M":
+            continue
+        specs += _conv_specs(f"conv{i}", 3, 3, cin, c)
+        cin = c
+        i += 1
+    specs += _linear_specs("fc", 512, 10)
+    return Model("vgg11", (32, 32, 3), 10, tuple(specs), _vgg11_apply)
+
+
+# ---------------------------------------------------------------------------
+# ResNet-20 for CIFAR-10
+# ---------------------------------------------------------------------------
+
+_RESNET20_STAGES = ((16, 1), (32, 2), (64, 2))  # (channels, first-stride)
+_BLOCKS_PER_STAGE = 3
+
+
+def _resnet20_apply(p, x, train):
+    updates = {}
+    h = _batchnorm(p, "bn0", _conv(p, "conv0", x), train, updates)
+    h = jax.nn.relu(h)
+    for si, (c, stride0) in enumerate(_RESNET20_STAGES):
+        for bi in range(_BLOCKS_PER_STAGE):
+            stride = stride0 if bi == 0 else 1
+            name = f"s{si}b{bi}"
+            inp = h
+            h = _batchnorm(
+                p, f"{name}/bn1", _conv(p, f"{name}/conv1", h, stride), train, updates
+            )
+            h = jax.nn.relu(h)
+            h = _batchnorm(
+                p, f"{name}/bn2", _conv(p, f"{name}/conv2", h), train, updates
+            )
+            if inp.shape != h.shape:
+                # projection shortcut (option B) on shape change
+                inp = _batchnorm(
+                    p,
+                    f"{name}/bnp",
+                    _conv(p, f"{name}/proj", inp, stride),
+                    train,
+                    updates,
+                )
+            h = jax.nn.relu(h + inp)
+    h = jnp.mean(h, axis=(1, 2))  # global average pool
+    return _linear(p, "fc", h), updates
+
+
+def make_resnet20() -> Model:
+    specs = _conv_specs("conv0", 3, 3, 3, 16) + _bn_specs("bn0", 16)
+    cin = 16
+    for si, (c, _stride0) in enumerate(_RESNET20_STAGES):
+        for bi in range(_BLOCKS_PER_STAGE):
+            name = f"s{si}b{bi}"
+            specs += _conv_specs(f"{name}/conv1", 3, 3, cin, c)
+            specs += _bn_specs(f"{name}/bn1", c)
+            specs += _conv_specs(f"{name}/conv2", 3, 3, c, c)
+            specs += _bn_specs(f"{name}/bn2", c)
+            if cin != c:
+                specs += _conv_specs(f"{name}/proj", 1, 1, cin, c)
+                specs += _bn_specs(f"{name}/bnp", c)
+            cin = c
+    specs += _linear_specs("fc", 64, 10)
+    return Model("resnet20", (32, 32, 3), 10, tuple(specs), _resnet20_apply)
+
+
+MODELS = {
+    "mlp": make_mlp,
+    "vgg11": make_vgg11,
+    "resnet20": make_resnet20,
+}
+
+
+def get_model(name: str) -> Model:
+    try:
+        return MODELS[name]()
+    except KeyError:
+        raise ValueError(f"unknown model {name!r}; have {sorted(MODELS)}")

@@ -1,0 +1,224 @@
+"""L2 — the paper's training routine (Sec. 2.3, Eq. 4) as exportable graphs.
+
+One ``train_step`` graph serves all three methods of Tables 1/2:
+
+  Pruned — masks fix pruned weights at zero (set by the Rust coordinator
+           after the pretrain phase), alpha_l1 = alpha_bl1 = 0
+  l1     — alpha_l1 > 0 (element-wise l1 on the quantized weights)
+  Bl1    — alpha_bl1 > 0 (the paper's bit-slice l1, Eq. 3)
+
+Semantics follow Eq. 4 exactly: the master weights w stay full precision;
+each step quantizes w -> q = Q(w) (Pallas kernels, Eqs. 1-2), runs the
+forward/backward at q, and writes back w' = q - lr * step_direction — i.e.
+gradients (with momentum) are applied to the *recovered quantized* weight.
+
+Flattened I/O layout (what the AOT manifest records, and what the Rust
+coordinator feeds):
+
+  train_step inputs : [QW..., TP..., ST..., VQ..., VT..., MASK..., x, y,
+                       lr, momentum, alpha_l1, alpha_bl1]
+  train_step outputs: [QW'..., TP'..., ST'..., VQ'..., VT'...,
+                       loss, ce, l1, bl1, correct]
+  eval_step inputs  : [QW..., TP..., ST..., MASK..., x, y]
+  eval_step outputs : [loss, correct]
+
+QW = quantized-kind weights, TP = trainable plain params (biases, bn scale /
+bias), ST = bn running stats, VQ/VT = momentum buffers, MASK = 0/1 pruning
+masks over QW. y is int32 class labels; everything else is f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model as model_lib
+from .kernels import bitslice as bs
+from .kernels import crossbar as xb
+from .kernels import quantize as qz
+from .kernels import ref
+
+
+def _groups(model: model_lib.Model):
+    qw = [s for s in model.param_specs if s.kind == model_lib.KIND_QWEIGHT]
+    tp = [
+        s
+        for s in model.param_specs
+        if s.kind in (model_lib.KIND_BIAS, model_lib.KIND_BN_SCALE, model_lib.KIND_BN_BIAS)
+    ]
+    st = [s for s in model.param_specs if s.kind in model_lib.STATE_KINDS]
+    return qw, tp, st
+
+
+def _cross_entropy(logits, y):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def _correct(logits, y):
+    return jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+
+
+def make_train_step(model: model_lib.Model):
+    """Build ``train_step(*flat_inputs) -> flat_outputs`` for this model."""
+    qw_specs, tp_specs, st_specs = _groups(model)
+    nq, nt, ns = len(qw_specs), len(tp_specs), len(st_specs)
+
+    def train_step(*args):
+        idx = 0
+        qws = list(args[idx : idx + nq]); idx += nq
+        tps = list(args[idx : idx + nt]); idx += nt
+        sts = list(args[idx : idx + ns]); idx += ns
+        vqs = list(args[idx : idx + nq]); idx += nq
+        vts = list(args[idx : idx + nt]); idx += nt
+        masks = list(args[idx : idx + nq]); idx += nq
+        x, y, lr, momentum, alpha_l1, alpha_bl1 = args[idx : idx + 6]
+
+        # --- Eq. 1-2: quantize the (masked) master weights, per layer ---
+        qs, steps = [], []
+        for w, m in zip(qws, masks):
+            q, _code, step = qz.quantize(w * m)
+            qs.append(q)
+            steps.append(step)
+
+        def loss_fn(qs, tps):
+            p = {s.name: v for s, v in zip(qw_specs, qs)}
+            p.update({s.name: v for s, v in zip(tp_specs, tps)})
+            p.update({s.name: v for s, v in zip(st_specs, sts)})
+            logits, updates = model.apply(p, x, True)
+            ce = _cross_entropy(logits, y)
+            l1 = sum(jnp.sum(jnp.abs(q)) for q in qs)
+            bl1 = sum(bs.bl1_ste(q, step) for q, step in zip(qs, steps))
+            loss = ce + alpha_l1 * l1 + alpha_bl1 * bl1
+            return loss, (ce, l1, bl1, _correct(logits, y), updates)
+
+        # --- Eq. 4: gradients taken at q, applied to q ---
+        (loss, (ce, l1, bl1, correct, updates)), (gq, gt) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True
+        )(qs, tps)
+
+        new_vqs = [momentum * v + g for v, g in zip(vqs, gq)]
+        new_vts = [momentum * v + g for v, g in zip(vts, gt)]
+        new_qws = [
+            (q - lr * v) * m for q, v, m in zip(qs, new_vqs, masks)
+        ]
+        new_tps = [t - lr * v for t, v in zip(tps, new_vts)]
+        new_sts = [
+            jax.lax.stop_gradient(updates.get(s.name, old))
+            for s, old in zip(st_specs, sts)
+        ]
+        return tuple(
+            new_qws
+            + new_tps
+            + new_sts
+            + new_vqs
+            + new_vts
+            + [loss, ce, l1, bl1, correct]
+        )
+
+    return train_step
+
+
+def make_eval_step(model: model_lib.Model):
+    """Deployment-accuracy eval: quantized weights, BN running stats."""
+    qw_specs, tp_specs, st_specs = _groups(model)
+    nq, nt, ns = len(qw_specs), len(tp_specs), len(st_specs)
+
+    def eval_step(*args):
+        idx = 0
+        qws = list(args[idx : idx + nq]); idx += nq
+        tps = list(args[idx : idx + nt]); idx += nt
+        sts = list(args[idx : idx + ns]); idx += ns
+        masks = list(args[idx : idx + nq]); idx += nq
+        x, y = args[idx : idx + 2]
+
+        p = {}
+        for s, w, m in zip(qw_specs, qws, masks):
+            q, _code, _step = qz.quantize(w * m)
+            p[s.name] = q
+        p.update({s.name: v for s, v in zip(tp_specs, tps)})
+        p.update({s.name: v for s, v in zip(st_specs, sts)})
+        logits, _ = model.apply(p, x, False)
+        return (_cross_entropy(logits, y), _correct(logits, y))
+
+    return eval_step
+
+
+def make_sparsity_report(model: model_lib.Model):
+    """Per-model bit-slice census: quantize every qweight and count non-zero
+    elements per slice (LSB-first) plus totals. Output layout:
+
+      [counts(4) per qweight ..., numel(1) per qweight ...]
+
+    Cross-checks the Rust-side analyzer (rust/src/sparsity) bit-for-bit.
+    """
+    qw_specs, _tp, _st = _groups(model)
+    nq = len(qw_specs)
+
+    def report(*qws):
+        assert len(qws) == nq
+        outs = []
+        numels = []
+        for w in qws:
+            _q, code, _step = qz.quantize(w)
+            outs.append(bs.slice_nonzero_counts(code))
+            numels.append(jnp.asarray(float(w.size)))
+        return tuple(outs + numels)
+
+    return report
+
+
+# ---------------------------------------------------------------------------
+# ReRAM-simulated inference (MLP) — validates the reduced-ADC deployment
+# ---------------------------------------------------------------------------
+
+
+def _act_quantize(x):
+    """Quantize non-negative activations to 8-bit codes (dynamic range)."""
+    m = jnp.maximum(jnp.max(x), ref._EPS)
+    step = jnp.exp2(jnp.ceil(jnp.log2(m)) - ref.N_BITS)
+    code = jnp.clip(jnp.floor(x / step), 0.0, ref.CODE_MAX)
+    return code, step
+
+
+def _reram_linear_tiled(x, w, b, adc_bits):
+    """One linear layer on ReRAM crossbars, tiling rows into 128-row
+    crossbars. ADC clipping happens per tile (physically: per bitline of
+    each crossbar); tile partial sums are combined digitally."""
+    a_code, a_step = _act_quantize(x)
+    _qw, code, w_step = qz.quantize(w)
+    slices = bs.bitslice(code)  # (4, R, C)
+    pos = jnp.where(w > 0, slices, 0.0)
+    neg = jnp.where(w < 0, slices, 0.0)
+    rows = w.shape[0]
+    out = jnp.zeros((x.shape[0], w.shape[1]), jnp.float32)
+    for r0 in range(0, rows, xb.XBAR_ROWS):
+        r1 = min(r0 + xb.XBAR_ROWS, rows)
+        out = out + xb.reram_linear(
+            a_code[:, r0:r1],
+            pos[:, r0:r1, :],
+            neg[:, r0:r1, :],
+            adc_bits,
+            jnp.float32(1.0),
+            jnp.float32(1.0),
+        )
+    return out * (w_step * a_step) + b
+
+
+def make_reram_infer(model: model_lib.Model, adc_bits):
+    """ReRAM-simulated MLP forward: logits under per-slice ADC resolutions.
+
+    ``adc_bits`` is LSB-first, e.g. (3, 3, 3, 1) for the paper's Table 3
+    deployment or (10, 10, 10, 10) for a lossless reference.
+    Inputs: [fc1/w, fc1/b, fc2/w, fc2/b, x]; output: [logits].
+    """
+    if model.name != "mlp":
+        raise ValueError("reram_infer graph is exported for the MLP only")
+
+    def infer(w1, b1, w2, b2, x):
+        h = _reram_linear_tiled(x, w1, b1, adc_bits)
+        h = jax.nn.relu(h)
+        logits = _reram_linear_tiled(h, w2, b2, adc_bits)
+        return (logits,)
+
+    return infer

@@ -1,0 +1,289 @@
+"""Kernel-vs-oracle correctness: the CORE correctness signal for L1.
+
+Hypothesis sweeps shapes/scales/dtypes of the Pallas kernels and asserts
+equality (these are exact integer/fixed-point computations — tolerances are
+zero or ulp-level) against the pure-jnp references in ``ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitslice as bs
+from compile.kernels import crossbar as xb
+from compile.kernels import quantize as qz
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def arr(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(0.0, scale, shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# quantize
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 400),
+    n=st.integers(1, 400),
+    scale=st.sampled_from([1e-4, 1e-2, 1.0, 37.5, 1e3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxabs_matches_ref(m, n, scale, seed):
+    w = arr(np.random.default_rng(seed), (m, n), scale)
+    assert float(qz.maxabs(w)) == float(jnp.max(jnp.abs(w)))
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 300),
+    n=st.integers(1, 300),
+    scale=st.sampled_from([1e-3, 0.1, 1.0, 12.3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_matches_ref(m, n, scale, seed):
+    w = arr(np.random.default_rng(seed), (m, n), scale)
+    q_r, c_r, s_r = ref.quantize(w)
+    q_k, c_k, s_k = qz.quantize(w)
+    assert float(s_r) == float(s_k)
+    np.testing.assert_array_equal(np.asarray(q_r), np.asarray(q_k))
+    np.testing.assert_array_equal(np.asarray(c_r), np.asarray(c_k))
+
+
+@settings(**SETTINGS)
+@given(
+    shape=st.sampled_from([(7,), (64, 10), (3, 4, 5), (2, 3, 3, 8)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_arbitrary_rank(shape, seed):
+    w = arr(np.random.default_rng(seed), shape, 0.5)
+    q_r, c_r, _ = ref.quantize(w)
+    q_k, c_k, _ = qz.quantize(w)
+    np.testing.assert_array_equal(np.asarray(q_r), np.asarray(q_k))
+    np.testing.assert_array_equal(np.asarray(c_r), np.asarray(c_k))
+
+
+def test_quantize_code_range():
+    rng = np.random.default_rng(1)
+    w = arr(rng, (128, 128), 2.0)
+    _, code, _ = qz.quantize(w)
+    assert float(jnp.min(code)) >= 0.0
+    assert float(jnp.max(code)) <= ref.CODE_MAX
+
+
+def test_quantize_all_zero_tensor():
+    w = jnp.zeros((33, 17), jnp.float32)
+    q, code, step = qz.quantize(w)
+    assert float(step) > 0.0  # EPS guard, no nan/inf
+    np.testing.assert_array_equal(np.asarray(code), 0.0)
+    np.testing.assert_array_equal(np.asarray(q), 0.0)
+
+
+def test_quantize_error_bound():
+    # |w - Q(w)| < Qstep for every element (floor quantization).
+    rng = np.random.default_rng(2)
+    w = arr(rng, (100, 100), 0.3)
+    q, _, step = qz.quantize(w)
+    assert float(jnp.max(jnp.abs(w - q))) < float(step)
+
+
+def test_quantize_exact_power_of_two_max():
+    # max|w| exactly 2^S must still produce codes <= 255 (clip of 256).
+    w = jnp.asarray([[1.0, -1.0, 0.5, 0.25]], jnp.float32)
+    _, code, step = qz.quantize(w)
+    assert float(step) == 2.0**-8
+    assert float(jnp.max(code)) == 255.0
+
+
+def test_quantize_ste_gradient_is_identity():
+    rng = np.random.default_rng(3)
+    w = arr(rng, (50, 20), 0.1)
+    g = jax.grad(lambda w: jnp.sum(qz.quantize_ste(w) * 3.0))(w)
+    np.testing.assert_allclose(np.asarray(g), 3.0)
+
+
+# ---------------------------------------------------------------------------
+# bitslice / bl1
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 300),
+    n=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bitslice_matches_ref(m, n, seed):
+    rng = np.random.default_rng(seed)
+    code = jnp.asarray(rng.integers(0, 256, (m, n)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(ref.bitslice(code)), np.asarray(bs.bitslice(code))
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 200),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bitslice_recombination_invariant(m, n, seed):
+    # sum_k Bhat^k * 4^k == B for every element
+    rng = np.random.default_rng(seed)
+    code = jnp.asarray(rng.integers(0, 256, (m, n)).astype(np.float32))
+    s = bs.bitslice(code)
+    recon = sum(s[k] * ref.SLICE_BASE**k for k in range(ref.N_SLICES))
+    np.testing.assert_array_equal(np.asarray(recon), np.asarray(code))
+
+
+def test_bitslice_slice_range():
+    code = jnp.arange(256, dtype=jnp.float32).reshape(16, 16)
+    s = bs.bitslice(code)
+    assert float(jnp.min(s)) == 0.0
+    assert float(jnp.max(s)) == ref.SLICE_MAX
+
+
+def test_bitslice_known_values():
+    # 0b11100100 = 228 -> slices LSB-first: 0, 1, 2, 3
+    s = bs.bitslice(jnp.asarray([[228.0]]))
+    np.testing.assert_array_equal(np.asarray(s).ravel(), [0.0, 1.0, 2.0, 3.0])
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 300),
+    n=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bl1_penalty_matches_ref(m, n, seed):
+    rng = np.random.default_rng(seed)
+    code = jnp.asarray(rng.integers(0, 256, (m, n)).astype(np.float32))
+    np.testing.assert_allclose(
+        float(bs.bl1_penalty(code)), float(ref.bl1_penalty(code)), rtol=1e-6
+    )
+
+
+def test_bl1_penalty_is_digit_sum():
+    # single element 255 -> digit sum 3+3+3+3 = 12
+    assert float(bs.bl1_penalty(jnp.asarray([[255.0]]))) == 12.0
+    assert float(bs.bl1_penalty(jnp.asarray([[0.0]]))) == 0.0
+    assert float(bs.bl1_penalty(jnp.asarray([[1.0]]))) == 1.0
+
+
+def test_bl1_ste_value_and_grad():
+    rng = np.random.default_rng(4)
+    w = arr(rng, (40, 30), 0.2)
+    q, code, step = qz.quantize(w)
+    val, g = jax.value_and_grad(lambda q: bs.bl1_ste(q, step))(q)
+    np.testing.assert_allclose(float(val), float(ref.bl1_penalty(code)), rtol=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(g), np.asarray(ref.bl1_grad(q, step))
+    )
+
+
+def test_bl1_grad_sign_pulls_toward_zero():
+    # gradient descent on Bl1 must shrink magnitudes: grad sign == weight sign
+    rng = np.random.default_rng(5)
+    w = arr(rng, (30, 30), 0.2)
+    q, _, step = qz.quantize(w)
+    g = jax.grad(lambda q: bs.bl1_ste(q, step))(q)
+    nz = np.asarray(q) != 0
+    assert np.all(np.sign(np.asarray(g))[nz] == np.sign(np.asarray(q))[nz])
+
+
+def test_slice_nonzero_counts():
+    code = jnp.asarray([[0.0, 1.0, 4.0, 16.0, 64.0, 255.0]])
+    counts = bs.slice_nonzero_counts(code)
+    # per slice LSB-first: slice0 nonzero for {1,255}; slice1 for {4,255};
+    # slice2 for {16,255}; slice3 for {64,255}
+    np.testing.assert_array_equal(np.asarray(counts), [2.0, 2.0, 2.0, 2.0])
+
+
+# ---------------------------------------------------------------------------
+# crossbar
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 64),
+    r=st.integers(1, 128),
+    c=st.integers(1, 200),
+    adc_bits=st.sampled_from([1, 2, 3, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_crossbar_mvm_matches_ref(b, r, c, adc_bits, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(0, 256, (b, r)).astype(np.float32))
+    wp = jnp.asarray(rng.integers(0, 4, (r, c)).astype(np.float32))
+    wn = jnp.asarray(rng.integers(0, 4, (r, c)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(ref.crossbar_mvm(a, wp, wn, adc_bits)),
+        np.asarray(xb.crossbar_mvm(a, wp, wn, adc_bits)),
+    )
+
+
+def test_crossbar_high_resolution_is_exact():
+    # With a big-enough ADC the crossbar computes the exact integer MVM.
+    rng = np.random.default_rng(6)
+    a = jnp.asarray(rng.integers(0, 256, (16, 100)).astype(np.float32))
+    wp = jnp.asarray(rng.integers(0, 4, (100, 32)).astype(np.float32))
+    wn = jnp.zeros((100, 32), jnp.float32)
+    out = xb.crossbar_mvm(a, wp, wn, adc_bits=10)  # 2^10-1 > 100*3
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(a @ wp))
+
+
+def test_crossbar_one_bit_adc_saturates():
+    # Dense column with 1-bit ADC: every plane's current clips at 1.
+    a = jnp.full((1, 128), 255.0)
+    wp = jnp.full((128, 1), 3.0)
+    wn = jnp.zeros((128, 1), jnp.float32)
+    out = xb.crossbar_mvm(a, wp, wn, adc_bits=1)
+    assert float(out[0, 0]) == 255.0  # sum over 8 planes of 1 * 2^t
+
+
+def test_crossbar_rejects_oversized_rows():
+    a = jnp.zeros((1, 129), jnp.float32)
+    w = jnp.zeros((129, 4), jnp.float32)
+    with pytest.raises(AssertionError):
+        xb.crossbar_mvm(a, w, w, 8)
+
+
+def test_reram_linear_matches_ref():
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.integers(0, 256, (8, 64)).astype(np.float32))
+    sp = jnp.asarray(rng.integers(0, 4, (4, 64, 40)).astype(np.float32))
+    sn = jnp.asarray(rng.integers(0, 4, (4, 64, 40)).astype(np.float32))
+    bits = [3, 3, 3, 1]
+    ws = jnp.asarray(2.0**-8)
+    as_ = jnp.asarray(2.0**-8)
+    np.testing.assert_allclose(
+        np.asarray(ref.reram_linear(a, sp, sn, bits, ws, as_)),
+        np.asarray(xb.reram_linear(a, sp, sn, bits, ws, as_)),
+        rtol=1e-6,
+    )
+
+
+def test_reram_linear_exact_when_high_adc():
+    # The end-to-end deployment identity: with lossless ADC resolution the
+    # ReRAM linear layer equals q_a @ q_w in real units.
+    rng = np.random.default_rng(8)
+    w = jnp.asarray(rng.normal(0, 0.1, (64, 24)).astype(np.float32))
+    x = jnp.asarray(rng.uniform(0, 1, (4, 64)).astype(np.float32))
+    qw, cw, sw = ref.quantize(w)
+    qa, ca, sa = ref.quantize(x)
+    slices = ref.bitslice(cw)
+    pos = jnp.where(w > 0, slices, 0.0)
+    neg = jnp.where(w < 0, slices, 0.0)
+    out = xb.reram_linear(ca, pos, neg, [10, 10, 10, 10], sw, sa)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(qa @ qw), rtol=1e-4, atol=1e-5
+    )

@@ -1,0 +1,113 @@
+"""Model definitions: shapes, parameter specs, BN state handling."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module", params=["mlp", "vgg11", "resnet20"])
+def model(request):
+    return M.get_model(request.param)
+
+
+def make_inputs(model, batch=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.uniform(0, 1, (batch,) + model.input_shape).astype(np.float32)
+    )
+
+
+def test_unknown_model_rejected():
+    with pytest.raises(ValueError):
+        M.get_model("alexnet")
+
+
+def test_param_specs_are_unique_and_shaped(model):
+    names = [s.name for s in model.param_specs]
+    assert len(names) == len(set(names)), "duplicate param names"
+    for s in model.param_specs:
+        assert all(d > 0 for d in s.shape), s
+
+
+def test_init_params_deterministic_and_spec_shaped(model):
+    p1 = model.init_params(0)
+    p2 = model.init_params(0)
+    p3 = model.init_params(1)
+    some_diff = False
+    for s in model.param_specs:
+        assert p1[s.name].shape == s.shape
+        np.testing.assert_array_equal(np.asarray(p1[s.name]), np.asarray(p2[s.name]))
+        if s.init_std > 0 and not np.array_equal(
+            np.asarray(p1[s.name]), np.asarray(p3[s.name])
+        ):
+            some_diff = True
+    assert some_diff, "different seeds gave identical weights"
+
+
+def test_forward_shapes_and_finiteness(model):
+    p = model.init_params(0)
+    x = make_inputs(model, batch=2)
+    logits, updates = model.apply(p, x, True)
+    assert logits.shape == (2, model.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    # eval mode produces no state updates
+    logits_e, upd_e = model.apply(p, x, False)
+    assert upd_e == {}
+    assert logits_e.shape == (2, model.num_classes)
+
+
+def test_bn_models_report_state_updates():
+    m = M.get_model("resnet20")
+    p = m.init_params(0)
+    x = make_inputs(m)
+    _, updates = m.apply(p, x, True)
+    st_names = {s.name for s in m.specs_of_kind(*M.STATE_KINDS)}
+    assert set(updates.keys()) == st_names
+    # running stats moved toward batch stats (not equal to init)
+    moved = any(
+        not np.allclose(np.asarray(updates[n]), np.asarray(p[n])) for n in st_names
+    )
+    assert moved
+
+
+def test_bn_free_models_have_no_state():
+    for name in ["mlp", "vgg11"]:
+        m = M.get_model(name)
+        assert m.specs_of_kind(*M.STATE_KINDS) == []
+
+
+def test_qweight_inventory_matches_paper_models():
+    # MLP: two linear layers
+    assert len(M.get_model("mlp").specs_of_kind(M.KIND_QWEIGHT)) == 2
+    # VGG-11 config A: 8 convs + 1 fc
+    assert len(M.get_model("vgg11").specs_of_kind(M.KIND_QWEIGHT)) == 9
+    # ResNet-20: 1 stem + 9 blocks x 2 convs + 2 projections + fc = 22
+    assert len(M.get_model("resnet20").specs_of_kind(M.KIND_QWEIGHT)) == 22
+
+
+def test_param_counts_sane():
+    def count(m):
+        return sum(int(np.prod(s.shape)) for s in m.param_specs)
+
+    assert 230_000 < count(M.get_model("mlp")) < 250_000
+    assert 9_000_000 < count(M.get_model("vgg11")) < 10_000_000
+    assert 250_000 < count(M.get_model("resnet20")) < 320_000
+
+
+def test_gradients_flow_to_all_trainable_params():
+    m = M.get_model("mlp")
+    p = m.init_params(0)
+    x = make_inputs(m, batch=4)
+    y = jnp.asarray([0, 1, 2, 3], jnp.int32)
+
+    def loss(p):
+        logits, _ = m.apply(p, x, True)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    g = jax.grad(loss)(p)
+    for s in m.specs_of_kind(*M.TRAINABLE_KINDS):
+        assert float(jnp.max(jnp.abs(g[s.name]))) > 0.0, s.name

@@ -1,0 +1,169 @@
+"""Training-step semantics (paper Eq. 4) and the exported graph contracts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import train as T
+from compile.kernels import ref
+
+
+def setup_mlp(batch=8, seed=0):
+    m = M.get_model("mlp")
+    qw, tp, st = T._groups(m)
+    rng = np.random.default_rng(seed)
+    params = m.init_params(seed)
+    qws = [params[s.name] for s in qw]
+    tps = [params[s.name] for s in tp]
+    sts = [params[s.name] for s in st]
+    vqs = [jnp.zeros_like(w) for w in qws]
+    vts = [jnp.zeros_like(t) for t in tps]
+    masks = [jnp.ones_like(w) for w in qws]
+    x = jnp.asarray(rng.uniform(0, 1, (batch, 784)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, batch).astype(np.int32))
+    return m, (qws, tps, sts, vqs, vts, masks), (x, y)
+
+
+def run_step(m, state, data, lr=0.1, mom=0.0, a1=0.0, ab=0.0):
+    qws, tps, sts, vqs, vts, masks = state
+    step = jax.jit(T.make_train_step(m))
+    args = (
+        qws + tps + sts + vqs + vts + masks
+        + [data[0], data[1], jnp.float32(lr), jnp.float32(mom),
+           jnp.float32(a1), jnp.float32(ab)]
+    )
+    outs = step(*args)
+    nq, nt, ns = len(qws), len(tps), len(sts)
+    i = 0
+    new_qws = list(outs[i : i + nq]); i += nq
+    new_tps = list(outs[i : i + nt]); i += nt
+    new_sts = list(outs[i : i + ns]); i += ns
+    new_vqs = list(outs[i : i + nq]); i += nq
+    new_vts = list(outs[i : i + nt]); i += nt
+    loss, ce, l1, bl1, correct = outs[i : i + 5]
+    return (new_qws, new_tps, new_sts, new_vqs, new_vts, masks), {
+        "loss": float(loss),
+        "ce": float(ce),
+        "l1": float(l1),
+        "bl1": float(bl1),
+        "correct": float(correct),
+    }
+
+
+def test_zero_lr_writes_back_quantized_weights():
+    # Eq. 4 with lr=0: w' = Q(w) exactly (the quantize-replace of Fig. 1).
+    m, state, data = setup_mlp()
+    new_state, _ = run_step(m, state, data, lr=0.0)
+    for w, w2 in zip(state[0], new_state[0]):
+        q, _, _ = ref.quantize(w)
+        np.testing.assert_array_equal(np.asarray(w2), np.asarray(q))
+
+
+def test_reported_l1_and_bl1_match_reference():
+    m, state, data = setup_mlp()
+    _, metrics = run_step(m, state, data)
+    want_l1 = sum(float(jnp.sum(jnp.abs(ref.quantize(w)[0]))) for w in state[0])
+    want_bl1 = sum(float(ref.bl1_penalty(ref.quantize(w)[1])) for w in state[0])
+    assert metrics["l1"] == pytest.approx(want_l1, rel=1e-5)
+    assert metrics["bl1"] == pytest.approx(want_bl1, rel=1e-5)
+
+
+def test_loss_composition():
+    m, state, data = setup_mlp()
+    a1, ab = 3e-5, 7e-7
+    _, metrics = run_step(m, state, data, a1=a1, ab=ab)
+    assert metrics["loss"] == pytest.approx(
+        metrics["ce"] + a1 * metrics["l1"] + ab * metrics["bl1"], rel=1e-5
+    )
+
+
+def test_masks_freeze_weights_at_zero():
+    m, state, data = setup_mlp()
+    qws, tps, sts, vqs, vts, _ = state
+    rng = np.random.default_rng(1)
+    masks = [
+        jnp.asarray((rng.uniform(size=w.shape) > 0.5).astype(np.float32))
+        for w in qws
+    ]
+    state = (qws, tps, sts, vqs, vts, masks)
+    new_state, _ = run_step(m, state, data, lr=0.5)
+    for w2, mk in zip(new_state[0], masks):
+        dead = np.asarray(w2)[np.asarray(mk) == 0.0]
+        np.testing.assert_array_equal(dead, 0.0)
+
+
+def test_repeated_steps_reduce_loss_on_fixed_batch():
+    m, state, data = setup_mlp()
+    losses = []
+    for _ in range(12):
+        state, metrics = run_step(m, state, data, lr=0.2, mom=0.9)
+        losses.append(metrics["loss"])
+    assert losses[-1] < losses[0] * 0.5, losses
+
+
+def test_bl1_pressure_reduces_digit_sum():
+    # strong alpha so the regularizer dominates the task gradient
+    m, state, data = setup_mlp()
+    bl1s = []
+    for _ in range(15):
+        state, metrics = run_step(m, state, data, lr=0.05, ab=3e-5)
+        bl1s.append(metrics["bl1"])
+    assert bl1s[-1] < bl1s[0], bl1s
+
+
+def test_momentum_accumulates():
+    m, state, data = setup_mlp()
+    s1, _ = run_step(m, state, data, lr=0.1, mom=0.9)
+    # velocity after first step equals the gradient (v = 0.9*0 + g) != 0
+    assert any(float(jnp.max(jnp.abs(v))) > 0 for v in s1[3])
+
+
+def test_eval_step_counts_correct_and_ignores_label_minus_one():
+    m, state, data = setup_mlp()
+    qws, tps, sts, _, _, masks = state
+    ev = jax.jit(T.make_eval_step(m))
+    x, y = data
+    loss, correct = ev(*(qws + tps + sts + masks + [x, y]))
+    assert 0.0 <= float(correct) <= x.shape[0]
+    # label -1 rows can never be correct (evaluator wrap-fill contract)
+    y_fill = jnp.full_like(y, -1)
+    _, c2 = ev(*(qws + tps + sts + masks + [x, y_fill]))
+    assert float(c2) == 0.0
+
+
+def test_sparsity_report_matches_reference_counts():
+    m, state, _ = setup_mlp()
+    rep = jax.jit(T.make_sparsity_report(m))
+    outs = rep(*state[0])
+    nq = len(state[0])
+    for i, w in enumerate(state[0]):
+        counts = np.asarray(outs[i])
+        _, code, _ = ref.quantize(w)
+        want = np.asarray(
+            jnp.sum((ref.bitslice(code) != 0).astype(jnp.float32), axis=(1, 2))
+        )
+        np.testing.assert_array_equal(counts, want)
+        assert float(outs[nq + i]) == w.size
+
+
+def test_reram_infer_graph_close_to_dense_quantized_forward():
+    m, state, data = setup_mlp(batch=4)
+    qws, tps, _, _, _, _ = state
+    infer = jax.jit(T.make_reram_infer(m, (10, 10, 10, 10)))
+    (logits,) = infer(qws[0], tps[0], qws[1], tps[1], data[0])
+    # dense reference with quantized weights + quantized activations
+    q1, _, _ = ref.quantize(qws[0])
+    q2, _, _ = ref.quantize(qws[1])
+    h = jnp.maximum(data[0] @ q1 + tps[0], 0.0)
+    want = h @ q2 + tps[1]
+    # activation quantization inside the reram path introduces small error
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(want), rtol=0.15, atol=0.05
+    )
+
+
+def test_reram_infer_rejects_non_mlp():
+    with pytest.raises(ValueError):
+        T.make_reram_infer(M.get_model("vgg11"), (3, 3, 3, 1))

@@ -1,0 +1,75 @@
+//! §Perf: the Rust ReRAM crossbar simulator (reram::sim + reram::crossbar).
+//!
+//! Measures bitline-current accumulation throughput (cell-ops/s), the
+//! single-example mapped-layer forward, and the parallel batched forward —
+//! the pieces behind the Table 3 functional validation. DESIGN.md §Perf
+//! targets >= 1e8 cell-ops/s for the column accumulation.
+//!
+//! Run: `cargo bench --bench crossbar_sim`
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use bitslice_reram::reram::crossbar::Crossbar;
+use bitslice_reram::reram::{mapper, sim};
+use bitslice_reram::tensor::Tensor;
+use bitslice_reram::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(1);
+
+    harness::section("bitline current accumulation (128x128, dense)");
+    {
+        let mut xb = Crossbar::zeros(128, 128);
+        for r in 0..128 {
+            for c in 0..128 {
+                xb.set(r, c, rng.below(4) as u8);
+            }
+        }
+        let bits: Vec<u8> = (0..128).map(|_| rng.below(2) as u8).collect();
+        let mut out = vec![0u32; 128];
+        let st = harness::bench("dense 128x128 bitline_currents", Duration::from_secs(2), || {
+            xb.bitline_currents(&bits, &mut out);
+            std::hint::black_box(&out);
+        });
+        harness::throughput("dense cell-ops", &st, (128 * 128) as f64, "cell-op");
+    }
+
+    harness::section("mapped-layer forward (784x300 MLP fc1)");
+    {
+        let w = Tensor::new(vec![784, 300], rng.normal_vec(784 * 300, 0.05))?;
+        let layer = mapper::map_layer("fc1/w", &w)?;
+        let code: Vec<u8> = (0..784).map(|_| rng.below(256) as u8).collect();
+        let bits = [3u32, 3, 3, 1];
+        let st = harness::bench("forward_codes one example", Duration::from_millis(1500), || {
+            let _ = std::hint::black_box(sim::forward_codes(&layer, &code, &bits));
+        });
+        // 4 slices x 2 signs x 8 bit-planes x cells
+        let cell_ops = (784 * 300 * 4 * 2 * 8) as f64;
+        harness::throughput("forward_codes cell-ops", &st, cell_ops, "cell-op");
+
+        let x = Tensor::new(
+            vec![64, 784],
+            (0..64 * 784).map(|_| rng.next_f32()).collect(),
+        )?;
+        let stb = harness::bench("forward batch=64 (parallel rows)", Duration::from_secs(3), || {
+            let _ = std::hint::black_box(sim::forward(&layer, &x, &bits));
+        });
+        harness::throughput("batched cell-ops", &stb, cell_ops * 64.0, "cell-op");
+        println!(
+            "-> parallel speedup vs 64x single: {:.2}x",
+            64.0 * st.mean.as_secs_f64() / stb.mean.as_secs_f64()
+        );
+    }
+
+    harness::section("weight -> crossbar mapping");
+    {
+        let w = Tensor::new(vec![784, 300], rng.normal_vec(784 * 300, 0.05))?;
+        harness::bench("map_layer 784x300 (all slices+signs)", Duration::from_secs(2), || {
+            let _ = std::hint::black_box(mapper::map_layer("w", &w).unwrap());
+        });
+    }
+    Ok(())
+}

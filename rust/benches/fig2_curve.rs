@@ -1,0 +1,56 @@
+//! Figure 2 regeneration bench: per-slice sparsity traces under l1 vs Bl1
+//! on the MNIST MLP (bench-scale; the paper plots VGG-11 — same code path
+//! via `reproduce fig2 --model vgg11`).
+//!
+//! Also serves as the regularizer ablation: it reports how fast each
+//! regularizer drives the average non-zero-slice ratio down, which is the
+//! claim Figure 2 makes ("bit-slice l1 reduces the number of non-zero
+//! bit-slices faster ... from the very beginning").
+//!
+//! Run: `cargo bench --bench fig2_curve`
+
+use bitslice_reram::config::RunConfig;
+use bitslice_reram::harness as hx;
+use bitslice_reram::runtime::{Engine, Manifest};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = RunConfig::defaults("mlp");
+    cfg.steps = 150;
+    cfg.pretrain_steps = 0; // Fig. 2 starts both regularizers from scratch
+    cfg.trace_every = 10;
+    cfg.out_dir = std::path::PathBuf::from("/tmp/bench-fig2");
+    let manifest = match Manifest::load(&cfg.artifacts_dir) {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("SKIP: run `make artifacts` first");
+            return Ok(());
+        }
+    };
+    let engine = Engine::cpu()?;
+
+    let traces = hx::reproduce_fig2(&engine, &manifest, &cfg)?;
+    println!("\nFigure 2 (bench-scale) — average non-zero slice ratio over training:");
+    println!("{:>6} | {:>8} | {:>8}", "step", "l1", "bl1");
+    let l1 = &traces[0].1;
+    let bl1 = &traces[1].1;
+    for (a, b) in l1.iter().zip(bl1.iter()) {
+        println!(
+            "{:>6} | {:>7.2}% | {:>7.2}%",
+            a.step,
+            a.ratios.iter().sum::<f64>() / 4.0 * 100.0,
+            b.ratios.iter().sum::<f64>() / 4.0 * 100.0
+        );
+    }
+    // the figure's claim, quantified at the end of the trace:
+    if let (Some(a), Some(b)) = (l1.last(), bl1.last()) {
+        let ra = a.ratios.iter().sum::<f64>() / 4.0;
+        let rb = b.ratios.iter().sum::<f64>() / 4.0;
+        println!(
+            "\nfinal average non-zero: l1 {:.2}% vs bl1 {:.2}% ({:.2}x sparser)",
+            ra * 100.0,
+            rb * 100.0,
+            ra / rb.max(1e-9)
+        );
+    }
+    Ok(())
+}

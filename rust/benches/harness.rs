@@ -1,0 +1,76 @@
+//! Shared timing harness for the `cargo bench` targets.
+//!
+//! criterion is not vendored in this sandbox, so the benches use this
+//! small harness: warmup + calibrated iteration count + mean/p50/min/p95
+//! reporting, one aligned row per benchmark. Wall-clock timing via
+//! `std::time::Instant`.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    // not every bench target uses every helper; the file is #[path]-included
+    #[allow(dead_code)]
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+}
+
+/// Run `f` repeatedly for ~`target` total time (after 2 warmup calls),
+/// then report distribution stats.
+pub fn bench<F: FnMut()>(name: &str, target: Duration, mut f: F) -> Stats {
+    // warmup (compile caches, page-in)
+    f();
+    f();
+    // calibrate
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = (target.as_secs_f64() / one.as_secs_f64()).ceil().max(3.0) as usize;
+    let iters = iters.min(10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    let stats = Stats {
+        iters,
+        mean,
+        p50: samples[iters / 2],
+        p95: samples[(iters * 95 / 100).min(iters - 1)],
+        min: samples[0],
+    };
+    println!(
+        "{name:<44} {:>8.3} ms/iter  (p50 {:>8.3}, p95 {:>8.3}, min {:>8.3}; n={})",
+        stats.mean.as_secs_f64() * 1e3,
+        stats.p50.as_secs_f64() * 1e3,
+        stats.p95.as_secs_f64() * 1e3,
+        stats.min.as_secs_f64() * 1e3,
+        stats.iters
+    );
+    stats
+}
+
+/// Report a throughput line computed from a stats row.
+#[allow(dead_code)]
+pub fn throughput(name: &str, stats: &Stats, units_per_iter: f64, unit: &str) {
+    let per_sec = units_per_iter / stats.mean.as_secs_f64();
+    println!("{name:<44} {:>12.3e} {unit}/s", per_sec);
+}
+
+/// Section header.
+pub fn section(title: &str) {
+    println!("\n== {title} ==");
+}

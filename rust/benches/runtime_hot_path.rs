@@ -1,0 +1,132 @@
+//! §Perf L3: the training hot path and the standalone kernel graphs.
+//!
+//! Measures (a) one full coordinator step — batch assembly + literal
+//! conversion + `train_step` execution + metric extraction — against (b)
+//! the bare executable call, isolating coordinator overhead, plus the
+//! standalone L1 kernel graphs (quantize / bl1 / crossbar tile).
+//!
+//! Run: `cargo bench --bench runtime_hot_path`
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use bitslice_reram::config::{Method, RunConfig};
+use bitslice_reram::coordinator::metrics::MetricsLog;
+use bitslice_reram::coordinator::Trainer;
+use bitslice_reram::data::loader::{assemble, BatchPlan};
+use bitslice_reram::data::Dataset;
+use bitslice_reram::runtime::{Engine, Manifest};
+use bitslice_reram::tensor::Tensor;
+use bitslice_reram::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = RunConfig::defaults("mlp");
+    let manifest = match Manifest::load(&cfg.artifacts_dir) {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("SKIP: run `make artifacts` first");
+            return Ok(());
+        }
+    };
+    let engine = Engine::cpu()?;
+
+    harness::section("coordinator step loop (mlp, batch 128)");
+    {
+        let ds = Dataset::auto("mnist", &cfg.data_dir, true, 4096, 1)?;
+        let mut c = cfg.clone();
+        c.method = Method::Baseline;
+        c.steps = 1;
+        c.pretrain_steps = 0;
+        // full coordinator step, including logging, via Trainer on a
+        // 1-step config repeated by the harness
+        let mut log = MetricsLog::create(None)?;
+        let mut trainer = Trainer::new(&engine, &manifest, c.clone())?;
+        harness::bench("trainer: 1 full step (incl. setup amortized)", Duration::from_secs(3), || {
+            let mut l = MetricsLog::create(None).unwrap();
+            let mut cfg1 = c.clone();
+            cfg1.steps = 1;
+            trainer.cfg = cfg1;
+            trainer.run(&ds, &mut l).unwrap();
+        });
+        let _ = (&mut log,);
+    }
+
+    harness::section("bare executable vs coordinator (mlp train graph)");
+    {
+        let entry = manifest.model("mlp")?;
+        let g = entry.graph("train")?;
+        let exe = engine.load(&g.path)?;
+        let ds = Dataset::auto("mnist", &cfg.data_dir, true, 4096, 1)?;
+        let plan = BatchPlan::new(ds.len(), entry.batch, 7);
+
+        // fixed inputs
+        let state = bitslice_reram::coordinator::ModelState::init(entry, 3);
+        let state_lits = state.to_train_literals()?;
+        let scalars = [
+            Tensor::scalar(0.05).to_literal()?,
+            Tensor::scalar(0.9).to_literal()?,
+            Tensor::scalar(0.0).to_literal()?,
+            Tensor::scalar(0.0).to_literal()?,
+        ];
+        let batch = assemble(&ds, &plan.indices(0));
+        let x = batch.x.to_literal()?;
+        let y = batch.y.to_literal()?;
+        let mut inputs: Vec<&xla::Literal> = Vec::new();
+        inputs.extend(state_lits.iter());
+        inputs.push(&x);
+        inputs.push(&y);
+        inputs.extend(scalars.iter());
+
+        let exec = harness::bench(
+            "execute only (state resident, fixed batch)",
+            Duration::from_secs(3),
+            || {
+                let _ = exe.run(&inputs).unwrap();
+            },
+        );
+
+        let asm = harness::bench("batch assembly + literal conversion", Duration::from_secs(1), || {
+            let b = assemble(&ds, &plan.indices(1));
+            let _ = b.x.to_literal().unwrap();
+            let _ = b.y.to_literal().unwrap();
+        });
+        println!(
+            "-> coordinator overhead per step: {:.3} ms ({:.1}% of execute)",
+            asm.mean_ms(),
+            100.0 * asm.mean_ms() / exec.mean_ms()
+        );
+    }
+
+    harness::section("standalone L1 kernel graphs");
+    {
+        let mut rng = Rng::new(5);
+        type Gen = Box<dyn Fn(&mut Rng, usize) -> Vec<f32>>;
+        let cases: Vec<(&str, Gen)> = vec![
+            ("quantize_1m", Box::new(|r, n| r.normal_vec(n, 0.1))),
+            ("bl1_1m", Box::new(|r, n| (0..n).map(|_| r.below(256) as f32).collect())),
+            ("crossbar_tile", Box::new(|r, n| (0..n).map(|_| r.below(4) as f32).collect())),
+        ];
+        for (name, gen) in cases {
+            let Some(g) = manifest.kernels.get(name) else { continue };
+            let exe = engine.load(&g.path)?;
+            let lits: Vec<xla::Literal> = g
+                .inputs
+                .iter()
+                .map(|s| {
+                    Tensor::new(s.shape.clone(), gen(&mut rng, s.numel()))
+                        .unwrap()
+                        .to_literal()
+                        .unwrap()
+                })
+                .collect();
+            let elems: usize = g.inputs.iter().map(|s| s.numel()).max().unwrap_or(0);
+            let st = harness::bench(&format!("kernel {name}"), Duration::from_secs(2), || {
+                let _ = exe.run(&lits).unwrap();
+            });
+            harness::throughput(&format!("kernel {name} throughput"), &st, elems as f64, "elem");
+        }
+    }
+    Ok(())
+}

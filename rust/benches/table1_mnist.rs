@@ -1,0 +1,57 @@
+//! Table 1 regeneration bench: the full Pruned / l1 / Bl1 pipeline on the
+//! MNIST toy MLP, at bench-scale step counts.
+//!
+//! Prints the paper-format table from a short schedule (the full-scale run
+//! is `cargo run --release -- reproduce table1`) plus end-to-end wall time
+//! per method — the "regenerate the table" harness in bench form.
+//!
+//! Run: `cargo bench --bench table1_mnist`
+
+use std::time::Instant;
+
+use bitslice_reram::config::{Method, RunConfig};
+use bitslice_reram::harness as hx;
+use bitslice_reram::report;
+use bitslice_reram::runtime::{Engine, Manifest};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = RunConfig::defaults("mlp");
+    cfg.steps = 120;
+    cfg.pretrain_steps = 60;
+    cfg.out_dir = std::path::PathBuf::from("/tmp/bench-table1");
+    let manifest = match Manifest::load(&cfg.artifacts_dir) {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("SKIP: run `make artifacts` first");
+            return Ok(());
+        }
+    };
+    let engine = Engine::cpu()?;
+
+    let mut rows = Vec::new();
+    for method in [Method::Pruned, Method::L1, Method::Bl1] {
+        let mut c = cfg.clone();
+        c.method = method;
+        let t0 = Instant::now();
+        let res = hx::run_training(&engine, &manifest, c, false)?;
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<8} {:>6.1}s wall, {:>6.1} ms/step, acc {:.2}%",
+            method.name(),
+            wall,
+            res.outcome.mean_step_ms,
+            res.eval.accuracy * 100.0
+        );
+        rows.push(res.method_row());
+    }
+    println!(
+        "\n{}",
+        report::sparsity_table("Table 1 (bench-scale schedule)", &rows)
+    );
+    let l1_avg = rows[1].stats.mean_std().0;
+    let bl1_avg = rows[2].stats.mean_std().0;
+    if bl1_avg > 0.0 {
+        println!("Bl1 vs l1 average-sparsity improvement: {:.2}x", l1_avg / bl1_avg);
+    }
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Table 2 regeneration bench: l1 vs Bl1 on ResNet-20 (CIFAR-10 class) at
+//! bench-scale step counts, plus the per-step latency of the conv train
+//! graphs — the expensive path of the reproduction.
+//!
+//! The full-scale run is `cargo run --release -- reproduce table2`.
+//! Run: `cargo bench --bench table2_cifar`
+
+use std::time::Instant;
+
+use bitslice_reram::config::{Method, RunConfig};
+use bitslice_reram::harness as hx;
+use bitslice_reram::report;
+use bitslice_reram::runtime::{Engine, Manifest};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = RunConfig::defaults("resnet20");
+    cfg.steps = 30;
+    cfg.pretrain_steps = 10;
+    cfg.train_examples = 1024;
+    cfg.test_examples = 256;
+    cfg.out_dir = std::path::PathBuf::from("/tmp/bench-table2");
+    let manifest = match Manifest::load(&cfg.artifacts_dir) {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("SKIP: run `make artifacts` first");
+            return Ok(());
+        }
+    };
+    let engine = Engine::cpu()?;
+
+    let mut rows = Vec::new();
+    for method in [Method::L1, Method::Bl1] {
+        let mut c = cfg.clone();
+        c.method = method;
+        let t0 = Instant::now();
+        let res = hx::run_training(&engine, &manifest, c, false)?;
+        println!(
+            "resnet20/{:<4} {:>6.1}s wall, {:>7.1} ms/step, acc {:.2}%",
+            method.name(),
+            t0.elapsed().as_secs_f64(),
+            res.outcome.mean_step_ms,
+            res.eval.accuracy * 100.0
+        );
+        rows.push(res.method_row());
+    }
+    println!(
+        "\n{}",
+        report::sparsity_table("Table 2 excerpt (bench-scale, ResNet-20)", &rows)
+    );
+    Ok(())
+}

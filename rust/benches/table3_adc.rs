@@ -1,0 +1,78 @@
+//! Table 3 bench: the ADC cost model and the sparsity -> resolution link.
+//!
+//! (a) regenerates the paper's Table 3 rows exactly (they are analytic);
+//! (b) sweeps synthetic models at controlled bit-slice sparsity levels and
+//!     reports the measured required ADC bits + whole-model savings — the
+//!     quantitative version of the paper's "the resulting sparsity allows
+//!     the ADC resolution to be reduced";
+//! (c) times the analysis itself (mapping + column-current census).
+//!
+//! Run: `cargo bench --bench table3_adc`
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use bitslice_reram::reram::{energy, mapper, resolution, ResolutionPolicy};
+use bitslice_reram::report;
+use bitslice_reram::tensor::Tensor;
+use bitslice_reram::util::rng::Rng;
+
+/// Build a 784x300 weight tensor with approximately the given non-zero
+/// ratio and magnitudes spread across all slices.
+fn sparse_weights(rng: &mut Rng, nonzero: f64) -> Tensor {
+    let n = 784 * 300;
+    let mut data = vec![0.0f32; n];
+    let k = (n as f64 * nonzero) as usize;
+    for _ in 0..k {
+        let i = rng.below(n);
+        data[i] = (rng.next_f32() * 2.0 - 1.0) * rng.next_f32();
+    }
+    data[0] = 1.0; // pin dynamic range
+    Tensor::new(vec![784, 300], data).unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    harness::section("Table 3 — paper operating point (analytic, exact)");
+    println!(
+        "{}",
+        report::adc_table(&[energy::saving_row(3, 1), energy::saving_row(2, 3)])
+    );
+
+    harness::section("sparsity -> required ADC bits sweep (784x300 layer)");
+    println!("nonzero | lossless bits (LSB..MSB) | p99.9 bits | energy saving @p99.9");
+    let mut rng = Rng::new(11);
+    for nonzero in [0.5, 0.2, 0.1, 0.05, 0.02, 0.01, 0.005] {
+        let w = sparse_weights(&mut rng, nonzero);
+        let m = mapper::map_model(&[("w".into(), w)])?;
+        let lossless = resolution::required_bits(&m, ResolutionPolicy::Lossless);
+        let p999 = resolution::required_bits(&m, ResolutionPolicy::Percentile(0.999));
+        let (e, _t, _a) = energy::savings_vs_baseline(&m, p999);
+        println!(
+            "{:>7.1}% | {:?} | {:?} | {:.1}x",
+            nonzero * 100.0,
+            lossless,
+            p999,
+            e
+        );
+    }
+
+    harness::section("analysis cost");
+    let w = sparse_weights(&mut rng, 0.05);
+    let mapped = mapper::map_model(&[("w".into(), w.clone())])?;
+    harness::bench(
+        "column-current census + bits (784x300)",
+        Duration::from_secs(2),
+        || {
+            let _ = std::hint::black_box(resolution::required_bits(
+                &mapped,
+                ResolutionPolicy::Percentile(0.999),
+            ));
+        },
+    );
+    harness::bench("deployment cost roll-up", Duration::from_secs(1), || {
+        let _ = std::hint::black_box(energy::deployment_cost(&mapped, [3, 3, 3, 1]));
+    });
+    Ok(())
+}

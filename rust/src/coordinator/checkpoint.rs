@@ -1,0 +1,259 @@
+//! Checkpoints: binary tensor snapshots + JSON metadata.
+//!
+//! Format (`state.bin`): magic "BSRK1\n", then per tensor a header line
+//! `<group>:<index> <ndims> <dims...> <byte-len>\n` followed by raw
+//! little-endian f32 data. `meta.json` records model/method/step so a
+//! checkpoint is self-describing.
+
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::state::ModelState;
+use crate::tensor::Tensor;
+use crate::util::json::{num, obj, s};
+
+const MAGIC: &[u8] = b"BSRK1\n";
+
+/// Checkpoint metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Meta {
+    pub model: String,
+    pub method: String,
+    pub step: usize,
+    pub dataset_source: String,
+}
+
+fn write_tensor<W: Write>(w: &mut W, group: &str, idx: usize, t: &Tensor) -> Result<()> {
+    write!(w, "{group}:{idx} {}", t.shape().len())?;
+    for d in t.shape() {
+        write!(w, " {d}")?;
+    }
+    writeln!(w, " {}", t.len() * 4)?;
+    for v in t.data() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_line<R: Read>(r: &mut R) -> Result<String> {
+    let mut line = Vec::new();
+    let mut byte = [0u8; 1];
+    loop {
+        r.read_exact(&mut byte).context("checkpoint truncated")?;
+        if byte[0] == b'\n' {
+            break;
+        }
+        line.push(byte[0]);
+        anyhow::ensure!(line.len() < 4096, "header line too long");
+    }
+    Ok(String::from_utf8(line)?)
+}
+
+fn read_tensor<R: Read>(r: &mut R, want_group: &str, want_idx: usize) -> Result<Tensor> {
+    let header = read_line(r)?;
+    let mut parts = header.split_whitespace();
+    let tag = parts.next().context("missing tag")?;
+    anyhow::ensure!(
+        tag == format!("{want_group}:{want_idx}"),
+        "checkpoint order mismatch: expected {want_group}:{want_idx}, got {tag}"
+    );
+    let ndims: usize = parts.next().context("ndims")?.parse()?;
+    let mut shape = Vec::with_capacity(ndims);
+    for _ in 0..ndims {
+        shape.push(parts.next().context("dim")?.parse()?);
+    }
+    let bytes: usize = parts.next().context("len")?.parse()?;
+    let numel: usize = shape.iter().product();
+    anyhow::ensure!(bytes == numel * 4, "byte-length mismatch");
+    let mut raw = vec![0u8; bytes];
+    r.read_exact(&mut raw).context("tensor data truncated")?;
+    let data: Vec<f32> = raw
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    Tensor::new(shape, data)
+}
+
+/// Save state + metadata into `dir`.
+pub fn save(dir: &Path, state: &ModelState, meta: &Meta) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut w = BufWriter::new(std::fs::File::create(dir.join("state.bin"))?);
+    w.write_all(MAGIC)?;
+    for (group, tensors) in [
+        ("qw", &state.qws),
+        ("tp", &state.tps),
+        ("st", &state.sts),
+        ("vq", &state.vqs),
+        ("vt", &state.vts),
+        ("mask", &state.masks),
+    ] {
+        for (i, t) in tensors.iter().enumerate() {
+            write_tensor(&mut w, group, i, t)?;
+        }
+    }
+    w.flush()?;
+    let j = obj(vec![
+        ("model", s(&meta.model)),
+        ("method", s(&meta.method)),
+        ("step", num(meta.step as f64)),
+        ("dataset_source", s(&meta.dataset_source)),
+    ]);
+    std::fs::write(dir.join("meta.json"), format!("{j}\n"))?;
+    Ok(())
+}
+
+/// Load a checkpoint into an existing (shape-compatible) state.
+pub fn load(dir: &Path, state: &mut ModelState) -> Result<Meta> {
+    let mut r = std::io::BufReader::new(
+        std::fs::File::open(dir.join("state.bin"))
+            .with_context(|| format!("opening checkpoint {}", dir.display()))?,
+    );
+    let mut magic = [0u8; 6];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(magic == MAGIC, "bad checkpoint magic");
+    for (group, tensors) in [
+        ("qw", &mut state.qws),
+        ("tp", &mut state.tps),
+        ("st", &mut state.sts),
+        ("vq", &mut state.vqs),
+        ("vt", &mut state.vts),
+        ("mask", &mut state.masks),
+    ] {
+        for (i, slot) in tensors.iter_mut().enumerate() {
+            let t = read_tensor(&mut r, group, i)?;
+            anyhow::ensure!(
+                t.shape() == slot.shape(),
+                "{group}:{i} shape {:?} != expected {:?}",
+                t.shape(),
+                slot.shape()
+            );
+            *slot = t;
+        }
+    }
+    let meta_text = std::fs::read_to_string(dir.join("meta.json"))?;
+    let j = crate::util::json::parse(&meta_text)?;
+    Ok(Meta {
+        model: j.req("model")?.as_str().context("model")?.to_string(),
+        method: j.req("method")?.as_str().context("method")?.to_string(),
+        step: j.req("step")?.as_usize().context("step")?,
+        dataset_source: j
+            .req("dataset_source")?
+            .as_str()
+            .context("source")?
+            .to_string(),
+    })
+}
+
+/// Read just the metadata.
+pub fn load_meta(dir: &Path) -> Result<Meta> {
+    let meta_text = std::fs::read_to_string(dir.join("meta.json"))?;
+    let j = crate::util::json::parse(&meta_text)?;
+    Ok(Meta {
+        model: j.req("model")?.as_str().context("model")?.to_string(),
+        method: j.req("method")?.as_str().context("method")?.to_string(),
+        step: j.req("step")?.as_usize().context("step")?,
+        dataset_source: j
+            .req("dataset_source")?
+            .as_str()
+            .context("source")?
+            .to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{ModelEntry, ParamEntry};
+
+    fn entry() -> ModelEntry {
+        ModelEntry {
+            name: "toy".into(),
+            batch: 2,
+            input_shape: vec![4],
+            num_classes: 2,
+            qw: vec![ParamEntry {
+                name: "w".into(),
+                shape: vec![4, 3],
+                init_std: 0.3,
+                init_const: 0.0,
+            }],
+            tp: vec![ParamEntry {
+                name: "b".into(),
+                shape: vec![3],
+                init_std: 0.0,
+                init_const: 0.1,
+            }],
+            st: vec![],
+            graphs: Default::default(),
+        }
+    }
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("ckpt-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = tmpdir("rt");
+        let state = ModelState::init(&entry(), 5);
+        let meta = Meta {
+            model: "toy".into(),
+            method: "bl1".into(),
+            step: 123,
+            dataset_source: "synthetic-mnist".into(),
+        };
+        save(&dir, &state, &meta).unwrap();
+        let mut loaded = ModelState::init(&entry(), 999); // different seed
+        let got_meta = load(&dir, &mut loaded).unwrap();
+        assert_eq!(got_meta, meta);
+        assert_eq!(loaded.qws[0], state.qws[0]);
+        assert_eq!(loaded.tps[0], state.tps[0]);
+        assert_eq!(loaded.masks[0], state.masks[0]);
+        assert_eq!(load_meta(&dir).unwrap().step, 123);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let dir = tmpdir("shape");
+        let state = ModelState::init(&entry(), 5);
+        let meta = Meta {
+            model: "toy".into(),
+            method: "l1".into(),
+            step: 1,
+            dataset_source: "x".into(),
+        };
+        save(&dir, &state, &meta).unwrap();
+        let mut other_entry = entry();
+        other_entry.qw[0].shape = vec![4, 4];
+        let mut other = ModelState::init(&other_entry, 1);
+        assert!(load(&dir, &mut other).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let dir = tmpdir("magic");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("state.bin"), b"NOTCK\n").unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"model":"m","method":"x","step":0,"dataset_source":"s"}"#,
+        )
+        .unwrap();
+        let mut state = ModelState::init(&entry(), 1);
+        assert!(load(&dir, &mut state).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_checkpoint_errors_cleanly() {
+        let mut state = ModelState::init(&entry(), 1);
+        let err = load(Path::new("/no/such/ckpt"), &mut state).unwrap_err();
+        assert!(err.to_string().contains("opening checkpoint"));
+    }
+}

@@ -1,0 +1,123 @@
+//! Quantized deployment accuracy over a test set.
+//!
+//! Uses the `eval_step` graph (weights quantized + masked, BN running
+//! stats) over sequential fixed-shape batches. The final partial batch is
+//! wrap-filled to the graph's static shape; fill rows get label -1 so they
+//! can never count as correct, and accuracy is normalized by the number of
+//! real examples.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::state::ModelState;
+use crate::data::loader::{assemble, BatchPlan, EvalBatches};
+use crate::data::Dataset;
+use crate::runtime::{Engine, Manifest};
+use crate::tensor::{IntTensor, Tensor};
+
+/// Evaluation result.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub accuracy: f64,
+    pub examples: usize,
+}
+
+/// Re-estimate batch-norm running statistics ("BN calibration").
+///
+/// Short schedules leave the exponential running stats far behind the
+/// activation distribution the final weights actually produce (the gap
+/// compounds through deep networks and wrecks eval-mode accuracy). The
+/// standard fix is to re-run forward passes with frozen weights and let
+/// the running stats converge. We reuse the `train_step` graph with
+/// `lr = 0` and absorb *only* its updated-ST outputs: weights, velocities
+/// and masks are left untouched. No-op for BN-free models.
+pub fn bn_calibrate(
+    engine: &Engine,
+    manifest: &Manifest,
+    model: &str,
+    state: &mut ModelState,
+    dataset: &Dataset,
+    steps: usize,
+    seed: u64,
+) -> Result<()> {
+    if state.sts.is_empty() || steps == 0 {
+        return Ok(());
+    }
+    let entry = manifest.model(model)?;
+    let graph = entry.graph("train")?;
+    let exe = engine.load(&graph.path)?;
+    let (nq, nt, ns) = (state.qws.len(), state.tps.len(), state.sts.len());
+
+    let fixed = state.to_train_literals()?; // qw tp st vq vt mask
+    let scalars = [
+        Tensor::scalar(0.0).to_literal()?, // lr = 0: stats move, weights don't
+        Tensor::scalar(0.0).to_literal()?,
+        Tensor::scalar(0.0).to_literal()?,
+        Tensor::scalar(0.0).to_literal()?,
+    ];
+    let plan = BatchPlan::new(dataset.len(), entry.batch, seed);
+    let mut st_lits: Vec<xla::Literal> = Vec::new();
+    for step in 0..steps {
+        let batch = assemble(dataset, &plan.indices(step));
+        let x_lit = batch.x.to_literal()?;
+        let y_lit = batch.y.to_literal()?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(fixed.len() + 6);
+        inputs.extend(fixed.iter().take(nq + nt));
+        if st_lits.is_empty() {
+            inputs.extend(fixed.iter().skip(nq + nt).take(ns));
+        } else {
+            inputs.extend(st_lits.iter());
+        }
+        inputs.extend(fixed.iter().skip(nq + nt + ns));
+        inputs.push(&x_lit);
+        inputs.push(&y_lit);
+        inputs.extend(scalars.iter());
+        let mut outs = exe.run(&inputs)?;
+        // keep only the updated running stats
+        st_lits = outs.drain(nq + nt..nq + nt + ns).collect();
+    }
+    for (slot, lit) in state.sts.iter_mut().zip(&st_lits) {
+        *slot = Tensor::from_literal(lit)?;
+    }
+    Ok(())
+}
+
+/// Evaluate `state` on `dataset` with the model's `eval` graph.
+pub fn evaluate(
+    engine: &Engine,
+    manifest: &Manifest,
+    model: &str,
+    state: &ModelState,
+    dataset: &Dataset,
+) -> Result<EvalResult> {
+    let entry = manifest.model(model)?;
+    let graph = entry.graph("eval")?;
+    let exe = engine.load(&graph.path).context("compiling eval graph")?;
+    let idx_correct = graph.output_index("correct")?;
+
+    let state_lits = state.to_eval_literals()?;
+    let mut correct = 0.0f64;
+    let mut total = 0usize;
+    for eb in EvalBatches::new(dataset, entry.batch) {
+        // kill wrap-fill rows: label -1 never matches an argmax in 0..C
+        let mut labels = eb.batch.y.data().to_vec();
+        for l in labels.iter_mut().skip(eb.valid) {
+            *l = -1;
+        }
+        let y = IntTensor::new(vec![entry.batch], labels)?;
+
+        let x_lit = eb.batch.x.to_literal()?;
+        let y_lit = y.to_literal()?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(state_lits.len() + 2);
+        inputs.extend(state_lits.iter());
+        inputs.push(&x_lit);
+        inputs.push(&y_lit);
+        let outs = exe.run(&inputs)?;
+        correct += outs[idx_correct].to_vec::<f32>()?[0] as f64;
+        total += eb.valid;
+    }
+    Ok(EvalResult {
+        accuracy: if total == 0 { 0.0 } else { correct / total as f64 },
+        examples: total,
+    })
+}
+

@@ -1,0 +1,181 @@
+//! Step metrics (JSONL) and Fig-2 sparsity traces (CSV).
+//!
+//! Every training run writes `<out>/metrics.jsonl` (one JSON object per
+//! logged step: loss, ce, regularizer values, throughput) and, when
+//! tracing is on, `<out>/trace.csv` with per-slice non-zero ratios over
+//! training — the series Figure 2 plots.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::quant::N_SLICES;
+use crate::sparsity::TracePoint;
+use crate::util::json::{num, obj, s, Json};
+
+/// One logged training step.
+#[derive(Debug, Clone)]
+pub struct StepMetrics {
+    pub step: usize,
+    pub phase: &'static str,
+    pub loss: f32,
+    pub ce: f32,
+    pub l1: f32,
+    pub bl1: f32,
+    pub batch_accuracy: f32,
+    pub step_ms: f64,
+}
+
+/// Appending metrics writer + in-memory history.
+pub struct MetricsLog {
+    file: Option<std::io::BufWriter<std::fs::File>>,
+    pub history: Vec<StepMetrics>,
+    pub trace: Vec<TracePoint>,
+}
+
+impl MetricsLog {
+    /// `dir = None` keeps everything in memory (tests, benches).
+    pub fn create(dir: Option<&Path>) -> Result<Self> {
+        let file = match dir {
+            Some(d) => {
+                std::fs::create_dir_all(d)?;
+                Some(std::io::BufWriter::new(std::fs::File::create(
+                    d.join("metrics.jsonl"),
+                )?))
+            }
+            None => None,
+        };
+        Ok(MetricsLog {
+            file,
+            history: Vec::new(),
+            trace: Vec::new(),
+        })
+    }
+
+    pub fn log_step(&mut self, m: StepMetrics) -> Result<()> {
+        if let Some(f) = &mut self.file {
+            let j = obj(vec![
+                ("step", num(m.step as f64)),
+                ("phase", s(m.phase)),
+                ("loss", num(m.loss as f64)),
+                ("ce", num(m.ce as f64)),
+                ("l1", num(m.l1 as f64)),
+                ("bl1", num(m.bl1 as f64)),
+                ("batch_acc", num(m.batch_accuracy as f64)),
+                ("step_ms", num(m.step_ms)),
+            ]);
+            writeln!(f, "{j}")?;
+        }
+        self.history.push(m);
+        Ok(())
+    }
+
+    pub fn log_trace(&mut self, p: TracePoint) {
+        self.trace.push(p);
+    }
+
+    /// Write the Fig-2 trace as CSV: step,b3,b2,b1,b0 (MSB-first ratios).
+    pub fn write_trace_csv(&self, path: &Path) -> Result<()> {
+        let mut out = String::from("step,b3,b2,b1,b0\n");
+        for p in &self.trace {
+            out.push_str(&format!(
+                "{},{:.6},{:.6},{:.6},{:.6}\n",
+                p.step, p.ratios[0], p.ratios[1], p.ratios[2], p.ratios[3]
+            ));
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        if let Some(f) = &mut self.file {
+            f.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Mean step latency (ms) over the logged history — §Perf metric.
+    pub fn mean_step_ms(&self) -> f64 {
+        if self.history.is_empty() {
+            return 0.0;
+        }
+        self.history.iter().map(|m| m.step_ms).sum::<f64>() / self.history.len() as f64
+    }
+}
+
+/// Parse a metrics.jsonl back (used by the reproduce harness & tests).
+pub fn read_jsonl(path: &Path) -> Result<Vec<Json>> {
+    let text = std::fs::read_to_string(path)?;
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(crate::util::json::parse)
+        .collect()
+}
+
+/// Trace point helper assembled from slice ratios.
+pub fn trace_point(step: usize, ratios_msb_first: [f64; N_SLICES]) -> TracePoint {
+    TracePoint {
+        step,
+        ratios: ratios_msb_first,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(step: usize) -> StepMetrics {
+        StepMetrics {
+            step,
+            phase: "test",
+            loss: 1.5,
+            ce: 1.2,
+            l1: 100.0,
+            bl1: 200.0,
+            batch_accuracy: 0.5,
+            step_ms: 3.25,
+        }
+    }
+
+    #[test]
+    fn in_memory_log_works_without_dir() {
+        let mut log = MetricsLog::create(None).unwrap();
+        log.log_step(m(0)).unwrap();
+        log.log_step(m(1)).unwrap();
+        assert_eq!(log.history.len(), 2);
+        assert!((log.mean_step_ms() - 3.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("metrics-test-{}", std::process::id()));
+        let mut log = MetricsLog::create(Some(&dir)).unwrap();
+        for i in 0..3 {
+            log.log_step(m(i)).unwrap();
+        }
+        log.flush().unwrap();
+        let rows = read_jsonl(&dir.join("metrics.jsonl")).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[2].get("step").unwrap().as_usize(), Some(2));
+        assert_eq!(rows[0].get("phase").unwrap().as_str(), Some("test"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn trace_csv_format() {
+        let dir = std::env::temp_dir().join(format!("trace-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut log = MetricsLog::create(None).unwrap();
+        log.log_trace(trace_point(0, [0.01, 0.05, 0.08, 0.17]));
+        log.log_trace(trace_point(50, [0.005, 0.04, 0.04, 0.09]));
+        let path = dir.join("trace.csv");
+        log.write_trace_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "step,b3,b2,b1,b0");
+        assert!(lines[1].starts_with("0,0.010000,"));
+        assert_eq!(lines.len(), 3);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,24 @@
+//! The training coordinator — the L3 runtime that drives the AOT graphs.
+//!
+//! * [`state`]      — the device-facing model state (params, velocities,
+//!                    masks) in the manifest's canonical flattened order.
+//! * [`schedule`]   — method -> phase plan (pretrain / regularize / prune /
+//!                    fine-tune), implementing the paper's Sec. 2.3 routine.
+//! * [`trainer`]    — the step loop: prefetched batches in, state cycled
+//!                    through the `train_step` executable, metrics out.
+//! * [`pruning`]    — per-layer magnitude pruning (the "Pruned" baseline).
+//! * [`evaluator`]  — quantized deployment accuracy over a test set.
+//! * [`checkpoint`] — binary tensor snapshots + JSON metadata.
+//! * [`metrics`]    — JSONL step metrics and Fig-2 sparsity traces.
+
+pub mod checkpoint;
+pub mod evaluator;
+pub mod metrics;
+pub mod pruning;
+pub mod schedule;
+pub mod state;
+pub mod trainer;
+
+pub use schedule::{Phase, PhasePlan};
+pub use state::ModelState;
+pub use trainer::{TrainOutcome, Trainer};

@@ -1,0 +1,130 @@
+//! Magnitude pruning (the tables' "Pruned" baseline, Han et al. style).
+//!
+//! Per layer: zero the `fraction` smallest-magnitude weights by setting
+//! their mask entries to 0; fine-tuning then proceeds with the mask applied
+//! both in the forward quantization and the update (see train.py). Already-
+//! masked weights stay pruned.
+
+use crate::coordinator::state::ModelState;
+
+/// Per-layer magnitude threshold at the given prune fraction.
+pub fn magnitude_threshold(weights: &[f32], fraction: f32) -> f32 {
+    if weights.is_empty() || fraction <= 0.0 {
+        return 0.0;
+    }
+    let mut mags: Vec<f32> = weights.iter().map(|w| w.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let k = ((mags.len() as f64) * fraction as f64).floor() as usize;
+    if k == 0 {
+        0.0
+    } else if k >= mags.len() {
+        f32::INFINITY
+    } else {
+        mags[k]
+    }
+}
+
+/// Prune `fraction` of each qw layer in-place (masks + weights).
+/// Returns the overall fraction of weights now masked out.
+pub fn prune_by_magnitude(state: &mut ModelState, fraction: f32) -> f64 {
+    let mut masked = 0usize;
+    let mut total = 0usize;
+    for (w, m) in state.qws.iter_mut().zip(state.masks.iter_mut()) {
+        let thr = magnitude_threshold(w.data(), fraction);
+        for (wv, mv) in w.data_mut().iter_mut().zip(m.data_mut()) {
+            if wv.abs() < thr || *mv == 0.0 {
+                *mv = 0.0;
+                *wv = 0.0;
+            }
+        }
+        masked += m.data().iter().filter(|&&v| v == 0.0).count();
+        total += m.data().len();
+    }
+    masked as f64 / total.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{ModelEntry, ParamEntry};
+    use crate::util::check::{check, ensure};
+
+    fn state(n: usize, seed: u64) -> ModelState {
+        let entry = ModelEntry {
+            name: "toy".into(),
+            batch: 1,
+            input_shape: vec![n],
+            num_classes: 2,
+            qw: vec![ParamEntry {
+                name: "w".into(),
+                shape: vec![n],
+                init_std: 1.0,
+                init_const: 0.0,
+            }],
+            tp: vec![],
+            st: vec![],
+            graphs: Default::default(),
+        };
+        ModelState::init(&entry, seed)
+    }
+
+    #[test]
+    fn threshold_is_order_statistic() {
+        let w = vec![0.1, -0.5, 0.3, 0.2, -0.05];
+        // fraction 0.4 -> k = 2 smallest pruned -> threshold = 3rd mag
+        let thr = magnitude_threshold(&w, 0.4);
+        assert!((thr - 0.2).abs() < 1e-7);
+        assert_eq!(magnitude_threshold(&w, 0.0), 0.0);
+        assert_eq!(magnitude_threshold(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn prunes_requested_fraction() {
+        check(20, |rng| {
+            let n = 50 + rng.below(500);
+            let mut s = state(n, rng.next_u64());
+            let got = prune_by_magnitude(&mut s, 0.9);
+            ensure(
+                (got - 0.9).abs() < 0.02,
+                format!("pruned fraction {got} != 0.9"),
+            )?;
+            // masked weights are exactly the small ones
+            let kept: Vec<f32> = s.qws[0]
+                .data()
+                .iter()
+                .filter(|&&v| v != 0.0)
+                .map(|v| v.abs())
+                .collect();
+            let dropped_max = s.qws[0]
+                .data()
+                .iter()
+                .zip(s.masks[0].data())
+                .filter(|(_, &m)| m == 0.0)
+                .map(|(w, _)| w.abs())
+                .fold(0.0f32, f32::max);
+            if let Some(kept_min) = kept.iter().cloned().reduce(f32::min) {
+                ensure(dropped_max <= kept_min, "order preserved")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn repruning_keeps_already_masked() {
+        let mut s = state(100, 3);
+        prune_by_magnitude(&mut s, 0.5);
+        let masks1: Vec<f32> = s.masks[0].data().to_vec();
+        prune_by_magnitude(&mut s, 0.0);
+        for (a, b) in masks1.iter().zip(s.masks[0].data()) {
+            assert!(!(*a == 0.0 && *b != 0.0), "mask resurrected");
+        }
+    }
+
+    #[test]
+    fn full_fraction_handled() {
+        let mut s = state(10, 4);
+        // fraction just below 1 prunes everything but the max element(s)
+        let got = prune_by_magnitude(&mut s, 0.99);
+        assert!(got >= 0.89);
+    }
+}

@@ -1,0 +1,128 @@
+//! Method -> phase plan (the paper's Sec. 2.3 training routine).
+//!
+//! * Baseline: one unregularized phase.
+//! * l1:       one phase with alpha_l1 (applied to the quantized weights).
+//! * Bl1:      an l1 pretraining phase, then the bit-slice l1 phase — "it
+//!             would be more efficient in reaching higher sparsity by
+//!             starting from a pretrained, element-wise sparse model".
+//! * Pruned:   unregularized pretraining, magnitude pruning, masked
+//!             fine-tuning (the classic Han-style baseline in the tables).
+
+use crate::config::{Method, RunConfig};
+
+/// One contiguous stretch of training with fixed hyperparameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Phase {
+    pub name: &'static str,
+    pub steps: usize,
+    pub alpha_l1: f32,
+    pub alpha_bl1: f32,
+    /// magnitude-prune this fraction per layer *before* the phase starts
+    pub prune_before: Option<f32>,
+}
+
+/// The full plan for a run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhasePlan {
+    pub phases: Vec<Phase>,
+}
+
+impl PhasePlan {
+    pub fn for_config(cfg: &RunConfig) -> PhasePlan {
+        let phases = match cfg.method {
+            Method::Baseline => vec![Phase {
+                name: "train",
+                steps: cfg.steps,
+                alpha_l1: 0.0,
+                alpha_bl1: 0.0,
+                prune_before: None,
+            }],
+            Method::L1 => vec![Phase {
+                name: "l1",
+                steps: cfg.steps,
+                alpha_l1: cfg.alpha_l1,
+                alpha_bl1: 0.0,
+                prune_before: None,
+            }],
+            Method::Bl1 => vec![
+                Phase {
+                    name: "l1-pretrain",
+                    steps: cfg.pretrain_steps,
+                    alpha_l1: cfg.alpha_l1,
+                    alpha_bl1: 0.0,
+                    prune_before: None,
+                },
+                Phase {
+                    name: "bl1",
+                    steps: cfg.steps,
+                    alpha_l1: 0.0,
+                    alpha_bl1: cfg.alpha_bl1,
+                    prune_before: None,
+                },
+            ],
+            Method::Pruned => vec![
+                Phase {
+                    name: "pretrain",
+                    steps: cfg.pretrain_steps,
+                    alpha_l1: 0.0,
+                    alpha_bl1: 0.0,
+                    prune_before: None,
+                },
+                Phase {
+                    name: "finetune",
+                    steps: cfg.steps,
+                    alpha_l1: 0.0,
+                    alpha_bl1: 0.0,
+                    prune_before: Some(cfg.prune_fraction),
+                },
+            ],
+        };
+        PhasePlan { phases }
+    }
+
+    pub fn total_steps(&self) -> usize {
+        self.phases.iter().map(|p| p.steps).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    fn cfg(method: Method) -> RunConfig {
+        let mut c = RunConfig::defaults("mlp");
+        c.method = method;
+        c.steps = 100;
+        c.pretrain_steps = 40;
+        c
+    }
+
+    #[test]
+    fn bl1_plan_pretrains_with_l1() {
+        let p = PhasePlan::for_config(&cfg(Method::Bl1));
+        assert_eq!(p.phases.len(), 2);
+        assert!(p.phases[0].alpha_l1 > 0.0);
+        assert_eq!(p.phases[0].alpha_bl1, 0.0);
+        assert_eq!(p.phases[1].alpha_l1, 0.0);
+        assert!(p.phases[1].alpha_bl1 > 0.0);
+        assert_eq!(p.total_steps(), 140);
+    }
+
+    #[test]
+    fn pruned_plan_prunes_before_finetune() {
+        let p = PhasePlan::for_config(&cfg(Method::Pruned));
+        assert_eq!(p.phases.len(), 2);
+        assert_eq!(p.phases[0].prune_before, None);
+        assert_eq!(p.phases[1].prune_before, Some(0.90));
+        assert_eq!(p.phases[1].alpha_l1, 0.0);
+    }
+
+    #[test]
+    fn single_phase_methods() {
+        assert_eq!(PhasePlan::for_config(&cfg(Method::Baseline)).phases.len(), 1);
+        let l1 = PhasePlan::for_config(&cfg(Method::L1));
+        assert_eq!(l1.phases.len(), 1);
+        assert!(l1.phases[0].alpha_l1 > 0.0);
+    }
+}

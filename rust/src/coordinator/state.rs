@@ -1,0 +1,234 @@
+//! Model state in the manifest's canonical flattened order.
+//!
+//! The `train_step` graph's input layout is
+//! `[QW..., TP..., ST..., VQ..., VT..., MASK..., x, y, scalars...]` and its
+//! first `QW+TP+ST+VQ+VT` outputs are the updated state in the same order
+//! (see python/compile/train.py). [`ModelState`] owns those tensors on the
+//! host and knows how to initialize, snapshot and reload them.
+
+use anyhow::Result;
+
+use crate::runtime::artifact::{ModelEntry, ParamEntry};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Host copy of all state tensors for one model.
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    /// quantized-kind weights (trained, regularized, mapped to ReRAM)
+    pub qws: Vec<Tensor>,
+    /// trainable plain params (biases, bn scale/bias)
+    pub tps: Vec<Tensor>,
+    /// bn running stats
+    pub sts: Vec<Tensor>,
+    /// momentum buffers for qws / tps
+    pub vqs: Vec<Tensor>,
+    pub vts: Vec<Tensor>,
+    /// 0/1 pruning masks over qws
+    pub masks: Vec<Tensor>,
+}
+
+fn init_tensor(p: &ParamEntry, rng: &mut Rng) -> Tensor {
+    if p.init_std > 0.0 {
+        Tensor::new(p.shape.clone(), rng.normal_vec(p.numel(), p.init_std))
+            .expect("init shape")
+    } else {
+        Tensor::full(p.shape.clone(), p.init_const)
+    }
+}
+
+impl ModelState {
+    /// Fresh state: He-normal weights (init specs from the manifest),
+    /// zero velocities, all-ones masks.
+    pub fn init(entry: &ModelEntry, seed: u64) -> ModelState {
+        let mut root = Rng::new(seed);
+        let mut init_group = |ps: &[ParamEntry], tag: u64| -> Vec<Tensor> {
+            ps.iter()
+                .enumerate()
+                .map(|(i, p)| init_tensor(p, &mut root.fork(tag * 1000 + i as u64)))
+                .collect()
+        };
+        let qws = init_group(&entry.qw, 1);
+        let tps = init_group(&entry.tp, 2);
+        let sts = init_group(&entry.st, 3);
+        let vqs = entry.qw.iter().map(|p| Tensor::zeros(p.shape.clone())).collect();
+        let vts = entry.tp.iter().map(|p| Tensor::zeros(p.shape.clone())).collect();
+        let masks = entry.qw.iter().map(|p| Tensor::full(p.shape.clone(), 1.0)).collect();
+        ModelState {
+            qws,
+            tps,
+            sts,
+            vqs,
+            vts,
+            masks,
+        }
+    }
+
+    /// Number of leading `train_step` outputs that are state tensors.
+    pub fn train_state_outputs(&self) -> usize {
+        self.qws.len() + self.tps.len() + self.sts.len() + self.vqs.len() + self.vts.len()
+    }
+
+    /// The state literals in `train_step` input order (before x/y/scalars).
+    pub fn to_train_literals(&self) -> Result<Vec<xla::Literal>> {
+        let mut lits = Vec::new();
+        for group in [&self.qws, &self.tps, &self.sts, &self.vqs, &self.vts, &self.masks] {
+            for t in group.iter() {
+                lits.push(t.to_literal()?);
+            }
+        }
+        Ok(lits)
+    }
+
+    /// The state literals in `eval_step` input order: QW TP ST MASK.
+    pub fn to_eval_literals(&self) -> Result<Vec<xla::Literal>> {
+        let mut lits = Vec::new();
+        for group in [&self.qws, &self.tps, &self.sts, &self.masks] {
+            for t in group.iter() {
+                lits.push(t.to_literal()?);
+            }
+        }
+        Ok(lits)
+    }
+
+    /// Absorb the state outputs of one `train_step` execution (the leading
+    /// `train_state_outputs()` literals, in order).
+    pub fn absorb_train_outputs(&mut self, outs: &[xla::Literal]) -> Result<()> {
+        let mut idx = 0;
+        for group in [
+            &mut self.qws,
+            &mut self.tps,
+            &mut self.sts,
+            &mut self.vqs,
+            &mut self.vts,
+        ] {
+            for slot in group.iter_mut() {
+                *slot = Tensor::from_literal(&outs[idx])?;
+                idx += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Reset momentum (used at phase boundaries — the paper restarts the
+    /// optimizer when switching regularizers).
+    pub fn reset_velocity(&mut self) {
+        for v in self.vqs.iter_mut().chain(self.vts.iter_mut()) {
+            *v = Tensor::zeros(v.shape().to_vec());
+        }
+    }
+
+    /// Apply masks to the weights (after pruning, so the next quantize
+    /// sees zeros immediately).
+    pub fn apply_masks(&mut self) {
+        for (w, m) in self.qws.iter_mut().zip(&self.masks) {
+            for (wv, mv) in w.data_mut().iter_mut().zip(m.data()) {
+                *wv *= mv;
+            }
+        }
+    }
+
+    /// Named qw tensors (for mapping / analysis).
+    pub fn named_qws(&self, entry: &ModelEntry) -> Vec<(String, Tensor)> {
+        entry
+            .qw
+            .iter()
+            .zip(&self.qws)
+            .map(|(p, t)| (p.name.clone(), t.clone()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::ParamEntry;
+
+    fn entry() -> ModelEntry {
+        ModelEntry {
+            name: "toy".into(),
+            batch: 4,
+            input_shape: vec![8],
+            num_classes: 3,
+            qw: vec![
+                ParamEntry {
+                    name: "fc1/w".into(),
+                    shape: vec![8, 5],
+                    init_std: 0.5,
+                    init_const: 0.0,
+                },
+                ParamEntry {
+                    name: "fc2/w".into(),
+                    shape: vec![5, 3],
+                    init_std: 0.6,
+                    init_const: 0.0,
+                },
+            ],
+            tp: vec![ParamEntry {
+                name: "fc1/b".into(),
+                shape: vec![5],
+                init_std: 0.0,
+                init_const: 0.0,
+            }],
+            st: vec![ParamEntry {
+                name: "bn/var".into(),
+                shape: vec![5],
+                init_std: 0.0,
+                init_const: 1.0,
+            }],
+            graphs: Default::default(),
+        }
+    }
+
+    #[test]
+    fn init_respects_specs() {
+        let s = ModelState::init(&entry(), 1);
+        assert_eq!(s.qws.len(), 2);
+        assert_eq!(s.qws[0].shape(), &[8, 5]);
+        assert!(s.qws[0].max_abs() > 0.0);
+        assert_eq!(s.tps[0].data().iter().sum::<f32>(), 0.0);
+        assert!(s.sts[0].data().iter().all(|&v| v == 1.0));
+        assert!(s.masks.iter().all(|m| m.data().iter().all(|&v| v == 1.0)));
+        assert_eq!(s.train_state_outputs(), 2 + 1 + 1 + 2 + 1);
+    }
+
+    #[test]
+    fn init_is_deterministic_per_seed() {
+        let a = ModelState::init(&entry(), 7);
+        let b = ModelState::init(&entry(), 7);
+        assert_eq!(a.qws[0], b.qws[0]);
+        let c = ModelState::init(&entry(), 8);
+        assert_ne!(a.qws[0], c.qws[0]);
+    }
+
+    #[test]
+    fn apply_masks_zeroes_weights() {
+        let mut s = ModelState::init(&entry(), 1);
+        s.masks[0].data_mut()[0] = 0.0;
+        let w0_before = s.qws[0].data()[0];
+        assert!(w0_before != 0.0);
+        s.apply_masks();
+        assert_eq!(s.qws[0].data()[0], 0.0);
+        assert_ne!(s.qws[0].data()[1], 0.0);
+    }
+
+    #[test]
+    fn reset_velocity_zeroes_buffers() {
+        let mut s = ModelState::init(&entry(), 1);
+        s.vqs[0].data_mut()[3] = 5.0;
+        s.reset_velocity();
+        assert!(s.vqs[0].data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn literal_roundtrip_preserves_order() {
+        let s = ModelState::init(&entry(), 2);
+        let lits = s.to_train_literals().unwrap();
+        // qw(2) tp(1) st(1) vq(2) vt(1) mask(2) = 9
+        assert_eq!(lits.len(), 9);
+        let t = Tensor::from_literal(&lits[0]).unwrap();
+        assert_eq!(t, s.qws[0]);
+        let eval = s.to_eval_literals().unwrap();
+        assert_eq!(eval.len(), 2 + 1 + 1 + 2);
+    }
+}

@@ -1,0 +1,205 @@
+//! The training loop: phases -> prefetched batches -> `train_step`.
+//!
+//! State is converted to XLA literals once per phase and then *cycled*:
+//! each step's state outputs feed the next step's inputs directly, so the
+//! per-step host work is only the batch tensors and four scalars. Host
+//! round-trips of the full parameter set happen only at phase boundaries,
+//! trace points and checkpoints.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::metrics::{MetricsLog, StepMetrics};
+use crate::coordinator::pruning;
+use crate::coordinator::schedule::PhasePlan;
+use crate::coordinator::state::ModelState;
+use crate::data::loader::BatchStream;
+use crate::data::Dataset;
+use crate::runtime::{Engine, Executable, Manifest, ModelEntry};
+use crate::sparsity;
+use crate::tensor::Tensor;
+
+/// Summary of a completed run.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub steps_run: usize,
+    pub final_loss: f32,
+    pub mean_step_ms: f64,
+}
+
+/// Drives one model's training according to a [`RunConfig`].
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    pub entry: ModelEntry,
+    exe_train: std::sync::Arc<Executable>,
+    pub cfg: RunConfig,
+    pub state: ModelState,
+    // output indices resolved once from the manifest
+    idx_loss: usize,
+    idx_ce: usize,
+    idx_l1: usize,
+    idx_bl1: usize,
+    idx_correct: usize,
+    n_state_out: usize,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, manifest: &Manifest, cfg: RunConfig) -> Result<Self> {
+        let entry = manifest.model(&cfg.model)?.clone();
+        let graph = entry.graph("train")?;
+        let exe_train = engine.load(&graph.path).context("compiling train graph")?;
+        let state = ModelState::init(&entry, cfg.seed);
+        let n_state_out = state.train_state_outputs();
+        Ok(Trainer {
+            engine,
+            idx_loss: graph.output_index("loss")?,
+            idx_ce: graph.output_index("ce")?,
+            idx_l1: graph.output_index("l1")?,
+            idx_bl1: graph.output_index("bl1")?,
+            idx_correct: graph.output_index("correct")?,
+            exe_train,
+            entry,
+            cfg,
+            state,
+            n_state_out,
+        })
+    }
+
+    /// Run the full phase plan on `dataset`, logging to `log`.
+    pub fn run(&mut self, dataset: &Dataset, log: &mut MetricsLog) -> Result<TrainOutcome> {
+        anyhow::ensure!(
+            dataset.dim() == self.entry.input_numel(),
+            "dataset dim {} != model input {}",
+            dataset.dim(),
+            self.entry.input_numel()
+        );
+        let plan = PhasePlan::for_config(&self.cfg);
+        let mut global_step = 0usize;
+        let mut final_loss = 0.0f32;
+
+        for (pi, phase) in plan.phases.iter().enumerate() {
+            if let Some(frac) = phase.prune_before {
+                let pruned = pruning::prune_by_magnitude(&mut self.state, frac);
+                eprintln!(
+                    "[{}] phase {}: pruned {:.1}% of weights",
+                    self.cfg.label(),
+                    phase.name,
+                    pruned * 100.0
+                );
+            }
+            self.state.reset_velocity();
+
+            // Phase-constant scalar literals.
+            let scalars = [
+                Tensor::scalar(self.cfg.lr).to_literal()?,
+                Tensor::scalar(self.cfg.momentum).to_literal()?,
+                Tensor::scalar(phase.alpha_l1).to_literal()?,
+                Tensor::scalar(phase.alpha_bl1).to_literal()?,
+            ];
+
+            // State enters the device world once per phase...
+            let mut state_lits = self.state.to_train_literals()?;
+
+            let stream = BatchStream::new(
+                dataset.clone(),
+                self.entry.batch,
+                phase.steps,
+                self.cfg.seed ^ ((pi as u64 + 1) << 32),
+                self.cfg.prefetch,
+            );
+
+            // Mask literals are phase-constant too (masks only change at
+            // phase boundaries).
+            let mask_lits: Vec<xla::Literal> = self
+                .state
+                .masks
+                .iter()
+                .map(|m| m.to_literal())
+                .collect::<Result<_>>()?;
+            // state_lits ends with the masks; strip them — they are
+            // re-borrowed from mask_lits each step.
+            state_lits.truncate(self.n_state_out);
+
+            for _ in 0..phase.steps {
+                let batch = stream.next().context("batch stream ended early")?;
+                let t0 = Instant::now();
+                let x_lit = batch.x.to_literal()?;
+                let y_lit = batch.y.to_literal()?;
+                let mut inputs: Vec<&xla::Literal> =
+                    Vec::with_capacity(state_lits.len() + mask_lits.len() + 6);
+                inputs.extend(state_lits.iter());
+                inputs.extend(mask_lits.iter());
+                inputs.push(&x_lit);
+                inputs.push(&y_lit);
+                inputs.extend(scalars.iter());
+
+                let outs = self.exe_train.run(&inputs)?;
+                let step_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+                let loss = scalar_out(&outs, self.idx_loss)?;
+                anyhow::ensure!(
+                    loss.is_finite(),
+                    "loss diverged at step {global_step} (lr too high?)"
+                );
+                final_loss = loss;
+                log.log_step(StepMetrics {
+                    step: global_step,
+                    phase: phase.name,
+                    loss,
+                    ce: scalar_out(&outs, self.idx_ce)?,
+                    l1: scalar_out(&outs, self.idx_l1)?,
+                    bl1: scalar_out(&outs, self.idx_bl1)?,
+                    batch_accuracy: scalar_out(&outs, self.idx_correct)?
+                        / self.entry.batch as f32,
+                    step_ms,
+                })?;
+
+                // Cycle state: the first n_state_out outputs are the new
+                // state, in input order.
+                state_lits = outs;
+                state_lits.truncate(self.n_state_out);
+
+                if self.cfg.trace_every > 0 && global_step % self.cfg.trace_every == 0 {
+                    let stats = self.census_from_literals(&state_lits)?;
+                    log.log_trace(crate::coordinator::metrics::trace_point(
+                        global_step,
+                        stats.ratios_msb_first(),
+                    ));
+                }
+                global_step += 1;
+            }
+
+            // ...and leaves it at the phase end.
+            self.absorb(&state_lits)?;
+        }
+
+        Ok(TrainOutcome {
+            steps_run: global_step,
+            final_loss,
+            mean_step_ms: log.mean_step_ms(),
+        })
+    }
+
+    fn absorb(&mut self, state_lits: &[xla::Literal]) -> Result<()> {
+        self.state.absorb_train_outputs(state_lits)
+    }
+
+    fn census_from_literals(&self, state_lits: &[xla::Literal]) -> Result<sparsity::SliceStats> {
+        let mut tensors = Vec::with_capacity(self.entry.qw.len());
+        for lit in state_lits.iter().take(self.entry.qw.len()) {
+            tensors.push(Tensor::from_literal(lit)?);
+        }
+        Ok(sparsity::census(&tensors))
+    }
+
+    /// Engine accessor (for follow-up evaluation with the same client).
+    pub fn engine(&self) -> &Engine {
+        self.engine
+    }
+}
+
+fn scalar_out(outs: &[xla::Literal], idx: usize) -> Result<f32> {
+    Ok(outs[idx].to_vec::<f32>()?[0])
+}

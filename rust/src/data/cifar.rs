@@ -1,0 +1,119 @@
+//! CIFAR-10 binary-format parser.
+//!
+//! The canonical `cifar-10-batches-bin` layout: each record is 1 label byte
+//! followed by 3072 pixel bytes in CHW order (1024 R, 1024 G, 1024 B).
+//! Our models take NHWC, so records are transposed to HWC on load and
+//! scaled to [0, 1].
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::Dataset;
+
+pub const RECORD: usize = 1 + 3 * 32 * 32;
+
+/// Parse one batch file's bytes, appending to features/labels.
+pub fn parse_batch(bytes: &[u8], features: &mut Vec<f32>, labels: &mut Vec<i32>) -> Result<usize> {
+    anyhow::ensure!(
+        bytes.len() % RECORD == 0,
+        "CIFAR batch size {} not a multiple of record size {RECORD}",
+        bytes.len()
+    );
+    let n = bytes.len() / RECORD;
+    features.reserve(n * 3072);
+    for rec in bytes.chunks_exact(RECORD) {
+        let label = rec[0] as i32;
+        anyhow::ensure!((0..10).contains(&label), "label {label} out of range");
+        labels.push(label);
+        let pix = &rec[1..];
+        // CHW -> HWC
+        for hw in 0..1024 {
+            for c in 0..3 {
+                features.push(pix[c * 1024 + hw] as f32 / 255.0);
+            }
+        }
+    }
+    Ok(n)
+}
+
+/// Load train (data_batch_1..5.bin) or test (test_batch.bin) split.
+pub fn load(dir: &Path, train: bool) -> Result<Dataset> {
+    let names: Vec<String> = if train {
+        (1..=5).map(|i| format!("data_batch_{i}.bin")).collect()
+    } else {
+        vec!["test_batch.bin".to_string()]
+    };
+    let mut features = Vec::new();
+    let mut labels = Vec::new();
+    for name in &names {
+        let bytes = std::fs::read(dir.join(name))
+            .with_context(|| format!("reading {}", dir.join(name).display()))?;
+        parse_batch(&bytes, &mut features, &mut labels)?;
+    }
+    anyhow::ensure!(!labels.is_empty(), "no CIFAR examples found");
+    Ok(Dataset {
+        features: std::sync::Arc::new(features),
+        labels: std::sync::Arc::new(labels),
+        example_shape: vec![32, 32, 3],
+        num_classes: 10,
+        source: "cifar10".to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(label: u8, fill: u8) -> Vec<u8> {
+        let mut v = vec![label];
+        v.extend(std::iter::repeat(fill).take(3072));
+        v
+    }
+
+    #[test]
+    fn parses_records_and_transposes_chw_to_hwc() {
+        let mut rec = vec![7u8];
+        // R plane = 10, G plane = 20, B plane = 30
+        rec.extend(std::iter::repeat(10u8).take(1024));
+        rec.extend(std::iter::repeat(20u8).take(1024));
+        rec.extend(std::iter::repeat(30u8).take(1024));
+        let mut f = Vec::new();
+        let mut l = Vec::new();
+        assert_eq!(parse_batch(&rec, &mut f, &mut l).unwrap(), 1);
+        assert_eq!(l, vec![7]);
+        // first pixel: (R, G, B) scaled
+        assert!((f[0] - 10.0 / 255.0).abs() < 1e-6);
+        assert!((f[1] - 20.0 / 255.0).abs() < 1e-6);
+        assert!((f[2] - 30.0 / 255.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_partial_record_and_bad_label() {
+        let mut f = Vec::new();
+        let mut l = Vec::new();
+        assert!(parse_batch(&record(0, 0)[..100], &mut f, &mut l).is_err());
+        assert!(parse_batch(&record(11, 0), &mut f, &mut l).is_err());
+    }
+
+    #[test]
+    fn loads_multi_batch_train_split() {
+        let dir = std::env::temp_dir().join(format!("cifar-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for i in 1..=5 {
+            let mut bytes = record((i % 10) as u8, 100);
+            bytes.extend(record(((i + 1) % 10) as u8, 50));
+            std::fs::write(dir.join(format!("data_batch_{i}.bin")), bytes).unwrap();
+        }
+        let ds = load(&dir, true).unwrap();
+        assert_eq!(ds.len(), 10);
+        assert_eq!(ds.example_shape, vec![32, 32, 3]);
+        assert_eq!(ds.source, "cifar10");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(load(Path::new("/definitely/missing"), false).is_err());
+    }
+}

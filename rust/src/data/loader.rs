@@ -1,0 +1,185 @@
+//! Batching + prefetching pipeline.
+//!
+//! [`BatchPlan`] deterministically maps a step index to the example indices
+//! of its batch (reshuffling every epoch with a per-epoch fork of the seed),
+//! and [`BatchStream`] materializes batches on a background thread with
+//! bounded lookahead — the XLA step is the consumer, so batch assembly
+//! overlaps compute (DESIGN.md §Perf L3).
+
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::pool::Prefetcher;
+use crate::util::rng::Rng;
+
+use super::{Batch, Dataset};
+
+/// Deterministic step -> example-indices mapping.
+#[derive(Debug, Clone)]
+pub struct BatchPlan {
+    n: usize,
+    batch: usize,
+    seed: u64,
+}
+
+impl BatchPlan {
+    pub fn new(n: usize, batch: usize, seed: u64) -> Self {
+        assert!(n > 0 && batch > 0);
+        BatchPlan { n, batch, seed }
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.n / self.batch.min(self.n).max(1)
+    }
+
+    /// Example indices for step `step` (0-based, increasing forever).
+    /// Batches never straddle epochs; short datasets wrap within the epoch.
+    pub fn indices(&self, step: usize) -> Vec<usize> {
+        let bpe = self.batches_per_epoch().max(1);
+        let epoch = step / bpe;
+        let slot = step % bpe;
+        let mut order: Vec<usize> = (0..self.n).collect();
+        let mut rng = Rng::new(self.seed).fork(epoch as u64);
+        rng.shuffle(&mut order);
+        (0..self.batch)
+            .map(|j| order[(slot * self.batch + j) % self.n])
+            .collect()
+    }
+}
+
+/// Assemble the batch tensors for a list of example indices.
+pub fn assemble(ds: &Dataset, indices: &[usize]) -> Batch {
+    let dim = ds.dim();
+    let mut x = vec![0.0f32; indices.len() * dim];
+    for (row, &i) in indices.iter().enumerate() {
+        ds.write_example(i, &mut x[row * dim..(row + 1) * dim]);
+    }
+    let mut shape = vec![indices.len()];
+    shape.extend_from_slice(&ds.example_shape);
+    let y: Vec<i32> = indices.iter().map(|&i| ds.labels[i]).collect();
+    Batch {
+        x: Tensor::new(shape, x).expect("assembled shape"),
+        y: IntTensor::new(vec![indices.len()], y).expect("labels shape"),
+    }
+}
+
+/// Background-prefetched stream of `steps` batches.
+pub struct BatchStream {
+    inner: Prefetcher<Batch>,
+}
+
+impl BatchStream {
+    pub fn new(ds: Dataset, batch: usize, steps: usize, seed: u64, depth: usize) -> Self {
+        let plan = BatchPlan::new(ds.len(), batch, seed);
+        let inner = Prefetcher::spawn(steps, depth, move |step| {
+            assemble(&ds, &plan.indices(step))
+        });
+        BatchStream { inner }
+    }
+
+    pub fn next(&self) -> Option<Batch> {
+        self.inner.next()
+    }
+}
+
+/// Sequential (unshuffled) evaluation batches covering the whole dataset;
+/// the final partial batch wraps around to fill the graph's fixed shape,
+/// with `valid` recording how many rows actually count.
+pub struct EvalBatches<'a> {
+    ds: &'a Dataset,
+    batch: usize,
+    pos: usize,
+}
+
+pub struct EvalBatch {
+    pub batch: Batch,
+    /// number of leading rows that are real (not wrap-fill)
+    pub valid: usize,
+}
+
+impl<'a> EvalBatches<'a> {
+    pub fn new(ds: &'a Dataset, batch: usize) -> Self {
+        EvalBatches { ds, batch, pos: 0 }
+    }
+}
+
+impl<'a> Iterator for EvalBatches<'a> {
+    type Item = EvalBatch;
+
+    fn next(&mut self) -> Option<EvalBatch> {
+        if self.pos >= self.ds.len() {
+            return None;
+        }
+        let valid = (self.ds.len() - self.pos).min(self.batch);
+        let indices: Vec<usize> = (0..self.batch)
+            .map(|j| (self.pos + j) % self.ds.len())
+            .collect();
+        self.pos += valid;
+        Some(EvalBatch {
+            batch: assemble(self.ds, &indices),
+            valid,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn plan_is_deterministic_and_epochwise_shuffled() {
+        let plan = BatchPlan::new(100, 10, 7);
+        assert_eq!(plan.indices(3), plan.indices(3));
+        // within an epoch, batches partition the dataset
+        let mut seen: Vec<usize> = (0..10).flat_map(|s| plan.indices(s)).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..100).collect::<Vec<_>>());
+        // different epochs use different orders
+        assert_ne!(plan.indices(0), plan.indices(10));
+    }
+
+    #[test]
+    fn assemble_shapes_and_content() {
+        let ds = synthetic::mnist(32, 1);
+        let b = assemble(&ds, &[0, 5, 9]);
+        assert_eq!(b.x.shape(), &[3, 784]);
+        assert_eq!(b.y.shape(), &[3]);
+        assert_eq!(b.y.data()[1], ds.labels[5]);
+        let mut want = vec![0.0; 784];
+        ds.write_example(9, &mut want);
+        assert_eq!(&b.x.data()[2 * 784..], &want[..]);
+    }
+
+    #[test]
+    fn stream_yields_exactly_steps_batches() {
+        let ds = synthetic::mnist(64, 2);
+        let stream = BatchStream::new(ds, 16, 7, 3, 2);
+        let mut n = 0;
+        while let Some(b) = stream.next() {
+            assert_eq!(b.x.shape()[0], 16);
+            n += 1;
+        }
+        assert_eq!(n, 7);
+    }
+
+    #[test]
+    fn eval_batches_cover_everything_once() {
+        let ds = synthetic::mnist(50, 4);
+        let batches: Vec<EvalBatch> = EvalBatches::new(&ds, 16).collect();
+        assert_eq!(batches.len(), 4); // 16+16+16+2
+        let valid: usize = batches.iter().map(|b| b.valid).sum();
+        assert_eq!(valid, 50);
+        assert_eq!(batches[3].valid, 2);
+        // all batches keep the fixed graph shape
+        for b in &batches {
+            assert_eq!(b.batch.x.shape()[0], 16);
+        }
+    }
+
+    #[test]
+    fn small_dataset_wraps_within_epoch() {
+        let plan = BatchPlan::new(5, 8, 1);
+        let idx = plan.indices(0);
+        assert_eq!(idx.len(), 8);
+        assert!(idx.iter().all(|&i| i < 5));
+    }
+}

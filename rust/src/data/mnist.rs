@@ -1,0 +1,138 @@
+//! MNIST IDX parser (LeCun et al. format).
+//!
+//! Expects the classic four files under the given directory (optionally
+//! without the `-idx?-ubyte` suffix variations):
+//!   train-images-idx3-ubyte  train-labels-idx1-ubyte
+//!   t10k-images-idx3-ubyte   t10k-labels-idx1-ubyte
+//! Pixels are scaled to [0, 1]; examples are flattened to 784 features.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::Dataset;
+
+const IMAGES_MAGIC: u32 = 0x0000_0803;
+const LABELS_MAGIC: u32 = 0x0000_0801;
+
+fn read_u32(bytes: &[u8], off: usize) -> Result<u32> {
+    let b = bytes
+        .get(off..off + 4)
+        .context("IDX file truncated (header)")?;
+    Ok(u32::from_be_bytes([b[0], b[1], b[2], b[3]]))
+}
+
+/// Parse an IDX3 image file into (n, rows, cols, pixels).
+pub fn parse_images(bytes: &[u8]) -> Result<(usize, usize, usize, Vec<f32>)> {
+    anyhow::ensure!(read_u32(bytes, 0)? == IMAGES_MAGIC, "bad IDX3 magic");
+    let n = read_u32(bytes, 4)? as usize;
+    let rows = read_u32(bytes, 8)? as usize;
+    let cols = read_u32(bytes, 12)? as usize;
+    let want = n * rows * cols;
+    let data = bytes.get(16..16 + want).context("IDX3 truncated (data)")?;
+    anyhow::ensure!(bytes.len() == 16 + want, "IDX3 trailing bytes");
+    Ok((
+        n,
+        rows,
+        cols,
+        data.iter().map(|&b| b as f32 / 255.0).collect(),
+    ))
+}
+
+/// Parse an IDX1 label file.
+pub fn parse_labels(bytes: &[u8]) -> Result<Vec<i32>> {
+    anyhow::ensure!(read_u32(bytes, 0)? == LABELS_MAGIC, "bad IDX1 magic");
+    let n = read_u32(bytes, 4)? as usize;
+    let data = bytes.get(8..8 + n).context("IDX1 truncated (data)")?;
+    anyhow::ensure!(bytes.len() == 8 + n, "IDX1 trailing bytes");
+    let labels: Vec<i32> = data.iter().map(|&b| b as i32).collect();
+    anyhow::ensure!(
+        labels.iter().all(|&l| (0..10).contains(&l)),
+        "label out of range"
+    );
+    Ok(labels)
+}
+
+/// Load the train or test split from `dir`.
+pub fn load(dir: &Path, train: bool) -> Result<Dataset> {
+    let (img_name, lbl_name) = if train {
+        ("train-images-idx3-ubyte", "train-labels-idx1-ubyte")
+    } else {
+        ("t10k-images-idx3-ubyte", "t10k-labels-idx1-ubyte")
+    };
+    let img_bytes = std::fs::read(dir.join(img_name))
+        .with_context(|| format!("reading {}", dir.join(img_name).display()))?;
+    let lbl_bytes = std::fs::read(dir.join(lbl_name))?;
+    let (n, rows, cols, features) = parse_images(&img_bytes)?;
+    let labels = parse_labels(&lbl_bytes)?;
+    anyhow::ensure!(n == labels.len(), "image/label count mismatch");
+    anyhow::ensure!(rows == 28 && cols == 28, "expected 28x28 MNIST");
+    Ok(Dataset {
+        features: std::sync::Arc::new(features),
+        labels: std::sync::Arc::new(labels),
+        example_shape: vec![rows * cols],
+        num_classes: 10,
+        source: "mnist".to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idx3(n: usize, rows: usize, cols: usize, pix: &[u8]) -> Vec<u8> {
+        let mut v = Vec::new();
+        v.extend_from_slice(&IMAGES_MAGIC.to_be_bytes());
+        v.extend_from_slice(&(n as u32).to_be_bytes());
+        v.extend_from_slice(&(rows as u32).to_be_bytes());
+        v.extend_from_slice(&(cols as u32).to_be_bytes());
+        v.extend_from_slice(pix);
+        v
+    }
+
+    fn idx1(labels: &[u8]) -> Vec<u8> {
+        let mut v = Vec::new();
+        v.extend_from_slice(&LABELS_MAGIC.to_be_bytes());
+        v.extend_from_slice(&(labels.len() as u32).to_be_bytes());
+        v.extend_from_slice(labels);
+        v
+    }
+
+    #[test]
+    fn parses_wellformed_idx() {
+        let pix: Vec<u8> = (0..2 * 4).map(|i| (i * 32) as u8).collect();
+        let (n, r, c, f) = parse_images(&idx3(2, 2, 2, &pix)).unwrap();
+        assert_eq!((n, r, c), (2, 2, 2));
+        assert!((f[1] - 32.0 / 255.0).abs() < 1e-6);
+        let labels = parse_labels(&idx1(&[3, 9])).unwrap();
+        assert_eq!(labels, vec![3, 9]);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(parse_images(&[0, 0, 8, 4, 0, 0, 0, 0]).is_err());
+        let mut good = idx3(1, 2, 2, &[1, 2, 3, 4]);
+        good.pop();
+        assert!(parse_images(&good).is_err());
+        assert!(parse_labels(&idx1(&[10])).is_err()); // label out of range
+    }
+
+    #[test]
+    fn roundtrip_through_files() {
+        let dir = std::env::temp_dir().join(format!("mnist-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let pix: Vec<u8> = vec![128; 28 * 28 * 3];
+        std::fs::write(dir.join("train-images-idx3-ubyte"), idx3(3, 28, 28, &pix)).unwrap();
+        std::fs::write(dir.join("train-labels-idx1-ubyte"), idx1(&[0, 1, 2])).unwrap();
+        let ds = load(&dir, true).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.dim(), 784);
+        assert_eq!(ds.source, "mnist");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_files_error() {
+        assert!(load(Path::new("/definitely/missing"), true).is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! Dataset substrate: MNIST / CIFAR-10 parsers, a deterministic synthetic
+//! fallback, and the batching/prefetching pipeline.
+//!
+//! The sandbox has no network, so real dataset files may be absent; in that
+//! case [`Dataset::auto`] falls back to [`synthetic`] — deterministic,
+//! class-templated data with the same shapes and cardinality (see DESIGN.md
+//! §Substitutions). EXPERIMENTS.md records which source each run used.
+
+pub mod cifar;
+pub mod loader;
+pub mod mnist;
+pub mod synthetic;
+
+use anyhow::Result;
+
+use crate::tensor::{IntTensor, Tensor};
+
+/// An in-memory labelled dataset (images flattened row-major).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// `n * dim` features in [0, 1].
+    pub features: std::sync::Arc<Vec<f32>>,
+    pub labels: std::sync::Arc<Vec<i32>>,
+    /// per-example shape, e.g. [784] or [32, 32, 3]
+    pub example_shape: Vec<usize>,
+    pub num_classes: usize,
+    /// provenance, recorded in metrics ("mnist", "synthetic-mnist", ...)
+    pub source: String,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.example_shape.iter().product()
+    }
+
+    /// Copy example `i`'s features into `out`.
+    pub fn write_example(&self, i: usize, out: &mut [f32]) {
+        let d = self.dim();
+        out.copy_from_slice(&self.features[i * d..(i + 1) * d]);
+    }
+
+    /// Load the named dataset, preferring real files under `data_dir` and
+    /// falling back to the synthetic equivalent (`n_fallback` examples).
+    pub fn auto(
+        kind: &str,
+        data_dir: &std::path::Path,
+        train: bool,
+        n_fallback: usize,
+        seed: u64,
+    ) -> Result<Dataset> {
+        match kind {
+            "mnist" => {
+                let dir = data_dir.join("mnist");
+                match mnist::load(&dir, train) {
+                    Ok(ds) => Ok(ds),
+                    Err(_) => Ok(synthetic::mnist(n_fallback, seed ^ train as u64)),
+                }
+            }
+            "cifar10" => {
+                let dir = data_dir.join("cifar10");
+                match cifar::load(&dir, train) {
+                    Ok(ds) => Ok(ds),
+                    Err(_) => Ok(synthetic::cifar10(n_fallback, seed ^ train as u64)),
+                }
+            }
+            other => anyhow::bail!("unknown dataset kind {other:?}"),
+        }
+    }
+}
+
+/// One training batch, shaped for the AOT graphs.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Tensor,
+    pub y: IntTensor,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_falls_back_to_synthetic() {
+        let dir = std::path::PathBuf::from("/nonexistent-data-dir");
+        let ds = Dataset::auto("mnist", &dir, true, 256, 1).unwrap();
+        assert_eq!(ds.source, "synthetic-mnist");
+        assert_eq!(ds.len(), 256);
+        assert_eq!(ds.example_shape, vec![784]);
+        let ds = Dataset::auto("cifar10", &dir, false, 64, 1).unwrap();
+        assert_eq!(ds.source, "synthetic-cifar10");
+        assert_eq!(ds.example_shape, vec![32, 32, 3]);
+    }
+
+    #[test]
+    fn unknown_kind_errors() {
+        let dir = std::path::PathBuf::from("/tmp");
+        assert!(Dataset::auto("imagenet", &dir, true, 1, 1).is_err());
+    }
+}

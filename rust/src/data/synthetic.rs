@@ -1,0 +1,245 @@
+//! Deterministic synthetic datasets (DESIGN.md §Substitutions).
+//!
+//! The sandbox cannot download MNIST/CIFAR-10, so each is substituted by a
+//! class-templated generator with the same shapes, value range and
+//! cardinality: every class gets a smooth pseudo-random template; examples
+//! are `clip(template * strength + noise)`. The tasks are learnable but not
+//! trivial (templates overlap, noise is substantial), which is what the
+//! regularizer-vs-accuracy trade-off needs to be exercised meaningfully.
+//! Fully deterministic in (n, seed).
+
+use crate::util::rng::Rng;
+
+use super::Dataset;
+
+/// Smooth a flat image in-place with a separable 3-tap box blur (makes
+/// templates spatially coherent instead of white noise).
+fn smooth2d(img: &mut [f32], h: usize, w: usize, ch: usize, passes: usize) {
+    let mut tmp = vec![0.0f32; img.len()];
+    for _ in 0..passes {
+        // horizontal
+        for y in 0..h {
+            for x in 0..w {
+                for c in 0..ch {
+                    let mut acc = 0.0;
+                    let mut cnt = 0.0;
+                    for dx in -1i64..=1 {
+                        let xx = x as i64 + dx;
+                        if (0..w as i64).contains(&xx) {
+                            acc += img[(y * w + xx as usize) * ch + c];
+                            cnt += 1.0;
+                        }
+                    }
+                    tmp[(y * w + x) * ch + c] = acc / cnt;
+                }
+            }
+        }
+        // vertical
+        for y in 0..h {
+            for x in 0..w {
+                for c in 0..ch {
+                    let mut acc = 0.0;
+                    let mut cnt = 0.0;
+                    for dy in -1i64..=1 {
+                        let yy = y as i64 + dy;
+                        if (0..h as i64).contains(&yy) {
+                            acc += tmp[(yy as usize * w + x) * ch + c];
+                            cnt += 1.0;
+                        }
+                    }
+                    img[(y * w + x) * ch + c] = acc / cnt;
+                }
+            }
+        }
+    }
+}
+
+fn normalize01(t: &mut [f32]) {
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &v in t.iter() {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let span = (hi - lo).max(1e-6);
+    for v in t.iter_mut() {
+        *v = (*v - lo) / span;
+    }
+}
+
+/// Class templates share a common base (`1 - delta` of the energy); only a
+/// `delta` fraction is class-specific. Small delta + heavy per-example
+/// noise keeps classification non-trivial (accuracy lands well below 100%),
+/// which the tables' accuracy column needs to differentiate methods.
+fn make_templates(
+    classes: usize,
+    h: usize,
+    w: usize,
+    ch: usize,
+    delta: f32,
+    seed: u64,
+) -> Vec<Vec<f32>> {
+    let mut base_rng = Rng::new(seed ^ 0xBA5E_BA5E);
+    let mut base: Vec<f32> = (0..h * w * ch).map(|_| base_rng.next_f32()).collect();
+    smooth2d(&mut base, h, w, ch, 2);
+    (0..classes)
+        .map(|c| {
+            let mut rng = Rng::new(seed ^ (0xC1A5_5000 + c as u64));
+            let mut uniq: Vec<f32> = (0..h * w * ch).map(|_| rng.next_f32()).collect();
+            smooth2d(&mut uniq, h, w, ch, 2);
+            let mut t: Vec<f32> = base
+                .iter()
+                .zip(&uniq)
+                .map(|(b, u)| (1.0 - delta) * b + delta * u)
+                .collect();
+            normalize01(&mut t);
+            t
+        })
+        .collect()
+}
+
+fn generate(
+    n: usize,
+    h: usize,
+    w: usize,
+    ch: usize,
+    classes: usize,
+    delta: f32,
+    noise: f32,
+    seed: u64,
+    source: &str,
+) -> Dataset {
+    let templates = make_templates(classes, h, w, ch, delta, seed);
+    let dim = h * w * ch;
+    let mut rng = Rng::new(seed ^ 0xDA7A_5E7);
+    let mut features = Vec::with_capacity(n * dim);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % classes; // balanced classes
+        let t = &templates[class];
+        // Confuser blending + heavy noise keep the task non-trivial: the
+        // true template carries ~55-75% of the signal, a random other class
+        // ~25%, and the noise floor is comparable to the signal gap.
+        let confuser = &templates[rng.below(classes)];
+        let strength = 0.55 + 0.2 * rng.next_f32();
+        let mix = 0.25;
+        for (&tv, &cv) in t.iter().zip(confuser.iter()) {
+            let v = tv * strength + cv * mix + noise * (rng.next_f32() - 0.5);
+            features.push(v.clamp(0.0, 1.0));
+        }
+        labels.push(class as i32);
+    }
+    // shuffle example order (labels and features together)
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut sf = Vec::with_capacity(n * dim);
+    let mut sl = Vec::with_capacity(n);
+    for &i in &order {
+        sf.extend_from_slice(&features[i * dim..(i + 1) * dim]);
+        sl.push(labels[i]);
+    }
+    Dataset {
+        features: std::sync::Arc::new(sf),
+        labels: std::sync::Arc::new(sl),
+        example_shape: if ch == 1 {
+            vec![h * w]
+        } else {
+            vec![h, w, ch]
+        },
+        num_classes: classes,
+        source: source.to_string(),
+    }
+}
+
+/// Synthetic stand-in for MNIST: 28x28 grayscale, flattened to 784.
+pub fn mnist(n: usize, seed: u64) -> Dataset {
+    generate(n, 28, 28, 1, 10, 0.35, 0.7, seed, "synthetic-mnist")
+}
+
+/// Synthetic stand-in for CIFAR-10: 32x32x3.
+pub fn cifar10(n: usize, seed: u64) -> Dataset {
+    generate(n, 32, 32, 3, 10, 0.30, 0.8, seed, "synthetic-cifar10")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = mnist(64, 5);
+        let b = mnist(64, 5);
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.labels, b.labels);
+        let c = mnist(64, 6);
+        assert_ne!(a.features, c.features);
+    }
+
+    #[test]
+    fn shapes_and_ranges() {
+        let ds = cifar10(40, 1);
+        assert_eq!(ds.len(), 40);
+        assert_eq!(ds.dim(), 32 * 32 * 3);
+        assert!(ds.features.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(ds.labels.iter().all(|&l| (0..10).contains(&l)));
+    }
+
+    #[test]
+    fn classes_are_balanced() {
+        let ds = mnist(1000, 2);
+        let mut counts = [0usize; 10];
+        for &l in ds.labels.iter() {
+            counts[l as usize] += 1;
+        }
+        assert_eq!(counts, [100; 10]);
+    }
+
+    #[test]
+    fn classes_are_separable_by_template_distance() {
+        // nearest-template classification on held-out samples should beat
+        // chance by a wide margin — the task is learnable.
+        let ds = mnist(500, 3);
+        let templates = make_templates(10, 28, 28, 1, 0.35, 3);
+        let dim = ds.dim();
+        let mut correct = 0;
+        for i in 0..ds.len() {
+            let x = &ds.features[i * dim..(i + 1) * dim];
+            let best = (0..10)
+                .min_by(|&a, &b| {
+                    let da: f32 = templates[a]
+                        .iter()
+                        .zip(x)
+                        .map(|(t, v)| (t - v) * (t - v))
+                        .sum();
+                    let db: f32 = templates[b]
+                        .iter()
+                        .zip(x)
+                        .map(|(t, v)| (t - v) * (t - v))
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best as i32 == ds.labels[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.len() as f64;
+        assert!(acc > 0.6, "nearest-template accuracy {acc}");
+    }
+
+    #[test]
+    fn noise_makes_examples_differ_within_class() {
+        let ds = mnist(20, 4);
+        let dim = ds.dim();
+        // find two examples of the same class
+        let mut by_class: std::collections::HashMap<i32, Vec<usize>> = Default::default();
+        for (i, &l) in ds.labels.iter().enumerate() {
+            by_class.entry(l).or_default().push(i);
+        }
+        let pair = by_class.values().find(|v| v.len() >= 2).unwrap();
+        let (a, b) = (pair[0], pair[1]);
+        assert_ne!(
+            &ds.features[a * dim..(a + 1) * dim],
+            &ds.features[b * dim..(b + 1) * dim]
+        );
+    }
+}

@@ -1,0 +1,198 @@
+//! High-level experiment harness: one call per paper artifact.
+//!
+//! The CLI (`main.rs`), the examples and the benches all drive experiments
+//! through these functions so "reproduce Table 1" means the same thing
+//! everywhere.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::config::{Method, RunConfig};
+use crate::coordinator::evaluator::{self, EvalResult};
+use crate::coordinator::metrics::MetricsLog;
+use crate::coordinator::{checkpoint, TrainOutcome, Trainer};
+use crate::data::Dataset;
+use crate::report::MethodRow;
+use crate::reram::{energy, mapper, resolution, ResolutionPolicy};
+use crate::runtime::{Engine, Manifest};
+use crate::sparsity::{self, SliceStats, TracePoint};
+
+/// Everything a single training run produces.
+pub struct RunResult {
+    pub cfg: RunConfig,
+    pub outcome: TrainOutcome,
+    pub eval: EvalResult,
+    pub stats: SliceStats,
+    pub trace: Vec<TracePoint>,
+    pub dataset_source: String,
+    pub checkpoint_dir: Option<PathBuf>,
+}
+
+impl RunResult {
+    pub fn method_row(&self) -> MethodRow {
+        MethodRow {
+            method: self.cfg.method.name().to_string(),
+            accuracy: self.eval.accuracy,
+            stats: self.stats.clone(),
+        }
+    }
+}
+
+/// Train one (model, method) pair end to end: data -> phases -> eval ->
+/// sparsity census -> optional checkpoint under `<out>/<model>-<method>/`.
+pub fn run_training(
+    engine: &Engine,
+    manifest: &Manifest,
+    cfg: RunConfig,
+    save_checkpoint: bool,
+) -> Result<RunResult> {
+    let train_ds = Dataset::auto(
+        &cfg.dataset,
+        &cfg.data_dir,
+        true,
+        cfg.train_examples,
+        cfg.seed,
+    )?;
+    let test_ds = Dataset::auto(
+        &cfg.dataset,
+        &cfg.data_dir,
+        false,
+        cfg.test_examples,
+        cfg.seed.wrapping_add(1),
+    )?;
+    eprintln!(
+        "[{}] training on {} ({} examples), {} total steps",
+        cfg.label(),
+        train_ds.source,
+        train_ds.len(),
+        crate::coordinator::PhasePlan::for_config(&cfg).total_steps()
+    );
+
+    let run_dir = cfg.out_dir.join(cfg.label());
+    let mut log = MetricsLog::create(Some(&run_dir))?;
+    let mut trainer = Trainer::new(engine, manifest, cfg.clone())?;
+    let outcome = trainer.run(&train_ds, &mut log)?;
+    log.flush()?;
+
+    // BN re-estimation before eval (no-op for BN-free models): short
+    // schedules leave running stats stale (see evaluator::bn_calibrate).
+    evaluator::bn_calibrate(
+        engine,
+        manifest,
+        &cfg.model,
+        &mut trainer.state,
+        &train_ds,
+        40,
+        cfg.seed ^ 0xCA11B,
+    )?;
+    let eval = evaluator::evaluate(engine, manifest, &cfg.model, &trainer.state, &test_ds)?;
+    let stats = sparsity::census(&trainer.state.qws);
+
+    let checkpoint_dir = if save_checkpoint {
+        let dir = run_dir.join("checkpoint");
+        checkpoint::save(
+            &dir,
+            &trainer.state,
+            &checkpoint::Meta {
+                model: cfg.model.clone(),
+                method: cfg.method.name().to_string(),
+                step: outcome.steps_run,
+                dataset_source: train_ds.source.clone(),
+            },
+        )?;
+        Some(dir)
+    } else {
+        None
+    };
+    if !log.trace.is_empty() {
+        log.write_trace_csv(&run_dir.join("trace.csv"))?;
+    }
+
+    eprintln!(
+        "[{}] done: loss {:.4}, test acc {:.2}% ({} ex), mean step {:.1} ms",
+        cfg.label(),
+        outcome.final_loss,
+        eval.accuracy * 100.0,
+        eval.examples,
+        outcome.mean_step_ms
+    );
+
+    Ok(RunResult {
+        cfg,
+        outcome,
+        eval,
+        stats,
+        trace: log.trace.clone(),
+        dataset_source: train_ds.source,
+        checkpoint_dir,
+    })
+}
+
+/// Table 1 / Table 2 rows: run Pruned, l1 and Bl1 on one model.
+pub fn reproduce_sparsity_table(
+    engine: &Engine,
+    manifest: &Manifest,
+    base_cfg: &RunConfig,
+) -> Result<Vec<RunResult>> {
+    let mut results = Vec::new();
+    for method in [Method::Pruned, Method::L1, Method::Bl1] {
+        let mut cfg = base_cfg.clone();
+        cfg.method = method;
+        results.push(run_training(engine, manifest, cfg, true)?);
+    }
+    Ok(results)
+}
+
+/// Figure 2: l1-vs-Bl1 sparsity traces on one model.
+pub fn reproduce_fig2(
+    engine: &Engine,
+    manifest: &Manifest,
+    base_cfg: &RunConfig,
+) -> Result<Vec<(String, Vec<TracePoint>)>> {
+    let mut traces = Vec::new();
+    for method in [Method::L1, Method::Bl1] {
+        let mut cfg = base_cfg.clone();
+        cfg.method = method;
+        if cfg.trace_every == 0 {
+            cfg.trace_every = (cfg.steps / 40).max(1);
+        }
+        let res = run_training(engine, manifest, cfg, false)?;
+        traces.push((method.name().to_string(), res.trace));
+    }
+    Ok(traces)
+}
+
+/// Deployment report for a trained state: crossbar mapping, measured ADC
+/// requirements, Table-3 savings.
+pub struct DeployReport {
+    pub crossbars: usize,
+    /// lossless per-slice bits (LSB-first)
+    pub lossless_bits: [u32; 4],
+    /// percentile-policy bits actually deployed (LSB-first)
+    pub deployed_bits: [u32; 4],
+    pub rows: Vec<energy::AdcSavingRow>,
+    /// whole-model savings (energy, time, area) vs the 8-bit baseline
+    pub savings: (f64, f64, f64),
+}
+
+pub fn deploy_report(
+    named_qws: &[(String, crate::tensor::Tensor)],
+    policy: ResolutionPolicy,
+) -> Result<DeployReport> {
+    let mapped = mapper::map_model(named_qws)?;
+    let lossless_bits = resolution::required_bits(&mapped, ResolutionPolicy::Lossless);
+    let deployed_bits = resolution::required_bits(&mapped, policy);
+    let rows = (0..4)
+        .rev()
+        .map(|k| energy::saving_row(k, deployed_bits[k]))
+        .collect();
+    let savings = energy::savings_vs_baseline(&mapped, deployed_bits);
+    Ok(DeployReport {
+        crossbars: mapped.total_crossbars(),
+        lossless_bits,
+        deployed_bits,
+        rows,
+        savings,
+    })
+}

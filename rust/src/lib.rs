@@ -1,0 +1,42 @@
+//! # bitslice-reram
+//!
+//! Reproduction of *"Exploring Bit-Slice Sparsity in Deep Neural Networks
+//! for Efficient ReRAM-Based Deployment"* (Zhang et al., 2019) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! This crate is **Layer 3**: the coordinator that owns the training loop,
+//! data pipeline, sparsity analysis and the ReRAM deployment substrate. The
+//! compute graphs (Layer 2 JAX models calling Layer 1 Pallas kernels) are
+//! AOT-lowered to HLO text by `python/compile/aot.py` and executed through
+//! the PJRT CPU client ([`runtime`]); Python is never on the run path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`runtime`]     — PJRT client, artifact manifest, executable cache
+//! * [`tensor`]      — host tensors and conversions to/from XLA literals
+//! * [`data`]        — MNIST/CIFAR-10 loaders + deterministic synthetic
+//!                     fallback, batching and prefetching
+//! * [`quant`]       — dynamic fixed-point quantization + bit-slicing
+//!                     (Rust mirror of the L1 kernels, used for analysis
+//!                     and crossbar mapping)
+//! * [`sparsity`]    — per-slice non-zero statistics (Tables 1/2, Fig. 2)
+//! * [`reram`]       — crossbar arrays, weight mapper, ADC cost model,
+//!                     bitline-current/resolution analyzer (Table 3)
+//! * [`coordinator`] — trainer phases, schedules, pruning, checkpoints,
+//!                     metrics, evaluation
+//! * [`report`]      — paper-style table/figure emitters
+//! * [`config`]      — run configuration (CLI + TOML-ish files)
+//! * [`util`]        — substrates the sandbox lacks crates for: JSON
+//!                     parser, CLI args, RNG, thread pool
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod quant;
+pub mod report;
+pub mod reram;
+pub mod runtime;
+pub mod sparsity;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,237 @@
+//! Dynamic fixed-point quantization + bit-slicing — Rust mirror of the L1
+//! Pallas kernels (paper Sec. 2.1/2.2).
+//!
+//! The coordinator re-implements Eq. 1–3 natively for everything that is
+//! *not* on the training path: sparsity analysis of checkpoints (Tables
+//! 1/2, Fig. 2), crossbar mapping, and the deployment cost model. The
+//! integration tests cross-check this module bit-for-bit against the
+//! `*_sparsity.hlo.txt` graphs, so the two implementations cannot drift.
+
+use crate::tensor::Tensor;
+
+/// Paper constants: 8-bit dynamic fixed point, 2-bit cells -> 4 slices.
+pub const N_BITS: u32 = 8;
+pub const SLICE_BITS: u32 = 2;
+pub const N_SLICES: usize = (N_BITS / SLICE_BITS) as usize;
+pub const SLICE_MAX: u8 = (1 << SLICE_BITS) - 1; // 3
+pub const CODE_MAX: u32 = (1 << N_BITS) - 1; // 255
+
+/// Guard for all-zero tensors (mirrors ref._EPS).
+const EPS: f32 = 1.0 / (1 << 20) as f32;
+
+/// Eq. 1: S(W) = ceil(log2(max |w|)), clamped for all-zero tensors.
+pub fn dynamic_range(w: &[f32]) -> i32 {
+    let m = w.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(EPS);
+    m.log2().ceil() as i32
+}
+
+/// Qstep = 2^{S - n}.
+pub fn qstep(w: &[f32]) -> f32 {
+    ((dynamic_range(w) - N_BITS as i32) as f32).exp2()
+}
+
+/// Quantized view of one tensor: codes, signs, step.
+#[derive(Debug, Clone)]
+pub struct Quantized {
+    /// B(w) in [0, 255], per element (row-major like the source tensor).
+    pub codes: Vec<u8>,
+    /// sign(w) in {-1, 0, +1}; zero-code elements keep sign 0.
+    pub signs: Vec<i8>,
+    /// Qstep = 2^{S-8}.
+    pub step: f32,
+    pub shape: Vec<usize>,
+}
+
+/// Eq. 2 over a whole tensor.
+pub fn quantize(w: &Tensor) -> Quantized {
+    let step = qstep(w.data());
+    let inv = 1.0 / step;
+    let mut codes = Vec::with_capacity(w.len());
+    let mut signs = Vec::with_capacity(w.len());
+    for &v in w.data() {
+        let code = ((v.abs() * inv).floor()).min(CODE_MAX as f32) as u32 as u8;
+        codes.push(code);
+        signs.push(if code == 0 || v == 0.0 {
+            0
+        } else if v > 0.0 {
+            1
+        } else {
+            -1
+        });
+    }
+    Quantized {
+        codes,
+        signs,
+        step,
+        shape: w.shape().to_vec(),
+    }
+}
+
+impl Quantized {
+    /// Q(w) = sign * B * Qstep — the recovered weight tensor.
+    pub fn recover(&self) -> Tensor {
+        let data = self
+            .codes
+            .iter()
+            .zip(&self.signs)
+            .map(|(&c, &s)| s as f32 * c as f32 * self.step)
+            .collect();
+        Tensor::new(self.shape.clone(), data).expect("shape preserved")
+    }
+
+    /// Extract slice k (LSB-first): (code >> 2k) & 3.
+    pub fn slice(&self, k: usize) -> Vec<u8> {
+        debug_assert!(k < N_SLICES);
+        self.codes
+            .iter()
+            .map(|&c| ((c as u32 >> (SLICE_BITS * k as u32)) & SLICE_MAX as u32) as u8)
+            .collect()
+    }
+
+    /// Per-slice non-zero counts (LSB-first) — one pass over the codes.
+    pub fn slice_nonzero_counts(&self) -> [usize; N_SLICES] {
+        let mut counts = [0usize; N_SLICES];
+        for &c in &self.codes {
+            let c = c as u32;
+            for (k, cnt) in counts.iter_mut().enumerate() {
+                if (c >> (SLICE_BITS * k as u32)) & SLICE_MAX as u32 != 0 {
+                    *cnt += 1;
+                }
+            }
+        }
+        counts
+    }
+
+    /// Eq. 3: the bit-slice l1 value (digit sum over all slices).
+    pub fn bl1(&self) -> u64 {
+        self.codes
+            .iter()
+            .map(|&c| {
+                (0..N_SLICES)
+                    .map(|k| ((c as u32 >> (SLICE_BITS * k as u32)) & SLICE_MAX as u32) as u64)
+                    .sum::<u64>()
+            })
+            .sum()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.codes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, ensure, ensure_close};
+
+    fn t(data: Vec<f32>) -> Tensor {
+        let n = data.len();
+        Tensor::new(vec![n], data).unwrap()
+    }
+
+    #[test]
+    fn dynamic_range_matches_paper_eq1() {
+        assert_eq!(dynamic_range(&[0.7]), 0); // ceil(log2 0.7) = 0
+        assert_eq!(dynamic_range(&[1.0]), 0);
+        assert_eq!(dynamic_range(&[1.1]), 1);
+        assert_eq!(dynamic_range(&[0.25]), -2);
+        assert_eq!(dynamic_range(&[-3.0, 0.5]), 2);
+    }
+
+    #[test]
+    fn all_zero_tensor_is_safe() {
+        let q = quantize(&t(vec![0.0; 10]));
+        assert!(q.step > 0.0);
+        assert!(q.codes.iter().all(|&c| c == 0));
+        assert_eq!(q.bl1(), 0);
+    }
+
+    #[test]
+    fn codes_bounded_and_recover_close() {
+        check(50, |rng| {
+            let n = 1 + rng.below(500);
+            let scale = [1e-3f32, 0.1, 1.0, 40.0][rng.below(4)];
+            let data = rng.normal_vec(n, scale);
+            let w = t(data.clone());
+            let q = quantize(&w);
+            ensure(q.codes.iter().all(|&c| c as u32 <= CODE_MAX), "code range")?;
+            let rec = q.recover();
+            for (a, b) in data.iter().zip(rec.data()) {
+                // floor quantization: |w - Q(w)| < step, sign preserved
+                ensure((a - b).abs() < q.step, format!("err {} vs {}", a, b))?;
+                ensure(
+                    b.abs() <= a.abs() + 1e-7,
+                    "magnitude never grows under floor",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn slices_recombine_to_code() {
+        check(50, |rng| {
+            let n = 1 + rng.below(300);
+            let w = t(rng.normal_vec(n, 0.3));
+            let q = quantize(&w);
+            for i in 0..n {
+                let mut acc = 0u32;
+                for k in 0..N_SLICES {
+                    acc += (q.slice(k)[i] as u32) << (SLICE_BITS * k as u32);
+                }
+                ensure(acc == q.codes[i] as u32, format!("recombine at {i}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bl1_equals_slice_sums() {
+        check(30, |rng| {
+            let n = 1 + rng.below(300);
+            let w = t(rng.normal_vec(n, 0.5));
+            let q = quantize(&w);
+            let by_slices: u64 = (0..N_SLICES)
+                .map(|k| q.slice(k).iter().map(|&v| v as u64).sum::<u64>())
+                .sum();
+            ensure(q.bl1() == by_slices, "bl1 == sum of slices")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nonzero_counts_match_slices() {
+        check(30, |rng| {
+            let n = 1 + rng.below(300);
+            let w = t(rng.normal_vec(n, 0.5));
+            let q = quantize(&w);
+            let counts = q.slice_nonzero_counts();
+            for k in 0..N_SLICES {
+                let direct = q.slice(k).iter().filter(|&&v| v != 0).count();
+                ensure(counts[k] == direct, format!("slice {k}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn known_example_228() {
+        // code 228 = 0b11100100 -> slices LSB-first 0,1,2,3
+        // build a tensor whose max is exactly 1.0 => step 2^-8, w = 228/256
+        let w = t(vec![228.0 / 256.0, 1.0]);
+        let q = quantize(&w);
+        assert_eq!(q.step, 2.0f32.powi(-8));
+        assert_eq!(q.codes[0], 228);
+        assert_eq!(
+            (0..4).map(|k| q.slice(k)[0]).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
+    }
+
+    #[test]
+    fn step_scales_with_dynamic_range() {
+        let q1 = quantize(&t(vec![0.9]));
+        let q2 = quantize(&t(vec![3.6]));
+        ensure_close(q2.step / q1.step, 4.0, 1e-6, "step ratio").unwrap();
+    }
+}

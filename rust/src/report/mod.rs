@@ -1,0 +1,144 @@
+//! Paper-style table and figure emitters.
+//!
+//! Formats the measured numbers in the same layout as the paper's Tables
+//! 1–3 and dumps Figure 2's series as CSV, so EXPERIMENTS.md can show
+//! paper-vs-measured side by side.
+
+use crate::quant::N_SLICES;
+use crate::reram::energy::AdcSavingRow;
+use crate::sparsity::SliceStats;
+
+/// One row of Table 1/2: a method's accuracy + slice sparsity.
+#[derive(Debug, Clone)]
+pub struct MethodRow {
+    pub method: String,
+    pub accuracy: f64,
+    pub stats: SliceStats,
+}
+
+/// Render Table 1/2 (markdown) for a set of method rows.
+pub fn sparsity_table(title: &str, rows: &[MethodRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("### {title}\n\n"));
+    out.push_str(
+        "| Method | Accuracy | B^3 | B^2 | B^1 | B^0 | Average |\n\
+         |--------|----------|-----|-----|-----|-----|---------|\n",
+    );
+    for r in rows {
+        let ratios = r.stats.ratios_msb_first();
+        let (mean, std) = r.stats.mean_std();
+        out.push_str(&format!(
+            "| {} | {:.2}% | {:.2}% | {:.2}% | {:.2}% | {:.2}% | {:.2}±{:.2}% |\n",
+            r.method,
+            r.accuracy * 100.0,
+            ratios[0] * 100.0,
+            ratios[1] * 100.0,
+            ratios[2] * 100.0,
+            ratios[3] * 100.0,
+            mean * 100.0,
+            std * 100.0,
+        ));
+    }
+    out
+}
+
+/// Render Table 3 (markdown).
+pub fn adc_table(rows: &[AdcSavingRow]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "| Group | Baseline | Resolution | Energy Saving | Speedup | Area Saving |\n\
+         |-------|----------|------------|---------------|---------|-------------|\n",
+    );
+    for r in rows {
+        let group = if r.group == 3 {
+            "XB_3".to_string()
+        } else {
+            format!("XB_{}", r.group)
+        };
+        out.push_str(&format!(
+            "| {} | {} bit | {} bit | {:.1}x | {:.2}x | {:.0}x |\n",
+            group, r.baseline_bits, r.bits, r.energy_saving, r.speedup, r.area_saving
+        ));
+    }
+    out
+}
+
+/// Render a Fig-2 style series as CSV text (step + MSB-first ratios).
+pub fn fig2_csv(traces: &[(String, Vec<crate::sparsity::TracePoint>)]) -> String {
+    let mut out = String::from("method,step,b3,b2,b1,b0\n");
+    for (method, points) in traces {
+        for p in points {
+            out.push_str(&format!(
+                "{},{},{:.6},{:.6},{:.6},{:.6}\n",
+                method, p.step, p.ratios[0], p.ratios[1], p.ratios[2], p.ratios[3]
+            ));
+        }
+    }
+    out
+}
+
+/// Per-slice resolution summary (feeds Table 3's "Resolution" column from
+/// the measured mapping instead of asserting it).
+pub fn resolution_summary(bits_lsb_first: [u32; N_SLICES]) -> String {
+    let mut out = String::from("| Group | Required ADC bits |\n|-------|-------------------|\n");
+    for k in (0..N_SLICES).rev() {
+        out.push_str(&format!("| XB_{k} | {} |\n", bits_lsb_first[k]));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reram::energy::saving_row;
+    use crate::sparsity::SliceStats;
+
+    fn stats(nonzero: [usize; 4], numel: usize) -> SliceStats {
+        SliceStats { nonzero, numel }
+    }
+
+    #[test]
+    fn sparsity_table_formats_rows() {
+        let rows = vec![MethodRow {
+            method: "Bl1".into(),
+            accuracy: 0.9767,
+            // LSB-first counts out of 1000: b0 96, b1 43, b2 40, b3 8
+            stats: stats([96, 43, 40, 8], 1000),
+        }];
+        let t = sparsity_table("MNIST", &rows);
+        assert!(t.contains("97.67%"));
+        assert!(t.contains("| 0.80% | 4.00% | 4.30% | 9.60% |"), "{t}");
+        assert!(t.contains("±"));
+    }
+
+    #[test]
+    fn adc_table_matches_paper_numbers() {
+        let t = adc_table(&[saving_row(3, 1), saving_row(2, 3)]);
+        assert!(t.contains("XB_3"));
+        assert!(t.contains("28.4x"));
+        assert!(t.contains("2.67x"));
+        assert!(t.contains("| 2x |"));
+    }
+
+    #[test]
+    fn fig2_csv_has_method_column() {
+        let traces = vec![(
+            "bl1".to_string(),
+            vec![crate::sparsity::TracePoint {
+                step: 10,
+                ratios: [0.01, 0.02, 0.03, 0.04],
+            }],
+        )];
+        let csv = fig2_csv(&traces);
+        assert!(csv.starts_with("method,step,"));
+        assert!(csv.contains("bl1,10,0.010000"));
+    }
+
+    #[test]
+    fn resolution_summary_msb_first() {
+        let s = resolution_summary([3, 3, 3, 1]);
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[2].contains("XB_3 | 1"));
+        assert!(lines[5].contains("XB_0 | 3"));
+    }
+}

@@ -1,0 +1,112 @@
+//! The ADC cost model behind Table 3.
+//!
+//! From Saberi et al. [17] (SAR ADCs): power is approximately proportional
+//! to `2^N / (N + 1)` and sensing time directly proportional to `N`, where
+//! N is the resolution in bits. Area is roughly flat below 6 bits and
+//! doubles from 6 to 8 bits (the paper: "the area of a 6-bit ADC is
+//! approximately the half of an 8-bit ADC but the area varies little when
+//! the resolution is lower than 6").
+//!
+//! The ISAAC baseline [9] deploys 8-bit ADCs even after its ADC
+//! optimizations; Table 3's savings are ratios against that baseline.
+
+/// ISAAC baseline ADC resolution (bits).
+pub const BASELINE_BITS: u32 = 8;
+
+/// Relative ADC cost model (unitless; everything in Table 3 is a ratio).
+#[derive(Debug, Clone, Copy)]
+pub struct AdcModel;
+
+impl AdcModel {
+    /// Power ∝ 2^N / (N+1), Saberi et al. [17].
+    pub fn power(bits: u32) -> f64 {
+        assert!(bits >= 1);
+        (2.0f64).powi(bits as i32) / (bits as f64 + 1.0)
+    }
+
+    /// Sensing time ∝ N.
+    pub fn sensing_time(bits: u32) -> f64 {
+        assert!(bits >= 1);
+        bits as f64
+    }
+
+    /// Relative area: 1.0 at 8 bits, 0.5 at 6 bits, flat (0.5) below 6
+    /// (the paper: "the area of a 6-bit ADC is approximately the half of an
+    /// 8-bit ADC but the area varies little when the resolution is lower
+    /// than 6"). Between 6 and 8 bits: geometric interpolation, 2^((N-8)/2).
+    pub fn area(bits: u32) -> f64 {
+        assert!(bits >= 1);
+        if bits >= 6 {
+            (2.0f64).powf((bits as f64 - BASELINE_BITS as f64) / 2.0)
+        } else {
+            0.5
+        }
+    }
+
+    /// Energy per conversion ∝ power x sensing time... the paper's Table 3
+    /// quotes *energy saving* = power(8)/power(N), and *speedup* =
+    /// time(8)/time(N); keep those definitions so the table reproduces
+    /// exactly.
+    pub fn energy_saving(bits: u32) -> f64 {
+        Self::power(BASELINE_BITS) / Self::power(bits)
+    }
+
+    pub fn speedup(bits: u32) -> f64 {
+        Self::sensing_time(BASELINE_BITS) / Self::sensing_time(bits)
+    }
+
+    pub fn area_saving(bits: u32) -> f64 {
+        Self::area(BASELINE_BITS) / Self::area(bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table3_msb_slice_1bit() {
+        // XB_3: 8-bit -> 1-bit ADC
+        let e = AdcModel::energy_saving(1);
+        assert!((e - 28.4).abs() < 0.1, "energy saving {e} (paper: 28.4x)");
+        let s = AdcModel::speedup(1);
+        assert!((s - 8.0).abs() < 1e-12, "speedup {s} (paper: 8x)");
+        let a = AdcModel::area_saving(1);
+        assert!((a - 2.0).abs() < 1e-12, "area saving {a} (paper: 2x)");
+    }
+
+    #[test]
+    fn paper_table3_low_slices_3bit() {
+        // XB_{2,1,0}: 8-bit -> 3-bit ADC
+        let e = AdcModel::energy_saving(3);
+        assert!((e - 14.2).abs() < 0.05, "energy saving {e} (paper: 14.2x)");
+        let s = AdcModel::speedup(3);
+        assert!((s - 8.0 / 3.0).abs() < 1e-12, "speedup {s} (paper: 2.67x)");
+        let a = AdcModel::area_saving(3);
+        assert!((a - 2.0).abs() < 1e-12, "area saving {a} (paper: 2x)");
+    }
+
+    #[test]
+    fn power_is_monotone_in_bits() {
+        for n in 1..12 {
+            assert!(AdcModel::power(n + 1) > AdcModel::power(n));
+        }
+    }
+
+    #[test]
+    fn area_flat_below_6_and_halved_at_6() {
+        assert_eq!(AdcModel::area(6), 0.5);
+        assert_eq!(AdcModel::area(5), 0.5);
+        assert_eq!(AdcModel::area(1), 0.5);
+        assert_eq!(AdcModel::area(8), 1.0);
+        let a7 = AdcModel::area(7);
+        assert!(a7 > 0.5 && a7 < 1.0, "area(7) = {a7}");
+    }
+
+    #[test]
+    fn baseline_savings_are_identity() {
+        assert_eq!(AdcModel::energy_saving(8), 1.0);
+        assert_eq!(AdcModel::speedup(8), 1.0);
+        assert_eq!(AdcModel::area_saving(8), 1.0);
+    }
+}

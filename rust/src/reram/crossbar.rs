@@ -1,0 +1,154 @@
+//! The crossbar array model.
+//!
+//! One [`Crossbar`] is a 128x128 array of 2-bit ReRAM cells storing one
+//! bit-slice of one sign (positive or negative weights map to separate
+//! arrays — state-of-the-art accelerators keep them on differential column
+//! pairs [10]). Wordlines are driven bit-serially by 1-bit DACs; the
+//! bitline current is the dot product of the input bit vector with the
+//! column's conductances, in units of one minimum-conductance cell (the
+//! ADC's LSB).
+
+/// ISAAC-style array geometry.
+pub const XBAR_ROWS: usize = 128;
+pub const XBAR_COLS: usize = 128;
+
+/// Max cell conductance value for 2-bit cells.
+pub const CELL_MAX: u8 = 3;
+
+/// A single crossbar array holding 2-bit cells.
+#[derive(Debug, Clone)]
+pub struct Crossbar {
+    /// row-major `rows x cols`, values 0..=3
+    cells: Vec<u8>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Crossbar {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        assert!(rows <= XBAR_ROWS && cols <= XBAR_COLS, "{rows}x{cols}");
+        Crossbar {
+            cells: vec![0; rows * cols],
+            rows,
+            cols,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: u8) {
+        assert!(v <= CELL_MAX, "cell value {v}");
+        self.cells[r * self.cols + c] = v;
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> u8 {
+        self.cells[r * self.cols + c]
+    }
+
+    /// Number of programmed (non-zero) cells — the mapped-sparsity census.
+    pub fn nonzero_cells(&self) -> usize {
+        self.cells.iter().filter(|&&v| v != 0).count()
+    }
+
+    /// Per-column sum of conductances: the worst-case bitline current
+    /// (every wordline driving a '1'), in LSB units.
+    pub fn column_conductance_sums(&self) -> Vec<u32> {
+        let mut sums = vec![0u32; self.cols];
+        for r in 0..self.rows {
+            let row = &self.cells[r * self.cols..(r + 1) * self.cols];
+            for (c, &v) in row.iter().enumerate() {
+                sums[c] += v as u32;
+            }
+        }
+        sums
+    }
+
+    /// Bitline currents for one input bit-plane (`bits[r]` in {0,1}).
+    pub fn bitline_currents(&self, bits: &[u8], out: &mut [u32]) {
+        debug_assert_eq!(bits.len(), self.rows);
+        debug_assert_eq!(out.len(), self.cols);
+        out.fill(0);
+        for r in 0..self.rows {
+            if bits[r] == 0 {
+                continue;
+            }
+            let row = &self.cells[r * self.cols..(r + 1) * self.cols];
+            for (o, &v) in out.iter_mut().zip(row) {
+                *o += v as u32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, ensure};
+
+    #[test]
+    fn geometry_limits_enforced() {
+        let xb = Crossbar::zeros(128, 128);
+        assert_eq!((xb.rows(), xb.cols()), (128, 128));
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversized_array_panics() {
+        let _ = Crossbar::zeros(129, 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn cell_value_range_enforced() {
+        let mut xb = Crossbar::zeros(2, 2);
+        xb.set(0, 0, 4);
+    }
+
+    #[test]
+    fn column_sums_and_currents_agree_for_all_ones_input() {
+        check(25, |rng| {
+            let rows = 1 + rng.below(128);
+            let cols = 1 + rng.below(128);
+            let mut xb = Crossbar::zeros(rows, cols);
+            for r in 0..rows {
+                for c in 0..cols {
+                    xb.set(r, c, rng.below(4) as u8);
+                }
+            }
+            let bits = vec![1u8; rows];
+            let mut cur = vec![0u32; cols];
+            xb.bitline_currents(&bits, &mut cur);
+            ensure(
+                cur == xb.column_conductance_sums(),
+                "all-ones currents == column sums",
+            )?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn currents_respect_input_bits() {
+        let mut xb = Crossbar::zeros(3, 2);
+        xb.set(0, 0, 3);
+        xb.set(1, 0, 2);
+        xb.set(2, 1, 1);
+        let mut cur = vec![0u32; 2];
+        xb.bitline_currents(&[1, 0, 1], &mut cur);
+        assert_eq!(cur, vec![3, 1]);
+    }
+
+    #[test]
+    fn nonzero_cell_census() {
+        let mut xb = Crossbar::zeros(4, 4);
+        assert_eq!(xb.nonzero_cells(), 0);
+        xb.set(1, 2, 2);
+        xb.set(3, 3, 1);
+        assert_eq!(xb.nonzero_cells(), 2);
+    }
+}

@@ -1,0 +1,150 @@
+//! Deployment cost roll-up: Table 3 and the whole-model variant.
+//!
+//! Table 3 reports per-crossbar-group ratios (energy / sensing-time / area
+//! saving of the reduced-resolution ADC against the ISAAC 8-bit baseline).
+//! The model-level roll-up weighs each slice group by its ADC conversion
+//! count (columns x activation bit-planes), which is what an end-to-end
+//! deployment would see.
+
+use crate::quant::N_SLICES;
+
+use super::adc::AdcModel;
+use super::mapper::MappedModel;
+
+/// One row of Table 3.
+#[derive(Debug, Clone)]
+pub struct AdcSavingRow {
+    /// which crossbar group, MSB-first label (3 = XB_3 = MSB slice)
+    pub group: usize,
+    pub baseline_bits: u32,
+    pub bits: u32,
+    pub energy_saving: f64,
+    pub speedup: f64,
+    pub area_saving: f64,
+}
+
+/// Compute a Table-3 row for one slice group.
+pub fn saving_row(group: usize, bits: u32) -> AdcSavingRow {
+    AdcSavingRow {
+        group,
+        baseline_bits: super::adc::BASELINE_BITS,
+        bits,
+        energy_saving: AdcModel::energy_saving(bits),
+        speedup: AdcModel::speedup(bits),
+        area_saving: AdcModel::area_saving(bits),
+    }
+}
+
+/// Whole-model deployment summary.
+#[derive(Debug, Clone)]
+pub struct DeploymentCost {
+    /// per-slice (LSB-first) ADC resolutions used
+    pub adc_bits: [u32; N_SLICES],
+    /// total crossbars
+    pub crossbars: usize,
+    /// total ADC energy, relative units (sum over conversions of power)
+    pub energy: f64,
+    /// total sensing time, relative units
+    pub time: f64,
+    /// total ADC area, relative units (one ADC per crossbar, ISAAC-style
+    /// column-multiplexed)
+    pub area: f64,
+}
+
+/// Roll up a mapped model at the given per-slice resolutions.
+pub fn deployment_cost(model: &MappedModel, adc_bits: [u32; N_SLICES]) -> DeploymentCost {
+    let mut energy = 0.0;
+    let mut time = 0.0;
+    let mut area = 0.0;
+    let mut crossbars = 0usize;
+    for layer in &model.layers {
+        for (k, (pos, neg)) in layer.grids.iter().enumerate() {
+            let bits = adc_bits[k];
+            for grid in [pos, neg] {
+                for tile in &grid.tiles {
+                    crossbars += 1;
+                    // one ADC per crossbar; conversions = columns x 8 planes
+                    let conversions = (tile.cols() * 8) as f64;
+                    energy += conversions * AdcModel::power(bits);
+                    time += conversions * AdcModel::sensing_time(bits);
+                    area += AdcModel::area(bits);
+                }
+            }
+        }
+    }
+    DeploymentCost {
+        adc_bits,
+        crossbars,
+        energy,
+        time,
+        area,
+    }
+}
+
+/// Savings of a deployment against the 8-bit baseline on the same mapping.
+pub fn savings_vs_baseline(model: &MappedModel, adc_bits: [u32; N_SLICES]) -> (f64, f64, f64) {
+    let ours = deployment_cost(model, adc_bits);
+    let base = deployment_cost(model, [8, 8, 8, 8]);
+    (
+        base.energy / ours.energy,
+        base.time / ours.time,
+        base.area / ours.area,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reram::mapper::map_model;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn mapped() -> MappedModel {
+        let mut rng = Rng::new(1);
+        let w = Tensor::new(vec![256, 100], rng.normal_vec(25600, 0.1)).unwrap();
+        map_model(&[("w".into(), w)]).unwrap()
+    }
+
+    #[test]
+    fn table3_rows_match_paper() {
+        let msb = saving_row(3, 1);
+        assert!((msb.energy_saving - 28.4).abs() < 0.1);
+        assert!((msb.speedup - 8.0).abs() < 1e-12);
+        assert!((msb.area_saving - 2.0).abs() < 1e-12);
+        let low = saving_row(2, 3);
+        assert!((low.energy_saving - 14.2).abs() < 0.05);
+        assert!((low.speedup - 8.0 / 3.0).abs() < 1e-12);
+        assert!((low.area_saving - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn baseline_cost_is_identity_saving() {
+        let m = mapped();
+        let (e, t, a) = savings_vs_baseline(&m, [8, 8, 8, 8]);
+        assert!((e - 1.0).abs() < 1e-12);
+        assert!((t - 1.0).abs() < 1e-12);
+        assert!((a - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_operating_point_saves_in_expected_band() {
+        let m = mapped();
+        // LSB-first (3,3,3,1): three groups at 14.2x, one at 28.4x energy
+        let (e, t, a) = savings_vs_baseline(&m, [3, 3, 3, 1]);
+        assert!(e > 14.0 && e < 29.0, "energy saving {e}");
+        assert!(t > 2.5 && t < 8.1, "speedup {t}");
+        assert!((a - 2.0).abs() < 1e-9, "area saving {a}");
+    }
+
+    #[test]
+    fn cost_scales_with_crossbar_count() {
+        let mut rng = Rng::new(2);
+        let w1 = Tensor::new(vec![128, 128], rng.normal_vec(128 * 128, 0.1)).unwrap();
+        let m1 = map_model(&[("a".into(), w1.clone())]).unwrap();
+        let m2 = map_model(&[("a".into(), w1.clone()), ("b".into(), w1)]).unwrap();
+        let c1 = deployment_cost(&m1, [3, 3, 3, 1]);
+        let c2 = deployment_cost(&m2, [3, 3, 3, 1]);
+        assert!((c2.energy / c1.energy - 2.0).abs() < 1e-9);
+        assert_eq!(c2.crossbars, 2 * c1.crossbars);
+    }
+}

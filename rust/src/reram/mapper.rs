@@ -1,0 +1,248 @@
+//! Weight -> crossbar mapping.
+//!
+//! A weight tensor is viewed as a 2-D matrix (fan-in rows x fan-out
+//! columns; conv kernels HWIO flatten to (kh*kw*cin) x cout), quantized to
+//! 8-bit dynamic fixed point (Eq. 1-2), bit-sliced into the four 2-bit
+//! slices (Eq. 3's universe), sign-split onto positive/negative arrays,
+//! and tiled into 128x128 [`Crossbar`]s. This is exactly the layout the
+//! paper's "4 groups of 128x128 ReRAM crossbars (XBs), with each group
+//! storing 2 bits of the 8-bit weights" describes.
+
+use anyhow::Result;
+
+use crate::quant::{self, N_SLICES};
+use crate::tensor::Tensor;
+
+use super::crossbar::{Crossbar, XBAR_COLS, XBAR_ROWS};
+
+/// Positive / negative differential halves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sign {
+    Pos,
+    Neg,
+}
+
+/// All crossbars of one layer for one slice group and sign, tiled.
+#[derive(Debug, Clone)]
+pub struct TileGrid {
+    /// `row_tiles x col_tiles`, row-major.
+    pub tiles: Vec<Crossbar>,
+    pub row_tiles: usize,
+    pub col_tiles: usize,
+}
+
+impl TileGrid {
+    pub fn tile(&self, tr: usize, tc: usize) -> &Crossbar {
+        &self.tiles[tr * self.col_tiles + tc]
+    }
+}
+
+/// One mapped layer: 4 slice groups x 2 signs of tile grids.
+#[derive(Debug, Clone)]
+pub struct LayerMapping {
+    pub name: String,
+    /// logical matrix shape (rows = fan-in, cols = fan-out)
+    pub rows: usize,
+    pub cols: usize,
+    /// Qstep of the layer (for recovering real units)
+    pub step: f32,
+    /// `grids[k]` = (pos, neg) for slice k, LSB-first.
+    pub grids: Vec<(TileGrid, TileGrid)>,
+}
+
+/// A whole model mapped onto crossbars.
+#[derive(Debug, Clone)]
+pub struct MappedModel {
+    pub layers: Vec<LayerMapping>,
+}
+
+/// Interpret a weight tensor as (fan-in x fan-out).
+pub fn matrix_view(shape: &[usize]) -> Result<(usize, usize)> {
+    match shape.len() {
+        2 => Ok((shape[0], shape[1])),
+        4 => Ok((shape[0] * shape[1] * shape[2], shape[3])), // HWIO conv
+        _ => anyhow::bail!("cannot map tensor of rank {} to a matrix", shape.len()),
+    }
+}
+
+fn empty_grid(rows: usize, cols: usize) -> TileGrid {
+    let row_tiles = rows.div_ceil(XBAR_ROWS);
+    let col_tiles = cols.div_ceil(XBAR_COLS);
+    let mut tiles = Vec::with_capacity(row_tiles * col_tiles);
+    for tr in 0..row_tiles {
+        for tc in 0..col_tiles {
+            let r = (rows - tr * XBAR_ROWS).min(XBAR_ROWS);
+            let c = (cols - tc * XBAR_COLS).min(XBAR_COLS);
+            tiles.push(Crossbar::zeros(r, c));
+        }
+    }
+    TileGrid {
+        tiles,
+        row_tiles,
+        col_tiles,
+    }
+}
+
+/// Map one weight tensor.
+pub fn map_layer(name: &str, w: &Tensor) -> Result<LayerMapping> {
+    let (rows, cols) = matrix_view(w.shape())?;
+    let q = quant::quantize(w);
+    let mut grids = Vec::with_capacity(N_SLICES);
+    for k in 0..N_SLICES {
+        let slice = q.slice(k);
+        let mut pos = empty_grid(rows, cols);
+        let mut neg = empty_grid(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                let i = r * cols + c;
+                let v = slice[i];
+                if v == 0 {
+                    continue;
+                }
+                let (tr, rr) = (r / XBAR_ROWS, r % XBAR_ROWS);
+                let (tc, cc) = (c / XBAR_COLS, c % XBAR_COLS);
+                let grid = if q.signs[i] >= 0 { &mut pos } else { &mut neg };
+                grid.tiles[tr * grid.col_tiles + tc].set(rr, cc, v);
+            }
+        }
+        grids.push((pos, neg));
+    }
+    Ok(LayerMapping {
+        name: name.to_string(),
+        rows,
+        cols,
+        step: q.step,
+        grids,
+    })
+}
+
+/// Map a set of named weight tensors (a whole model's qweights).
+pub fn map_model(weights: &[(String, Tensor)]) -> Result<MappedModel> {
+    let layers = weights
+        .iter()
+        .map(|(n, w)| map_layer(n, w))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(MappedModel { layers })
+}
+
+impl LayerMapping {
+    /// Crossbar count for one slice group (pos + neg).
+    pub fn crossbars_per_slice(&self) -> usize {
+        let (p, n) = &self.grids[0];
+        p.tiles.len() + n.tiles.len()
+    }
+
+    /// Programmed-cell census for slice k (pos + neg) — equals the slice's
+    /// non-zero element count from the sparsity module.
+    pub fn nonzero_cells(&self, k: usize) -> usize {
+        let (p, n) = &self.grids[k];
+        p.tiles.iter().map(|t| t.nonzero_cells()).sum::<usize>()
+            + n.tiles.iter().map(|t| t.nonzero_cells()).sum::<usize>()
+    }
+}
+
+impl MappedModel {
+    /// Total crossbars across all layers and slice groups.
+    pub fn total_crossbars(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.crossbars_per_slice() * N_SLICES)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity;
+    use crate::util::check::{check, ensure};
+    use crate::util::rng::Rng;
+
+    fn rand_tensor(rng: &mut Rng, shape: Vec<usize>, scale: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::new(shape, rng.normal_vec(n, scale)).unwrap()
+    }
+
+    #[test]
+    fn matrix_view_linear_and_conv() {
+        assert_eq!(matrix_view(&[784, 300]).unwrap(), (784, 300));
+        assert_eq!(matrix_view(&[3, 3, 64, 128]).unwrap(), (576, 128));
+        assert!(matrix_view(&[10]).is_err());
+    }
+
+    #[test]
+    fn tiling_covers_matrix_exactly() {
+        let mut rng = Rng::new(1);
+        let w = rand_tensor(&mut rng, vec![300, 200], 0.1);
+        let m = map_layer("fc", &w).unwrap();
+        let (p, _) = &m.grids[0];
+        assert_eq!(p.row_tiles, 3); // ceil(300/128)
+        assert_eq!(p.col_tiles, 2); // ceil(200/128)
+        assert_eq!(p.tile(0, 0).rows(), 128);
+        assert_eq!(p.tile(2, 0).rows(), 44); // 300 - 256
+        assert_eq!(p.tile(0, 1).cols(), 72); // 200 - 128
+    }
+
+    #[test]
+    fn mapped_cells_match_sparsity_census() {
+        check(10, |rng| {
+            let rows = 1 + rng.below(300);
+            let cols = 1 + rng.below(200);
+            let w = Tensor::new(vec![rows, cols], rng.normal_vec(rows * cols, 0.1))
+                .unwrap();
+            let stats = sparsity::census(std::slice::from_ref(&w));
+            let m = map_layer("l", &w).unwrap();
+            for k in 0..N_SLICES {
+                ensure(
+                    m.nonzero_cells(k) == stats.nonzero[k],
+                    format!("slice {k} cells vs census"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn signs_split_to_differential_arrays() {
+        // +1 -> pos grid, -1 -> neg grid, same cell values
+        let w = Tensor::new(vec![2, 1], vec![0.5, -0.5]).unwrap();
+        let m = map_layer("l", &w).unwrap();
+        for k in 0..N_SLICES {
+            let (p, n) = &m.grids[k];
+            assert_eq!(p.tile(0, 0).get(0, 0), n.tile(0, 0).get(1, 0));
+            assert_eq!(p.tile(0, 0).get(1, 0), 0);
+            assert_eq!(n.tile(0, 0).get(0, 0), 0);
+        }
+    }
+
+    #[test]
+    fn slices_reconstruct_codes_through_mapping() {
+        let mut rng = Rng::new(3);
+        let w = rand_tensor(&mut rng, vec![50, 40], 0.2);
+        let q = quant::quantize(&w);
+        let m = map_layer("l", &w).unwrap();
+        for r in 0..50 {
+            for c in 0..40 {
+                let mut acc = 0u32;
+                for k in 0..N_SLICES {
+                    let (p, n) = &m.grids[k];
+                    let v = p.tile(0, 0).get(r, c).max(n.tile(0, 0).get(r, c));
+                    acc += (v as u32) << (2 * k);
+                }
+                assert_eq!(acc, q.codes[r * 40 + c] as u32, "at ({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_kernel_maps_without_error() {
+        let mut rng = Rng::new(4);
+        let w = rand_tensor(&mut rng, vec![3, 3, 16, 32], 0.1);
+        let m = map_layer("conv", &w).unwrap();
+        assert_eq!(m.rows, 144);
+        assert_eq!(m.cols, 32);
+        assert_eq!(m.grids.len(), 4);
+        let model = map_model(&[("conv".to_string(), w)]).unwrap();
+        assert_eq!(model.total_crossbars(), 4 * m.crossbars_per_slice());
+    }
+}

@@ -1,0 +1,32 @@
+//! ReRAM deployment substrate (paper Sec. 3 "in simulation" + Table 3).
+//!
+//! The paper maps the quantized 8-bit weights, 2 bits per cell, onto four
+//! groups of 128x128 crossbars (XB₃…XB₀, MSB to LSB slice) and sizes the
+//! per-crossbar ADCs by the bit-slice sparsity the training achieved. This
+//! module is that deployment stack:
+//!
+//! * [`crossbar`]   — the array model: cells, differential pos/neg pairs,
+//!                    bitline current accumulation.
+//! * [`mapper`]     — tile a layer's slice matrices onto 128x128 arrays.
+//! * [`adc`]        — the ADC cost model of [17]: power ∝ 2^N/(N+1),
+//!                    sensing time ∝ N, area halves at 6 bits (Table 3).
+//! * [`resolution`] — bitline-current analysis: the ADC resolution each
+//!                    crossbar group needs at the achieved sparsity.
+//! * [`sim`]        — functional simulator: run a mapped layer bit-serially
+//!                    through the ADC transfer function (validates accuracy
+//!                    under reduced resolution; mirrors the L1 crossbar
+//!                    kernel and is cross-checked against it).
+//! * [`energy`]     — whole-deployment roll-up: energy / latency / area
+//!                    vs the ISAAC-style 8-bit-ADC baseline.
+
+pub mod adc;
+pub mod crossbar;
+pub mod energy;
+pub mod mapper;
+pub mod resolution;
+pub mod sim;
+
+pub use adc::AdcModel;
+pub use crossbar::{Crossbar, XBAR_COLS, XBAR_ROWS};
+pub use mapper::{LayerMapping, MappedModel};
+pub use resolution::ResolutionPolicy;

@@ -1,0 +1,177 @@
+//! Bitline-current analysis: what ADC resolution does each crossbar group
+//! actually need at the achieved bit-slice sparsity?
+//!
+//! The worst-case bitline current of a column is its conductance sum (all
+//! wordlines driving '1'); the ADC must resolve it losslessly if we demand
+//! exactness, or cover a high percentile of columns if we accept clipping
+//! on outlier columns (the paper's 1-bit/3-bit operating points clip; the
+//! accuracy impact is validated by [`super::sim`] and the
+//! `mlp_reram_paper` AOT graph).
+
+use crate::quant::N_SLICES;
+
+use super::mapper::MappedModel;
+
+/// How to choose the resolution from the column-current distribution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ResolutionPolicy {
+    /// Cover the maximum column sum exactly (no clipping anywhere).
+    Lossless,
+    /// Cover the given fraction (e.g. 0.999) of columns; the rest clip.
+    Percentile(f64),
+}
+
+/// Column-current census for one slice group across the whole model.
+#[derive(Debug, Clone)]
+pub struct SliceCurrents {
+    /// worst-case current (conductance sum) of every mapped column
+    pub sums: Vec<u32>,
+}
+
+impl SliceCurrents {
+    pub fn max(&self) -> u32 {
+        self.sums.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.sums.is_empty() {
+            0.0
+        } else {
+            self.sums.iter().map(|&s| s as f64).sum::<f64>() / self.sums.len() as f64
+        }
+    }
+
+    pub fn percentile(&self, p: f64) -> u32 {
+        if self.sums.is_empty() {
+            return 0;
+        }
+        let mut sorted = self.sums.clone();
+        sorted.sort_unstable();
+        let idx = ((sorted.len() as f64 - 1.0) * p.clamp(0.0, 1.0)).round() as usize;
+        sorted[idx]
+    }
+}
+
+/// Bits needed to represent currents up to `max_current` (one LSB = one
+/// minimum-conductance cell current): N = ceil(log2(max + 1)), min 1.
+pub fn bits_for_current(max_current: u32) -> u32 {
+    // codes 0..=max_current -> ceil(log2(max+1)) bits, at least 1
+    ((max_current as u64 + 1).next_power_of_two().trailing_zeros()).max(1)
+}
+
+/// Gather the column-current census per slice group over a mapped model.
+pub fn slice_currents(model: &MappedModel) -> [SliceCurrents; N_SLICES] {
+    let mut out: [SliceCurrents; N_SLICES] = std::array::from_fn(|_| SliceCurrents {
+        sums: Vec::new(),
+    });
+    for layer in &model.layers {
+        for (k, (pos, neg)) in layer.grids.iter().enumerate() {
+            for grid in [pos, neg] {
+                for tile in &grid.tiles {
+                    out[k].sums.extend(tile.column_conductance_sums());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Per-slice ADC resolutions under a policy, LSB-first.
+pub fn required_bits(model: &MappedModel, policy: ResolutionPolicy) -> [u32; N_SLICES] {
+    let currents = slice_currents(model);
+    std::array::from_fn(|k| {
+        let cur = match policy {
+            ResolutionPolicy::Lossless => currents[k].max(),
+            ResolutionPolicy::Percentile(p) => currents[k].percentile(p),
+        };
+        bits_for_current(cur)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reram::mapper::map_model;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bits_for_current_boundaries() {
+        assert_eq!(bits_for_current(0), 1);
+        assert_eq!(bits_for_current(1), 1);
+        assert_eq!(bits_for_current(2), 2);
+        assert_eq!(bits_for_current(3), 2);
+        assert_eq!(bits_for_current(4), 3);
+        assert_eq!(bits_for_current(7), 3);
+        assert_eq!(bits_for_current(8), 4);
+        assert_eq!(bits_for_current(255), 8);
+        assert_eq!(bits_for_current(256), 9);
+        assert_eq!(bits_for_current(384), 9); // dense 128x3 column
+    }
+
+    #[test]
+    fn percentile_is_monotone_and_bounded_by_max() {
+        let c = SliceCurrents {
+            sums: (0..1000u32).collect(),
+        };
+        assert!(c.percentile(0.5) <= c.percentile(0.999));
+        assert!(c.percentile(0.999) <= c.max());
+        assert_eq!(c.percentile(1.0), 999);
+        assert_eq!(c.percentile(0.0), 0);
+    }
+
+    #[test]
+    fn dense_model_needs_many_bits_sparse_needs_few() {
+        let mut rng = Rng::new(1);
+        // dense: every weight near max magnitude -> MSB slice dense
+        let dense = Tensor::new(
+            vec![128, 64],
+            (0..128 * 64)
+                .map(|_| if rng.next_f32() > 0.5 { 0.99 } else { -0.99 })
+                .collect(),
+        )
+        .unwrap();
+        let m = map_model(&[("d".into(), dense)]).unwrap();
+        let bits = required_bits(&m, ResolutionPolicy::Lossless);
+        assert!(bits[3] >= 7, "dense MSB slice got {} bits", bits[3]);
+
+        // sparse: one tiny weight per column (cols 0..32) -> max column sum
+        // in the LSB slice is 3 (the dynamic-range pin at code 255)
+        let mut data = vec![0.0f32; 128 * 64];
+        for c in 0..32 {
+            data[c] = 1.0 / 256.0; // code 1 (row 0)
+        }
+        data[127 * 64 + 63] = 1.0; // pin dynamic range: code 255 at (127,63)
+        let sparse = Tensor::new(vec![128, 64], data).unwrap();
+        let m = map_model(&[("s".into(), sparse)]).unwrap();
+        let bits = required_bits(&m, ResolutionPolicy::Lossless);
+        assert!(bits[0] <= 2, "sparse LSB slice got {} bits", bits[0]);
+    }
+
+    #[test]
+    fn lossless_dominates_percentile() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::new(vec![256, 100], rng.normal_vec(25600, 0.1)).unwrap();
+        let m = map_model(&[("w".into(), w)]).unwrap();
+        let lossless = required_bits(&m, ResolutionPolicy::Lossless);
+        let p99 = required_bits(&m, ResolutionPolicy::Percentile(0.99));
+        for k in 0..N_SLICES {
+            assert!(p99[k] <= lossless[k]);
+        }
+    }
+
+    #[test]
+    fn msb_slice_needs_fewest_bits_for_gaussian_weights() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::new(vec![512, 128], rng.normal_vec(512 * 128, 0.05)).unwrap();
+        let m = map_model(&[("w".into(), w)]).unwrap();
+        let bits = required_bits(&m, ResolutionPolicy::Percentile(0.999));
+        // LSB-first: bits[3] is the MSB slice — the paper's XB_3
+        assert!(
+            bits[3] <= bits[0],
+            "MSB {} vs LSB {} bits",
+            bits[3],
+            bits[0]
+        );
+    }
+}

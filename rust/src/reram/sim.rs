@@ -1,0 +1,207 @@
+//! Functional crossbar inference simulator.
+//!
+//! Runs a mapped layer the way the hardware would: activations are
+//! quantized to 8-bit codes and driven bit-serially (1-bit DACs); each
+//! bit-plane's bitline currents pass through the ADC transfer function
+//! (clip at 2^N - 1 LSBs) *per crossbar*; tile partial sums, slice shifts
+//! and the sign difference recombine digitally. This mirrors the L1
+//! `crossbar.py` Pallas kernel (same clipping point, same recombination
+//! order) and is cross-checked against it by the integration tests.
+
+use crate::quant::{self, N_SLICES};
+use crate::tensor::Tensor;
+use crate::util::pool::parallel_map;
+
+use super::mapper::LayerMapping;
+
+/// Quantize non-negative activations to codes (mirrors L2 `_act_quantize`).
+pub fn act_quantize(x: &[f32]) -> (Vec<u8>, f32) {
+    let step = quant::qstep(x);
+    let inv = 1.0 / step;
+    let codes = x
+        .iter()
+        .map(|&v| ((v.max(0.0) * inv).floor()).min(quant::CODE_MAX as f32) as u8)
+        .collect();
+    (codes, step)
+}
+
+/// ADC transfer function: clip at full scale.
+#[inline]
+pub fn adc_clip(current: u32, bits: u32) -> u32 {
+    current.min((1u32 << bits) - 1)
+}
+
+/// Run one example (activation code vector) through a mapped layer.
+///
+/// `adc_bits[k]` is the resolution of slice group k (LSB-first). Returns
+/// the integer-domain result (code units); multiply by `layer.step *
+/// act_step` for real units.
+pub fn forward_codes(layer: &LayerMapping, a_code: &[u8], adc_bits: &[u32; N_SLICES]) -> Vec<i64> {
+    assert_eq!(a_code.len(), layer.rows, "activation length");
+    let mut out = vec![0i64; layer.cols];
+    // bit-serial over 8 activation bit planes
+    for t in 0..8u32 {
+        let bits: Vec<u8> = a_code.iter().map(|&c| (c >> t) & 1).collect();
+        for (k, (pos, neg)) in layer.grids.iter().enumerate() {
+            let full = adc_bits[k];
+            for (grid, sign) in [(pos, 1i64), (neg, -1i64)] {
+                for tr in 0..grid.row_tiles {
+                    let r0 = tr * super::XBAR_ROWS;
+                    for tc in 0..grid.col_tiles {
+                        let tile = grid.tile(tr, tc);
+                        let c0 = tc * super::XBAR_COLS;
+                        let mut cur = vec![0u32; tile.cols()];
+                        tile.bitline_currents(&bits[r0..r0 + tile.rows()], &mut cur);
+                        for (j, &i_raw) in cur.iter().enumerate() {
+                            let i_adc = adc_clip(i_raw, full) as i64;
+                            out[c0 + j] +=
+                                sign * i_adc * (1i64 << t) * (1i64 << (2 * k));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Batched real-units forward: `x` is (batch, rows) in [0, ∞), returns
+/// (batch, cols) approximating `x @ W`. Examples are processed in parallel
+/// (one `forward_codes` per row).
+///
+/// §Perf note (EXPERIMENTS.md iteration 6): a tile-resident batched variant
+/// (accumulate all examples per cell pass) was implemented and measured
+/// 0.68x — the per-example current accumulators evict the tile from L1 —
+/// so this simpler form is kept; it already runs at ~1e10 cell-ops/s,
+/// 100x over the DESIGN.md target.
+pub fn forward(layer: &LayerMapping, x: &Tensor, adc_bits: &[u32; N_SLICES]) -> Tensor {
+    let shape = x.shape();
+    assert_eq!(shape.len(), 2);
+    let (b, rows) = (shape[0], shape[1]);
+    assert_eq!(rows, layer.rows);
+    let (codes, a_step) = act_quantize(x.data());
+    let scale = layer.step * a_step;
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let rows_out = parallel_map(b, threads, |i| {
+        let code_row = &codes[i * rows..(i + 1) * rows];
+        forward_codes(layer, code_row, adc_bits)
+            .into_iter()
+            .map(|v| v as f32 * scale)
+            .collect::<Vec<f32>>()
+    });
+    let mut data = Vec::with_capacity(b * layer.cols);
+    for r in rows_out {
+        data.extend(r);
+    }
+    Tensor::new(vec![b, layer.cols], data).expect("forward shape")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reram::mapper::map_layer;
+    use crate::util::check::{check, ensure};
+    use crate::util::rng::Rng;
+
+    const LOSSLESS: [u32; N_SLICES] = [10, 10, 10, 10];
+
+    fn exact_matmul(x: &Tensor, w: &Tensor) -> Vec<f32> {
+        let (b, r) = (x.shape()[0], x.shape()[1]);
+        let c = w.shape()[1];
+        let mut out = vec![0.0f32; b * c];
+        for i in 0..b {
+            for j in 0..c {
+                let mut acc = 0.0;
+                for k in 0..r {
+                    acc += x.at2(i, k) * w.at2(k, j);
+                }
+                out[i * c + j] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn lossless_sim_matches_quantized_matmul() {
+        check(8, |rng| {
+            let rows = 1 + rng.below(200);
+            let cols = 1 + rng.below(60);
+            let b = 1 + rng.below(4);
+            let w = Tensor::new(vec![rows, cols], rng.normal_vec(rows * cols, 0.1))
+                .unwrap();
+            let x = Tensor::new(
+                vec![b, rows],
+                (0..b * rows).map(|_| rng.next_f32()).collect(),
+            )
+            .unwrap();
+            let layer = map_layer("l", &w).unwrap();
+            let out = forward(&layer, &x, &LOSSLESS);
+
+            // reference: quantized x @ quantized w
+            let qw = crate::quant::quantize(&w).recover();
+            let (xc, xs) = act_quantize(x.data());
+            let qx = Tensor::new(
+                vec![b, rows],
+                xc.iter().map(|&c| c as f32 * xs).collect(),
+            )
+            .unwrap();
+            let want = exact_matmul(&qx, &qw);
+            for (got, want) in out.data().iter().zip(&want) {
+                let tol = 1e-4 * want.abs().max(1.0);
+                ensure(
+                    (got - want).abs() <= tol,
+                    format!("sim {got} vs exact {want}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn adc_clip_boundaries() {
+        assert_eq!(adc_clip(0, 1), 0);
+        assert_eq!(adc_clip(1, 1), 1);
+        assert_eq!(adc_clip(5, 1), 1);
+        assert_eq!(adc_clip(7, 3), 7);
+        assert_eq!(adc_clip(8, 3), 7);
+    }
+
+    #[test]
+    fn reduced_adc_only_loses_on_clipped_columns() {
+        // sparse weights: reduced resolution must be exact because no
+        // column current ever exceeds the full scale
+        let mut data = vec![0.0f32; 128 * 8];
+        for c in 0..8 {
+            data[c * 128 / 8 * 8 + c] = 0.9; // one big weight per column
+        }
+        data[0] = 1.0;
+        let w = Tensor::new(vec![128, 8], data).unwrap();
+        let layer = map_layer("l", &w).unwrap();
+        let mut rng = Rng::new(5);
+        let x = Tensor::new(vec![2, 128], (0..256).map(|_| rng.next_f32()).collect())
+            .unwrap();
+        let low = forward(&layer, &x, &[2, 2, 2, 2]);
+        let high = forward(&layer, &x, &LOSSLESS);
+        // single cell per column => max current 3 => 2 bits lossless
+        for (a, b) in low.data().iter().zip(high.data()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn act_quantize_codes_bounded() {
+        let (codes, step) = act_quantize(&[0.0, 0.5, 1.0, 123.0]);
+        assert!(step > 0.0);
+        assert!(codes.iter().all(|&c| c as u32 <= 255));
+        assert_eq!(codes[0], 0);
+    }
+
+    #[test]
+    fn negative_weights_subtract() {
+        let w = Tensor::new(vec![1, 1], vec![-0.5]).unwrap();
+        let x = Tensor::new(vec![1, 1], vec![1.0]).unwrap();
+        let layer = map_layer("l", &w).unwrap();
+        let out = forward(&layer, &x, &LOSSLESS);
+        assert!(out.data()[0] < 0.0);
+    }
+}

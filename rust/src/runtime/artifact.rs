@@ -1,0 +1,287 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+//!
+//! The manifest is the contract between the AOT compile path and the Rust
+//! coordinator: per model it records the canonical parameter layout (three
+//! groups: `qw` quantized weights, `tp` trainable plain params, `st` batch-
+//! norm state) and, per graph, the exact flattened input/output tensor
+//! specs the executable expects.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// dtype of a graph I/O tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// One input or output tensor of a graph.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let name = j.req("name")?.as_str().context("spec name")?.to_string();
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .context("spec shape")?
+            .iter()
+            .map(|d| d.as_usize().context("dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = match j.req("dtype")?.as_str() {
+            Some("f32") => DType::F32,
+            Some("i32") => DType::I32,
+            other => anyhow::bail!("unknown dtype {other:?}"),
+        };
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// One AOT graph: artifact path + I/O layout.
+#[derive(Debug, Clone)]
+pub struct GraphSpec {
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl GraphSpec {
+    fn from_json(dir: &Path, j: &Json) -> Result<Self> {
+        let rel = j.req("path")?.as_str().context("graph path")?;
+        let parse_list = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.req(key)?
+                .as_arr()
+                .context("spec list")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(GraphSpec {
+            path: dir.join(rel),
+            inputs: parse_list("inputs")?,
+            outputs: parse_list("outputs")?,
+        })
+    }
+
+    /// Index of a named input (errors list what exists — debugging aid).
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|s| s.name == name)
+            .with_context(|| {
+                format!(
+                    "graph has no input {name:?}; inputs: {:?}",
+                    self.inputs.iter().map(|s| &s.name).collect::<Vec<_>>()
+                )
+            })
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|s| s.name == name)
+            .with_context(|| format!("graph has no output {name:?}"))
+    }
+}
+
+/// One parameter tensor in the canonical layout.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Gaussian init std; 0.0 means constant `init_const`.
+    pub init_std: f32,
+    pub init_const: f32,
+}
+
+impl ParamEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ParamEntry {
+            name: j.req("name")?.as_str().context("param name")?.to_string(),
+            shape: j
+                .req("shape")?
+                .as_arr()
+                .context("param shape")?
+                .iter()
+                .map(|d| d.as_usize().context("dim"))
+                .collect::<Result<Vec<_>>>()?,
+            init_std: j.req("init_std")?.as_f64().context("init_std")? as f32,
+            init_const: j.req("init_const")?.as_f64().context("init_const")? as f32,
+        })
+    }
+}
+
+/// One model entry: parameter groups + graphs.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub qw: Vec<ParamEntry>,
+    pub tp: Vec<ParamEntry>,
+    pub st: Vec<ParamEntry>,
+    pub graphs: std::collections::BTreeMap<String, GraphSpec>,
+}
+
+impl ModelEntry {
+    pub fn graph(&self, name: &str) -> Result<&GraphSpec> {
+        self.graphs.get(name).with_context(|| {
+            format!(
+                "model {} has no graph {name:?}; have {:?}",
+                self.name,
+                self.graphs.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Total quantized-weight element count (the paper's sparsity universe).
+    pub fn qw_numel(&self) -> usize {
+        self.qw.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Per-example input element count.
+    pub fn input_numel(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: std::collections::BTreeMap<String, ModelEntry>,
+    pub kernels: std::collections::BTreeMap<String, GraphSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let j = crate::util::json::parse(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+
+        let mut models = std::collections::BTreeMap::new();
+        for (name, m) in j.req("models")?.as_obj().context("models")? {
+            let params = m.req("params")?;
+            let parse_group = |key: &str| -> Result<Vec<ParamEntry>> {
+                params
+                    .req(key)?
+                    .as_arr()
+                    .context("param group")?
+                    .iter()
+                    .map(ParamEntry::from_json)
+                    .collect()
+            };
+            let mut graphs = std::collections::BTreeMap::new();
+            for (gname, g) in m.req("graphs")?.as_obj().context("graphs")? {
+                graphs.insert(gname.clone(), GraphSpec::from_json(dir, g)?);
+            }
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    batch: m.req("batch")?.as_usize().context("batch")?,
+                    input_shape: m
+                        .req("input_shape")?
+                        .as_arr()
+                        .context("input_shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("dim"))
+                        .collect::<Result<Vec<_>>>()?,
+                    num_classes: m.req("num_classes")?.as_usize().context("nc")?,
+                    qw: parse_group("qw")?,
+                    tp: parse_group("tp")?,
+                    st: parse_group("st")?,
+                    graphs,
+                },
+            );
+        }
+
+        let mut kernels = std::collections::BTreeMap::new();
+        for (name, g) in j.req("kernels")?.as_obj().context("kernels")? {
+            kernels.insert(name.clone(), GraphSpec::from_json(dir, g)?);
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            models,
+            kernels,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).with_context(|| {
+            format!(
+                "manifest has no model {name:?}; have {:?} (re-run `make artifacts`?)",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(dir) = manifest_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let mlp = m.model("mlp").unwrap();
+        assert_eq!(mlp.qw.len(), 2);
+        assert_eq!(mlp.qw[0].name, "fc1/w");
+        assert_eq!(mlp.qw[0].shape, vec![784, 300]);
+        assert!(mlp.qw[0].init_std > 0.0);
+        let train = mlp.graph("train").unwrap();
+        // layout: qw tp st vq vt mask x y + 4 scalars
+        assert_eq!(train.inputs.len(), 2 + 2 + 0 + 2 + 2 + 2 + 2 + 4);
+        assert_eq!(train.inputs.last().unwrap().name, "alpha_bl1");
+        assert_eq!(train.input_index("x").is_ok(), true);
+        assert!(train.path.exists());
+        // outputs end with the 5 metrics
+        let names: Vec<_> = train.outputs.iter().rev().take(5).map(|s| s.name.clone()).collect();
+        assert_eq!(names, ["correct", "bl1", "l1", "ce", "loss"]);
+    }
+
+    #[test]
+    fn kernel_entries_present() {
+        let Some(dir) = manifest_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.kernels.contains_key("quantize_1m"));
+        assert!(m.kernels.contains_key("crossbar_tile"));
+    }
+}

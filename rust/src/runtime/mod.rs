@@ -1,0 +1,106 @@
+//! PJRT runtime: load AOT artifacts and execute them on the request path.
+//!
+//! `python/compile/aot.py` lowers every graph to **HLO text** (the only
+//! interchange xla_extension 0.5.1 accepts from jax >= 0.5 — serialized
+//! protos carry 64-bit instruction ids it rejects) plus `manifest.json`
+//! describing inputs/outputs and the parameter layout. This module:
+//!
+//! * [`Engine`] — owns the `PjRtClient` and an executable cache keyed by
+//!   artifact path (compiling a graph once per process).
+//! * [`artifact`] — typed view of `manifest.json`.
+//! * [`Executable::run`] — literal-in/literal-out execution (analysis,
+//!   one-shot graphs).
+//! * [`Executable::run_buffers`] — buffer-in/buffer-out execution: the
+//!   training loop keeps its state device-resident between steps and only
+//!   syncs to host for checkpoints/metrics (the L3 hot-path optimization,
+//!   DESIGN.md §Perf).
+
+pub mod artifact;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+pub use artifact::{GraphSpec, Manifest, ModelEntry, ParamEntry, TensorSpec};
+
+/// PJRT client + compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<Executable>>>,
+}
+
+impl Engine {
+    /// CPU PJRT client (the testbed backend; see DESIGN.md §Hardware).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached per path).
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let exe = std::sync::Arc::new(Executable { exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Copy a host literal to the device (for `run_buffers` state setup).
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+}
+
+/// A compiled graph. All AOT graphs are lowered with `return_tuple=True`,
+/// so execution yields a single tuple literal that we decompose.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Literal-in, literal-out execution (host round-trip both ways).
+    /// Accepts owned or borrowed literals so callers can reuse resident
+    /// state without cloning.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute::<L>(inputs)?;
+        let tuple = out[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Buffer-in execution; returns the raw output tuple buffer, still on
+    /// device. Use [`Self::split_outputs`] or keep feeding buffers.
+    pub fn run_buffers(&self, inputs: &[xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
+        let mut out = self.exe.execute_b::<xla::PjRtBuffer>(inputs)?;
+        Ok(out.swap_remove(0).swap_remove(0))
+    }
+
+    /// Sync a tuple output buffer to host literals.
+    pub fn split_outputs(&self, tuple: &xla::PjRtBuffer) -> Result<Vec<xla::Literal>> {
+        Ok(tuple.to_literal_sync()?.to_tuple()?)
+    }
+}

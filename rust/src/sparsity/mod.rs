@@ -1,0 +1,178 @@
+//! Bit-slice sparsity statistics — the measurement side of Tables 1/2 and
+//! Figure 2.
+//!
+//! The paper reports, per method, the **ratio of non-zero weights in each
+//! 2-bit slice across the whole model** (B̂³ … B̂⁰, MSB to LSB) plus the
+//! average ± standard deviation over the four slices. This module computes
+//! those from a set of quantized weight tensors.
+
+use crate::quant::{self, Quantized, N_SLICES};
+use crate::tensor::Tensor;
+
+/// Whole-model slice census.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SliceStats {
+    /// Non-zero element count per slice (LSB-first), summed over tensors.
+    pub nonzero: [usize; N_SLICES],
+    /// Total weight elements in the census.
+    pub numel: usize,
+}
+
+impl SliceStats {
+    pub fn zero() -> Self {
+        SliceStats {
+            nonzero: [0; N_SLICES],
+            numel: 0,
+        }
+    }
+
+    pub fn add(&mut self, q: &Quantized) {
+        let counts = q.slice_nonzero_counts();
+        for k in 0..N_SLICES {
+            self.nonzero[k] += counts[k];
+        }
+        self.numel += q.numel();
+    }
+
+    /// Non-zero ratio for slice k (LSB-first), in [0, 1].
+    pub fn ratio(&self, k: usize) -> f64 {
+        if self.numel == 0 {
+            0.0
+        } else {
+            self.nonzero[k] as f64 / self.numel as f64
+        }
+    }
+
+    /// Ratios MSB-first — the paper's column order (B̂³, B̂², B̂¹, B̂⁰).
+    pub fn ratios_msb_first(&self) -> [f64; N_SLICES] {
+        let mut out = [0.0; N_SLICES];
+        for k in 0..N_SLICES {
+            out[k] = self.ratio(N_SLICES - 1 - k);
+        }
+        out
+    }
+
+    /// (mean, std) of the four slice ratios — the paper's Average column.
+    /// Population std over the 4 slices (matches the ± in Tables 1/2).
+    pub fn mean_std(&self) -> (f64, f64) {
+        let rs = self.ratios_msb_first();
+        let mean = rs.iter().sum::<f64>() / N_SLICES as f64;
+        let var = rs.iter().map(|r| (r - mean).powi(2)).sum::<f64>() / N_SLICES as f64;
+        (mean, var.sqrt())
+    }
+
+    /// Element-wise (full-weight) non-zero ratio: an element is non-zero if
+    /// any slice is — for comparison with weight-grade pruning numbers.
+    pub fn any_nonzero_ratio(qs: &[Quantized]) -> f64 {
+        let mut nz = 0usize;
+        let mut total = 0usize;
+        for q in qs {
+            nz += q.codes.iter().filter(|&&c| c != 0).count();
+            total += q.numel();
+        }
+        if total == 0 {
+            0.0
+        } else {
+            nz as f64 / total as f64
+        }
+    }
+}
+
+/// Census over a set of weight tensors (quantizing each per-tensor, as the
+/// paper does per-layer).
+pub fn census(tensors: &[Tensor]) -> SliceStats {
+    let mut stats = SliceStats::zero();
+    for t in tensors {
+        stats.add(&quant::quantize(t));
+    }
+    stats
+}
+
+/// One Figure-2 style trace point: step index + per-slice ratios.
+#[derive(Debug, Clone)]
+pub struct TracePoint {
+    pub step: usize,
+    /// MSB-first ratios, matching the paper's B̂³..B̂⁰ panels.
+    pub ratios: [f64; N_SLICES],
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, ensure};
+    use crate::util::rng::Rng;
+
+    fn t(data: Vec<f32>) -> Tensor {
+        let n = data.len();
+        Tensor::new(vec![n], data).unwrap()
+    }
+
+    #[test]
+    fn zero_model_is_fully_sparse() {
+        let stats = census(&[t(vec![0.0; 100])]);
+        assert_eq!(stats.numel, 100);
+        assert_eq!(stats.ratios_msb_first(), [0.0; 4]);
+        let (mean, std) = stats.mean_std();
+        assert_eq!((mean, std), (0.0, 0.0));
+    }
+
+    #[test]
+    fn dense_max_code_model_is_fully_dense() {
+        // every weight at max magnitude -> code 255 -> all slices non-zero
+        let stats = census(&[t(vec![0.999; 64])]);
+        for k in 0..4 {
+            assert!(stats.ratio(k) > 0.99, "slice {k}: {}", stats.ratio(k));
+        }
+    }
+
+    #[test]
+    fn ratios_sum_over_multiple_tensors() {
+        // tensor A: codes only in LSB slice; tensor B: zeros
+        // max 1.0 fixes step = 2^-8; values k/256 give code k
+        let a = t(vec![1.0 / 256.0, 2.0 / 256.0, 3.0 / 256.0, 1.0]);
+        let b = t(vec![0.0; 4]);
+        let stats = census(&[a, b]);
+        assert_eq!(stats.numel, 8);
+        // LSB slice: codes 1,2,3 and 255 -> 4 nonzero
+        assert_eq!(stats.nonzero[0], 4);
+        // MSB slice: only the 255 element
+        assert_eq!(stats.nonzero[3], 1);
+    }
+
+    #[test]
+    fn mean_std_matches_manual_computation() {
+        check(20, |rng| {
+            let w = t(rng.normal_vec(500, 0.2));
+            let stats = census(&[w]);
+            let rs = stats.ratios_msb_first();
+            let mean = rs.iter().sum::<f64>() / 4.0;
+            let var = rs.iter().map(|r| (r - mean).powi(2)).sum::<f64>() / 4.0;
+            let (m, s) = stats.mean_std();
+            ensure((m - mean).abs() < 1e-12, "mean")?;
+            ensure((s - var.sqrt()).abs() < 1e-12, "std")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn msb_slice_is_sparsest_for_gaussian_weights() {
+        // Gaussian weights: large codes are rare, so the MSB slice must be
+        // the sparsest — the structural fact the paper's Fig. 2 shows.
+        let mut rng = Rng::new(42);
+        let stats = census(&[t(rng.normal_vec(50_000, 0.1))]);
+        let rs = stats.ratios_msb_first(); // [b3, b2, b1, b0]
+        assert!(rs[0] < rs[1] && rs[1] < rs[2], "{rs:?}");
+    }
+
+    #[test]
+    fn any_nonzero_ratio_bounds_slice_ratios() {
+        let mut rng = Rng::new(7);
+        let w = t(rng.normal_vec(10_000, 0.1));
+        let q = quant::quantize(&w);
+        let stats = census(&[w]);
+        let full = SliceStats::any_nonzero_ratio(&[q]);
+        for k in 0..4 {
+            assert!(stats.ratio(k) <= full + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Host tensors: the coordinator-side data container.
+//!
+//! A [`Tensor`] is a dense row-major f32 array with an explicit shape. The
+//! training state, datasets, checkpoints and analysis all speak `Tensor`;
+//! [`crate::runtime`] converts to/from `xla::Literal` at the device
+//! boundary. Labels use [`IntTensor`] (i32) to match the graphs' y input.
+
+use anyhow::Result;
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(
+            n == data.len(),
+            "shape {:?} wants {} elements, got {}",
+            shape,
+            n,
+            data.len()
+        );
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![v; n],
+        }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Scalar extraction (rank-0 or single-element tensors).
+    pub fn item(&self) -> Result<f32> {
+        anyhow::ensure!(self.data.len() == 1, "item() on {:?}", self.shape);
+        Ok(self.data[0])
+    }
+
+    /// 2-D indexed access (row-major); debug-checked.
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(n == self.data.len(), "reshape {:?} -> {:?}", self.shape, shape);
+        self.shape = shape;
+        Ok(self)
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Convert to an XLA literal with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // rank-0: reshape to scalar
+            Ok(lit.reshape(&[])?)
+        } else {
+            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    /// Convert from an XLA literal (must be f32).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Tensor::new(dims, data)
+    }
+}
+
+/// Dense row-major i32 tensor (labels).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntTensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(n == data.len(), "shape/data mismatch");
+        Ok(IntTensor { shape, data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_element_count() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn zeros_full_scalar() {
+        assert_eq!(Tensor::zeros(vec![4, 2]).len(), 8);
+        assert_eq!(Tensor::full(vec![3], 2.5).data(), &[2.5, 2.5, 2.5]);
+        assert_eq!(Tensor::scalar(7.0).item().unwrap(), 7.0);
+    }
+
+    #[test]
+    fn at2_row_major() {
+        let t = Tensor::new(vec![2, 3], vec![0., 1., 2., 3., 4., 5.]).unwrap();
+        assert_eq!(t.at2(0, 2), 2.0);
+        assert_eq!(t.at2(1, 0), 3.0);
+    }
+
+    #[test]
+    fn reshape_checks() {
+        let t = Tensor::zeros(vec![6]);
+        assert!(t.clone().reshape(vec![2, 3]).is_ok());
+        assert!(t.reshape(vec![4, 2]).is_err());
+    }
+
+    #[test]
+    fn max_abs_works() {
+        let t = Tensor::new(vec![3], vec![-2.0, 1.0, 0.5]).unwrap();
+        assert_eq!(t.max_abs(), 2.0);
+    }
+}

@@ -1,0 +1,92 @@
+//! Mini property-testing harness (proptest is not vendored).
+//!
+//! `check(cases, |rng| ...)` runs a property over `cases` seeded random
+//! inputs; on failure it panics with the failing case's seed so the case
+//! can be replayed exactly with `check_one(seed, ...)`.
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` independent seeded RNGs. The property returns
+/// `Result<(), String>`; an `Err` aborts with the failing seed.
+pub fn check<F>(cases: usize, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    check_with_base(0xB17_51_1CE, cases, prop)
+}
+
+/// Same, with an explicit base seed (use to replay a whole suite).
+pub fn check_with_base<F>(base: u64, cases: usize, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed on case {case} (replay: check_one({seed:#x}, ...)):\n{msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn check_one<F>(seed: u64, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property failed for seed {seed:#x}:\n{msg}");
+    }
+}
+
+/// Helper: assert closeness inside a property.
+pub fn ensure_close(a: f32, b: f32, tol: f32, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Helper: plain boolean assertion with message.
+pub fn ensure(cond: bool, what: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(what.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let n = std::cell::Cell::new(0usize);
+        check(25, |rng| {
+            let _ = rng.next_u64();
+            n.set(n.get() + 1);
+            Ok(())
+        });
+        assert_eq!(n.get(), 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(10, |rng| {
+            ensure(rng.next_f32() < 2.0, "always true")?;
+            Err("deliberate".to_string())
+        });
+    }
+
+    #[test]
+    fn ensure_close_tolerates_within_bound() {
+        assert!(ensure_close(1.0, 1.0005, 1e-3, "x").is_ok());
+        assert!(ensure_close(1.0, 1.1, 1e-3, "x").is_err());
+    }
+}

@@ -1,0 +1,174 @@
+//! Flag-style CLI parser (the sandbox has no clap).
+//!
+//! Grammar: `binary <subcommand> [--key value]... [--switch]...`.
+//! Typed getters with defaults; unknown flags are an error so typos fail
+//! loudly rather than silently using a default.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    /// second positional (e.g. `reproduce table1`)
+    pub target: Option<String>,
+    flags: BTreeMap<String, String>,
+    /// flags that were actually read by the program
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> anyhow::Result<Self> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next();
+                if let Some(second) = it.peek() {
+                    if !second.starts_with("--") {
+                        out.target = it.next();
+                    }
+                }
+            }
+        }
+        while let Some(arg) = it.next() {
+            let Some(key) = arg.strip_prefix("--") else {
+                anyhow::bail!("positional argument {arg:?} not expected here");
+            };
+            if key.is_empty() {
+                anyhow::bail!("empty flag name");
+            }
+            // --key=value or --key value or bare switch
+            if let Some((k, v)) = key.split_once('=') {
+                out.flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                out.flags.insert(key.to_string(), it.next().unwrap());
+            } else {
+                out.flags.insert(key.to_string(), "true".to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> anyhow::Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> anyhow::Result<f32> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a float, got {v:?}")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// Call after all getters: rejects flags the program never looked at.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let seen = self.seen.borrow();
+        for key in self.flags.keys() {
+            if !seen.iter().any(|s| s == key) {
+                anyhow::bail!("unknown flag --{key}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(argv("train --model mlp --steps 300 --fresh")).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.str_or("model", "x"), "mlp");
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 300);
+        assert!(a.flag("fresh"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = Args::parse(argv("run --lr=0.05 --alpha-bl1=1e-5")).unwrap();
+        assert!((a.f32_or("lr", 0.0).unwrap() - 0.05).abs() < 1e-9);
+        assert!((a.f32_or("alpha-bl1", 0.0).unwrap() - 1e-5).abs() < 1e-12);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply_when_missing() {
+        let a = Args::parse(argv("eval")).unwrap();
+        assert_eq!(a.usize_or("steps", 123).unwrap(), 123);
+        assert!(!a.flag("fresh"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flag_is_rejected_by_finish() {
+        let a = Args::parse(argv("train --tpyo 3")).unwrap();
+        let _ = a.usize_or("steps", 1);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(argv("x --steps many")).unwrap();
+        assert!(a.usize_or("steps", 1).is_err());
+    }
+
+    #[test]
+    fn positional_after_flags_rejected() {
+        assert!(Args::parse(argv("train --a 1 stray")).is_err());
+    }
+
+    #[test]
+    fn second_positional_becomes_target() {
+        let a = Args::parse(argv("reproduce table1 --quick")).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("reproduce"));
+        assert_eq!(a.target.as_deref(), Some("table1"));
+        assert!(a.flag("quick"));
+        a.finish().unwrap();
+    }
+}

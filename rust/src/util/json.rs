@@ -1,0 +1,435 @@
+//! Minimal strict JSON: enough to read the AOT manifest and write metrics.
+//!
+//! Supports the full JSON grammar (objects, arrays, strings with escapes,
+//! numbers, booleans, null). Numbers are stored as `f64` — the manifest
+//! only carries shapes, counts and init constants, all exactly
+//! representable. Object key order is preserved (insertion order) so
+//! round-trips are stable.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    // BTreeMap keeps deterministic iteration; manifest consumers index by
+    // key, never by position.
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(o) => Some(o),
+            _ => None,
+        }
+    }
+    /// Object field access; `None` for non-objects or missing keys.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.as_obj().and_then(|o| o.get(key))
+    }
+    /// `get` that errors with the key name — manifest parsing wants loud
+    /// failures, not silent defaults.
+    pub fn req(&self, key: &str) -> anyhow::Result<&Json> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing JSON key {key:?}"))
+    }
+}
+
+/// Parse a complete JSON document (trailing whitespace allowed, trailing
+/// garbage rejected).
+pub fn parse(text: &str) -> anyhow::Result<Json> {
+    let mut p = Parser {
+        bytes: text.as_bytes(),
+        pos: 0,
+    };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        anyhow::bail!("trailing characters at byte {}", p.pos);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+    fn bump(&mut self) -> anyhow::Result<u8> {
+        let b = self
+            .peek()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of JSON"))?;
+        self.pos += 1;
+        Ok(b)
+    }
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+    fn expect(&mut self, b: u8) -> anyhow::Result<()> {
+        let got = self.bump()?;
+        if got != b {
+            anyhow::bail!(
+                "expected {:?} at byte {}, got {:?}",
+                b as char,
+                self.pos - 1,
+                got as char
+            );
+        }
+        Ok(())
+    }
+    fn eat_keyword(&mut self, kw: &str) -> anyhow::Result<()> {
+        if self.bytes[self.pos..].starts_with(kw.as_bytes()) {
+            self.pos += kw.len();
+            Ok(())
+        } else {
+            anyhow::bail!("invalid keyword at byte {}", self.pos)
+        }
+    }
+
+    fn value(&mut self) -> anyhow::Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => {
+                self.eat_keyword("true")?;
+                Ok(Json::Bool(true))
+            }
+            Some(b'f') => {
+                self.eat_keyword("false")?;
+                Ok(Json::Bool(false))
+            }
+            Some(b'n') => {
+                self.eat_keyword("null")?;
+                Ok(Json::Null)
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => anyhow::bail!("unexpected {:?} at byte {}", other, self.pos),
+        }
+    }
+
+    fn object(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b'}' => return Ok(Json::Obj(map)),
+                c => anyhow::bail!("expected ',' or '}}', got {:?}", c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b']' => return Ok(Json::Arr(items)),
+                c => anyhow::bail!("expected ',' or ']', got {:?}", c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump()? {
+                b'"' => return Ok(out),
+                b'\\' => match self.bump()? {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'b' => out.push('\u{0008}'),
+                    b'f' => out.push('\u{000C}'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'u' => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let c = self.bump()? as char;
+                            code = code * 16
+                                + c.to_digit(16).ok_or_else(|| {
+                                    anyhow::anyhow!("bad \\u escape")
+                                })?;
+                        }
+                        // Surrogate pairs: manifest is ASCII, but be correct.
+                        let ch = if (0xD800..0xDC00).contains(&code) {
+                            self.expect(b'\\')?;
+                            self.expect(b'u')?;
+                            let mut low = 0u32;
+                            for _ in 0..4 {
+                                let c = self.bump()? as char;
+                                low = low * 16
+                                    + c.to_digit(16).ok_or_else(|| {
+                                        anyhow::anyhow!("bad \\u escape")
+                                    })?;
+                            }
+                            let c =
+                                0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00);
+                            char::from_u32(c)
+                        } else {
+                            char::from_u32(code)
+                        };
+                        out.push(ch.ok_or_else(|| {
+                            anyhow::anyhow!("invalid unicode escape")
+                        })?);
+                    }
+                    c => anyhow::bail!("bad escape \\{}", c as char),
+                },
+                c if c < 0x20 => anyhow::bail!("control char in string"),
+                c => {
+                    // Re-assemble UTF-8 multibyte sequences.
+                    if c < 0x80 {
+                        out.push(c as char);
+                    } else {
+                        let start = self.pos - 1;
+                        let len = match c {
+                            0xC0..=0xDF => 2,
+                            0xE0..=0xEF => 3,
+                            _ => 4,
+                        };
+                        self.pos = start + len;
+                        let s = std::str::from_utf8(
+                            &self.bytes[start..start + len],
+                        )?;
+                        out.push_str(s);
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> anyhow::Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        Ok(Json::Num(s.parse::<f64>()?))
+    }
+}
+
+/// Serialize (compact). Used for metrics JSONL and checkpoints metadata.
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => write!(f, "null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    write!(f, "{}", *n as i64)
+                } else {
+                    write!(f, "{n}")
+                }
+            }
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+            Json::Obj(o) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write_escaped(f, k)?;
+                    write!(f, ":{v}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    write!(f, "\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => write!(f, "\\\"")?,
+            '\\' => write!(f, "\\\\")?,
+            '\n' => write!(f, "\\n")?,
+            '\r' => write!(f, "\\r")?,
+            '\t' => write!(f, "\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    write!(f, "\"")
+}
+
+/// Convenience constructors for emitting metrics.
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+pub fn num(n: f64) -> Json {
+    Json::Num(n)
+}
+pub fn s(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_like_document() {
+        let doc = r#"{"models": {"mlp": {"batch": 128, "params": {"qw": [
+            {"name": "fc1/w", "shape": [784, 300], "init_std": 0.0505}]}}},
+            "ok": true, "none": null, "neg": -2.5e-3}"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(
+            v.get("models")
+                .unwrap()
+                .get("mlp")
+                .unwrap()
+                .get("batch")
+                .unwrap()
+                .as_usize(),
+            Some(128)
+        );
+        let qw = v.get("models").unwrap().get("mlp").unwrap().get("params")
+            .unwrap().get("qw").unwrap().as_arr().unwrap();
+        assert_eq!(qw[0].get("name").unwrap().as_str(), Some("fc1/w"));
+        assert_eq!(
+            qw[0].get("shape").unwrap().as_arr().unwrap()[0].as_usize(),
+            Some(784)
+        );
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(v.get("none"), Some(&Json::Null));
+        assert_eq!(v.get("neg").unwrap().as_f64(), Some(-2.5e-3));
+    }
+
+    #[test]
+    fn roundtrips_strings_with_escapes() {
+        let v = parse(r#"{"s": "a\"b\\c\ndAé"}"#).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a\"b\\c\ndAé"));
+        let text = v.to_string();
+        assert_eq!(parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn parses_utf8_passthrough() {
+        let v = parse("{\"s\": \"héllo→\"}").unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("héllo→"));
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        assert!(parse("{} x").is_err());
+        assert!(parse("[1, 2,]").is_err());
+        assert!(parse("{\"a\" 1}").is_err());
+        assert!(parse("").is_err());
+    }
+
+    #[test]
+    fn parses_nested_arrays_and_numbers() {
+        let v = parse("[[1,2],[3.5,-4],[],[2e3]]").unwrap();
+        let a = v.as_arr().unwrap();
+        assert_eq!(a[0].as_arr().unwrap()[1].as_f64(), Some(2.0));
+        assert_eq!(a[1].as_arr().unwrap()[0].as_f64(), Some(3.5));
+        assert_eq!(a[2].as_arr().unwrap().len(), 0);
+        assert_eq!(a[3].as_arr().unwrap()[0].as_f64(), Some(2000.0));
+    }
+
+    #[test]
+    fn display_is_reparseable() {
+        let v = obj(vec![
+            ("step", num(17.0)),
+            ("loss", num(0.123456)),
+            ("tag", s("fig2/bl1")),
+        ]);
+        let back = parse(&v.to_string()).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn req_reports_missing_key() {
+        let v = parse("{}").unwrap();
+        let err = v.req("nope").unwrap_err().to_string();
+        assert!(err.contains("nope"));
+    }
+}

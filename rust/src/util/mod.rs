@@ -1,0 +1,23 @@
+//! Support substrates the offline sandbox has no crates for.
+//!
+//! The vendored registry only carries the `xla` crate's dependency tree
+//! (no serde/clap/tokio/criterion/proptest), so the pieces a production
+//! coordinator would normally pull in are implemented here:
+//!
+//! * [`json`]   — a small, strict JSON parser/serializer (reads the AOT
+//!   manifest written by `python/compile/aot.py`, writes metrics).
+//! * [`rng`]    — deterministic SplitMix64/normal sampler (param init,
+//!   synthetic datasets, shuffling).
+//! * [`cli`]    — flag-style argument parser for the `bitslice-reram`
+//!   binary and the examples.
+//! * [`pool`]   — scoped thread pool + SPSC prefetch channel (the data
+//!   pipeline's async substrate, replacing tokio).
+//! * [`check`]  — mini property-testing harness (seeded case generation
+//!   with failure-seed reporting), used by the unit tests in place of
+//!   proptest.
+
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod rng;

@@ -1,0 +1,257 @@
+//! Threading substrate: bounded SPSC channel + parallel-for.
+//!
+//! Replaces tokio for the two places the coordinator needs concurrency:
+//!
+//! * [`Prefetcher`] — a producer thread materializes batches ahead of the
+//!   training loop with bounded backpressure (the XLA step is the consumer).
+//! * [`parallel_for_chunks`] — fan simulation/analysis work (crossbar
+//!   column sums, dataset generation) across cores with scoped threads.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Shared<T> {
+    queue: Mutex<QueueState<T>>,
+    cond: Condvar,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    cap: usize,
+}
+
+/// Bounded blocking queue (MPSC-capable, used as SPSC).
+pub struct Sender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+pub struct Receiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    let shared = Arc::new(Shared {
+        queue: Mutex::new(QueueState {
+            items: VecDeque::new(),
+            closed: false,
+            cap: cap.max(1),
+        }),
+        cond: Condvar::new(),
+    });
+    (
+        Sender {
+            shared: shared.clone(),
+        },
+        Receiver { shared },
+    )
+}
+
+impl<T> Sender<T> {
+    /// Blocks while the queue is full. Returns Err if the receiver is gone.
+    pub fn send(&self, item: T) -> Result<(), T> {
+        let mut q = self.shared.queue.lock().unwrap();
+        loop {
+            if q.closed {
+                return Err(item);
+            }
+            if q.items.len() < q.cap {
+                q.items.push_back(item);
+                self.shared.cond.notify_all();
+                return Ok(());
+            }
+            q = self.shared.cond.wait(q).unwrap();
+        }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        self.shared.queue.lock().unwrap().closed = true;
+        self.shared.cond.notify_all();
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocks until an item arrives; `None` once closed and drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut q = self.shared.queue.lock().unwrap();
+        loop {
+            if let Some(item) = q.items.pop_front() {
+                self.shared.cond.notify_all();
+                return Some(item);
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.shared.cond.wait(q).unwrap();
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        self.shared.queue.lock().unwrap().closed = true;
+        self.shared.cond.notify_all();
+    }
+}
+
+/// Background producer: runs `make_item(i)` for i in 0..n on a worker
+/// thread, keeping at most `depth` results queued ahead of the consumer.
+pub struct Prefetcher<T: Send + 'static> {
+    rx: Receiver<T>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl<T: Send + 'static> Prefetcher<T> {
+    pub fn spawn<F>(n: usize, depth: usize, mut make_item: F) -> Self
+    where
+        F: FnMut(usize) -> T + Send + 'static,
+    {
+        let (tx, rx) = bounded(depth);
+        let handle = std::thread::Builder::new()
+            .name("prefetch".into())
+            .spawn(move || {
+                for i in 0..n {
+                    if tx.send(make_item(i)).is_err() {
+                        break; // consumer dropped early
+                    }
+                }
+            })
+            .expect("spawn prefetch thread");
+        Prefetcher {
+            rx,
+            handle: Some(handle),
+        }
+    }
+
+    pub fn next(&self) -> Option<T> {
+        self.rx.recv()
+    }
+}
+
+impl<T: Send + 'static> Drop for Prefetcher<T> {
+    fn drop(&mut self) {
+        // Close the channel first so a blocked producer unblocks.
+        self.rx.shared.queue.lock().unwrap().closed = true;
+        self.rx.shared.cond.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Parallel-for over disjoint chunks of a slice, scoped (no 'static bound).
+pub fn parallel_for_chunks<T: Send, F>(data: &mut [T], chunk: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let chunk = chunk.max(1);
+    std::thread::scope(|scope| {
+        for (ci, part) in data.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || f(ci * chunk, part));
+        }
+    });
+}
+
+/// Map over index ranges in parallel, collecting results in order.
+pub fn parallel_map<R: Send, F>(n: usize, threads: usize, f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let per = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for part in out.chunks_mut(per).enumerate() {
+            let (ti, slot) = part;
+            let f = &f;
+            scope.spawn(move || {
+                for (j, s) in slot.iter_mut().enumerate() {
+                    *s = Some(f(ti * per + j));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn channel_delivers_in_order() {
+        let (tx, rx) = bounded(4);
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                tx.send(i).unwrap();
+            }
+        });
+        let got: Vec<usize> = std::iter::from_fn(|| rx.recv()).collect();
+        producer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn channel_applies_backpressure() {
+        let (tx, rx) = bounded(2);
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let inf = inflight.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..50 {
+                tx.send(i).unwrap();
+                inf.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        // with cap 2 the producer can be at most ~3 sends ahead
+        assert!(inflight.load(Ordering::SeqCst) <= 3);
+        let mut n = 0;
+        while rx.recv().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 50);
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn receiver_drop_unblocks_producer() {
+        let (tx, rx) = bounded(1);
+        drop(rx);
+        assert!(tx.send(1).is_err());
+    }
+
+    #[test]
+    fn prefetcher_yields_all_items_then_none() {
+        let p = Prefetcher::spawn(10, 3, |i| i * i);
+        let got: Vec<usize> = std::iter::from_fn(|| p.next()).collect();
+        assert_eq!(got, (0..10).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn prefetcher_early_drop_joins_cleanly() {
+        let p = Prefetcher::spawn(1000, 2, |i| i);
+        assert_eq!(p.next(), Some(0));
+        drop(p); // must not deadlock
+    }
+
+    #[test]
+    fn parallel_for_chunks_touches_every_element() {
+        let mut data = vec![0usize; 1000];
+        parallel_for_chunks(&mut data, 128, |base, part| {
+            for (j, v) in part.iter_mut().enumerate() {
+                *v = base + j;
+            }
+        });
+        assert_eq!(data, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(257, 8, |i| i * 3);
+        assert_eq!(out, (0..257).map(|i| i * 3).collect::<Vec<_>>());
+    }
+}

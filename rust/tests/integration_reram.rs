@@ -1,0 +1,188 @@
+//! Integration: the ReRAM deployment stack against the AOT crossbar graphs
+//! — the L1 Pallas crossbar kernel and the Rust simulator must agree
+//! exactly, and the sparsity -> ADC-resolution -> savings chain must be
+//! self-consistent on trained weights.
+
+use bitslice_reram::quant;
+use bitslice_reram::reram::{energy, mapper, resolution, sim, ResolutionPolicy};
+use bitslice_reram::runtime::{Engine, Manifest};
+use bitslice_reram::tensor::Tensor;
+use bitslice_reram::util::rng::Rng;
+
+fn setup() -> Option<(Engine, Manifest)> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some((Engine::cpu().unwrap(), Manifest::load(&dir).unwrap()))
+}
+
+/// The AOT `kernel_crossbar_tile` graph (Pallas, adc_bits=3) must agree
+/// exactly with the Rust crossbar simulator on the same tile.
+#[test]
+fn pallas_crossbar_kernel_matches_rust_sim_exactly() {
+    let Some((engine, manifest)) = setup() else { return };
+    let g = manifest.kernels.get("crossbar_tile").expect("kernel entry");
+    let exe = engine.load(&g.path).unwrap();
+
+    let mut rng = Rng::new(77);
+    // activations: integer codes 0..255; weights: cells 0..3
+    let a: Vec<f32> = (0..128 * 128).map(|_| rng.below(256) as f32).collect();
+    let wp: Vec<f32> = (0..128 * 128).map(|_| rng.below(4) as f32).collect();
+    let wn: Vec<f32> = (0..128 * 128).map(|_| rng.below(4) as f32).collect();
+
+    let lits = [
+        Tensor::new(vec![128, 128], a.clone()).unwrap().to_literal().unwrap(),
+        Tensor::new(vec![128, 128], wp.clone()).unwrap().to_literal().unwrap(),
+        Tensor::new(vec![128, 128], wn.clone()).unwrap().to_literal().unwrap(),
+    ];
+    let outs = exe.run(&lits).unwrap();
+    let pallas_out = Tensor::from_literal(&outs[0]).unwrap();
+
+    // Rust side: build the equivalent single-slice layer mapping by hand.
+    let mut pos = bitslice_reram::reram::Crossbar::zeros(128, 128);
+    let mut neg = bitslice_reram::reram::Crossbar::zeros(128, 128);
+    for r in 0..128 {
+        for c in 0..128 {
+            pos.set(r, c, wp[r * 128 + c] as u8);
+            neg.set(r, c, wn[r * 128 + c] as u8);
+        }
+    }
+    let mut max_err = 0.0f32;
+    let mut cur_p = vec![0u32; 128];
+    let mut cur_n = vec![0u32; 128];
+    for row in 0..128 {
+        let code: Vec<u8> = (0..128).map(|i| a[row * 128 + i] as u8).collect();
+        let mut acc = vec![0i64; 128];
+        for t in 0..8u32 {
+            let bits: Vec<u8> = code.iter().map(|&c| (c >> t) & 1).collect();
+            pos.bitline_currents(&bits, &mut cur_p);
+            neg.bitline_currents(&bits, &mut cur_n);
+            for j in 0..128 {
+                let ip = sim::adc_clip(cur_p[j], 3) as i64;
+                let inn = sim::adc_clip(cur_n[j], 3) as i64;
+                acc[j] += (ip - inn) << t;
+            }
+        }
+        for j in 0..128 {
+            max_err = max_err.max((pallas_out.at2(row, j) - acc[j] as f32).abs());
+        }
+    }
+    assert_eq!(max_err, 0.0, "pallas kernel vs rust sim disagree");
+}
+
+/// Mapping + resolution + savings must be internally consistent on weights
+/// that actually went through Bl1 training semantics (quantize + slice).
+#[test]
+fn deployment_chain_is_self_consistent() {
+    let mut rng = Rng::new(3);
+    // sparse-ish weights emulating a regularized layer
+    let n = 784 * 300;
+    let mut data = vec![0.0f32; n];
+    for _ in 0..n / 50 {
+        let i = rng.below(n);
+        data[i] = rng.normal() * 0.05;
+    }
+    data[0] = 0.9;
+    let w = Tensor::new(vec![784, 300], data).unwrap();
+
+    let mapped = mapper::map_model(&[("w".into(), w.clone())]).unwrap();
+    // cells in the mapping == slice nonzeros from the census
+    let stats = bitslice_reram::sparsity::census(std::slice::from_ref(&w));
+    for k in 0..4 {
+        assert_eq!(mapped.layers[0].nonzero_cells(k), stats.nonzero[k]);
+    }
+
+    let lossless = resolution::required_bits(&mapped, ResolutionPolicy::Lossless);
+    // lossless bits must actually be lossless in the functional sim:
+    let x = Tensor::new(vec![4, 784], (0..4 * 784).map(|_| rng.next_f32()).collect()).unwrap();
+    let out_lossless = sim::forward(&mapped.layers[0], &x, &lossless);
+    let out_10bit = sim::forward(&mapped.layers[0], &x, &[10; 4]);
+    for (a, b) in out_lossless.data().iter().zip(out_10bit.data()) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+
+    // savings must be >= 1 when any group uses fewer bits than baseline
+    let p999 = resolution::required_bits(&mapped, ResolutionPolicy::Percentile(0.999));
+    let (e, t, ar) = energy::savings_vs_baseline(&mapped, p999);
+    assert!(e >= 1.0 && t >= 1.0 && ar >= 1.0);
+}
+
+/// The `mlp_reram_lossless` AOT graph must agree with the Rust simulator
+/// end to end (two layers, tiling, activation quantization, bias, relu).
+#[test]
+fn aot_reram_graph_matches_rust_end_to_end() {
+    let Some((engine, manifest)) = setup() else { return };
+    let entry = manifest.model("mlp").unwrap();
+    let g = entry.graph("reram_lossless").unwrap();
+    let exe = engine.load(&g.path).unwrap();
+
+    let mut rng = Rng::new(9);
+    let w1 = Tensor::new(vec![784, 300], rng.normal_vec(784 * 300, 0.03)).unwrap();
+    let b1 = Tensor::new(vec![300], rng.normal_vec(300, 0.01)).unwrap();
+    let w2 = Tensor::new(vec![300, 10], rng.normal_vec(3000, 0.05)).unwrap();
+    let b2 = Tensor::new(vec![10], rng.normal_vec(10, 0.01)).unwrap();
+    let batch = entry.batch;
+    let x = Tensor::new(
+        vec![batch, 784],
+        (0..batch * 784).map(|_| rng.next_f32()).collect(),
+    )
+    .unwrap();
+
+    let outs = exe
+        .run(&[
+            w1.to_literal().unwrap(),
+            b1.to_literal().unwrap(),
+            w2.to_literal().unwrap(),
+            b2.to_literal().unwrap(),
+            x.to_literal().unwrap(),
+        ])
+        .unwrap();
+    let aot_logits = Tensor::from_literal(&outs[0]).unwrap();
+
+    // rust path, lossless
+    let bits = [10u32; 4];
+    let l1 = mapper::map_layer("w1", &w1).unwrap();
+    let l2 = mapper::map_layer("w2", &w2).unwrap();
+    let mut h = sim::forward(&l1, &x, &bits);
+    for (i, v) in h.data_mut().iter_mut().enumerate() {
+        *v = (*v + b1.data()[i % 300]).max(0.0);
+    }
+    let mut logits = sim::forward(&l2, &h, &bits);
+    for (i, v) in logits.data_mut().iter_mut().enumerate() {
+        *v += b2.data()[i % 10];
+    }
+    let mut max_rel = 0.0f32;
+    for (a, b) in aot_logits.data().iter().zip(logits.data()) {
+        max_rel = max_rel.max((a - b).abs() / (b.abs().max(1e-2)));
+    }
+    // the two paths share semantics but differ in accumulation order and
+    // the hidden-activation quantization point; allow small relative slack
+    assert!(max_rel < 0.05, "AOT vs rust logits rel err {max_rel}");
+}
+
+/// Quantize + slice through the Rust mirror matches what the deployed
+/// crossbars hold (recombination of slices x signs recovers the codes).
+#[test]
+fn mapped_crossbars_recover_quantized_codes() {
+    let mut rng = Rng::new(17);
+    let w = Tensor::new(vec![200, 150], rng.normal_vec(30000, 0.1)).unwrap();
+    let q = quant::quantize(&w);
+    let m = mapper::map_layer("w", &w).unwrap();
+    for r in 0..200 {
+        for c in 0..150 {
+            let mut acc = 0i64;
+            for k in 0..4 {
+                let (pos, neg) = &m.grids[k];
+                let (tr, rr) = (r / 128, r % 128);
+                let (tc, cc) = (c / 128, c % 128);
+                let pv = pos.tile(tr, tc).get(rr, cc) as i64;
+                let nv = neg.tile(tr, tc).get(rr, cc) as i64;
+                acc += (pv - nv) << (2 * k);
+            }
+            let want = q.signs[r * 150 + c] as i64 * q.codes[r * 150 + c] as i64;
+            assert_eq!(acc, want, "at ({r},{c})");
+        }
+    }
+}

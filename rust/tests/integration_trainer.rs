@@ -1,0 +1,172 @@
+//! Integration: the full coordinator loop over the real AOT artifacts —
+//! phases, pruning, masks, checkpointing, evaluation, BN calibration.
+//!
+//! Skips (with a note) when `artifacts/` is absent.
+
+use bitslice_reram::config::{Method, RunConfig};
+use bitslice_reram::coordinator::metrics::MetricsLog;
+use bitslice_reram::coordinator::{checkpoint, evaluator, ModelState, Trainer};
+use bitslice_reram::data::Dataset;
+use bitslice_reram::harness;
+use bitslice_reram::runtime::{Engine, Manifest};
+use bitslice_reram::sparsity;
+
+fn setup() -> Option<(Engine, Manifest)> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some((Engine::cpu().unwrap(), Manifest::load(&dir).unwrap()))
+}
+
+fn quick_cfg(method: Method) -> RunConfig {
+    let mut cfg = RunConfig::defaults("mlp");
+    cfg.method = method;
+    cfg.steps = 40;
+    cfg.pretrain_steps = 20;
+    cfg.train_examples = 1024;
+    cfg.test_examples = 256;
+    cfg.out_dir = std::env::temp_dir().join(format!("itrainer-{}", std::process::id()));
+    cfg
+}
+
+#[test]
+fn baseline_training_learns_the_synthetic_task() {
+    let Some((engine, manifest)) = setup() else { return };
+    let mut cfg = quick_cfg(Method::Baseline);
+    cfg.steps = 120;
+    cfg.pretrain_steps = 0;
+    let res = harness::run_training(&engine, &manifest, cfg, false).unwrap();
+    assert!(
+        res.eval.accuracy > 0.8,
+        "baseline accuracy {} too low",
+        res.eval.accuracy
+    );
+    assert_eq!(res.eval.examples, 256);
+    assert!(res.outcome.final_loss.is_finite());
+}
+
+#[test]
+fn bl1_phases_run_and_increase_slice_sparsity_vs_baseline() {
+    let Some((engine, manifest)) = setup() else { return };
+    let base = harness::run_training(&engine, &manifest, quick_cfg(Method::Baseline), false)
+        .unwrap();
+    let bl1 =
+        harness::run_training(&engine, &manifest, quick_cfg(Method::Bl1), false).unwrap();
+    let (b_avg, _) = base.stats.mean_std();
+    let (r_avg, _) = bl1.stats.mean_std();
+    assert!(
+        r_avg < b_avg,
+        "bl1 avg nonzero {r_avg} not sparser than baseline {b_avg}"
+    );
+}
+
+#[test]
+fn pruned_method_respects_masks_through_finetune() {
+    let Some((engine, manifest)) = setup() else { return };
+    let mut cfg = quick_cfg(Method::Pruned);
+    cfg.prune_fraction = 0.8;
+    let res = harness::run_training(&engine, &manifest, cfg, true).unwrap();
+    // reload the checkpoint and verify masked weights stayed exactly zero
+    let entry = manifest.model("mlp").unwrap();
+    let mut state = ModelState::init(entry, 0);
+    checkpoint::load(res.checkpoint_dir.as_ref().unwrap(), &mut state).unwrap();
+    let mut masked = 0usize;
+    let mut violations = 0usize;
+    for (w, m) in state.qws.iter().zip(&state.masks) {
+        for (wv, mv) in w.data().iter().zip(m.data()) {
+            if *mv == 0.0 {
+                masked += 1;
+                if *wv != 0.0 {
+                    violations += 1;
+                }
+            }
+        }
+    }
+    let total: usize = state.qws.iter().map(|w| w.len()).sum();
+    assert!(masked as f64 / total as f64 > 0.75, "masked {masked}/{total}");
+    assert_eq!(violations, 0, "pruned weights resurrected");
+}
+
+#[test]
+fn trace_points_are_recorded_and_monotone_in_step() {
+    let Some((engine, manifest)) = setup() else { return };
+    let mut cfg = quick_cfg(Method::L1);
+    cfg.trace_every = 8;
+    let train_ds = Dataset::auto("mnist", &cfg.data_dir, true, 1024, 1).unwrap();
+    let mut log = MetricsLog::create(None).unwrap();
+    let mut trainer = Trainer::new(&engine, &manifest, cfg).unwrap();
+    trainer.run(&train_ds, &mut log).unwrap();
+    assert!(!log.trace.is_empty());
+    for w in log.trace.windows(2) {
+        assert!(w[0].step < w[1].step);
+    }
+    for p in &log.trace {
+        for r in p.ratios {
+            assert!((0.0..=1.0).contains(&r));
+        }
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_eval_accuracy() {
+    let Some((engine, manifest)) = setup() else { return };
+    let cfg = quick_cfg(Method::L1);
+    let res = harness::run_training(&engine, &manifest, cfg.clone(), true).unwrap();
+    let entry = manifest.model("mlp").unwrap();
+    let mut state = ModelState::init(entry, 999);
+    checkpoint::load(res.checkpoint_dir.as_ref().unwrap(), &mut state).unwrap();
+    let test_ds = Dataset::auto("mnist", &cfg.data_dir, false, 256, cfg.seed + 1).unwrap();
+    let eval = evaluator::evaluate(&engine, &manifest, "mlp", &state, &test_ds).unwrap();
+    assert!(
+        (eval.accuracy - res.eval.accuracy).abs() < 1e-9,
+        "checkpoint accuracy {} != run accuracy {}",
+        eval.accuracy,
+        res.eval.accuracy
+    );
+}
+
+#[test]
+fn trainer_census_matches_final_state_census() {
+    let Some((engine, manifest)) = setup() else { return };
+    let cfg = quick_cfg(Method::Bl1);
+    let train_ds = Dataset::auto("mnist", &cfg.data_dir, true, 1024, 2).unwrap();
+    let mut log = MetricsLog::create(None).unwrap();
+    let mut trainer = Trainer::new(&engine, &manifest, cfg).unwrap();
+    trainer.run(&train_ds, &mut log).unwrap();
+    let a = sparsity::census(&trainer.state.qws);
+    let b = sparsity::census(&trainer.state.qws);
+    assert_eq!(a, b); // deterministic + pure
+    assert_eq!(a.numel, manifest.model("mlp").unwrap().qw_numel());
+}
+
+#[test]
+fn resnet20_one_phase_runs_with_bn_state() {
+    let Some((engine, manifest)) = setup() else { return };
+    let mut cfg = RunConfig::defaults("resnet20");
+    cfg.method = Method::Baseline;
+    cfg.steps = 3;
+    cfg.pretrain_steps = 0;
+    cfg.train_examples = 128;
+    cfg.test_examples = 64;
+    cfg.out_dir = std::env::temp_dir().join(format!("itrainer-rn-{}", std::process::id()));
+    let train_ds = Dataset::auto("cifar10", &cfg.data_dir, true, 128, 3).unwrap();
+    let mut log = MetricsLog::create(None).unwrap();
+    let mut trainer = Trainer::new(&engine, &manifest, cfg).unwrap();
+    let out = trainer.run(&train_ds, &mut log).unwrap();
+    assert_eq!(out.steps_run, 3);
+    // BN running stats must have moved off their init values
+    let moved = trainer
+        .state
+        .sts
+        .iter()
+        .any(|t| t.data().iter().any(|&v| v != 0.0 && v != 1.0));
+    assert!(moved, "bn running stats never updated");
+    // BN calibration must run without error and keep stats finite
+    evaluator::bn_calibrate(&engine, &manifest, "resnet20", &mut trainer.state, &train_ds, 3, 1)
+        .unwrap();
+    for t in &trainer.state.sts {
+        assert!(t.data().iter().all(|v| v.is_finite()));
+    }
+}
