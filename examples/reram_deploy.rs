@@ -5,25 +5,31 @@
 //!
 //!   * reports the measured per-slice ADC requirements (lossless and
 //!     p99.9) and the Table-3 savings at the deployed resolutions;
-//!   * validates the reduced-ADC deployment *functionally*, comparing test
-//!     accuracy under the paper's (1-bit MSB / 3-bit rest) ADCs against
-//!     the lossless reference — using both the AOT `mlp_reram_*` graphs
-//!     (L1 Pallas crossbar kernel) and the Rust `reram::sim` substrate,
-//!     which are cross-checked against each other.
+//!   * validates the reduced-ADC deployment *functionally* through the
+//!     unified `serve::InferenceBackend` seam — the AOT `mlp_reram_*`
+//!     graphs (L1 Pallas crossbar kernel), the Rust crossbar simulator
+//!     and the exact quantized reference all answer the same
+//!     `serve::accuracy` call;
+//!   * serves the test set through the batched `ServingEngine` and prints
+//!     the throughput/latency report.
 //!
 //! Run: `cargo run --release --example reram_deploy -- [--checkpoint DIR]`
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use bitslice_reram::config::{Method, RunConfig};
 use bitslice_reram::coordinator::{checkpoint, ModelState};
-use bitslice_reram::data::loader::EvalBatches;
 use bitslice_reram::data::Dataset;
 use bitslice_reram::harness;
 use bitslice_reram::report;
-use bitslice_reram::reram::{sim, ResolutionPolicy};
+use bitslice_reram::reram::ResolutionPolicy;
 use bitslice_reram::runtime::{Engine, Manifest};
-use bitslice_reram::tensor::Tensor;
+use bitslice_reram::serve::{
+    self, CrossbarBackend, InferenceBackend, ReferenceBackend, ServeOptions, ServingEngine,
+    SharedBackend, XlaBackend,
+};
 use bitslice_reram::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -70,7 +76,8 @@ fn main() -> Result<()> {
     );
     println!("{}", report::adc_table(&deploy.rows));
 
-    // 3) functional validation on the test set
+    // 3) functional validation on the test set — every forward path is an
+    //    InferenceBackend answering the same accuracy() call
     let test_ds = Dataset::auto("mnist", &cfg.data_dir, false, 1024, cfg.seed + 1)?;
     println!(
         "functional ADC validation on {} ({} examples):",
@@ -78,113 +85,73 @@ fn main() -> Result<()> {
         test_ds.len()
     );
 
+    let stack = serve::dense_stack(&state.named_qws(entry), &state.tps)?;
+
     // 3a) AOT graphs (L1 Pallas crossbar kernel, interpret-lowered)
     for tag in ["reram_paper", "reram_lossless"] {
-        let acc = reram_graph_accuracy(&engine, &manifest, &state, &test_ds, tag)?;
-        println!("  AOT {tag:16}: accuracy {:.2}%", acc * 100.0);
+        let backend = XlaBackend::for_graph(&engine, &manifest, "mlp", tag, &state)?;
+        let acc = serve::accuracy(&backend, &test_ds)?;
+        println!("  {:24}: accuracy {:.2}%", backend.name(), acc.accuracy * 100.0);
     }
 
-    // 3b) Rust simulator at the same operating points
-    for (label, bits) in [
-        ("sim (3,3,3,1)", [3u32, 3, 3, 1]),
-        ("sim lossless", [10, 10, 10, 10]),
-    ] {
-        let acc = rust_sim_accuracy(&state, &test_ds, &bits)?;
-        println!("  {label:20}: accuracy {:.2}%", acc * 100.0);
+    // 3b) Rust simulator at the same operating points + exact reference
+    let paper = CrossbarBackend::with_bits("sim@paper(3,3,3,1)", &stack, [3, 3, 3, 1])?;
+    let lossless = paper.rebit("sim@lossless", [10, 10, 10, 10]);
+    let reference = ReferenceBackend::new("quantized-reference", &stack)?;
+    for backend in [&paper as &dyn InferenceBackend, &lossless, &reference] {
+        let acc = serve::accuracy(backend, &test_ds)?;
+        println!("  {:24}: accuracy {:.2}%", backend.name(), acc.accuracy * 100.0);
     }
 
     // 4) ADC-resolution sweep (ablation): where is the accuracy knee?
     println!("ADC-resolution sweep (uniform bits across slice groups):");
     println!("  bits | accuracy | whole-model energy saving");
     for bits in 1..=8u32 {
-        let acc = rust_sim_accuracy(&state, &test_ds, &[bits; 4])?;
+        let be = paper.rebit("sweep", [bits; 4]);
+        let acc = serve::accuracy(&be, &test_ds)?;
         let e = bitslice_reram::reram::AdcModel::energy_saving(bits);
-        println!("  {bits:>4} | {:>7.2}% | {e:.1}x", acc * 100.0);
+        println!("  {bits:>4} | {:>7.2}% | {e:.1}x", acc.accuracy * 100.0);
     }
     let measured = deploy.deployed_bits;
-    let acc = rust_sim_accuracy(&state, &test_ds, &measured)?;
+    let at_measured = paper.rebit("sim@p99.9", measured);
+    let acc = serve::accuracy(&at_measured, &test_ds)?;
+    let acc_lossless = serve::accuracy(&lossless, &test_ds)?;
     println!(
         "  measured p99.9 bits {:?}: accuracy {:.2}% (vs lossless {:.2}%)",
         measured,
-        acc * 100.0,
-        rust_sim_accuracy(&state, &test_ds, &[10; 4])? * 100.0
+        acc.accuracy * 100.0,
+        acc_lossless.accuracy * 100.0
     );
-    Ok(())
-}
 
-/// Accuracy via the AOT reram inference graph (fixed batch shape).
-fn reram_graph_accuracy(
-    engine: &Engine,
-    manifest: &Manifest,
-    state: &ModelState,
-    ds: &Dataset,
-    graph: &str,
-) -> Result<f64> {
-    let entry = manifest.model("mlp")?;
-    let g = entry.graph(graph)?;
-    let exe = engine.load(&g.path)?;
-    // inputs: qw:fc1/w tp:fc1/b qw:fc2/w tp:fc2/b x
-    let w1 = state.qws[0].to_literal()?;
-    let b1 = state.tps[0].to_literal()?;
-    let w2 = state.qws[1].to_literal()?;
-    let b2 = state.tps[1].to_literal()?;
+    // 5) serve the test set through the batched engine (assemble the
+    //    request load first so it is not charged to the serving window;
+    //    intra_threads 1: the worker pool is the parallelism here)
+    println!("batched serving (crossbar simulator at deployed bits):");
+    let dim = test_ds.dim();
+    let mut requests = Vec::with_capacity(test_ds.len());
+    for i in 0..test_ds.len() {
+        let mut x = vec![0.0f32; dim];
+        test_ds.write_example(i, &mut x);
+        requests.push(x);
+    }
+    let shared: SharedBackend = Arc::new(at_measured.with_intra_threads(1));
+    let eng = ServingEngine::start(shared, ServeOptions::default())?;
+    let responses = eng.infer_many(requests)?;
     let mut correct = 0usize;
-    let mut total = 0usize;
-    for eb in EvalBatches::new(ds, entry.batch) {
-        let x = eb.batch.x.to_literal()?;
-        let inputs: Vec<&xla::Literal> = vec![&w1, &b1, &w2, &b2, &x];
-        let outs = exe.run(&inputs)?;
-        let logits = Tensor::from_literal(&outs[0])?;
-        for row in 0..eb.valid {
-            let start = row * 10;
-            let pred = (0..10)
-                .max_by(|&a, &b| {
-                    logits.data()[start + a]
-                        .partial_cmp(&logits.data()[start + b])
-                        .unwrap()
-                })
-                .unwrap();
-            if pred as i32 == eb.batch.y.data()[row] {
-                correct += 1;
-            }
-            total += 1;
-        }
-    }
-    Ok(correct as f64 / total.max(1) as f64)
-}
-
-/// Accuracy via the Rust crossbar simulator (reram::sim).
-fn rust_sim_accuracy(state: &ModelState, ds: &Dataset, bits: &[u32; 4]) -> Result<f64> {
-    let l1 = bitslice_reram::reram::mapper::map_layer("fc1/w", &state.qws[0])?;
-    let l2 = bitslice_reram::reram::mapper::map_layer("fc2/w", &state.qws[1])?;
-    let b1 = state.tps[0].data();
-    let b2 = state.tps[1].data();
-    let dim = ds.dim();
-    let n = ds.len();
-    let mut x = vec![0.0f32; n * dim];
-    for i in 0..n {
-        ds.write_example(i, &mut x[i * dim..(i + 1) * dim]);
-    }
-    let xt = Tensor::new(vec![n, dim], x)?;
-    // layer 1 + bias + relu
-    let mut h = sim::forward(&l1, &xt, bits);
-    for (i, v) in h.data_mut().iter_mut().enumerate() {
-        *v = (*v + b1[i % 300]).max(0.0);
-    }
-    // layer 2 + bias
-    let mut logits = sim::forward(&l2, &h, bits);
-    for (i, v) in logits.data_mut().iter_mut().enumerate() {
-        *v += b2[i % 10];
-    }
-    let mut correct = 0usize;
-    for i in 0..n {
-        let row = &logits.data()[i * 10..(i + 1) * 10];
-        let pred = (0..10)
+    for (i, row) in responses.iter().enumerate() {
+        let pred = (0..row.len())
             .max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap())
             .unwrap();
-        if pred as i32 == ds.labels[i] {
+        if pred as i32 == test_ds.labels[i] {
             correct += 1;
         }
     }
-    Ok(correct as f64 / n as f64)
+    let stats = eng.shutdown();
+    println!(
+        "  served {} requests, accuracy {:.2}%",
+        stats.requests,
+        100.0 * correct as f64 / test_ds.len() as f64
+    );
+    println!("{}", report::serving_table(&[stats.row()]));
+    Ok(())
 }

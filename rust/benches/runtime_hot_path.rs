@@ -3,7 +3,8 @@
 //! Measures (a) one full coordinator step — batch assembly + literal
 //! conversion + `train_step` execution + metric extraction — against (b)
 //! the bare executable call, isolating coordinator overhead, plus the
-//! standalone L1 kernel graphs (quantize / bl1 / crossbar tile).
+//! standalone L1 kernel graphs (quantize / bl1 / crossbar tile) and the
+//! AOT inference path through the unified `serve::InferenceBackend` seam.
 //!
 //! Run: `cargo bench --bench runtime_hot_path`
 
@@ -126,6 +127,36 @@ fn main() -> anyhow::Result<()> {
                 let _ = exe.run(&lits).unwrap();
             });
             harness::throughput(&format!("kernel {name} throughput"), &st, elems as f64, "elem");
+        }
+    }
+
+    harness::section("AOT inference through serve::InferenceBackend (mlp)");
+    {
+        use bitslice_reram::serve::{self, InferenceBackend, XlaBackend};
+        let entry = manifest.model("mlp")?;
+        let state = bitslice_reram::coordinator::ModelState::init(entry, 3);
+        let ds = Dataset::auto("mnist", &cfg.data_dir, false, 1024, 2)?;
+        for tag in ["eval", "reram_lossless"] {
+            if entry.graph(tag).is_err() {
+                continue;
+            }
+            let backend = match tag {
+                "eval" => XlaBackend::for_eval(&engine, &manifest, "mlp", &state)?,
+                _ => XlaBackend::for_graph(&engine, &manifest, "mlp", tag, &state)?,
+            };
+            let st = harness::bench(
+                &format!("{} accuracy over {} examples", backend.name(), ds.len()),
+                Duration::from_secs(3),
+                || {
+                    let _ = std::hint::black_box(serve::accuracy(&backend, &ds).unwrap());
+                },
+            );
+            harness::throughput(
+                &format!("{} throughput", backend.name()),
+                &st,
+                ds.len() as f64,
+                "example",
+            );
         }
     }
     Ok(())

@@ -1,0 +1,114 @@
+//! §Perf: the batched serving engine across backends and batch sizes.
+//!
+//! Spins up a `ServingEngine` over the host inference backends (exact
+//! quantized reference, crossbar simulator at lossless and at the paper's
+//! ADC operating point), pushes a fixed request load through it per
+//! `max_batch` setting, and reports requests/sec plus p50/p99 end-to-end
+//! latency. Results are printed as the serving table and written to
+//! `BENCH_serving.json`.
+//!
+//! Run: `cargo bench --bench serving_throughput`
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::Arc;
+
+use bitslice_reram::report;
+use bitslice_reram::serve::{
+    dense_stack, CrossbarBackend, DenseLayer, InferenceBackend, ReferenceBackend, ServeOptions,
+    ServingEngine, SharedBackend,
+};
+use bitslice_reram::tensor::Tensor;
+use bitslice_reram::util::rng::Rng;
+
+const IN_DIM: usize = 784;
+const HIDDEN: usize = 300;
+const CLASSES: usize = 10;
+const REQUESTS: usize = 512;
+
+/// MLP-shaped stack with bit-slice-sparse-ish weights.
+fn stack(rng: &mut Rng) -> Vec<DenseLayer> {
+    let mut sparse = |n: usize, keep: f64, scale: f32| -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                if (rng.next_f32() as f64) < keep {
+                    rng.normal() * scale
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    };
+    let w1 = Tensor::new(vec![IN_DIM, HIDDEN], sparse(IN_DIM * HIDDEN, 0.10, 0.05)).unwrap();
+    let w2 = Tensor::new(vec![HIDDEN, CLASSES], sparse(HIDDEN * CLASSES, 0.25, 0.08)).unwrap();
+    let b1 = Tensor::new(vec![HIDDEN], (0..HIDDEN).map(|_| rng.normal() * 0.01).collect()).unwrap();
+    let b2 = Tensor::new(vec![CLASSES], (0..CLASSES).map(|_| rng.normal() * 0.01).collect()).unwrap();
+    dense_stack(
+        &[("fc1/w".into(), w1), ("fc2/w".into(), w2)],
+        &[b1, b2],
+    )
+    .unwrap()
+}
+
+fn drive(backend: SharedBackend, max_batch: usize, requests: &[Vec<f32>]) -> report::ServingRow {
+    let eng = ServingEngine::start(
+        backend,
+        ServeOptions {
+            max_batch,
+            workers: 0,
+            queue_depth: 256,
+        },
+    )
+    .expect("start serving engine");
+    let out = eng
+        .infer_many(requests.to_vec())
+        .expect("serving requests");
+    assert_eq!(out.len(), requests.len());
+    let stats = eng.shutdown();
+    println!(
+        "{:<28} max_batch {:>4}: {:>8.0} req/s, p50 {:.3} ms, p99 {:.3} ms, mean batch {:.1}",
+        stats.backend,
+        max_batch,
+        stats.throughput_rps,
+        stats.latency_ms(0.50),
+        stats.latency_ms(0.99),
+        stats.mean_batch
+    );
+    stats.row()
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(7);
+    let layers = stack(&mut rng);
+
+    let requests: Vec<Vec<f32>> = (0..REQUESTS)
+        .map(|_| (0..IN_DIM).map(|_| rng.next_f32()).collect())
+        .collect();
+
+    // intra_threads 1: the engine's worker pool is the parallelism under
+    // test; nested per-batch fan-out would only oversubscribe the cores
+    // and muddy the latency numbers.
+    let reference: SharedBackend =
+        Arc::new(ReferenceBackend::new("reference", &layers)?.with_intra_threads(1));
+    let xbar_lossless = CrossbarBackend::with_bits("crossbar@lossless", &layers, [10; 4])?
+        .with_intra_threads(1);
+    let xbar_paper: SharedBackend =
+        Arc::new(xbar_lossless.rebit("crossbar@paper(3,3,3,1)", [3, 3, 3, 1]));
+    let xbar_lossless: SharedBackend = Arc::new(xbar_lossless);
+
+    let mut rows = Vec::new();
+    for backend in [reference, xbar_lossless, xbar_paper] {
+        harness::section(&format!("serving {}", backend.name()));
+        for max_batch in [1usize, 8, 32, 128] {
+            rows.push(drive(backend.clone(), max_batch, &requests));
+        }
+    }
+
+    harness::section("serving summary");
+    println!("{}", report::serving_table(&rows));
+    let json = report::serving_json(&rows).to_string();
+    std::fs::write("BENCH_serving.json", &json)?;
+    println!("wrote BENCH_serving.json ({} rows)", rows.len());
+    Ok(())
+}

@@ -16,6 +16,7 @@ use std::time::Duration;
 
 use bitslice_reram::reram::{energy, mapper, resolution, ResolutionPolicy};
 use bitslice_reram::report;
+use bitslice_reram::serve::{self, CrossbarBackend, InferenceBackend, ReferenceBackend};
 use bitslice_reram::tensor::Tensor;
 use bitslice_reram::util::rng::Rng;
 
@@ -56,6 +57,34 @@ fn main() -> anyhow::Result<()> {
             p999,
             e
         );
+    }
+
+    harness::section("deployed forward cost through InferenceBackend (784x300x10 MLP)");
+    {
+        let w1 = sparse_weights(&mut rng, 0.05);
+        let w2 = Tensor::new(vec![300, 10], rng.normal_vec(3000, 0.05)).unwrap();
+        let b1 = Tensor::zeros(vec![300]);
+        let b2 = Tensor::zeros(vec![10]);
+        let stack = serve::dense_stack(
+            &[("fc1/w".into(), w1), ("fc2/w".into(), w2)],
+            &[b1, b2],
+        )?;
+        let x = Tensor::new(
+            vec![64, 784],
+            (0..64 * 784).map(|_| rng.next_f32()).collect(),
+        )?;
+        let reference = ReferenceBackend::new("reference", &stack)?;
+        let xbar = CrossbarBackend::new("crossbar@p99.9", &stack, ResolutionPolicy::Percentile(0.999))?;
+        let paper = xbar.rebit("crossbar@paper(3,3,3,1)", [3, 3, 3, 1]);
+        for backend in [&reference as &dyn InferenceBackend, &xbar, &paper] {
+            harness::bench(
+                &format!("{} infer_batch(64)", backend.name()),
+                Duration::from_secs(2),
+                || {
+                    let _ = std::hint::black_box(backend.infer_batch(&x).unwrap());
+                },
+            );
+        }
     }
 
     harness::section("analysis cost");

@@ -1,18 +1,19 @@
 //! Quantized deployment accuracy over a test set.
 //!
 //! Uses the `eval_step` graph (weights quantized + masked, BN running
-//! stats) over sequential fixed-shape batches. The final partial batch is
-//! wrap-filled to the graph's static shape; fill rows get label -1 so they
-//! can never count as correct, and accuracy is normalized by the number of
-//! real examples.
+//! stats) behind the [`crate::serve::InferenceBackend`] seam: the
+//! fixed-shape padding and batch dispatch live in
+//! [`crate::serve::XlaBackend`] / [`crate::serve::accuracy`], so this
+//! module only owns what is eval-specific — BN re-calibration.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::coordinator::state::ModelState;
-use crate::data::loader::{assemble, BatchPlan, EvalBatches};
+use crate::data::loader::{assemble, BatchPlan};
 use crate::data::Dataset;
 use crate::runtime::{Engine, Manifest};
-use crate::tensor::{IntTensor, Tensor};
+use crate::serve::{self, XlaBackend};
+use crate::tensor::Tensor;
 
 /// Evaluation result.
 #[derive(Debug, Clone, Copy)]
@@ -81,7 +82,8 @@ pub fn bn_calibrate(
     Ok(())
 }
 
-/// Evaluate `state` on `dataset` with the model's `eval` graph.
+/// Evaluate `state` on `dataset` with the model's `eval` graph, routed
+/// through the unified backend seam.
 pub fn evaluate(
     engine: &Engine,
     manifest: &Manifest,
@@ -89,35 +91,11 @@ pub fn evaluate(
     state: &ModelState,
     dataset: &Dataset,
 ) -> Result<EvalResult> {
-    let entry = manifest.model(model)?;
-    let graph = entry.graph("eval")?;
-    let exe = engine.load(&graph.path).context("compiling eval graph")?;
-    let idx_correct = graph.output_index("correct")?;
-
-    let state_lits = state.to_eval_literals()?;
-    let mut correct = 0.0f64;
-    let mut total = 0usize;
-    for eb in EvalBatches::new(dataset, entry.batch) {
-        // kill wrap-fill rows: label -1 never matches an argmax in 0..C
-        let mut labels = eb.batch.y.data().to_vec();
-        for l in labels.iter_mut().skip(eb.valid) {
-            *l = -1;
-        }
-        let y = IntTensor::new(vec![entry.batch], labels)?;
-
-        let x_lit = eb.batch.x.to_literal()?;
-        let y_lit = y.to_literal()?;
-        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(state_lits.len() + 2);
-        inputs.extend(state_lits.iter());
-        inputs.push(&x_lit);
-        inputs.push(&y_lit);
-        let outs = exe.run(&inputs)?;
-        correct += outs[idx_correct].to_vec::<f32>()?[0] as f64;
-        total += eb.valid;
-    }
+    let backend = XlaBackend::for_eval(engine, manifest, model, state)?;
+    let rep = serve::accuracy(&backend, dataset)?;
     Ok(EvalResult {
-        accuracy: if total == 0 { 0.0 } else { correct / total as f64 },
-        examples: total,
+        accuracy: rep.accuracy,
+        examples: rep.examples,
     })
 }
 

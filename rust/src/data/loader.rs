@@ -80,45 +80,8 @@ impl BatchStream {
     }
 }
 
-/// Sequential (unshuffled) evaluation batches covering the whole dataset;
-/// the final partial batch wraps around to fill the graph's fixed shape,
-/// with `valid` recording how many rows actually count.
-pub struct EvalBatches<'a> {
-    ds: &'a Dataset,
-    batch: usize,
-    pos: usize,
-}
-
-pub struct EvalBatch {
-    pub batch: Batch,
-    /// number of leading rows that are real (not wrap-fill)
-    pub valid: usize,
-}
-
-impl<'a> EvalBatches<'a> {
-    pub fn new(ds: &'a Dataset, batch: usize) -> Self {
-        EvalBatches { ds, batch, pos: 0 }
-    }
-}
-
-impl<'a> Iterator for EvalBatches<'a> {
-    type Item = EvalBatch;
-
-    fn next(&mut self) -> Option<EvalBatch> {
-        if self.pos >= self.ds.len() {
-            return None;
-        }
-        let valid = (self.ds.len() - self.pos).min(self.batch);
-        let indices: Vec<usize> = (0..self.batch)
-            .map(|j| (self.pos + j) % self.ds.len())
-            .collect();
-        self.pos += valid;
-        Some(EvalBatch {
-            batch: assemble(self.ds, &indices),
-            valid,
-        })
-    }
-}
+// Sequential evaluation batching lives in `crate::serve::accuracy`: exact
+// batch slices here, fixed-shape padding inside the backend that needs it.
 
 #[cfg(test)]
 mod tests {
@@ -159,20 +122,6 @@ mod tests {
             n += 1;
         }
         assert_eq!(n, 7);
-    }
-
-    #[test]
-    fn eval_batches_cover_everything_once() {
-        let ds = synthetic::mnist(50, 4);
-        let batches: Vec<EvalBatch> = EvalBatches::new(&ds, 16).collect();
-        assert_eq!(batches.len(), 4); // 16+16+16+2
-        let valid: usize = batches.iter().map(|b| b.valid).sum();
-        assert_eq!(valid, 50);
-        assert_eq!(batches[3].valid, 2);
-        // all batches keep the fixed graph shape
-        for b in &batches {
-            assert_eq!(b.batch.x.shape()[0], 16);
-        }
     }
 
     #[test]

@@ -24,7 +24,11 @@
 //!                     bitline-current/resolution analyzer (Table 3)
 //! * [`coordinator`] — trainer phases, schedules, pruning, checkpoints,
 //!                     metrics, evaluation
-//! * [`report`]      — paper-style table/figure emitters
+//! * [`serve`]       — the unified inference layer: the
+//!                     `InferenceBackend` trait (XLA graphs, crossbar
+//!                     simulator, exact quantized reference) and the
+//!                     batched `ServingEngine` request path
+//! * [`report`]      — paper-style table/figure emitters + serving stats
 //! * [`config`]      — run configuration (CLI + TOML-ish files)
 //! * [`util`]        — substrates the sandbox lacks crates for: JSON
 //!                     parser, CLI args, RNG, thread pool
@@ -37,6 +41,7 @@ pub mod quant;
 pub mod report;
 pub mod reram;
 pub mod runtime;
+pub mod serve;
 pub mod sparsity;
 pub mod tensor;
 pub mod util;

@@ -25,6 +25,7 @@ use bitslice_reram::harness;
 use bitslice_reram::report;
 use bitslice_reram::reram::{energy, AdcModel, ResolutionPolicy};
 use bitslice_reram::runtime::{Engine, Manifest};
+use bitslice_reram::serve::{self, CrossbarBackend, InferenceBackend, ReferenceBackend};
 use bitslice_reram::sparsity;
 use bitslice_reram::util::cli::Args;
 
@@ -183,6 +184,32 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     println!(
         "whole-model ADC savings vs 8-bit baseline: energy {e:.1}x, time {t:.2}x, area {a:.1}x"
     );
+
+    // Functional validation through the unified backend seam: deployed
+    // crossbar resolution vs the exact quantized reference on the test set.
+    if meta.model == "mlp" {
+        let test_ds = Dataset::auto(
+            "mnist",
+            &cfg.data_dir,
+            false,
+            cfg.test_examples,
+            cfg.seed.wrapping_add(1),
+        )?;
+        let stack = serve::dense_stack(&state.named_qws(entry), &state.tps)?;
+        let xbar = CrossbarBackend::with_bits("crossbar", &stack, deploy.deployed_bits)?;
+        let reference = ReferenceBackend::new("reference", &stack)?;
+        let xa = serve::accuracy(&xbar, &test_ds)?;
+        let ra = serve::accuracy(&reference, &test_ds)?;
+        println!(
+            "functional accuracy on {} ({} examples): {} {:.2}% vs {} {:.2}%",
+            test_ds.source,
+            xa.examples,
+            xbar.name(),
+            xa.accuracy * 100.0,
+            reference.name(),
+            ra.accuracy * 100.0,
+        );
+    }
     Ok(())
 }
 
@@ -278,6 +305,27 @@ fn reproduce_table3(args: &Args) -> Result<()> {
         println!("{}", report::adc_table(&deploy.rows));
         let (e, t, a) = deploy.savings;
         println!("whole-model savings: energy {e:.1}x, time {t:.2}x, area {a:.1}x");
+
+        // accuracy at the deployed resolutions, via the backend seam
+        let test_ds = Dataset::auto(
+            "mnist",
+            &cfg.data_dir,
+            false,
+            cfg.test_examples,
+            cfg.seed.wrapping_add(1),
+        )?;
+        let stack = serve::dense_stack(&state.named_qws(entry), &state.tps)?;
+        let deployed =
+            CrossbarBackend::with_bits("crossbar@p99.9", &stack, deploy.deployed_bits)?;
+        let lossless = deployed.rebit("crossbar@lossless", deploy.lossless_bits);
+        let da = serve::accuracy(&deployed, &test_ds)?;
+        let la = serve::accuracy(&lossless, &test_ds)?;
+        println!(
+            "simulated accuracy on {}: {:.2}% at p99.9 bits vs {:.2}% lossless",
+            test_ds.source,
+            da.accuracy * 100.0,
+            la.accuracy * 100.0,
+        );
     } else {
         println!(
             "(no mlp-bl1 checkpoint under {} — run `reproduce table1` first for measured bits)",

@@ -7,6 +7,7 @@
 use crate::quant::N_SLICES;
 use crate::reram::energy::AdcSavingRow;
 use crate::sparsity::SliceStats;
+use crate::util::json::{num, obj, s, Json};
 
 /// One row of Table 1/2: a method's accuracy + slice sparsity.
 #[derive(Debug, Clone)]
@@ -77,6 +78,76 @@ pub fn fig2_csv(traces: &[(String, Vec<crate::sparsity::TracePoint>)]) -> String
     out
 }
 
+/// One measured configuration of the batched serving engine
+/// (`serve::ServingStats::row` exports into this).
+#[derive(Debug, Clone)]
+pub struct ServingRow {
+    pub backend: String,
+    pub max_batch: usize,
+    pub workers: usize,
+    pub requests: usize,
+    /// requests that completed with an inference error (still counted in
+    /// `requests` and the latency distribution)
+    pub errors: usize,
+    /// mean assembled batch size (dynamic batching efficiency)
+    pub mean_batch: f64,
+    pub throughput_rps: f64,
+    pub latency_mean_ms: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p99_ms: f64,
+}
+
+/// Render the serving-throughput table (markdown).
+pub fn serving_table(rows: &[ServingRow]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "| Backend | Max batch | Workers | Requests | Errors | Mean batch | req/s | p50 ms | p99 ms |\n\
+         |---------|-----------|---------|----------|--------|------------|-------|--------|--------|\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {:.1} | {:.0} | {:.3} | {:.3} |\n",
+            r.backend,
+            r.max_batch,
+            r.workers,
+            r.requests,
+            r.errors,
+            r.mean_batch,
+            r.throughput_rps,
+            r.latency_p50_ms,
+            r.latency_p99_ms,
+        ));
+    }
+    out
+}
+
+/// Serialize serving rows as the `BENCH_serving.json` document.
+pub fn serving_json(rows: &[ServingRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("backend", s(&r.backend)),
+                    ("max_batch", num(r.max_batch as f64)),
+                    ("workers", num(r.workers as f64)),
+                    ("requests", num(r.requests as f64)),
+                    ("errors", num(r.errors as f64)),
+                    ("mean_batch", num(r.mean_batch)),
+                    ("throughput_rps", num(r.throughput_rps)),
+                    (
+                        "latency_ms",
+                        obj(vec![
+                            ("mean", num(r.latency_mean_ms)),
+                            ("p50", num(r.latency_p50_ms)),
+                            ("p99", num(r.latency_p99_ms)),
+                        ]),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// Per-slice resolution summary (feeds Table 3's "Resolution" column from
 /// the measured mapping instead of asserting it).
 pub fn resolution_summary(bits_lsb_first: [u32; N_SLICES]) -> String {
@@ -132,6 +203,43 @@ mod tests {
         let csv = fig2_csv(&traces);
         assert!(csv.starts_with("method,step,"));
         assert!(csv.contains("bl1,10,0.010000"));
+    }
+
+    fn serving_row() -> ServingRow {
+        ServingRow {
+            backend: "crossbar@lossless".into(),
+            max_batch: 32,
+            workers: 4,
+            requests: 1000,
+            errors: 7,
+            mean_batch: 12.5,
+            throughput_rps: 842.0,
+            latency_mean_ms: 3.2,
+            latency_p50_ms: 2.9,
+            latency_p99_ms: 9.4,
+        }
+    }
+
+    #[test]
+    fn serving_table_formats_rows() {
+        let t = serving_table(&[serving_row()]);
+        assert!(t.contains("crossbar@lossless"));
+        assert!(t.contains("| 32 |"));
+        assert!(t.contains("842"));
+        assert!(t.contains("9.400"));
+    }
+
+    #[test]
+    fn serving_json_roundtrips() {
+        let j = serving_json(&[serving_row()]);
+        let text = j.to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        let row = &back.as_arr().unwrap()[0];
+        assert_eq!(row.get("backend").unwrap().as_str(), Some("crossbar@lossless"));
+        assert_eq!(row.get("requests").unwrap().as_usize(), Some(1000));
+        assert_eq!(row.get("errors").unwrap().as_usize(), Some(7));
+        let lat = row.get("latency_ms").unwrap();
+        assert_eq!(lat.get("p99").unwrap().as_f64(), Some(9.4));
     }
 
     #[test]

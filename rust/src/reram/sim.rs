@@ -25,23 +25,57 @@ pub fn act_quantize(x: &[f32]) -> (Vec<u8>, f32) {
     (codes, step)
 }
 
-/// ADC transfer function: clip at full scale.
+/// ADC transfer function: clip at full scale. Resolutions of 32 bits or
+/// more cover every representable current, so they pass through unclipped
+/// (a shifted `(1 << bits) - 1` would overflow there).
 #[inline]
 pub fn adc_clip(current: u32, bits: u32) -> u32 {
-    current.min((1u32 << bits) - 1)
+    if bits >= 32 {
+        current
+    } else {
+        current.min((1u32 << bits) - 1)
+    }
 }
 
-/// Run one example (activation code vector) through a mapped layer.
-///
-/// `adc_bits[k]` is the resolution of slice group k (LSB-first). Returns
-/// the integer-domain result (code units); multiply by `layer.step *
-/// act_step` for real units.
-pub fn forward_codes(layer: &LayerMapping, a_code: &[u8], adc_bits: &[u32; N_SLICES]) -> Vec<i64> {
+/// Reusable per-example buffers for [`forward_codes_into`]: the 8
+/// activation bit-planes and the per-tile bitline-current accumulator.
+/// One `SimScratch` per worker thread keeps the hot loop allocation-free.
+#[derive(Debug, Default)]
+pub struct SimScratch {
+    /// plane-major: `planes[t * rows + r]` is bit t of activation code r
+    planes: Vec<u8>,
+    /// current accumulator, sliced per tile to `tile.cols()`
+    cur: Vec<u32>,
+}
+
+/// Run one example (activation code vector) through a mapped layer,
+/// writing the integer-domain result (code units) into `out`; multiply by
+/// `layer.step * act_step` for real units. `adc_bits[k]` is the resolution
+/// of slice group k (LSB-first). All 8 bit-planes are materialized once
+/// per example into `scratch` and the current buffer is reused across
+/// tiles, so repeated calls do not allocate.
+pub fn forward_codes_into(
+    layer: &LayerMapping,
+    a_code: &[u8],
+    adc_bits: &[u32; N_SLICES],
+    scratch: &mut SimScratch,
+    out: &mut Vec<i64>,
+) {
     assert_eq!(a_code.len(), layer.rows, "activation length");
-    let mut out = vec![0i64; layer.cols];
-    // bit-serial over 8 activation bit planes
+    let rows = layer.rows;
+    out.clear();
+    out.resize(layer.cols, 0);
+    scratch.planes.clear();
+    scratch.planes.resize(8 * rows, 0);
+    for (r, &c) in a_code.iter().enumerate() {
+        for t in 0..8usize {
+            scratch.planes[t * rows + r] = (c >> t) & 1;
+        }
+    }
+    scratch.cur.resize(super::XBAR_COLS, 0);
+    // bit-serial over the 8 activation bit planes
     for t in 0..8u32 {
-        let bits: Vec<u8> = a_code.iter().map(|&c| (c >> t) & 1).collect();
+        let bits = &scratch.planes[t as usize * rows..(t as usize + 1) * rows];
         for (k, (pos, neg)) in layer.grids.iter().enumerate() {
             let full = adc_bits[k];
             for (grid, sign) in [(pos, 1i64), (neg, -1i64)] {
@@ -50,8 +84,8 @@ pub fn forward_codes(layer: &LayerMapping, a_code: &[u8], adc_bits: &[u32; N_SLI
                     for tc in 0..grid.col_tiles {
                         let tile = grid.tile(tr, tc);
                         let c0 = tc * super::XBAR_COLS;
-                        let mut cur = vec![0u32; tile.cols()];
-                        tile.bitline_currents(&bits[r0..r0 + tile.rows()], &mut cur);
+                        let cur = &mut scratch.cur[..tile.cols()];
+                        tile.bitline_currents(&bits[r0..r0 + tile.rows()], cur);
                         for (j, &i_raw) in cur.iter().enumerate() {
                             let i_adc = adc_clip(i_raw, full) as i64;
                             out[c0 + j] +=
@@ -62,6 +96,13 @@ pub fn forward_codes(layer: &LayerMapping, a_code: &[u8], adc_bits: &[u32; N_SLI
             }
         }
     }
+}
+
+/// Allocating convenience wrapper around [`forward_codes_into`].
+pub fn forward_codes(layer: &LayerMapping, a_code: &[u8], adc_bits: &[u32; N_SLICES]) -> Vec<i64> {
+    let mut scratch = SimScratch::default();
+    let mut out = Vec::new();
+    forward_codes_into(layer, a_code, adc_bits, &mut scratch, &mut out);
     out
 }
 
@@ -73,7 +114,8 @@ pub fn forward_codes(layer: &LayerMapping, a_code: &[u8], adc_bits: &[u32; N_SLI
 /// (accumulate all examples per cell pass) was implemented and measured
 /// 0.68x — the per-example current accumulators evict the tile from L1 —
 /// so this simpler form is kept; it already runs at ~1e10 cell-ops/s,
-/// 100x over the DESIGN.md target.
+/// 100x over the DESIGN.md target. Examples are chunked per worker so each
+/// thread reuses one [`SimScratch`] across its whole share of the batch.
 pub fn forward(layer: &LayerMapping, x: &Tensor, adc_bits: &[u32; N_SLICES]) -> Tensor {
     let shape = x.shape();
     assert_eq!(shape.len(), 2);
@@ -82,16 +124,23 @@ pub fn forward(layer: &LayerMapping, x: &Tensor, adc_bits: &[u32; N_SLICES]) -> 
     let (codes, a_step) = act_quantize(x.data());
     let scale = layer.step * a_step;
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    let rows_out = parallel_map(b, threads, |i| {
-        let code_row = &codes[i * rows..(i + 1) * rows];
-        forward_codes(layer, code_row, adc_bits)
-            .into_iter()
-            .map(|v| v as f32 * scale)
-            .collect::<Vec<f32>>()
+    let chunk = b.div_ceil(threads.max(1)).max(1);
+    let parts = parallel_map(b.div_ceil(chunk), threads, |ci| {
+        let lo = ci * chunk;
+        let hi = (lo + chunk).min(b);
+        let mut scratch = SimScratch::default();
+        let mut raw = Vec::new();
+        let mut part = Vec::with_capacity((hi - lo) * layer.cols);
+        for i in lo..hi {
+            let code_row = &codes[i * rows..(i + 1) * rows];
+            forward_codes_into(layer, code_row, adc_bits, &mut scratch, &mut raw);
+            part.extend(raw.iter().map(|&v| v as f32 * scale));
+        }
+        part
     });
     let mut data = Vec::with_capacity(b * layer.cols);
-    for r in rows_out {
-        data.extend(r);
+    for p in parts {
+        data.extend(p);
     }
     Tensor::new(vec![b, layer.cols], data).expect("forward shape")
 }
@@ -104,22 +153,6 @@ mod tests {
     use crate::util::rng::Rng;
 
     const LOSSLESS: [u32; N_SLICES] = [10, 10, 10, 10];
-
-    fn exact_matmul(x: &Tensor, w: &Tensor) -> Vec<f32> {
-        let (b, r) = (x.shape()[0], x.shape()[1]);
-        let c = w.shape()[1];
-        let mut out = vec![0.0f32; b * c];
-        for i in 0..b {
-            for j in 0..c {
-                let mut acc = 0.0;
-                for k in 0..r {
-                    acc += x.at2(i, k) * w.at2(k, j);
-                }
-                out[i * c + j] = acc;
-            }
-        }
-        out
-    }
 
     #[test]
     fn lossless_sim_matches_quantized_matmul() {
@@ -137,16 +170,10 @@ mod tests {
             let layer = map_layer("l", &w).unwrap();
             let out = forward(&layer, &x, &LOSSLESS);
 
-            // reference: quantized x @ quantized w
-            let qw = crate::quant::quantize(&w).recover();
-            let (xc, xs) = act_quantize(x.data());
-            let qx = Tensor::new(
-                vec![b, rows],
-                xc.iter().map(|&c| c as f32 * xs).collect(),
-            )
-            .unwrap();
-            let want = exact_matmul(&qx, &qw);
-            for (got, want) in out.data().iter().zip(&want) {
+            // the promoted exact quantized matmul (serve::reference)
+            let want = crate::serve::reference::quantized_matmul(&x, &w)
+                .map_err(|e| e.to_string())?;
+            for (got, want) in out.data().iter().zip(want.data()) {
                 let tol = 1e-4 * want.abs().max(1.0);
                 ensure(
                     (got - want).abs() <= tol,
@@ -164,6 +191,31 @@ mod tests {
         assert_eq!(adc_clip(5, 1), 1);
         assert_eq!(adc_clip(7, 3), 7);
         assert_eq!(adc_clip(8, 3), 7);
+    }
+
+    #[test]
+    fn adc_clip_saturates_at_wide_resolutions() {
+        // bits >= 32 covers every u32 current: no clipping, no overflow
+        assert_eq!(adc_clip(u32::MAX, 32), u32::MAX);
+        assert_eq!(adc_clip(5, 32), 5);
+        assert_eq!(adc_clip(u32::MAX, 40), u32::MAX);
+        // 31 bits is the widest shifted full scale
+        assert_eq!(adc_clip(u32::MAX, 31), (1u32 << 31) - 1);
+        assert_eq!(adc_clip((1u32 << 31) - 2, 31), (1u32 << 31) - 2);
+    }
+
+    #[test]
+    fn forward_codes_into_reuses_buffers_and_matches_wrapper() {
+        let mut rng = Rng::new(21);
+        let w = Tensor::new(vec![200, 40], rng.normal_vec(200 * 40, 0.1)).unwrap();
+        let layer = map_layer("l", &w).unwrap();
+        let mut scratch = SimScratch::default();
+        let mut out = Vec::new();
+        for _ in 0..3 {
+            let code: Vec<u8> = (0..200).map(|_| rng.below(256) as u8).collect();
+            forward_codes_into(&layer, &code, &LOSSLESS, &mut scratch, &mut out);
+            assert_eq!(out, forward_codes(&layer, &code, &LOSSLESS));
+        }
     }
 
     #[test]

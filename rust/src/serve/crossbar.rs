@@ -1,0 +1,238 @@
+//! Crossbar-simulator backend: the deployed-hardware forward path.
+//!
+//! Maps a dense stack onto 128x128 ReRAM crossbars ([`crate::reram::mapper`])
+//! and runs every layer through the functional simulator
+//! ([`crate::reram::sim`]) — bit-serial activations, per-crossbar ADC
+//! clipping at the configured resolution, digital recombination. The ADC
+//! resolution comes from a [`ResolutionPolicy`] applied to the mapped
+//! model's column-current census (exactly what `harness::deploy_report`
+//! measures) or from explicit per-slice bits.
+
+use anyhow::Result;
+
+use crate::quant::N_SLICES;
+use crate::reram::mapper::{self, LayerMapping, MappedModel};
+use crate::reram::sim::{self, SimScratch};
+use crate::reram::{resolution, ResolutionPolicy};
+use crate::tensor::Tensor;
+
+use super::{BackendInfo, DenseLayer, InferenceBackend};
+
+struct XbarLayer {
+    mapping: LayerMapping,
+    bias: Option<Vec<f32>>,
+    relu: bool,
+}
+
+/// Functional crossbar inference at a configurable ADC resolution.
+pub struct CrossbarBackend {
+    name: String,
+    layers: Vec<XbarLayer>,
+    adc_bits: [u32; N_SLICES],
+    input_dim: usize,
+    num_classes: usize,
+    intra_threads: usize,
+}
+
+impl CrossbarBackend {
+    /// Map the stack and size the ADCs by `policy` over the whole model's
+    /// column-current distribution (the Table-3 deployment semantics).
+    pub fn new(name: &str, stack: &[DenseLayer], policy: ResolutionPolicy) -> Result<Self> {
+        let mapped = Self::map_stack(stack)?;
+        let adc_bits = resolution::required_bits(&mapped, policy);
+        Self::assemble(name, mapped, stack, adc_bits)
+    }
+
+    /// Map the stack and deploy at explicit per-slice resolutions
+    /// (LSB-first), e.g. the paper's `[3, 3, 3, 1]` operating point.
+    pub fn with_bits(name: &str, stack: &[DenseLayer], adc_bits: [u32; N_SLICES]) -> Result<Self> {
+        let mapped = Self::map_stack(stack)?;
+        Self::assemble(name, mapped, stack, adc_bits)
+    }
+
+    /// Same mapping, different ADC resolutions — for sweeps, without
+    /// re-mapping the weights per point.
+    pub fn rebit(&self, name: &str, adc_bits: [u32; N_SLICES]) -> CrossbarBackend {
+        CrossbarBackend {
+            name: name.to_string(),
+            layers: self
+                .layers
+                .iter()
+                .map(|l| XbarLayer {
+                    mapping: l.mapping.clone(),
+                    bias: l.bias.clone(),
+                    relu: l.relu,
+                })
+                .collect(),
+            adc_bits,
+            input_dim: self.input_dim,
+            num_classes: self.num_classes,
+            intra_threads: self.intra_threads,
+        }
+    }
+
+    /// Cap the threads one `infer_batch` call may use. Set to 1 when a
+    /// `ServingEngine` worker pool already provides the parallelism —
+    /// nested fan-out would only oversubscribe the cores.
+    pub fn with_intra_threads(mut self, threads: usize) -> Self {
+        self.intra_threads = threads.max(1);
+        self
+    }
+
+    /// The per-slice ADC resolutions this backend deploys (LSB-first).
+    pub fn adc_bits(&self) -> [u32; N_SLICES] {
+        self.adc_bits
+    }
+
+    fn map_stack(stack: &[DenseLayer]) -> Result<MappedModel> {
+        anyhow::ensure!(!stack.is_empty(), "empty dense stack");
+        let layers = stack
+            .iter()
+            .map(|l| mapper::map_layer(&l.name, &l.w))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(MappedModel { layers })
+    }
+
+    fn assemble(
+        name: &str,
+        mapped: MappedModel,
+        stack: &[DenseLayer],
+        adc_bits: [u32; N_SLICES],
+    ) -> Result<Self> {
+        let input_dim = mapped.layers[0].rows;
+        let num_classes = mapped.layers[mapped.layers.len() - 1].cols;
+        let layers = mapped
+            .layers
+            .into_iter()
+            .zip(stack)
+            .map(|(mapping, l)| XbarLayer {
+                mapping,
+                bias: l.bias.as_ref().map(|b| b.data().to_vec()),
+                relu: l.relu,
+            })
+            .collect();
+        Ok(CrossbarBackend {
+            name: name.to_string(),
+            layers,
+            adc_bits,
+            input_dim,
+            num_classes,
+            intra_threads: super::default_intra_threads(),
+        })
+    }
+
+    /// One example through the stack; `scratch`/`raw` are reused across
+    /// layers and examples by the caller.
+    fn infer_one(&self, row: &[f32], scratch: &mut SimScratch, raw: &mut Vec<i64>) -> Vec<f32> {
+        let mut act: Vec<f32> = row.to_vec();
+        for layer in &self.layers {
+            let (codes, a_step) = sim::act_quantize(&act);
+            let scale = layer.mapping.step * a_step;
+            sim::forward_codes_into(&layer.mapping, &codes, &self.adc_bits, scratch, raw);
+            act.clear();
+            act.extend(raw.iter().map(|&v| v as f32 * scale));
+            if let Some(bias) = &layer.bias {
+                for (v, &b) in act.iter_mut().zip(bias) {
+                    *v += b;
+                }
+            }
+            if layer.relu {
+                for v in act.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+        }
+        act
+    }
+}
+
+impl InferenceBackend for CrossbarBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn info(&self) -> BackendInfo {
+        BackendInfo {
+            input_dim: self.input_dim,
+            num_classes: self.num_classes,
+            native_batch: None,
+            logits: true,
+        }
+    }
+
+    fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
+        super::rows_parallel(
+            &self.name,
+            x,
+            self.input_dim,
+            self.num_classes,
+            self.intra_threads,
+            || (SimScratch::default(), Vec::new()),
+            |(scratch, raw), row| self.infer_one(row, scratch, raw),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::dense_stack;
+    use crate::util::rng::Rng;
+
+    fn toy_stack(rng: &mut Rng) -> Vec<DenseLayer> {
+        let w1 = Tensor::new(vec![20, 9], rng.normal_vec(180, 0.15)).unwrap();
+        let w2 = Tensor::new(vec![9, 5], rng.normal_vec(45, 0.15)).unwrap();
+        let b1 = Tensor::new(vec![9], rng.normal_vec(9, 0.02)).unwrap();
+        let b2 = Tensor::new(vec![5], rng.normal_vec(5, 0.02)).unwrap();
+        dense_stack(&[("fc1/w".into(), w1), ("fc2/w".into(), w2)], &[b1, b2]).unwrap()
+    }
+
+    #[test]
+    fn lossless_policy_never_clips() {
+        let mut rng = Rng::new(11);
+        let stack = toy_stack(&mut rng);
+        let lossless = CrossbarBackend::new("xb", &stack, ResolutionPolicy::Lossless).unwrap();
+        let wide = lossless.rebit("xb-wide", [32; 4]);
+        let x = Tensor::new(vec![4, 20], (0..80).map(|_| rng.next_f32()).collect()).unwrap();
+        let a = lossless.infer_batch(&x).unwrap();
+        let b = wide.infer_batch(&x).unwrap();
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn batching_is_composition_invariant() {
+        let mut rng = Rng::new(13);
+        let stack = toy_stack(&mut rng);
+        let be = CrossbarBackend::new("xb", &stack, ResolutionPolicy::Lossless).unwrap();
+        let x = Tensor::new(vec![5, 20], (0..100).map(|_| rng.next_f32()).collect()).unwrap();
+        let all = be.infer_batch(&x).unwrap();
+        for i in 0..5 {
+            let row = Tensor::new(vec![1, 20], x.data()[i * 20..(i + 1) * 20].to_vec()).unwrap();
+            let one = be.infer_batch(&row).unwrap();
+            assert_eq!(&all.data()[i * 5..(i + 1) * 5], one.data(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn reduced_resolution_changes_dense_outputs() {
+        let mut rng = Rng::new(17);
+        // dense weights so 1-bit ADCs clip hard
+        let stack = toy_stack(&mut rng);
+        let be = CrossbarBackend::new("xb", &stack, ResolutionPolicy::Lossless).unwrap();
+        let starved = be.rebit("xb-1bit", [1; 4]);
+        assert_eq!(starved.adc_bits(), [1; 4]);
+        let x = Tensor::new(vec![2, 20], vec![0.9; 40]).unwrap();
+        let a = be.infer_batch(&x).unwrap();
+        let b = starved.infer_batch(&x).unwrap();
+        assert_ne!(a.data(), b.data());
+    }
+
+    #[test]
+    fn rejects_wrong_input_dim() {
+        let mut rng = Rng::new(19);
+        let stack = toy_stack(&mut rng);
+        let be = CrossbarBackend::new("xb", &stack, ResolutionPolicy::Lossless).unwrap();
+        let x = Tensor::new(vec![2, 7], vec![0.1; 14]).unwrap();
+        assert!(be.infer_batch(&x).is_err());
+    }
+}

@@ -1,0 +1,472 @@
+//! Batched serving engine: enqueue single-example requests, serve them in
+//! dynamically assembled fixed-cost batches.
+//!
+//! Requests land in a bounded queue ([`crate::util::pool::bounded`]);
+//! worker threads pull with `recv_batch` (block for the first request,
+//! drain whatever else is queued up to `max_batch`), assemble one batch
+//! tensor, run the backend's `infer_batch` once, and complete each
+//! request with its logits row. Per-request latency (enqueue → response)
+//! and aggregate throughput are recorded and exported as
+//! [`crate::report::ServingRow`]s.
+//!
+//! Because host backends are batch-composition invariant (see the
+//! `serve` module contract), a request's result does not depend on which
+//! batch the engine happened to pack it into.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::report::ServingRow;
+use crate::tensor::Tensor;
+use crate::util::pool::{bounded, Receiver, Sender};
+
+use super::{InferenceBackend as _, SharedBackend};
+
+/// Serving-engine knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    /// largest batch a worker will assemble from the queue
+    pub max_batch: usize,
+    /// worker threads; 0 = one per available core (capped at 8)
+    pub workers: usize,
+    /// request-queue capacity (enqueue blocks beyond this — backpressure)
+    pub queue_depth: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            max_batch: 64,
+            workers: 0,
+            queue_depth: 256,
+        }
+    }
+}
+
+struct InferRequest {
+    x: Vec<f32>,
+    enqueued: Instant,
+    tx: Sender<Result<Vec<f32>>>,
+}
+
+/// Handle to a submitted request; `wait` blocks for the logits row.
+pub struct PendingInference {
+    rx: Receiver<Result<Vec<f32>>>,
+}
+
+impl PendingInference {
+    pub fn wait(self) -> Result<Vec<f32>> {
+        self.rx
+            .recv()
+            .unwrap_or_else(|| Err(anyhow::anyhow!("serving engine dropped the request")))
+    }
+}
+
+#[derive(Default)]
+struct StatsInner {
+    latencies: Vec<Duration>,
+    batches: usize,
+    batched_examples: usize,
+    errors: usize,
+    infer_time: Duration,
+}
+
+/// Aggregate serving statistics, snapshotted at shutdown.
+#[derive(Debug, Clone)]
+pub struct ServingStats {
+    pub backend: String,
+    pub max_batch: usize,
+    pub workers: usize,
+    pub requests: usize,
+    pub batches: usize,
+    pub errors: usize,
+    /// wall time from engine start to shutdown
+    pub elapsed: Duration,
+    /// time spent inside `infer_batch` summed over workers
+    pub infer_time: Duration,
+    pub throughput_rps: f64,
+    pub mean_batch: f64,
+    /// per-request enqueue→response latencies, sorted ascending (ms)
+    pub latencies_ms: Vec<f64>,
+}
+
+impl ServingStats {
+    /// Latency percentile in milliseconds, `p` in [0, 1].
+    pub fn latency_ms(&self, p: f64) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        let idx = ((self.latencies_ms.len() as f64 - 1.0) * p.clamp(0.0, 1.0)).round() as usize;
+        self.latencies_ms[idx]
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        self.latencies_ms.iter().sum::<f64>() / self.latencies_ms.len() as f64
+    }
+
+    /// Export as a report row (the serving table / BENCH_serving.json).
+    pub fn row(&self) -> ServingRow {
+        ServingRow {
+            backend: self.backend.clone(),
+            max_batch: self.max_batch,
+            workers: self.workers,
+            requests: self.requests,
+            errors: self.errors,
+            mean_batch: self.mean_batch,
+            throughput_rps: self.throughput_rps,
+            latency_mean_ms: self.mean_latency_ms(),
+            latency_p50_ms: self.latency_ms(0.50),
+            latency_p99_ms: self.latency_ms(0.99),
+        }
+    }
+}
+
+/// The batched serving engine.
+pub struct ServingEngine {
+    tx: Option<Sender<InferRequest>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    stats: Arc<Mutex<StatsInner>>,
+    started: Instant,
+    input_dim: usize,
+    num_classes: usize,
+    backend_name: String,
+    opts: ServeOptions,
+    resolved_workers: usize,
+}
+
+impl ServingEngine {
+    /// Spawn the worker pool over `backend`. Fails fast on backends that
+    /// cannot produce logits (the eval-graph-only `XlaBackend` flavor) —
+    /// otherwise every request would error after the workload is running.
+    pub fn start(backend: SharedBackend, opts: ServeOptions) -> Result<ServingEngine> {
+        let info = backend.info();
+        anyhow::ensure!(
+            info.logits,
+            "backend {} exposes no logits and cannot serve inference requests",
+            backend.name()
+        );
+        let workers = if opts.workers == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .min(8)
+        } else {
+            opts.workers
+        };
+        let (tx, rx) = bounded::<InferRequest>(opts.queue_depth.max(1));
+        let rx = Arc::new(rx);
+        let stats = Arc::new(Mutex::new(StatsInner::default()));
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let rx = rx.clone();
+            let backend = backend.clone();
+            let stats = stats.clone();
+            let max_batch = opts.max_batch.max(1);
+            let dim = info.input_dim;
+            let classes = info.num_classes;
+            let handle = std::thread::Builder::new()
+                .name(format!("serve-{w}"))
+                .spawn(move || {
+                    while let Some(reqs) = rx.recv_batch(max_batch) {
+                        let b = reqs.len();
+                        let mut xdata = Vec::with_capacity(b * dim);
+                        for r in &reqs {
+                            xdata.extend_from_slice(&r.x);
+                        }
+                        let t0 = Instant::now();
+                        // a panicking backend must fail the batch, not kill
+                        // the worker — queued requests would hang forever
+                        let result = Tensor::new(vec![b, dim], xdata).and_then(|xt| {
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                backend.infer_batch(&xt)
+                            }))
+                            .unwrap_or_else(|_| {
+                                Err(anyhow::anyhow!("backend panicked during infer_batch"))
+                            })
+                        });
+                        let result = result.and_then(|logits| {
+                            anyhow::ensure!(
+                                logits.len() == b * classes,
+                                "backend returned {} logits for batch of {b} x {classes}",
+                                logits.len()
+                            );
+                            Ok(logits)
+                        });
+                        let infer_time = t0.elapsed();
+                        let now = Instant::now();
+                        let mut latencies = Vec::with_capacity(b);
+                        let mut errors = 0usize;
+                        match result {
+                            Ok(logits) => {
+                                for (i, req) in reqs.into_iter().enumerate() {
+                                    let row =
+                                        logits.data()[i * classes..(i + 1) * classes].to_vec();
+                                    latencies.push(now.duration_since(req.enqueued));
+                                    // a dropped waiter is not an error
+                                    let _ = req.tx.send(Ok(row));
+                                }
+                            }
+                            Err(e) => {
+                                let msg = format!("{e:#}");
+                                for req in reqs {
+                                    errors += 1;
+                                    latencies.push(now.duration_since(req.enqueued));
+                                    let _ = req
+                                        .tx
+                                        .send(Err(anyhow::anyhow!("inference failed: {msg}")));
+                                }
+                            }
+                        }
+                        let mut s = stats.lock().unwrap();
+                        s.batches += 1;
+                        s.batched_examples += b;
+                        s.errors += errors;
+                        s.infer_time += infer_time;
+                        s.latencies.extend(latencies);
+                    }
+                })
+                .expect("spawn serving worker");
+            handles.push(handle);
+        }
+        Ok(ServingEngine {
+            tx: Some(tx),
+            workers: handles,
+            stats,
+            started: Instant::now(),
+            input_dim: info.input_dim,
+            num_classes: info.num_classes,
+            backend_name: backend.name().to_string(),
+            opts,
+            resolved_workers: workers,
+        })
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Enqueue one example (flattened features). Blocks when the queue is
+    /// at capacity (backpressure on the client).
+    pub fn submit(&self, x: Vec<f32>) -> Result<PendingInference> {
+        anyhow::ensure!(
+            x.len() == self.input_dim,
+            "request dim {} != backend input dim {}",
+            x.len(),
+            self.input_dim
+        );
+        let (tx, rx) = bounded::<Result<Vec<f32>>>(1);
+        let req = InferRequest {
+            x,
+            enqueued: Instant::now(),
+            tx,
+        };
+        self.tx
+            .as_ref()
+            .expect("engine is running")
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("serving queue closed"))?;
+        Ok(PendingInference { rx })
+    }
+
+    /// Convenience: submit a whole set and wait for every response, in
+    /// submission order.
+    pub fn infer_many(&self, xs: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        let pending = xs
+            .into_iter()
+            .map(|x| self.submit(x))
+            .collect::<Result<Vec<_>>>()?;
+        pending.into_iter().map(|p| p.wait()).collect()
+    }
+
+    /// Close the queue, drain in-flight work, join workers, and return the
+    /// aggregate statistics.
+    pub fn shutdown(mut self) -> ServingStats {
+        self.tx.take(); // closes the queue; workers exit once drained
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        let elapsed = self.started.elapsed();
+        let inner = self.stats.lock().unwrap();
+        let mut latencies_ms: Vec<f64> =
+            inner.latencies.iter().map(|d| d.as_secs_f64() * 1e3).collect();
+        latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let requests = inner.latencies.len();
+        ServingStats {
+            backend: self.backend_name.clone(),
+            max_batch: self.opts.max_batch.max(1),
+            workers: self.resolved_workers,
+            requests,
+            batches: inner.batches,
+            errors: inner.errors,
+            elapsed,
+            infer_time: inner.infer_time,
+            throughput_rps: if elapsed.as_secs_f64() > 0.0 {
+                requests as f64 / elapsed.as_secs_f64()
+            } else {
+                0.0
+            },
+            mean_batch: if inner.batches == 0 {
+                0.0
+            } else {
+                inner.batched_examples as f64 / inner.batches as f64
+            },
+            latencies_ms,
+        }
+    }
+}
+
+impl Drop for ServingEngine {
+    fn drop(&mut self) {
+        self.tx.take();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{BackendInfo, InferenceBackend};
+
+    /// Deterministic stub: logits[c] = sum(x) + c (argmax = last class).
+    struct SumBackend {
+        dim: usize,
+        classes: usize,
+        fail: bool,
+    }
+
+    impl InferenceBackend for SumBackend {
+        fn name(&self) -> &str {
+            "sum-stub"
+        }
+        fn info(&self) -> BackendInfo {
+            BackendInfo {
+                input_dim: self.dim,
+                num_classes: self.classes,
+                native_batch: None,
+                logits: true,
+            }
+        }
+        fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
+            anyhow::ensure!(!self.fail, "stub failure");
+            let b = x.shape()[0];
+            let mut out = Vec::with_capacity(b * self.classes);
+            for i in 0..b {
+                let s: f32 = x.data()[i * self.dim..(i + 1) * self.dim].iter().sum();
+                for c in 0..self.classes {
+                    out.push(s + c as f32);
+                }
+            }
+            Tensor::new(vec![b, self.classes], out)
+        }
+    }
+
+    fn engine(workers: usize, max_batch: usize, fail: bool) -> ServingEngine {
+        let backend: crate::serve::SharedBackend = Arc::new(SumBackend {
+            dim: 3,
+            classes: 2,
+            fail,
+        });
+        ServingEngine::start(
+            backend,
+            ServeOptions {
+                max_batch,
+                workers,
+                queue_depth: 32,
+            },
+        )
+        .unwrap()
+    }
+
+    /// A backend that reports `logits: false` must be rejected at start.
+    struct NoLogits;
+    impl InferenceBackend for NoLogits {
+        fn name(&self) -> &str {
+            "no-logits"
+        }
+        fn info(&self) -> BackendInfo {
+            BackendInfo {
+                input_dim: 1,
+                num_classes: 1,
+                native_batch: None,
+                logits: false,
+            }
+        }
+        fn infer_batch(&self, _x: &Tensor) -> Result<Tensor> {
+            anyhow::bail!("no logits")
+        }
+    }
+
+    #[test]
+    fn start_rejects_logitless_backends() {
+        let backend: crate::serve::SharedBackend = Arc::new(NoLogits);
+        assert!(ServingEngine::start(backend, ServeOptions::default()).is_err());
+    }
+
+    #[test]
+    fn serves_requests_and_matches_direct_compute() {
+        let eng = engine(2, 4, false);
+        let mut pending = Vec::new();
+        for i in 0..20 {
+            pending.push(eng.submit(vec![i as f32, 1.0, 2.0]).unwrap());
+        }
+        for (i, p) in pending.into_iter().enumerate() {
+            let row = p.wait().unwrap();
+            let s = i as f32 + 3.0;
+            assert_eq!(row, vec![s, s + 1.0]);
+        }
+        let stats = eng.shutdown();
+        assert_eq!(stats.requests, 20);
+        assert_eq!(stats.errors, 0);
+        assert!(stats.batches >= 5, "max_batch 4 -> at least 5 batches");
+        assert!(stats.throughput_rps > 0.0);
+        assert!(stats.latency_ms(0.5) <= stats.latency_ms(0.99));
+        assert!(stats.mean_batch >= 1.0 && stats.mean_batch <= 4.0);
+    }
+
+    #[test]
+    fn infer_many_preserves_submission_order() {
+        let eng = engine(3, 8, false);
+        let xs: Vec<Vec<f32>> = (0..17).map(|i| vec![i as f32, 0.0, 0.0]).collect();
+        let out = eng.infer_many(xs).unwrap();
+        for (i, row) in out.iter().enumerate() {
+            assert_eq!(row[0], i as f32);
+        }
+        let stats = eng.shutdown();
+        assert_eq!(stats.requests, 17);
+    }
+
+    #[test]
+    fn backend_errors_propagate_per_request() {
+        let eng = engine(1, 4, true);
+        let p = eng.submit(vec![0.0; 3]).unwrap();
+        assert!(p.wait().is_err());
+        let stats = eng.shutdown();
+        assert_eq!(stats.errors, 1);
+    }
+
+    #[test]
+    fn rejects_wrong_request_dim() {
+        let eng = engine(1, 4, false);
+        assert!(eng.submit(vec![0.0; 5]).is_err());
+        let _ = eng.shutdown();
+    }
+
+    #[test]
+    fn stats_row_exports_report_fields() {
+        let eng = engine(2, 4, false);
+        let _ = eng.infer_many((0..8).map(|_| vec![0.0; 3]).collect()).unwrap();
+        let stats = eng.shutdown();
+        let row = stats.row();
+        assert_eq!(row.backend, "sum-stub");
+        assert_eq!(row.requests, 8);
+        assert_eq!(row.workers, 2);
+        assert!(row.latency_p50_ms <= row.latency_p99_ms);
+    }
+}

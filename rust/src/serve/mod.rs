@@ -1,0 +1,351 @@
+//! Unified inference serving: one seam over every forward path.
+//!
+//! The repo has three ways to run a deployed model — the AOT XLA graphs
+//! ([`xla::XlaBackend`]), the Rust crossbar simulator
+//! ([`crossbar::CrossbarBackend`]) and the exact quantized matmul
+//! reference ([`reference::ReferenceBackend`]). Before this module each
+//! caller (evaluator, examples, benches, tests) carried its own batching,
+//! padding and dispatch loop; now they all speak [`InferenceBackend`], and
+//! the batched request path is [`engine::ServingEngine`].
+//!
+//! # Backend contract (shapes and padding)
+//!
+//! * `infer_batch(x)` takes a tensor whose **leading axis is the batch**;
+//!   the remaining axes flatten row-major to the backend's
+//!   [`BackendInfo::input_dim`] features per example. It returns logits of
+//!   shape `(batch, num_classes)` with the same leading order.
+//! * Any batch size `>= 1` is accepted. Backends with a graph-fixed
+//!   [`BackendInfo::native_batch`] split the input into native-size chunks
+//!   and **zero-pad** the final chunk internally; pad rows never leak into
+//!   the returned logits. (This absorbs the fixed-shape wrap-fill logic
+//!   that used to live in `coordinator/evaluator.rs`.)
+//! * `eval_batch(x, y)` returns the number of correct predictions among
+//!   rows whose label is `>= 0`; rows labelled `-1` are padding and can
+//!   never count. The default implementation is `infer_batch` + host-side
+//!   argmax; the XLA eval-graph backend overrides it because its graph
+//!   emits a `correct` count instead of logits (its
+//!   [`BackendInfo::logits`] is `false`).
+//! * Host backends quantize activations **per example row**, so results
+//!   are invariant under batch composition: `infer_batch` over a
+//!   concatenation equals the concatenation of per-row calls bit-for-bit.
+//!   The serving engine's dynamic batching relies on this.
+
+pub mod crossbar;
+pub mod engine;
+pub mod reference;
+pub mod xla;
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::tensor::Tensor;
+use crate::util::pool::parallel_map;
+
+pub use self::crossbar::CrossbarBackend;
+pub use self::engine::{PendingInference, ServeOptions, ServingEngine, ServingStats};
+pub use self::reference::ReferenceBackend;
+pub use self::xla::XlaBackend;
+
+/// Capability metadata a backend reports about itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BackendInfo {
+    /// flattened features per example
+    pub input_dim: usize,
+    /// logits per example
+    pub num_classes: usize,
+    /// graph-fixed batch the backend pads/splits to internally; `None`
+    /// means any batch size runs natively
+    pub native_batch: Option<usize>,
+    /// whether `infer_batch` (logits) is available; `false` for
+    /// eval-graph-only backends that can only count correct predictions
+    pub logits: bool,
+}
+
+/// One forward path a deployed model can run on.
+pub trait InferenceBackend {
+    /// Short identity for reports, e.g. `"xla:mlp/eval"` or
+    /// `"crossbar@p99.9"`.
+    fn name(&self) -> &str;
+
+    /// Shape/capability metadata (see the module doc for the contract).
+    fn info(&self) -> BackendInfo;
+
+    /// Run a batch: `(b, ...) -> (b, num_classes)` logits.
+    fn infer_batch(&self, x: &Tensor) -> Result<Tensor>;
+
+    /// Count correct predictions for a labelled batch (`y[i] == -1` marks
+    /// padding rows that never count).
+    fn eval_batch(&self, x: &Tensor, y: &[i32]) -> Result<f64> {
+        let logits = self.infer_batch(x)?;
+        Ok(correct_by_argmax(&logits, y, self.info().num_classes))
+    }
+}
+
+/// A backend shared across serving-engine worker threads.
+pub type SharedBackend = std::sync::Arc<dyn InferenceBackend + Send + Sync>;
+
+/// Host-side argmax accuracy count (the default `eval_batch` body).
+pub fn correct_by_argmax(logits: &Tensor, y: &[i32], num_classes: usize) -> f64 {
+    let mut correct = 0.0;
+    for (row, &label) in y.iter().enumerate() {
+        if label < 0 {
+            continue;
+        }
+        let r = &logits.data()[row * num_classes..(row + 1) * num_classes];
+        let pred = (0..num_classes)
+            .max_by(|&a, &b| r[a].partial_cmp(&r[b]).unwrap_or(std::cmp::Ordering::Equal))
+            .unwrap_or(0);
+        if pred as i32 == label {
+            correct += 1.0;
+        }
+    }
+    correct
+}
+
+/// One dense (fully-connected) layer of the host backends' stack.
+#[derive(Debug, Clone)]
+pub struct DenseLayer {
+    pub name: String,
+    /// rank-2 weight matrix (fan-in x fan-out)
+    pub w: Tensor,
+    /// per-output bias (length = fan-out)
+    pub bias: Option<Tensor>,
+    pub relu: bool,
+}
+
+/// Pair a model's quantized-weight matrices with their biases into the
+/// dense stack the host backends run: ReLU between layers, none after the
+/// last. Only MLP-shaped models qualify (rank-2 weights, one bias each).
+pub fn dense_stack(weights: &[(String, Tensor)], biases: &[Tensor]) -> Result<Vec<DenseLayer>> {
+    anyhow::ensure!(!weights.is_empty(), "empty weight stack");
+    anyhow::ensure!(
+        weights.len() == biases.len(),
+        "dense stack wants one bias per weight matrix ({} weights, {} biases) \
+         — the host backends serve MLP-shaped models only",
+        weights.len(),
+        biases.len()
+    );
+    let n = weights.len();
+    let mut layers = Vec::with_capacity(n);
+    for (i, ((name, w), b)) in weights.iter().zip(biases).enumerate() {
+        anyhow::ensure!(
+            w.shape().len() == 2,
+            "layer {name:?} has rank {} weights; dense stacks are rank-2",
+            w.shape().len()
+        );
+        let cols = w.shape()[1];
+        anyhow::ensure!(
+            b.len() == cols,
+            "layer {name:?}: bias length {} != fan-out {cols}",
+            b.len()
+        );
+        if i > 0 {
+            anyhow::ensure!(
+                weights[i - 1].1.shape()[1] == w.shape()[0],
+                "layer {name:?}: fan-in {} does not chain from previous fan-out {}",
+                w.shape()[0],
+                weights[i - 1].1.shape()[1]
+            );
+        }
+        layers.push(DenseLayer {
+            name: name.clone(),
+            w: w.clone(),
+            bias: Some(b.clone()),
+            relu: i + 1 < n,
+        });
+    }
+    Ok(layers)
+}
+
+/// Accuracy of a backend over a whole dataset.
+#[derive(Debug, Clone, Copy)]
+pub struct AccuracyReport {
+    pub accuracy: f64,
+    pub examples: usize,
+}
+
+/// Evaluate a backend over `ds`: sequential batches sized to the backend's
+/// native batch (or a default for flexible backends). The final batch is
+/// simply short — padding to a graph's fixed shape is the backend's job
+/// (the single padding implementation, per the module contract). This is
+/// the one evaluation driver behind the CLI, the examples and the benches.
+pub fn accuracy(backend: &dyn InferenceBackend, ds: &Dataset) -> Result<AccuracyReport> {
+    let batch = backend
+        .info()
+        .native_batch
+        .unwrap_or_else(|| ds.len().clamp(1, 256));
+    let dim = ds.dim();
+    let mut correct = 0.0f64;
+    let mut pos = 0usize;
+    while pos < ds.len() {
+        let b = (ds.len() - pos).min(batch);
+        let mut x = vec![0.0f32; b * dim];
+        for r in 0..b {
+            ds.write_example(pos + r, &mut x[r * dim..(r + 1) * dim]);
+        }
+        let mut shape = vec![b];
+        shape.extend_from_slice(&ds.example_shape);
+        let xt = Tensor::new(shape, x)?;
+        correct += backend.eval_batch(&xt, &ds.labels[pos..pos + b])?;
+        pos += b;
+    }
+    Ok(AccuracyReport {
+        accuracy: if pos == 0 { 0.0 } else { correct / pos as f64 },
+        examples: pos,
+    })
+}
+
+/// Shared per-row batch driver for the host backends: validates the batch
+/// shape, splits rows into per-thread chunks (each with its own scratch
+/// state from `make_state`), and reassembles `(b, out_dim)` logits.
+/// `threads = 1` runs inline with no thread spawn — the right setting when
+/// a `ServingEngine` worker pool already provides the parallelism.
+pub(crate) fn rows_parallel<S, M, F>(
+    name: &str,
+    x: &Tensor,
+    input_dim: usize,
+    out_dim: usize,
+    threads: usize,
+    make_state: M,
+    per_row: F,
+) -> Result<Tensor>
+where
+    S: Send,
+    M: Fn() -> S + Sync,
+    F: Fn(&mut S, &[f32]) -> Vec<f32> + Sync,
+{
+    let shape = x.shape();
+    anyhow::ensure!(!shape.is_empty(), "batch tensor wants a leading axis");
+    let b = shape[0];
+    let dim: usize = shape[1..].iter().product();
+    anyhow::ensure!(
+        dim == input_dim,
+        "{name}: example dim {dim} != expected {input_dim}"
+    );
+    let data = x.data();
+    let run_chunk = |lo: usize, hi: usize| -> Vec<f32> {
+        let mut state = make_state();
+        let mut part = Vec::with_capacity((hi - lo) * out_dim);
+        for i in lo..hi {
+            part.extend(per_row(&mut state, &data[i * dim..(i + 1) * dim]));
+        }
+        part
+    };
+    let threads = threads.clamp(1, b.max(1));
+    let out = if threads == 1 {
+        run_chunk(0, b)
+    } else {
+        let chunk = b.div_ceil(threads);
+        let parts = parallel_map(b.div_ceil(chunk), threads, |ci| {
+            run_chunk(ci * chunk, ((ci + 1) * chunk).min(b))
+        });
+        let mut out = Vec::with_capacity(b * out_dim);
+        for p in parts {
+            out.extend(p);
+        }
+        out
+    };
+    Tensor::new(vec![b, out_dim], out)
+}
+
+/// Default intra-batch thread count for the host backends.
+pub(crate) fn default_intra_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    /// Test backend: predicts `floor(sum(features)) mod classes`.
+    struct StubBackend {
+        dim: usize,
+        classes: usize,
+    }
+
+    impl InferenceBackend for StubBackend {
+        fn name(&self) -> &str {
+            "stub"
+        }
+        fn info(&self) -> BackendInfo {
+            BackendInfo {
+                input_dim: self.dim,
+                num_classes: self.classes,
+                native_batch: None,
+                logits: true,
+            }
+        }
+        fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
+            let b = x.shape()[0];
+            let mut out = vec![0.0f32; b * self.classes];
+            for i in 0..b {
+                let s: f32 = x.data()[i * self.dim..(i + 1) * self.dim].iter().sum();
+                let cls = (s.abs().floor() as usize) % self.classes;
+                out[i * self.classes + cls] = 1.0;
+            }
+            Tensor::new(vec![b, self.classes], out)
+        }
+    }
+
+    #[test]
+    fn correct_by_argmax_skips_padding_labels() {
+        let logits = Tensor::new(vec![3, 2], vec![0.1, 0.9, 0.8, 0.2, 0.3, 0.7]).unwrap();
+        // row0 -> 1, row1 -> 0, row2 -> 1 (but padded out)
+        assert_eq!(correct_by_argmax(&logits, &[1, 0, -1], 2), 2.0);
+        assert_eq!(correct_by_argmax(&logits, &[0, 0, 1], 2), 2.0);
+    }
+
+    #[test]
+    fn default_eval_batch_matches_manual_argmax() {
+        let be = StubBackend { dim: 4, classes: 3 };
+        let x = Tensor::new(vec![2, 4], vec![0.6, 0.6, 0.0, 0.0, 1.2, 1.0, 0.0, 0.0]).unwrap();
+        // sums 1.2 -> class 1, 2.2 -> class 2
+        assert_eq!(be.eval_batch(&x, &[1, 2]).unwrap(), 2.0);
+        assert_eq!(be.eval_batch(&x, &[1, -1]).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn accuracy_counts_only_real_examples() {
+        let ds = synthetic::mnist(50, 3);
+        let be = StubBackend {
+            dim: 784,
+            classes: 10,
+        };
+        let rep = accuracy(&be, &ds).unwrap();
+        assert_eq!(rep.examples, 50);
+        assert!((0.0..=1.0).contains(&rep.accuracy));
+        // deterministic backend + dataset -> deterministic accuracy
+        let rep2 = accuracy(&be, &ds).unwrap();
+        assert_eq!(rep.accuracy, rep2.accuracy);
+    }
+
+    #[test]
+    fn dense_stack_validates_shapes() {
+        let w1 = Tensor::zeros(vec![8, 5]);
+        let w2 = Tensor::zeros(vec![5, 3]);
+        let b1 = Tensor::zeros(vec![5]);
+        let b2 = Tensor::zeros(vec![3]);
+        let stack = dense_stack(
+            &[("fc1/w".into(), w1.clone()), ("fc2/w".into(), w2.clone())],
+            &[b1.clone(), b2.clone()],
+        )
+        .unwrap();
+        assert_eq!(stack.len(), 2);
+        assert!(stack[0].relu && !stack[1].relu);
+
+        // bias length mismatch
+        assert!(dense_stack(
+            &[("fc1/w".into(), w1.clone()), ("fc2/w".into(), w2.clone())],
+            &[b2.clone(), b1.clone()],
+        )
+        .is_err());
+        // broken chain
+        let w_bad = Tensor::zeros(vec![7, 3]);
+        assert!(dense_stack(
+            &[("fc1/w".into(), w1), ("fc2/w".into(), w_bad)],
+            &[b1, b2],
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,252 @@
+//! Exact quantized-matmul reference backend.
+//!
+//! The closed form every other forward path approximates: activations
+//! quantized to 8-bit codes (per example row), weights quantized to 8-bit
+//! dynamic fixed point (Eq. 1–2), and the product accumulated exactly in
+//! the integer domain before one scale back to real units. At lossless ADC
+//! resolution the crossbar simulator recombines to the same integers, so
+//! the two backends agree bit-for-bit — the cross-backend agreement tests
+//! lean on that. Previously this logic lived as ad-hoc `exact_matmul`
+//! duplicates inside test modules; it is now a real, reusable module.
+
+use anyhow::Result;
+
+use crate::quant;
+use crate::reram::sim::act_quantize;
+use crate::tensor::Tensor;
+
+use super::{BackendInfo, DenseLayer, InferenceBackend};
+
+/// One quantized dense layer: signed integer codes + the shared Qstep.
+struct RefLayer {
+    rows: usize,
+    cols: usize,
+    /// `sign * code` per element, row-major (fan-in x fan-out)
+    qcodes: Vec<i64>,
+    step: f32,
+    bias: Option<Vec<f32>>,
+    relu: bool,
+}
+
+/// Exact quantized inference over a dense stack.
+pub struct ReferenceBackend {
+    name: String,
+    layers: Vec<RefLayer>,
+    input_dim: usize,
+    num_classes: usize,
+    intra_threads: usize,
+}
+
+impl ReferenceBackend {
+    pub fn new(name: &str, stack: &[DenseLayer]) -> Result<Self> {
+        anyhow::ensure!(!stack.is_empty(), "empty dense stack");
+        let mut layers = Vec::with_capacity(stack.len());
+        for l in stack {
+            anyhow::ensure!(
+                l.w.shape().len() == 2,
+                "layer {:?} is not rank-2",
+                l.name
+            );
+            let (rows, cols) = (l.w.shape()[0], l.w.shape()[1]);
+            let q = quant::quantize(&l.w);
+            let qcodes = q
+                .codes
+                .iter()
+                .zip(&q.signs)
+                .map(|(&c, &s)| s as i64 * c as i64)
+                .collect();
+            layers.push(RefLayer {
+                rows,
+                cols,
+                qcodes,
+                step: q.step,
+                bias: l.bias.as_ref().map(|b| b.data().to_vec()),
+                relu: l.relu,
+            });
+        }
+        Ok(ReferenceBackend {
+            name: name.to_string(),
+            input_dim: layers[0].rows,
+            num_classes: layers[layers.len() - 1].cols,
+            layers,
+            intra_threads: super::default_intra_threads(),
+        })
+    }
+
+    /// Cap the threads one `infer_batch` call may use (see
+    /// [`super::CrossbarBackend::with_intra_threads`]).
+    pub fn with_intra_threads(mut self, threads: usize) -> Self {
+        self.intra_threads = threads.max(1);
+        self
+    }
+
+    /// One example through the whole stack (integer-exact per layer).
+    fn infer_one(&self, row: &[f32], acc: &mut Vec<i64>) -> Vec<f32> {
+        let mut act: Vec<f32> = row.to_vec();
+        for layer in &self.layers {
+            let (codes, a_step) = act_quantize(&act);
+            let scale = layer.step * a_step;
+            acc.clear();
+            acc.resize(layer.cols, 0);
+            for (k, &c) in codes.iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                let c = c as i64;
+                let wrow = &layer.qcodes[k * layer.cols..(k + 1) * layer.cols];
+                for (a, &w) in acc.iter_mut().zip(wrow) {
+                    *a += c * w;
+                }
+            }
+            act.clear();
+            act.extend(acc.iter().map(|&v| v as f32 * scale));
+            if let Some(bias) = &layer.bias {
+                for (v, &b) in act.iter_mut().zip(bias) {
+                    *v += b;
+                }
+            }
+            if layer.relu {
+                for v in act.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+        }
+        act
+    }
+}
+
+impl InferenceBackend for ReferenceBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn info(&self) -> BackendInfo {
+        BackendInfo {
+            input_dim: self.input_dim,
+            num_classes: self.num_classes,
+            native_batch: None,
+            logits: true,
+        }
+    }
+
+    fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
+        super::rows_parallel(
+            &self.name,
+            x,
+            self.input_dim,
+            self.num_classes,
+            self.intra_threads,
+            Vec::new,
+            |acc, row| self.infer_one(row, acc),
+        )
+    }
+}
+
+/// Standalone exact quantized matmul in real units, with **batch-global**
+/// activation quantization (the semantic of `reram::sim::forward` and the
+/// AOT crossbar graphs): quantize `w` (Eq. 2), quantize `x` over the whole
+/// batch, accumulate codes exactly, scale back. This is the oracle the
+/// simulator's lossless tests compare against.
+pub fn quantized_matmul(x: &Tensor, w: &Tensor) -> Result<Tensor> {
+    anyhow::ensure!(x.shape().len() == 2 && w.shape().len() == 2, "rank-2 only");
+    let (b, rows) = (x.shape()[0], x.shape()[1]);
+    let cols = w.shape()[1];
+    anyhow::ensure!(rows == w.shape()[0], "inner dims {rows} vs {}", w.shape()[0]);
+    let q = quant::quantize(w);
+    let (codes, a_step) = act_quantize(x.data());
+    let scale = q.step * a_step;
+    let mut out = vec![0.0f32; b * cols];
+    for i in 0..b {
+        let mut acc = vec![0i64; cols];
+        for k in 0..rows {
+            let c = codes[i * rows + k] as i64;
+            if c == 0 {
+                continue;
+            }
+            for j in 0..cols {
+                let idx = k * cols + j;
+                acc[j] += c * q.signs[idx] as i64 * q.codes[idx] as i64;
+            }
+        }
+        for j in 0..cols {
+            out[i * cols + j] = acc[j] as f32 * scale;
+        }
+    }
+    Tensor::new(vec![b, cols], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::dense_stack;
+    use crate::util::rng::Rng;
+
+    fn toy_stack(rng: &mut Rng) -> Vec<DenseLayer> {
+        let w1 = Tensor::new(vec![12, 7], rng.normal_vec(84, 0.2)).unwrap();
+        let w2 = Tensor::new(vec![7, 4], rng.normal_vec(28, 0.2)).unwrap();
+        let b1 = Tensor::new(vec![7], rng.normal_vec(7, 0.05)).unwrap();
+        let b2 = Tensor::new(vec![4], rng.normal_vec(4, 0.05)).unwrap();
+        dense_stack(
+            &[("fc1/w".into(), w1), ("fc2/w".into(), w2)],
+            &[b1, b2],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn batching_is_composition_invariant() {
+        let mut rng = Rng::new(5);
+        let stack = toy_stack(&mut rng);
+        let be = ReferenceBackend::new("ref", &stack).unwrap();
+        let x = Tensor::new(vec![6, 12], (0..72).map(|_| rng.next_f32()).collect()).unwrap();
+        let all = be.infer_batch(&x).unwrap();
+        for i in 0..6 {
+            let row = Tensor::new(vec![1, 12], x.data()[i * 12..(i + 1) * 12].to_vec()).unwrap();
+            let one = be.infer_batch(&row).unwrap();
+            assert_eq!(&all.data()[i * 4..(i + 1) * 4], one.data(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn quantized_matmul_matches_float_reference_within_quant_error() {
+        let mut rng = Rng::new(9);
+        let w = Tensor::new(vec![30, 8], rng.normal_vec(240, 0.2)).unwrap();
+        let x = Tensor::new(vec![3, 30], (0..90).map(|_| rng.next_f32()).collect()).unwrap();
+        let got = quantized_matmul(&x, &w).unwrap();
+        // float reference on the recovered quantized operands
+        let qw = quant::quantize(&w).recover();
+        let (codes, step) = act_quantize(x.data());
+        for i in 0..3 {
+            for j in 0..8 {
+                let mut want = 0.0f64;
+                for k in 0..30 {
+                    want += (codes[i * 30 + k] as f64 * step as f64) * qw.at2(k, j) as f64;
+                }
+                let got = got.at2(i, j) as f64;
+                assert!(
+                    (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                    "({i},{j}): {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn relu_and_bias_applied_between_layers() {
+        // single negative weight, large positive bias: relu must keep the
+        // biased value, not the raw negative product
+        let w1 = Tensor::new(vec![1, 1], vec![-0.5]).unwrap();
+        let w2 = Tensor::new(vec![1, 1], vec![1.0]).unwrap();
+        let b1 = Tensor::new(vec![1], vec![2.0]).unwrap();
+        let b2 = Tensor::new(vec![1], vec![0.0]).unwrap();
+        let stack = dense_stack(
+            &[("a".into(), w1), ("b".into(), w2)],
+            &[b1, b2],
+        )
+        .unwrap();
+        let be = ReferenceBackend::new("ref", &stack).unwrap();
+        let out = be.infer_batch(&Tensor::new(vec![1, 1], vec![1.0]).unwrap()).unwrap();
+        // layer1: -0.5 * 1 + 2.0 = 1.5 (relu keeps), layer2: ~1.5
+        assert!(out.data()[0] > 1.0, "got {}", out.data()[0]);
+    }
+}

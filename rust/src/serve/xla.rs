@@ -1,0 +1,240 @@
+//! XLA backend: AOT-compiled graphs behind the backend trait.
+//!
+//! Two graph flavors exist in the manifest:
+//!
+//! * **logits graphs** (`reram_paper`, `reram_lossless`, ...): inputs are
+//!   named state tensors plus a trailing `x`, output is `logits`. These
+//!   support [`InferenceBackend::infer_batch`].
+//! * the per-model **eval graph**: inputs are the eval-ordered state
+//!   (QW TP ST MASK) plus `x`/`y`, outputs `loss`/`correct`. It cannot
+//!   produce logits ([`super::BackendInfo::logits`] is `false`), but its
+//!   `eval_batch` is exact and cheap.
+//!
+//! Both flavors have a graph-fixed batch shape; this backend owns the
+//! split/zero-pad logic that previously lived in `coordinator/evaluator.rs`
+//! (pad rows carry label `-1`, so they never count as correct).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::state::ModelState;
+use crate::runtime::{Engine, Executable, Manifest};
+use crate::tensor::{IntTensor, Tensor};
+
+use super::{correct_by_argmax, BackendInfo, InferenceBackend};
+
+#[derive(Clone, Copy)]
+enum Mode {
+    /// graph maps (state..., x) -> logits at `output index`
+    Logits { idx: usize },
+    /// eval graph maps (state..., x, y) -> correct count at `output index`
+    Eval { idx: usize },
+}
+
+/// An AOT graph + resident state literals, padded/chunked to the graph's
+/// fixed batch shape.
+pub struct XlaBackend {
+    name: String,
+    exe: Arc<Executable>,
+    /// state literals in the graph's input order (everything before x/y)
+    fixed: Vec<::xla::Literal>,
+    mode: Mode,
+    native_batch: usize,
+    input_dim: usize,
+    num_classes: usize,
+}
+
+impl XlaBackend {
+    /// Wrap the model's `eval` graph (accuracy counting only).
+    pub fn for_eval(
+        engine: &Engine,
+        manifest: &Manifest,
+        model: &str,
+        state: &ModelState,
+    ) -> Result<XlaBackend> {
+        let entry = manifest.model(model)?;
+        let graph = entry.graph("eval")?;
+        let exe = engine.load(&graph.path).context("compiling eval graph")?;
+        let idx = graph.output_index("correct")?;
+        Ok(XlaBackend {
+            name: format!("xla:{model}/eval"),
+            exe,
+            fixed: state.to_eval_literals()?,
+            mode: Mode::Eval { idx },
+            native_batch: entry.batch,
+            input_dim: entry.input_numel(),
+            num_classes: entry.num_classes,
+        })
+    }
+
+    /// Wrap a logits graph (e.g. `reram_paper`, `reram_lossless`): state
+    /// inputs are matched to the model state **by name** from the graph's
+    /// input specs, `x` must be the trailing input.
+    pub fn for_graph(
+        engine: &Engine,
+        manifest: &Manifest,
+        model: &str,
+        graph_name: &str,
+        state: &ModelState,
+    ) -> Result<XlaBackend> {
+        let entry = manifest.model(model)?;
+        let graph = entry.graph(graph_name)?;
+        let exe = engine
+            .load(&graph.path)
+            .with_context(|| format!("compiling {model}/{graph_name}"))?;
+        let idx = graph.output_index("logits")?;
+
+        // manifest spec names carry the group prefix, e.g. "qw:fc1/w"
+        let mut by_name: Vec<(String, &Tensor)> = Vec::new();
+        for (p, t) in entry.qw.iter().zip(&state.qws) {
+            by_name.push((format!("qw:{}", p.name), t));
+        }
+        for (p, t) in entry.tp.iter().zip(&state.tps) {
+            by_name.push((format!("tp:{}", p.name), t));
+        }
+        for (p, t) in entry.st.iter().zip(&state.sts) {
+            by_name.push((format!("st:{}", p.name), t));
+        }
+
+        anyhow::ensure!(!graph.inputs.is_empty(), "graph {graph_name} has no inputs");
+        let last = graph.inputs.len() - 1;
+        anyhow::ensure!(
+            graph.inputs[last].name == "x",
+            "graph {graph_name}: expected trailing input \"x\", got {:?}",
+            graph.inputs[last].name
+        );
+        let mut fixed = Vec::with_capacity(last);
+        for spec in &graph.inputs[..last] {
+            let t = by_name
+                .iter()
+                .find(|(n, _)| *n == spec.name)
+                .map(|(_, t)| *t)
+                .with_context(|| {
+                    format!(
+                        "graph {graph_name} input {:?} not found in model state",
+                        spec.name
+                    )
+                })?;
+            fixed.push(t.to_literal()?);
+        }
+        let x_spec = &graph.inputs[last];
+        anyhow::ensure!(!x_spec.shape.is_empty(), "x input is rank-0");
+        let num_classes = graph.outputs[idx]
+            .shape
+            .last()
+            .copied()
+            .unwrap_or(entry.num_classes);
+        Ok(XlaBackend {
+            name: format!("xla:{model}/{graph_name}"),
+            exe,
+            fixed,
+            mode: Mode::Logits { idx },
+            native_batch: x_spec.shape[0],
+            input_dim: x_spec.shape[1..].iter().product(),
+            num_classes,
+        })
+    }
+
+    /// Split `x` into native-batch chunks, zero-padding the last; calls
+    /// `run` with (chunk literal, rows valid in this chunk).
+    fn for_chunks<F>(&self, x: &Tensor, mut run: F) -> Result<()>
+    where
+        F: FnMut(&Tensor, usize, usize) -> Result<()>,
+    {
+        let shape = x.shape();
+        anyhow::ensure!(!shape.is_empty(), "batch tensor wants a leading axis");
+        let b = shape[0];
+        let dim: usize = shape[1..].iter().product();
+        anyhow::ensure!(
+            dim == self.input_dim,
+            "{}: example dim {dim} != expected {}",
+            self.name,
+            self.input_dim
+        );
+        let data = x.data();
+        let mut chunk_shape = vec![self.native_batch];
+        chunk_shape.extend_from_slice(&shape[1..]);
+        let mut pos = 0usize;
+        while pos < b {
+            let valid = (b - pos).min(self.native_batch);
+            let mut chunk = vec![0.0f32; self.native_batch * dim];
+            chunk[..valid * dim].copy_from_slice(&data[pos * dim..(pos + valid) * dim]);
+            let xt = Tensor::new(chunk_shape.clone(), chunk)?;
+            run(&xt, pos, valid)?;
+            pos += valid;
+        }
+        Ok(())
+    }
+}
+
+impl InferenceBackend for XlaBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn info(&self) -> BackendInfo {
+        BackendInfo {
+            input_dim: self.input_dim,
+            num_classes: self.num_classes,
+            native_batch: Some(self.native_batch),
+            logits: matches!(self.mode, Mode::Logits { .. }),
+        }
+    }
+
+    fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
+        let Mode::Logits { idx } = self.mode else {
+            anyhow::bail!(
+                "{}: eval graph exposes no logits (use eval_batch, or a reram_* graph)",
+                self.name
+            );
+        };
+        let b = x.shape()[0];
+        let mut out = Vec::with_capacity(b * self.num_classes);
+        self.for_chunks(x, |xt, _pos, valid| {
+            let x_lit = xt.to_literal()?;
+            let mut inputs: Vec<&::xla::Literal> = self.fixed.iter().collect();
+            inputs.push(&x_lit);
+            let outs = self.exe.run(&inputs)?;
+            let logits = Tensor::from_literal(&outs[idx])?;
+            out.extend_from_slice(&logits.data()[..valid * self.num_classes]);
+            Ok(())
+        })?;
+        Tensor::new(vec![b, self.num_classes], out)
+    }
+
+    fn eval_batch(&self, x: &Tensor, y: &[i32]) -> Result<f64> {
+        anyhow::ensure!(
+            y.len() == x.shape()[0],
+            "{}: {} labels for batch of {}",
+            self.name,
+            y.len(),
+            x.shape()[0]
+        );
+        match self.mode {
+            Mode::Logits { .. } => {
+                let logits = self.infer_batch(x)?;
+                Ok(correct_by_argmax(&logits, y, self.num_classes))
+            }
+            Mode::Eval { idx } => {
+                let mut correct = 0.0f64;
+                self.for_chunks(x, |xt, pos, valid| {
+                    // pad labels with -1: never equal to an argmax in 0..C
+                    let mut labels = vec![-1i32; self.native_batch];
+                    labels[..valid].copy_from_slice(&y[pos..pos + valid]);
+                    let y_lit = IntTensor::new(vec![self.native_batch], labels)?.to_literal()?;
+                    let x_lit = xt.to_literal()?;
+                    let mut inputs: Vec<&::xla::Literal> =
+                        Vec::with_capacity(self.fixed.len() + 2);
+                    inputs.extend(self.fixed.iter());
+                    inputs.push(&x_lit);
+                    inputs.push(&y_lit);
+                    let outs = self.exe.run(&inputs)?;
+                    correct += outs[idx].to_vec::<f32>()?[0] as f64;
+                    Ok(())
+                })?;
+                Ok(correct)
+            }
+        }
+    }
+}

@@ -87,6 +87,27 @@ impl<T> Receiver<T> {
             q = self.shared.cond.wait(q).unwrap();
         }
     }
+
+    /// Dynamic-batch receive: blocks until at least one item is available,
+    /// then drains whatever else is already queued, up to `max` items.
+    /// `None` once closed and drained. Safe to call from several consumer
+    /// threads sharing one `Arc<Receiver>` (the serving-engine workers).
+    pub fn recv_batch(&self, max: usize) -> Option<Vec<T>> {
+        let max = max.max(1);
+        let mut q = self.shared.queue.lock().unwrap();
+        loop {
+            if !q.items.is_empty() {
+                let take = q.items.len().min(max);
+                let items: Vec<T> = q.items.drain(..take).collect();
+                self.shared.cond.notify_all();
+                return Some(items);
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.shared.cond.wait(q).unwrap();
+        }
+    }
 }
 
 impl<T> Drop for Receiver<T> {
@@ -222,6 +243,29 @@ mod tests {
         let (tx, rx) = bounded(1);
         drop(rx);
         assert!(tx.send(1).is_err());
+    }
+
+    #[test]
+    fn recv_batch_drains_up_to_max_then_closes() {
+        let (tx, rx) = bounded(16);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        // first call takes what is queued, bounded by max
+        assert_eq!(rx.recv_batch(3), Some(vec![0, 1, 2]));
+        assert_eq!(rx.recv_batch(8), Some(vec![3, 4]));
+        drop(tx);
+        assert_eq!(rx.recv_batch(4), None);
+    }
+
+    #[test]
+    fn recv_batch_wakes_on_late_send() {
+        let (tx, rx) = bounded(4);
+        let consumer = std::thread::spawn(move || rx.recv_batch(10));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        tx.send(7usize).unwrap();
+        drop(tx);
+        assert_eq!(consumer.join().unwrap(), Some(vec![7]));
     }
 
     #[test]

@@ -1,0 +1,146 @@
+//! Integration: cross-backend agreement and serving-engine batching.
+//!
+//! The exact quantized reference and the crossbar simulator share the same
+//! quantization points (per-row activations, Eq. 1–2 weights) and — at
+//! lossless ADC resolution — the same integer-domain arithmetic, so they
+//! must agree within float-cast tolerance on random MLP states. The
+//! batched serving engine must be a pure transport: whatever batches it
+//! assembles, outputs are bit-identical to direct `infer_batch` calls.
+
+use std::sync::Arc;
+
+use bitslice_reram::reram::ResolutionPolicy;
+use bitslice_reram::serve::{
+    accuracy, dense_stack, CrossbarBackend, DenseLayer, InferenceBackend, ReferenceBackend,
+    ServeOptions, ServingEngine, SharedBackend,
+};
+use bitslice_reram::tensor::Tensor;
+use bitslice_reram::util::check::{check, ensure};
+use bitslice_reram::util::rng::Rng;
+
+fn random_stack(rng: &mut Rng) -> Vec<DenseLayer> {
+    let d_in = 1 + rng.below(80);
+    let hidden = 1 + rng.below(50);
+    let classes = 2 + rng.below(8);
+    let w1 = Tensor::new(vec![d_in, hidden], rng.normal_vec(d_in * hidden, 0.15)).unwrap();
+    let w2 = Tensor::new(vec![hidden, classes], rng.normal_vec(hidden * classes, 0.15)).unwrap();
+    let b1 = Tensor::new(vec![hidden], rng.normal_vec(hidden, 0.03)).unwrap();
+    let b2 = Tensor::new(vec![classes], rng.normal_vec(classes, 0.03)).unwrap();
+    dense_stack(&[("fc1/w".into(), w1), ("fc2/w".into(), w2)], &[b1, b2]).unwrap()
+}
+
+fn random_batch(rng: &mut Rng, b: usize, dim: usize) -> Tensor {
+    Tensor::new(vec![b, dim], (0..b * dim).map(|_| rng.next_f32()).collect()).unwrap()
+}
+
+/// Property: reference and crossbar-at-lossless agree on random MLPs.
+#[test]
+fn reference_and_crossbar_agree_at_lossless_resolution() {
+    check(10, |rng| {
+        let stack = random_stack(rng);
+        let d_in = stack[0].w.shape()[0];
+        let classes = stack[1].w.shape()[1];
+        let reference =
+            ReferenceBackend::new("ref", &stack).map_err(|e| e.to_string())?;
+        let xbar = CrossbarBackend::new("xbar", &stack, ResolutionPolicy::Lossless)
+            .map_err(|e| e.to_string())?;
+        let b = 1 + rng.below(6);
+        let x = random_batch(rng, b, d_in);
+        let want = reference.infer_batch(&x).map_err(|e| e.to_string())?;
+        let got = xbar.infer_batch(&x).map_err(|e| e.to_string())?;
+        ensure(got.shape() == [b, classes], "output shape")?;
+        for (g, w) in got.data().iter().zip(want.data()) {
+            // same integer arithmetic, two float cast points: allow a hair
+            let tol = 1e-5 * w.abs().max(1.0);
+            ensure(
+                (g - w).abs() <= tol,
+                format!("crossbar {g} vs reference {w}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Reduced (clipping) resolution must *not* silently equal lossless on a
+/// dense model — the agreement above is meaningful, not vacuous.
+#[test]
+fn clipping_resolution_diverges_on_dense_weights() {
+    let mut rng = Rng::new(23);
+    let w1 = Tensor::new(vec![64, 16], vec![0.5; 64 * 16]).unwrap();
+    let w2 = Tensor::new(vec![16, 4], vec![0.5; 64]).unwrap();
+    let b1 = Tensor::zeros(vec![16]);
+    let b2 = Tensor::zeros(vec![4]);
+    let stack = dense_stack(&[("a".into(), w1), ("b".into(), w2)], &[b1, b2]).unwrap();
+    let lossless = CrossbarBackend::new("l", &stack, ResolutionPolicy::Lossless).unwrap();
+    let starved = lossless.rebit("s", [1; 4]);
+    let x = random_batch(&mut rng, 2, 64);
+    let a = lossless.infer_batch(&x).unwrap();
+    let b = starved.infer_batch(&x).unwrap();
+    assert_ne!(a.data(), b.data());
+}
+
+/// The serving engine's dynamic batches must reproduce direct backend
+/// calls bit-for-bit, for both host backends.
+#[test]
+fn serving_engine_is_bit_identical_to_direct_calls() {
+    let mut rng = Rng::new(31);
+    let stack = random_stack(&mut rng);
+    let d_in = stack[0].w.shape()[0];
+    let classes = stack[1].w.shape()[1];
+    let backends: Vec<SharedBackend> = vec![
+        Arc::new(ReferenceBackend::new("ref", &stack).unwrap()),
+        Arc::new(CrossbarBackend::new("xbar", &stack, ResolutionPolicy::Lossless).unwrap()),
+    ];
+    let n = 24;
+    let x = random_batch(&mut rng, n, d_in);
+    for backend in backends {
+        let direct = backend.infer_batch(&x).unwrap();
+        for (workers, max_batch) in [(1usize, 5usize), (3, 4), (4, 64)] {
+            let eng = ServingEngine::start(
+                backend.clone(),
+                ServeOptions {
+                    max_batch,
+                    workers,
+                    queue_depth: 8,
+                },
+            )
+            .unwrap();
+            let requests: Vec<Vec<f32>> = (0..n)
+                .map(|i| x.data()[i * d_in..(i + 1) * d_in].to_vec())
+                .collect();
+            let out = eng.infer_many(requests).unwrap();
+            let stats = eng.shutdown();
+            assert_eq!(stats.requests, n);
+            assert_eq!(stats.errors, 0);
+            for (i, row) in out.iter().enumerate() {
+                assert_eq!(
+                    row.as_slice(),
+                    &direct.data()[i * classes..(i + 1) * classes],
+                    "{} row {i} (workers {workers}, max_batch {max_batch})",
+                    backend.name()
+                );
+            }
+        }
+    }
+}
+
+/// The shared accuracy driver gives the same answer for the same backend
+/// regardless of the (flexible) batch slicing it chooses.
+#[test]
+fn accuracy_driver_consistent_across_backends_on_synthetic_data() {
+    let ds = bitslice_reram::data::synthetic::mnist(128, 9);
+    let mut rng = Rng::new(41);
+    let w1 = Tensor::new(vec![784, 32], rng.normal_vec(784 * 32, 0.05)).unwrap();
+    let w2 = Tensor::new(vec![32, 10], rng.normal_vec(320, 0.1)).unwrap();
+    let b1 = Tensor::zeros(vec![32]);
+    let b2 = Tensor::zeros(vec![10]);
+    let stack = dense_stack(&[("fc1/w".into(), w1), ("fc2/w".into(), w2)], &[b1, b2]).unwrap();
+    let reference = ReferenceBackend::new("ref", &stack).unwrap();
+    let xbar = CrossbarBackend::new("xbar", &stack, ResolutionPolicy::Lossless).unwrap();
+    let ra = accuracy(&reference, &ds).unwrap();
+    let xa = accuracy(&xbar, &ds).unwrap();
+    assert_eq!(ra.examples, 128);
+    assert_eq!(xa.examples, 128);
+    // bit-identical logits -> identical argmax accuracy
+    assert_eq!(ra.accuracy, xa.accuracy);
+}
