@@ -75,6 +75,10 @@ fn main() -> Result<()> {
         deploy.crossbars, deploy.lossless_bits, deploy.deployed_bits
     );
     println!("{}", report::adc_table(&deploy.rows));
+    println!(
+        "{}",
+        report::plan_table("per-layer deployment (p99.9 on each layer's census)", &deploy.plan_rows)
+    );
 
     // 3) functional validation on the test set — every forward path is an
     //    InferenceBackend answering the same accuracy() call

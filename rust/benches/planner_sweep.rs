@@ -1,0 +1,211 @@
+//! §Perf + reproduction: the per-layer ADC deployment planner.
+//!
+//! Builds an MNIST-scale MLP whose weights are bit-slice sparse *by
+//! construction* (the regime Bl1 training reaches: discriminative weights
+//! live in the two low slices, the MSB group is nearly empty), then runs
+//! `reram::planner::plan_deployment` against the synthetic MNIST holdout
+//! across a sweep of accuracy budgets. Verifies the acceptance bar — at a
+//! 0.5 pt budget the planner lands on an operating point at least as cheap
+//! (by `energy::deployment_cost`) as the paper's hand-picked uniform
+//! `[3,3,3,1]` — times the search, and writes the per-layer `PlanRow`
+//! report to `BENCH_planner.json`.
+//!
+//! Run: `cargo bench --bench planner_sweep`
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Instant;
+
+use bitslice_reram::data::{synthetic, Dataset};
+use bitslice_reram::report;
+use bitslice_reram::reram::planner::{plan_deployment, PlannerConfig, PAPER_BITS};
+use bitslice_reram::reram::{energy, mapper};
+use bitslice_reram::serve::{self, dense_stack, DenseLayer, ReferenceBackend};
+use bitslice_reram::tensor::Tensor;
+
+/// A class-template MLP, bit-slice sparse by construction.
+///
+/// Layer 1 (784 -> 11): column `c < 10` holds, per 128-row tile, the two
+/// most positive and two most negative (class-mean - global-mean) pixels
+/// at code 12 = 0b1100 — slice 1 only, tile-column currents <= 6, so the
+/// discriminative weights clip nowhere at the paper's 3-bit low-slice
+/// ADCs. Column 10 holds the single dynamic-range pin (code 255); its
+/// output is killed by a large negative bias and feeds nothing, so MSB
+/// clipping on the pin never reaches the logits. Layer 2 (11 -> 10) is the
+/// identity on the class units — a single code-255 cell per column, whose
+/// MSB clipping is a uniform monotone rescale that preserves the argmax.
+fn planted_stack(train: &Dataset) -> Vec<DenseLayer> {
+    let dim = train.dim();
+    let classes = train.num_classes;
+    let hidden = classes + 1; // class units + the range-pin unit
+
+    let mut mean = vec![0.0f64; classes * dim];
+    let mut count = vec![0usize; classes];
+    for i in 0..train.len() {
+        let c = train.labels[i] as usize;
+        count[c] += 1;
+        for (j, &v) in train.features[i * dim..(i + 1) * dim].iter().enumerate() {
+            mean[c * dim + j] += v as f64;
+        }
+    }
+    for c in 0..classes {
+        let inv = 1.0 / count[c].max(1) as f64;
+        for j in 0..dim {
+            mean[c * dim + j] *= inv;
+        }
+    }
+    let mut gmean = vec![0.0f64; dim];
+    for c in 0..classes {
+        for j in 0..dim {
+            gmean[j] += mean[c * dim + j] / classes as f64;
+        }
+    }
+
+    let small = 12.0f32 / 256.0; // code 12 at qstep 2^-8 (pin = 1.0)
+    let mut w1 = vec![0.0f32; dim * hidden];
+    for c in 0..classes {
+        let mut t0 = 0;
+        while t0 < dim {
+            let t1 = (t0 + 128).min(dim);
+            let mut idx: Vec<usize> = (t0..t1).collect();
+            idx.sort_by(|&a, &b| {
+                let da = mean[c * dim + a] - gmean[a];
+                let db = mean[c * dim + b] - gmean[b];
+                db.partial_cmp(&da).unwrap()
+            });
+            for &j in idx.iter().take(2) {
+                w1[j * hidden + c] = small;
+            }
+            for &j in idx.iter().rev().take(2) {
+                w1[j * hidden + c] = -small;
+            }
+            t0 = t1;
+        }
+    }
+    w1[classes] = 1.0; // row 0, pin column: sets the layer's dynamic range
+
+    let mut b1 = vec![0.0f32; hidden];
+    b1[classes] = -1e4; // the pin unit never survives the ReLU
+
+    let mut w2 = vec![0.0f32; hidden * classes];
+    for c in 0..classes {
+        w2[c * classes + c] = 1.0;
+    }
+
+    dense_stack(
+        &[
+            ("fc1/w".into(), Tensor::new(vec![dim, hidden], w1).unwrap()),
+            ("fc2/w".into(), Tensor::new(vec![hidden, classes], w2).unwrap()),
+        ],
+        &[
+            Tensor::new(vec![hidden], b1).unwrap(),
+            Tensor::new(vec![classes], vec![0.0; classes]).unwrap(),
+        ],
+    )
+    .unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let train = synthetic::mnist(2000, 11);
+    let holdout = synthetic::mnist(512, 12);
+    let stack = planted_stack(&train);
+
+    let mapped = mapper::map_model(&[
+        ("fc1/w".into(), stack[0].w.clone()),
+        ("fc2/w".into(), stack[1].w.clone()),
+    ])?;
+    let paper_cost = energy::deployment_cost(&mapped, PAPER_BITS);
+
+    harness::section("holdout baseline (exact quantized reference)");
+    let reference = ReferenceBackend::new("reference", &stack)?;
+    let base_acc = serve::accuracy(&reference, &holdout)?;
+    println!(
+        "reference accuracy on {}: {:.2}% ({} examples)",
+        holdout.source,
+        base_acc.accuracy * 100.0,
+        base_acc.examples
+    );
+
+    harness::section("planner sweep over accuracy budgets");
+    println!("budget (pt) | accuracy | evals | energy saving | vs uniform [3,3,3,1] energy");
+    let mut headline = None;
+    let mut sweep_ms = Vec::new();
+    for budget_pts in [0.0f64, 0.5, 2.0, 100.0] {
+        // eval_examples 0: search on the full holdout, so every
+        // accept/reject margin is measured on the same set the acceptance
+        // assertions below use
+        let cfg = PlannerConfig {
+            accuracy_budget: budget_pts / 100.0,
+            eval_examples: 0,
+            ..PlannerConfig::default()
+        };
+        let t0 = Instant::now();
+        let res = plan_deployment(&stack, &holdout, &cfg)?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        sweep_ms.push(ms);
+        let (e, _, _) = res.savings();
+        println!(
+            "{:>11.1} | {:>7.2}% | {:>5} | {:>12.1}x | {:.3} ({:.1} ms)",
+            budget_pts,
+            res.accuracy * 100.0,
+            res.evaluations,
+            e,
+            res.cost.energy / paper_cost.energy,
+            ms,
+        );
+        if budget_pts == 0.5 {
+            headline = Some(res);
+        }
+    }
+    let headline = headline.expect("0.5 pt budget is in the sweep");
+
+    harness::section("selected plan at the 0.5 pt budget");
+    let plan_rows = energy::layer_costs(&mapped, &headline.plan);
+    println!("{}", report::plan_table("planned per-layer deployment", &plan_rows));
+    println!("plan: {}", headline.plan);
+
+    // Acceptance bar: within a 0.5 pt drop budget the planner must find an
+    // operating point at least as cheap as the paper's uniform [3,3,3,1].
+    assert!(
+        headline.accuracy >= headline.baseline_accuracy - 0.005 - 1e-12,
+        "budget violated: {} vs baseline {}",
+        headline.accuracy,
+        headline.baseline_accuracy
+    );
+    assert!(
+        headline.cost.energy <= paper_cost.energy,
+        "planned energy {} exceeds uniform [3,3,3,1] energy {}",
+        headline.cost.energy,
+        paper_cost.energy
+    );
+    println!(
+        "OK: planned energy {:.0} <= uniform [3,3,3,1] energy {:.0} within 0.5 pt budget",
+        headline.cost.energy, paper_cost.energy
+    );
+
+    harness::section("plan roll-up cost");
+    harness::bench(
+        "energy::plan_cost (784x11 + 11x10 mapping)",
+        std::time::Duration::from_millis(300),
+        || {
+            let _ = std::hint::black_box(energy::plan_cost(&mapped, &headline.plan));
+        },
+    );
+
+    let json = report::planner_json(
+        &plan_rows,
+        headline.baseline_accuracy,
+        headline.accuracy,
+        0.005,
+        headline.savings(),
+        headline.evaluations,
+    );
+    std::fs::write("BENCH_planner.json", json.to_string())?;
+    println!(
+        "wrote BENCH_planner.json ({} layers, search {:.1} ms)",
+        plan_rows.len(),
+        sweep_ms[1]
+    );
+    Ok(())
+}

@@ -76,6 +76,10 @@ fn main() -> anyhow::Result<()> {
         let reference = ReferenceBackend::new("reference", &stack)?;
         let xbar = CrossbarBackend::new("crossbar@p99.9", &stack, ResolutionPolicy::Percentile(0.999))?;
         let paper = xbar.rebit("crossbar@paper(3,3,3,1)", [3, 3, 3, 1]);
+        assert!(
+            std::sync::Arc::ptr_eq(xbar.mapped(), paper.mapped()),
+            "rebit must share the mapping"
+        );
         for backend in [&reference as &dyn InferenceBackend, &xbar, &paper] {
             harness::bench(
                 &format!("{} infer_batch(64)", backend.name()),
@@ -85,6 +89,17 @@ fn main() -> anyhow::Result<()> {
                 },
             );
         }
+
+        // ADC sweep setup cost: `rebit` shares the mapped tiles via Arc
+        // instead of deep-cloning them, so a sweep point costs roughly a
+        // plan clone (microseconds), not a 784x300x4x2 tile copy.
+        harness::bench(
+            "rebit (shared-mapping sweep point)",
+            Duration::from_millis(300),
+            || {
+                let _ = std::hint::black_box(xbar.rebit("sweep", [3, 3, 3, 1]));
+            },
+        );
     }
 
     harness::section("analysis cost");

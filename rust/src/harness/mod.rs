@@ -13,7 +13,8 @@ use crate::coordinator::evaluator::{self, EvalResult};
 use crate::coordinator::metrics::MetricsLog;
 use crate::coordinator::{checkpoint, TrainOutcome, Trainer};
 use crate::data::Dataset;
-use crate::report::MethodRow;
+use crate::report::{MethodRow, PlanRow};
+use crate::reram::planner::DeploymentPlan;
 use crate::reram::{energy, mapper, resolution, ResolutionPolicy};
 use crate::runtime::{Engine, Manifest};
 use crate::sparsity::{self, SliceStats, TracePoint};
@@ -164,16 +165,26 @@ pub fn reproduce_fig2(
 }
 
 /// Deployment report for a trained state: crossbar mapping, measured ADC
-/// requirements, Table-3 savings.
+/// requirements (whole-model and per-layer), Table-3 savings.
 pub struct DeployReport {
+    /// fabricated crossbars (programmed tiles only — matches the billing
+    /// in `energy::deployment_cost` and the plan rows below)
     pub crossbars: usize,
-    /// lossless per-slice bits (LSB-first)
+    /// fully-zero tiles the mapper laid out but no deployment fabricates
+    pub unprogrammed_tiles: usize,
+    /// lossless per-slice bits (LSB-first, whole-model census)
     pub lossless_bits: [u32; 4],
-    /// percentile-policy bits actually deployed (LSB-first)
+    /// percentile-policy bits actually deployed (LSB-first, whole-model)
     pub deployed_bits: [u32; 4],
     pub rows: Vec<energy::AdcSavingRow>,
     /// whole-model savings (energy, time, area) vs the 8-bit baseline
     pub savings: (f64, f64, f64),
+    /// per-layer plan: `policy` applied to each layer's own census
+    pub plan: DeploymentPlan,
+    /// per-layer savings rows of `plan` (the `PlanRow` report)
+    pub plan_rows: Vec<PlanRow>,
+    /// savings of `plan` vs the 8-bit baseline
+    pub plan_savings: (f64, f64, f64),
 }
 
 pub fn deploy_report(
@@ -188,11 +199,19 @@ pub fn deploy_report(
         .map(|k| energy::saving_row(k, deployed_bits[k]))
         .collect();
     let savings = energy::savings_vs_baseline(&mapped, deployed_bits);
+    let plan = DeploymentPlan::from_policy(&mapped, policy);
+    let plan_rows = energy::layer_costs(&mapped, &plan);
+    let plan_savings = energy::plan_savings_vs_baseline(&mapped, &plan);
+    let cost = energy::plan_cost(&mapped, &plan);
     Ok(DeployReport {
-        crossbars: mapped.total_crossbars(),
+        crossbars: cost.crossbars,
+        unprogrammed_tiles: cost.skipped_tiles,
         lossless_bits,
         deployed_bits,
         rows,
         savings,
+        plan,
+        plan_rows,
+        plan_savings,
     })
 }

@@ -9,6 +9,9 @@
 //! eval       --checkpoint runs/mlp-bl1/checkpoint
 //! analyze    --checkpoint ...            sparsity census + required ADC bits
 //! deploy     --checkpoint ... [--percentile 0.999]   crossbar mapping + Table 3
+//!            [--plan-budget 0.5 --plan-examples 256]  per-layer ADC planner
+//!            (budget in accuracy percentage points; writes <out>/plan.json;
+//!            the planner search itself runs for mlp checkpoints only)
 //! reproduce  table1|table2|table3|fig2 [--quick] [table2: --model vgg11]
 //! bench-adc                              ADC cost model sweep (1..8 bits)
 //! ```
@@ -23,6 +26,7 @@ use bitslice_reram::coordinator::{checkpoint, ModelState};
 use bitslice_reram::data::Dataset;
 use bitslice_reram::harness;
 use bitslice_reram::report;
+use bitslice_reram::reram::planner::{self, PlannerConfig};
 use bitslice_reram::reram::{energy, AdcModel, ResolutionPolicy};
 use bitslice_reram::runtime::{Engine, Manifest};
 use bitslice_reram::serve::{self, CrossbarBackend, InferenceBackend, ReferenceBackend};
@@ -160,6 +164,10 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         .str_opt("checkpoint")
         .context("--checkpoint is required")?;
     let pct = args.f32_or("percentile", 0.999)? as f64;
+    // planner knobs: accuracy-drop budget in percentage points and the
+    // held-out example cap per candidate evaluation
+    let plan_budget = args.f32_or("plan-budget", 0.5)? as f64 / 100.0;
+    let plan_examples = args.usize_or("plan-examples", 256)?;
     let cfg = RunConfig::from_args(args)?;
     args.finish()?;
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
@@ -170,8 +178,9 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         ResolutionPolicy::Percentile(pct),
     )?;
     println!(
-        "deployment of {} ({}): {} crossbars (128x128, 2-bit cells, differential)",
-        meta.model, meta.method, deploy.crossbars
+        "deployment of {} ({}): {} crossbars (128x128, 2-bit cells, differential; \
+         {} fully-zero tiles not fabricated)",
+        meta.model, meta.method, deploy.crossbars, deploy.unprogrammed_tiles
     );
     println!(
         "lossless ADC bits (LSB..MSB): {:?}; deployed at p{:.1}: {:?}",
@@ -184,9 +193,19 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     println!(
         "whole-model ADC savings vs 8-bit baseline: energy {e:.1}x, time {t:.2}x, area {a:.1}x"
     );
+    println!(
+        "{}",
+        report::plan_table(
+            &format!("per-layer deployment at p{:.1} (each layer's own census)", pct * 100.0),
+            &deploy.plan_rows
+        )
+    );
+    let (pe, pt, pa) = deploy.plan_savings;
+    println!("per-layer plan savings: energy {pe:.1}x, time {pt:.2}x, area {pa:.1}x");
 
     // Functional validation through the unified backend seam: deployed
-    // crossbar resolution vs the exact quantized reference on the test set.
+    // crossbar resolution vs the exact quantized reference on the test
+    // set, then the budgeted per-layer planner search.
     if meta.model == "mlp" {
         let test_ds = Dataset::auto(
             "mnist",
@@ -208,6 +227,58 @@ fn cmd_deploy(args: &Args) -> Result<()> {
             xa.accuracy * 100.0,
             reference.name(),
             ra.accuracy * 100.0,
+        );
+
+        let planner_cfg = PlannerConfig {
+            accuracy_budget: plan_budget,
+            eval_examples: plan_examples,
+            ..PlannerConfig::default()
+        };
+        // reuse xbar's mapping and the reference's quantized weights —
+        // the search itself never re-maps
+        let search = planner::plan_deployment_from(&xbar, &reference, &test_ds, &planner_cfg)?;
+        if !search.within_budget {
+            println!(
+                "warning: no plan within the {:.2} pt budget (best drop {:.2} pt)",
+                plan_budget * 100.0,
+                (search.baseline_accuracy - search.accuracy) * 100.0
+            );
+        }
+        let mapped = xbar.mapped();
+        let plan_rows = energy::layer_costs(mapped, &search.plan);
+        println!(
+            "{}",
+            report::plan_table(
+                &format!(
+                    "planned deployment (budget {:.2} pt, {} candidate evaluations)",
+                    plan_budget * 100.0,
+                    search.evaluations
+                ),
+                &plan_rows
+            )
+        );
+        let (se, st, sa) = search.savings();
+        println!(
+            "planned accuracy {:.2}% (reference {:.2}%); savings: energy {se:.1}x, \
+             time {st:.2}x, area {sa:.1}x",
+            search.accuracy * 100.0,
+            search.baseline_accuracy * 100.0,
+        );
+        let json = report::planner_json(
+            &plan_rows,
+            search.baseline_accuracy,
+            search.accuracy,
+            plan_budget,
+            search.savings(),
+            search.evaluations,
+        );
+        std::fs::create_dir_all(&cfg.out_dir)?;
+        let path = cfg.out_dir.join("plan.json");
+        std::fs::write(&path, json.to_string())?;
+        println!("plan report written to {}", path.display());
+    } else {
+        println!(
+            "(planner skipped: --plan-budget/--plan-examples drive the MLP host stack only)"
         );
     }
     Ok(())
@@ -305,6 +376,10 @@ fn reproduce_table3(args: &Args) -> Result<()> {
         println!("{}", report::adc_table(&deploy.rows));
         let (e, t, a) = deploy.savings;
         println!("whole-model savings: energy {e:.1}x, time {t:.2}x, area {a:.1}x");
+        println!(
+            "{}",
+            report::plan_table("per-layer operating point (p99.9 per layer)", &deploy.plan_rows)
+        );
 
         // accuracy at the deployed resolutions, via the backend seam
         let test_ds = Dataset::auto(

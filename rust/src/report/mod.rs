@@ -148,6 +148,83 @@ pub fn serving_json(rows: &[ServingRow]) -> Json {
     )
 }
 
+/// One row of the per-layer deployment-plan report: a layer's per-slice
+/// ADC resolutions plus its savings vs the 8-bit baseline — exactly
+/// [`energy::layer_costs`]'s output, consumed directly (like
+/// [`adc_table`] consumes [`AdcSavingRow`]). `adc_bits` is LSB-first (see
+/// the bit-order docs in [`crate::reram`]); the rendered table lists the
+/// paper's MSB-first `XB_k` columns.
+///
+/// [`energy::layer_costs`]: crate::reram::energy::layer_costs
+pub use crate::reram::energy::LayerCost as PlanRow;
+
+/// Render the per-layer deployment plan (markdown).
+pub fn plan_table(title: &str, rows: &[PlanRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("### {title}\n\n"));
+    out.push_str(
+        "| Layer | XB_3 | XB_2 | XB_1 | XB_0 | Crossbars | Energy Saving | Speedup | Area Saving |\n\
+         |-------|------|------|------|------|-----------|---------------|---------|-------------|\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {:.1}x | {:.2}x | {:.1}x |\n",
+            r.layer,
+            r.adc_bits[3],
+            r.adc_bits[2],
+            r.adc_bits[1],
+            r.adc_bits[0],
+            r.crossbars,
+            r.energy_saving,
+            r.time_saving,
+            r.area_saving,
+        ));
+    }
+    out
+}
+
+/// Serialize a planner run as the `BENCH_planner.json` document.
+pub fn planner_json(
+    rows: &[PlanRow],
+    baseline_accuracy: f64,
+    accuracy: f64,
+    accuracy_budget: f64,
+    savings: (f64, f64, f64),
+    evaluations: usize,
+) -> Json {
+    let layers = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("layer", s(&r.layer)),
+                (
+                    "adc_bits_lsb_first",
+                    Json::Arr(r.adc_bits.iter().map(|&b| num(b as f64)).collect()),
+                ),
+                ("crossbars", num(r.crossbars as f64)),
+                ("energy_saving", num(r.energy_saving)),
+                ("time_saving", num(r.time_saving)),
+                ("area_saving", num(r.area_saving)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("baseline_accuracy", num(baseline_accuracy)),
+        ("accuracy", num(accuracy)),
+        ("accuracy_budget", num(accuracy_budget)),
+        ("evaluations", num(evaluations as f64)),
+        (
+            "savings",
+            obj(vec![
+                ("energy", num(savings.0)),
+                ("time", num(savings.1)),
+                ("area", num(savings.2)),
+            ]),
+        ),
+        ("layers", Json::Arr(layers)),
+    ])
+}
+
 /// Per-slice resolution summary (feeds Table 3's "Resolution" column from
 /// the measured mapping instead of asserting it).
 pub fn resolution_summary(bits_lsb_first: [u32; N_SLICES]) -> String {
@@ -240,6 +317,43 @@ mod tests {
         assert_eq!(row.get("errors").unwrap().as_usize(), Some(7));
         let lat = row.get("latency_ms").unwrap();
         assert_eq!(lat.get("p99").unwrap().as_f64(), Some(9.4));
+    }
+
+    fn plan_row() -> PlanRow {
+        PlanRow {
+            layer: "fc1/w".into(),
+            adc_bits: [3, 3, 2, 1], // LSB-first
+            crossbars: 42,
+            energy: 120.0,
+            time: 40.0,
+            area: 21.0,
+            energy_saving: 16.3,
+            time_saving: 2.91,
+            area_saving: 2.0,
+        }
+    }
+
+    #[test]
+    fn plan_table_renders_msb_first() {
+        let t = plan_table("plan", &[plan_row()]);
+        // XB_3 column (MSB) shows the LSB-first array's last entry
+        assert!(t.contains("| fc1/w | 1 | 2 | 3 | 3 | 42 | 16.3x | 2.91x | 2.0x |"), "{t}");
+        assert!(t.contains("XB_3"));
+    }
+
+    #[test]
+    fn planner_json_roundtrips() {
+        let j = planner_json(&[plan_row()], 0.9767, 0.9741, 0.005, (16.3, 2.91, 2.0), 37);
+        let back = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("baseline_accuracy").unwrap().as_f64(), Some(0.9767));
+        assert_eq!(back.get("evaluations").unwrap().as_usize(), Some(37));
+        let layers = back.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers[0].get("layer").unwrap().as_str(), Some("fc1/w"));
+        let bits = layers[0].get("adc_bits_lsb_first").unwrap().as_arr().unwrap();
+        assert_eq!(bits.len(), 4);
+        assert_eq!(bits[3].as_usize(), Some(1));
+        let savings = back.get("savings").unwrap();
+        assert_eq!(savings.get("energy").unwrap().as_f64(), Some(16.3));
     }
 
     #[test]

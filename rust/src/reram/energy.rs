@@ -4,12 +4,21 @@
 //! saving of the reduced-resolution ADC against the ISAAC 8-bit baseline).
 //! The model-level roll-up weighs each slice group by its ADC conversion
 //! count (columns x activation bit-planes), which is what an end-to-end
-//! deployment would see.
+//! deployment would see. Unprogrammed (fully-zero) tiles — e.g. the empty
+//! negative-sign grid of an all-positive layer — are never fabricated, so
+//! they contribute no crossbar, no conversions and no area.
+//!
+//! Costs can be rolled up at one uniform per-slice resolution
+//! ([`deployment_cost`]) or per layer under a
+//! [`super::planner::DeploymentPlan`] ([`plan_cost`], [`layer_costs`]).
+//! Bit arrays are LSB-first; see the bit-order convention in the
+//! [`crate::reram`] module docs.
 
 use crate::quant::N_SLICES;
 
 use super::adc::AdcModel;
-use super::mapper::MappedModel;
+use super::mapper::{LayerMapping, MappedModel};
+use super::planner::DeploymentPlan;
 
 /// One row of Table 3.
 #[derive(Debug, Clone)]
@@ -38,10 +47,10 @@ pub fn saving_row(group: usize, bits: u32) -> AdcSavingRow {
 /// Whole-model deployment summary.
 #[derive(Debug, Clone)]
 pub struct DeploymentCost {
-    /// per-slice (LSB-first) ADC resolutions used
-    pub adc_bits: [u32; N_SLICES],
-    /// total crossbars
+    /// fabricated crossbars (programmed tiles only)
     pub crossbars: usize,
+    /// fully-zero tiles excluded from the roll-up
+    pub skipped_tiles: usize,
     /// total ADC energy, relative units (sum over conversions of power)
     pub energy: f64,
     /// total sensing time, relative units
@@ -51,51 +60,157 @@ pub struct DeploymentCost {
     pub area: f64,
 }
 
-/// Roll up a mapped model at the given per-slice resolutions.
-pub fn deployment_cost(model: &MappedModel, adc_bits: [u32; N_SLICES]) -> DeploymentCost {
-    let mut energy = 0.0;
-    let mut time = 0.0;
-    let mut area = 0.0;
+/// Per-layer roll-up row under a plan: the layer's resolutions, crossbar
+/// count and savings against the 8-bit baseline on the same mapping.
+#[derive(Debug, Clone)]
+pub struct LayerCost {
+    pub layer: String,
+    /// per-slice resolutions this layer deploys, LSB-first
+    pub adc_bits: [u32; N_SLICES],
+    pub crossbars: usize,
+    pub energy: f64,
+    pub time: f64,
+    pub area: f64,
+    pub energy_saving: f64,
+    pub time_saving: f64,
+    pub area_saving: f64,
+}
+
+/// ADC conversions (columns x 8 activation bit-planes) of slice group `k`
+/// of one layer, counting programmed tiles only. This is the weight of one
+/// (layer, slice) group in the energy roll-up — the planner scores its
+/// candidate moves by `conversions * (power(bits) - power(bits - 1))`.
+pub fn slice_conversions(layer: &LayerMapping, k: usize) -> f64 {
+    let (pos, neg) = &layer.grids[k];
+    [pos, neg]
+        .iter()
+        .flat_map(|g| &g.tiles)
+        .filter(|t| t.nonzero_cells() > 0)
+        .map(|t| (t.cols() * 8) as f64)
+        .sum()
+}
+
+/// Tally one layer at per-slice resolutions `bits`:
+/// (crossbars, skipped_tiles, energy, time, area).
+fn tally_layer(layer: &LayerMapping, bits: &[u32; N_SLICES]) -> (usize, usize, f64, f64, f64) {
     let mut crossbars = 0usize;
-    for layer in &model.layers {
-        for (k, (pos, neg)) in layer.grids.iter().enumerate() {
-            let bits = adc_bits[k];
-            for grid in [pos, neg] {
-                for tile in &grid.tiles {
-                    crossbars += 1;
-                    // one ADC per crossbar; conversions = columns x 8 planes
-                    let conversions = (tile.cols() * 8) as f64;
-                    energy += conversions * AdcModel::power(bits);
-                    time += conversions * AdcModel::sensing_time(bits);
-                    area += AdcModel::area(bits);
+    let mut skipped = 0usize;
+    let (mut energy, mut time, mut area) = (0.0, 0.0, 0.0);
+    for (k, (pos, neg)) in layer.grids.iter().enumerate() {
+        let b = bits[k];
+        for grid in [pos, neg] {
+            for tile in &grid.tiles {
+                if tile.nonzero_cells() == 0 {
+                    skipped += 1;
+                    continue;
                 }
+                crossbars += 1;
+                // one ADC per crossbar; conversions = columns x 8 planes
+                let conversions = (tile.cols() * 8) as f64;
+                energy += conversions * AdcModel::power(b);
+                time += conversions * AdcModel::sensing_time(b);
+                area += AdcModel::area(b);
             }
         }
     }
-    DeploymentCost {
-        adc_bits,
-        crossbars,
-        energy,
-        time,
-        area,
+    (crossbars, skipped, energy, time, area)
+}
+
+/// Roll up a mapped model under a per-layer deployment plan.
+pub fn plan_cost(model: &MappedModel, plan: &DeploymentPlan) -> DeploymentCost {
+    assert_eq!(
+        plan.layers.len(),
+        model.layers.len(),
+        "plan has {} layers, mapping has {}",
+        plan.layers.len(),
+        model.layers.len()
+    );
+    let mut out = DeploymentCost {
+        crossbars: 0,
+        skipped_tiles: 0,
+        energy: 0.0,
+        time: 0.0,
+        area: 0.0,
+    };
+    for (layer, pl) in model.layers.iter().zip(&plan.layers) {
+        let (xb, skipped, e, t, a) = tally_layer(layer, &pl.adc_bits);
+        out.crossbars += xb;
+        out.skipped_tiles += skipped;
+        out.energy += e;
+        out.time += t;
+        out.area += a;
+    }
+    out
+}
+
+/// Roll up a mapped model at uniform per-slice resolutions (every layer
+/// deploys the same `adc_bits`) — thin wrapper over [`plan_cost`].
+pub fn deployment_cost(model: &MappedModel, adc_bits: [u32; N_SLICES]) -> DeploymentCost {
+    plan_cost(model, &DeploymentPlan::uniform_for(model, adc_bits))
+}
+
+/// Savings ratio with a zero-cost guard: 1.0 when both sides are zero
+/// (nothing deployed on either), infinite when only ours is.
+pub(crate) fn ratio(base: f64, ours: f64) -> f64 {
+    if ours == 0.0 {
+        if base == 0.0 {
+            1.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        base / ours
     }
 }
 
-/// Savings of a deployment against the 8-bit baseline on the same mapping.
-pub fn savings_vs_baseline(model: &MappedModel, adc_bits: [u32; N_SLICES]) -> (f64, f64, f64) {
-    let ours = deployment_cost(model, adc_bits);
-    let base = deployment_cost(model, [8, 8, 8, 8]);
+/// Per-layer cost rows for a plan, each with savings vs the 8-bit baseline
+/// on the same layer — the body of the `PlanRow` deployment report.
+pub fn layer_costs(model: &MappedModel, plan: &DeploymentPlan) -> Vec<LayerCost> {
+    assert_eq!(plan.layers.len(), model.layers.len(), "plan/mapping layer count");
+    model
+        .layers
+        .iter()
+        .zip(&plan.layers)
+        .map(|(layer, pl)| {
+            let (xb, _, e, t, a) = tally_layer(layer, &pl.adc_bits);
+            let (_, _, be, bt, ba) = tally_layer(layer, &[super::adc::BASELINE_BITS; N_SLICES]);
+            LayerCost {
+                layer: layer.name.clone(),
+                adc_bits: pl.adc_bits,
+                crossbars: xb,
+                energy: e,
+                time: t,
+                area: a,
+                energy_saving: ratio(be, e),
+                time_saving: ratio(bt, t),
+                area_saving: ratio(ba, a),
+            }
+        })
+        .collect()
+}
+
+/// Savings of a per-layer plan against the 8-bit baseline on the same
+/// mapping: (energy, time, area).
+pub fn plan_savings_vs_baseline(model: &MappedModel, plan: &DeploymentPlan) -> (f64, f64, f64) {
+    let ours = plan_cost(model, plan);
+    let base = deployment_cost(model, [super::adc::BASELINE_BITS; N_SLICES]);
     (
-        base.energy / ours.energy,
-        base.time / ours.time,
-        base.area / ours.area,
+        ratio(base.energy, ours.energy),
+        ratio(base.time, ours.time),
+        ratio(base.area, ours.area),
     )
+}
+
+/// Savings of a uniform deployment against the 8-bit baseline.
+pub fn savings_vs_baseline(model: &MappedModel, adc_bits: [u32; N_SLICES]) -> (f64, f64, f64) {
+    plan_savings_vs_baseline(model, &DeploymentPlan::uniform_for(model, adc_bits))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::reram::mapper::map_model;
+    use crate::reram::resolution::{self, ResolutionPolicy};
     use crate::tensor::Tensor;
     use crate::util::rng::Rng;
 
@@ -146,5 +261,92 @@ mod tests {
         let c2 = deployment_cost(&m2, [3, 3, 3, 1]);
         assert!((c2.energy / c1.energy - 2.0).abs() < 1e-9);
         assert_eq!(c2.crossbars, 2 * c1.crossbars);
+    }
+
+    #[test]
+    fn zero_tiles_are_not_billed() {
+        // all-positive layer: every negative-sign grid is fully zero; no
+        // array is fabricated for it, so it must not count as a crossbar
+        // nor contribute ADC conversions or area
+        let w = Tensor::new(vec![64, 32], vec![0.5; 64 * 32]).unwrap();
+        let m = map_model(&[("p".into(), w)]).unwrap();
+        let cost = deployment_cost(&m, [3, 3, 3, 1]);
+        assert_eq!(cost.crossbars, 4, "one pos tile per slice group");
+        assert_eq!(cost.skipped_tiles, 4, "one empty neg tile per group");
+
+        // the billed census matches the nonzero-cell-bearing tiles exactly
+        let programmed: usize = m.layers[0]
+            .grids
+            .iter()
+            .flat_map(|(p, n)| [p, n])
+            .flat_map(|g| &g.tiles)
+            .filter(|t| t.nonzero_cells() > 0)
+            .count();
+        assert_eq!(cost.crossbars, programmed);
+
+        // mixed-sign layer: everything is programmed, nothing skipped
+        let mut rng = Rng::new(9);
+        let w = Tensor::new(vec![64, 32], rng.normal_vec(64 * 32, 0.2)).unwrap();
+        let m = map_model(&[("m".into(), w)]).unwrap();
+        let cost = deployment_cost(&m, [3, 3, 3, 1]);
+        assert_eq!(cost.crossbars, 8);
+        assert_eq!(cost.skipped_tiles, 0);
+    }
+
+    #[test]
+    fn plan_cost_matches_uniform_wrapper_and_orders_by_bits() {
+        let m = mapped();
+        let uniform = deployment_cost(&m, [3, 3, 3, 1]);
+        let plan = DeploymentPlan::uniform_for(&m, [3, 3, 3, 1]);
+        let via_plan = plan_cost(&m, &plan);
+        assert_eq!(uniform.crossbars, via_plan.crossbars);
+        assert!((uniform.energy - via_plan.energy).abs() < 1e-9);
+        assert!((uniform.time - via_plan.time).abs() < 1e-9);
+        assert!((uniform.area - via_plan.area).abs() < 1e-9);
+
+        // lowering any layer's bits can only lower energy and time
+        let mut cheaper = plan.clone();
+        cheaper.layers[0].adc_bits = [2, 2, 2, 1];
+        let c = plan_cost(&m, &cheaper);
+        assert!(c.energy < via_plan.energy);
+        assert!(c.time < via_plan.time);
+    }
+
+    #[test]
+    fn layer_costs_roll_up_to_plan_cost() {
+        let mut rng = Rng::new(5);
+        let w1 = Tensor::new(vec![200, 60], rng.normal_vec(200 * 60, 0.1)).unwrap();
+        let w2 = Tensor::new(vec![60, 30], rng.normal_vec(60 * 30, 0.1)).unwrap();
+        let m = map_model(&[("a".into(), w1), ("b".into(), w2)]).unwrap();
+        let plan = DeploymentPlan::from_policy(&m, ResolutionPolicy::Percentile(0.999));
+        let rows = layer_costs(&m, &plan);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].layer, "a");
+        let total = plan_cost(&m, &plan);
+        let e: f64 = rows.iter().map(|r| r.energy).sum();
+        let xb: usize = rows.iter().map(|r| r.crossbars).sum();
+        assert!((e - total.energy).abs() < 1e-9);
+        assert_eq!(xb, total.crossbars);
+        for r in &rows {
+            assert!(r.energy_saving >= 1.0, "{}: {}", r.layer, r.energy_saving);
+        }
+    }
+
+    #[test]
+    fn slice_conversions_count_programmed_columns() {
+        let w = Tensor::new(vec![64, 32], vec![0.5; 64 * 32]).unwrap();
+        let m = map_model(&[("p".into(), w)]).unwrap();
+        for k in 0..N_SLICES {
+            // only the pos tile (32 columns) is programmed: 32 x 8 planes
+            assert_eq!(slice_conversions(&m.layers[0], k), 256.0);
+        }
+        // consistency with the resolution census column count
+        let currents = resolution::layer_slice_currents(&m.layers[0]);
+        for k in 0..N_SLICES {
+            assert_eq!(
+                slice_conversions(&m.layers[0], k),
+                (currents[k].sums.len() * 8) as f64
+            );
+        }
     }
 }

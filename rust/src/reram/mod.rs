@@ -18,15 +18,37 @@
 //!                    kernel and is cross-checked against it).
 //! * [`energy`]     — whole-deployment roll-up: energy / latency / area
 //!                    vs the ISAAC-style 8-bit-ADC baseline.
+//! * [`planner`]    — per-layer ADC deployment planner: searches a
+//!                    [`planner::DeploymentPlan`] (per-layer x per-slice
+//!                    resolutions) under an accuracy-drop budget, scored by
+//!                    the [`energy`] cost model.
+//!
+//! # Bit-order convention (LSB-first `adc_bits` vs MSB-first `XB_k`)
+//!
+//! Every per-slice array in this codebase — `adc_bits: [u32; N_SLICES]`,
+//! [`planner::PlanLayer::adc_bits`], the censuses in [`resolution`], the
+//! grids in [`mapper::LayerMapping`] — is indexed **LSB-first**: index
+//! `k` is the slice holding weight bits `2k` and `2k+1`, so `k = 0` is the
+//! least-significant slice and `k = 3` the most-significant. The paper's
+//! Table 3 labels groups **MSB-first** as `XB_3 … XB_0`, where `XB_3` is
+//! the MSB group; conveniently `XB_k` *is* index `k` — the label number
+//! and the LSB-first index coincide — but rendered tables list `XB_3`
+//! first while arrays print `[b0, b1, b2, b3]`. The paper's operating
+//! point "1-bit MSB, 3-bit rest" is therefore written `[3, 3, 3, 1]`
+//! ([`planner::PAPER_BITS`]) in array form. Report emitters
+//! (`report::adc_table`, `report::plan_table`, `resolution_summary`)
+//! always render MSB-first with explicit `XB_k` labels.
 
 pub mod adc;
 pub mod crossbar;
 pub mod energy;
 pub mod mapper;
+pub mod planner;
 pub mod resolution;
 pub mod sim;
 
 pub use adc::AdcModel;
 pub use crossbar::{Crossbar, XBAR_COLS, XBAR_ROWS};
 pub use mapper::{LayerMapping, MappedModel};
+pub use planner::{DeploymentPlan, PlannerConfig};
 pub use resolution::ResolutionPolicy;

@@ -1,0 +1,495 @@
+//! Per-layer ADC deployment planner.
+//!
+//! The paper finds its headline operating point — 1-bit ADCs on the MSB
+//! crossbar group, 3-bit on the rest — by hand from a whole-model current
+//! census. This module automates and refines that search *per layer*: each
+//! layer's own column-current census ([`super::resolution`]) sets a
+//! starting [`DeploymentPlan`], and a greedy descent then lowers one
+//! (layer, slice-group) resolution at a time wherever held-out accuracy
+//! (the crossbar simulator evaluated through `serve::accuracy` against the
+//! exact quantized [`crate::serve::ReferenceBackend`] baseline) stays
+//! within a configurable drop budget. Candidate moves are scored by their
+//! [`super::energy`] saving, so the cheapest profitable reduction is
+//! always tried first. The paper's hand-picked point ([`PAPER_BITS`])
+//! serves as a warm start: when it already holds the budget, the search
+//! jumps there and can only improve on it.
+//!
+//! All bit arrays are LSB-first (see the bit-order convention in the
+//! [`crate::reram`] module docs).
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::quant::N_SLICES;
+use crate::serve::{self, CrossbarBackend, DenseLayer, ReferenceBackend};
+
+use super::adc::AdcModel;
+use super::energy;
+use super::mapper::MappedModel;
+use super::resolution::{self, ResolutionPolicy};
+
+/// The paper's Table-3 operating point, LSB-first: 3-bit ADCs on
+/// XB_0..XB_2, 1-bit on the MSB group XB_3.
+pub const PAPER_BITS: [u32; N_SLICES] = [3, 3, 3, 1];
+
+/// Per-slice ADC resolutions of one layer, LSB-first.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanLayer {
+    pub name: String,
+    pub adc_bits: [u32; N_SLICES],
+}
+
+/// Per-layer x per-slice ADC resolutions for a whole deployment — the
+/// generalization of the single global `adc_bits: [u32; N_SLICES]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeploymentPlan {
+    pub layers: Vec<PlanLayer>,
+}
+
+impl DeploymentPlan {
+    /// Every layer at the same per-slice resolutions (the pre-planner
+    /// whole-model semantics).
+    pub fn uniform_for(model: &MappedModel, adc_bits: [u32; N_SLICES]) -> DeploymentPlan {
+        DeploymentPlan {
+            layers: model
+                .layers
+                .iter()
+                .map(|l| PlanLayer {
+                    name: l.name.clone(),
+                    adc_bits,
+                })
+                .collect(),
+        }
+    }
+
+    /// Each layer at the resolutions its own column-current census
+    /// requires under `policy` — the planner's starting point.
+    pub fn from_policy(model: &MappedModel, policy: ResolutionPolicy) -> DeploymentPlan {
+        DeploymentPlan {
+            layers: model
+                .layers
+                .iter()
+                .map(|l| PlanLayer {
+                    name: l.name.clone(),
+                    adc_bits: resolution::layer_required_bits(l, policy),
+                })
+                .collect(),
+        }
+    }
+
+    /// The shared per-slice resolutions if every layer agrees, else `None`.
+    pub fn uniform_bits(&self) -> Option<[u32; N_SLICES]> {
+        let first = self.layers.first()?.adc_bits;
+        self.layers
+            .iter()
+            .all(|l| l.adc_bits == first)
+            .then_some(first)
+    }
+}
+
+impl std::fmt::Display for DeploymentPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, l) in self.layers.iter().enumerate() {
+            if i > 0 {
+                write!(f, " ")?;
+            }
+            write!(f, "{}:{:?}", l.name, l.adc_bits)?;
+        }
+        Ok(())
+    }
+}
+
+/// Planner search knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct PlannerConfig {
+    /// Held-out accuracy may drop at most this far below the exact
+    /// quantized reference (fraction: 0.005 = 0.5 percentage points).
+    pub accuracy_budget: f64,
+    /// Floor for any slice-group resolution.
+    pub min_bits: u32,
+    /// Policy setting each layer's starting resolutions from its census.
+    pub start_policy: ResolutionPolicy,
+    /// Cap on held-out examples per candidate evaluation (0 = all).
+    pub eval_examples: usize,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            accuracy_budget: 0.005,
+            min_bits: 1,
+            start_policy: ResolutionPolicy::Lossless,
+            eval_examples: 256,
+        }
+    }
+}
+
+/// Everything one planner run produces.
+#[derive(Debug, Clone)]
+pub struct PlanSearch {
+    /// the selected per-layer operating point
+    pub plan: DeploymentPlan,
+    /// accuracy of the exact quantized reference on the validation slice
+    /// (the unseen holdout tail when the search subsampled, else the full
+    /// holdout)
+    pub baseline_accuracy: f64,
+    /// accuracy at the starting (census-derived) plan, measured on the
+    /// search's eval subsample
+    pub start_accuracy: f64,
+    /// accuracy at the selected plan on the validation slice
+    pub accuracy: f64,
+    /// cost of the selected plan
+    pub cost: energy::DeploymentCost,
+    /// cost of the uniform 8-bit ISAAC baseline on the same mapping
+    pub baseline_cost: energy::DeploymentCost,
+    /// candidate accuracy evaluations spent by the search
+    pub evaluations: usize,
+    /// whether the selected plan holds the accuracy budget on the
+    /// validation slice. Can be false even with a lossless
+    /// `start_policy`: a lossy start can put the *starting* plan below
+    /// the floor, and when `eval_examples` subsamples the holdout, moves
+    /// accepted on the search slice can re-measure below the floor on the
+    /// unseen tail. The search returns its best plan and flags it here
+    /// instead of failing silently.
+    pub within_budget: bool,
+}
+
+impl PlanSearch {
+    /// (energy, time, area) savings of the selected plan vs the 8-bit
+    /// baseline.
+    pub fn savings(&self) -> (f64, f64, f64) {
+        (
+            energy::ratio(self.baseline_cost.energy, self.cost.energy),
+            energy::ratio(self.baseline_cost.time, self.cost.time),
+            energy::ratio(self.baseline_cost.area, self.cost.area),
+        )
+    }
+}
+
+/// Examples `lo..hi` of a dataset.
+fn slice(ds: &Dataset, lo: usize, hi: usize) -> Dataset {
+    let d = ds.dim();
+    Dataset {
+        features: std::sync::Arc::new(ds.features[lo * d..hi * d].to_vec()),
+        labels: std::sync::Arc::new(ds.labels[lo..hi].to_vec()),
+        example_shape: ds.example_shape.clone(),
+        num_classes: ds.num_classes,
+        source: format!("{}[{lo}..{hi}]", ds.source),
+    }
+}
+
+/// First `n` examples of a dataset (0 = all) — the planner's evaluation
+/// subsample.
+fn head(ds: &Dataset, n: usize) -> Dataset {
+    if n == 0 || n >= ds.len() {
+        ds.clone()
+    } else {
+        slice(ds, 0, n)
+    }
+}
+
+/// Search a per-layer ADC deployment plan for `stack` under `cfg`,
+/// validating every candidate on `holdout`. Maps the stack and quantizes
+/// the reference once, then delegates to [`plan_deployment_from`].
+pub fn plan_deployment(
+    stack: &[DenseLayer],
+    holdout: &Dataset,
+    cfg: &PlannerConfig,
+) -> Result<PlanSearch> {
+    let base = CrossbarBackend::with_layer_policy("planner", stack, cfg.start_policy)?;
+    let reference = ReferenceBackend::new("planner-reference", stack)?;
+    plan_deployment_from(&base, &reference, holdout, cfg)
+}
+
+/// Search starting from an already-mapped backend and reference — callers
+/// that hold both (e.g. the deploy CLI path) reuse their mapping and
+/// quantized weights instead of re-mapping the stack. The starting plan is
+/// `cfg.start_policy` applied per layer to `base`'s mapping; `base`'s own
+/// plan is irrelevant.
+///
+/// The mapping is shared across every candidate through
+/// [`CrossbarBackend::replan`] (`Arc`-shared tiles), so the search
+/// re-maps zero times. When `cfg.eval_examples` subsamples `holdout`, the
+/// search selects on the head slice and the reported
+/// `baseline_accuracy`/`accuracy`/`within_budget` are re-measured on the
+/// *unseen tail* (falling back to the full holdout when the tail is too
+/// small to be meaningful), so the headline numbers are not
+/// selection-biased.
+pub fn plan_deployment_from(
+    base: &CrossbarBackend,
+    reference: &ReferenceBackend,
+    holdout: &Dataset,
+    cfg: &PlannerConfig,
+) -> Result<PlanSearch> {
+    anyhow::ensure!(!holdout.is_empty(), "planner needs a non-empty held-out set");
+    anyhow::ensure!(cfg.min_bits >= 1, "ADC resolutions start at 1 bit");
+    let ds = head(holdout, cfg.eval_examples);
+
+    let base = base.replan(
+        "planner",
+        DeploymentPlan::from_policy(base.mapped(), cfg.start_policy),
+    )?;
+    let model = base.mapped().clone();
+    let baseline_accuracy = serve::accuracy(reference, &ds)?.accuracy;
+    let start_accuracy = serve::accuracy(&base, &ds)?.accuracy;
+    let floor = baseline_accuracy - cfg.accuracy_budget;
+
+    let mut plan = base.plan().clone();
+    let mut accuracy = start_accuracy;
+    let mut evaluations = 0usize;
+
+    // candidate-move weights: conversions per (layer, slice group)
+    let conversions: Vec<[f64; N_SLICES]> = model
+        .layers
+        .iter()
+        .map(|l| std::array::from_fn(|k| energy::slice_conversions(l, k)))
+        .collect();
+
+    let eval = |cand: &DeploymentPlan, evaluations: &mut usize| -> Result<f64> {
+        let be = base.replan("planner-candidate", cand.clone())?;
+        *evaluations += 1;
+        Ok(serve::accuracy(&be, &ds)?.accuracy)
+    };
+
+    // Paper warm start: the hand-picked Table-3 point, clipped into
+    // [min_bits, start bits] per group. If it holds the budget, jump —
+    // the greedy descent below can only improve on it.
+    let mut warm = plan.clone();
+    for l in &mut warm.layers {
+        for (k, b) in l.adc_bits.iter_mut().enumerate() {
+            *b = (*b).min(PAPER_BITS[k].max(cfg.min_bits));
+        }
+    }
+    if warm != plan {
+        let a = eval(&warm, &mut evaluations)?;
+        if a >= floor {
+            plan = warm;
+            accuracy = a;
+        }
+    }
+
+    // Greedy descent: repeatedly try to lower one (layer, slice group) by
+    // one bit, best energy saving first. A group that fails the budget is
+    // frozen — lowering *other* groups never makes it more affordable.
+    let mut frozen = vec![[false; N_SLICES]; plan.layers.len()];
+    loop {
+        let mut moves: Vec<(f64, usize, usize)> = Vec::new();
+        for (l, pl) in plan.layers.iter().enumerate() {
+            for k in 0..N_SLICES {
+                let b = pl.adc_bits[k];
+                if frozen[l][k] || b <= cfg.min_bits {
+                    continue;
+                }
+                let gain = conversions[l][k] * (AdcModel::power(b) - AdcModel::power(b - 1));
+                moves.push((gain, l, k));
+            }
+        }
+        moves.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+
+        let mut progressed = false;
+        for &(_, l, k) in &moves {
+            let mut cand = plan.clone();
+            cand.layers[l].adc_bits[k] -= 1;
+            let a = eval(&cand, &mut evaluations)?;
+            if a >= floor {
+                plan = cand;
+                accuracy = a;
+                progressed = true;
+                break; // re-score remaining moves against the new plan
+            }
+            frozen[l][k] = true;
+        }
+        if !progressed {
+            break;
+        }
+    }
+
+    // Final validation: the greedy loop selects on the (possibly
+    // subsampled) eval set, so a plan can overfit its accept/reject
+    // margins to those exact examples. When a subsample was used,
+    // re-measure the selected plan and the reference on the *unseen tail*
+    // of the holdout — unless the tail is a statistically meaningless
+    // sliver (fewer than 32 examples or under a quarter of the holdout),
+    // in which case the full holdout is the stabler validation set even
+    // though it includes the search slice.
+    let (baseline_accuracy, accuracy) = if ds.len() == holdout.len() {
+        (baseline_accuracy, accuracy)
+    } else {
+        let tail_len = holdout.len() - ds.len();
+        let val = if tail_len >= 32 && tail_len * 4 >= holdout.len() {
+            slice(holdout, ds.len(), holdout.len())
+        } else {
+            holdout.clone()
+        };
+        let selected = base.replan("planner-selected", plan.clone())?;
+        evaluations += 1;
+        (
+            serve::accuracy(reference, &val)?.accuracy,
+            serve::accuracy(&selected, &val)?.accuracy,
+        )
+    };
+
+    let cost = energy::plan_cost(&model, &plan);
+    let baseline_cost = energy::deployment_cost(&model, [super::adc::BASELINE_BITS; N_SLICES]);
+    Ok(PlanSearch {
+        plan,
+        baseline_accuracy,
+        start_accuracy,
+        accuracy,
+        cost,
+        baseline_cost,
+        evaluations,
+        within_budget: accuracy >= baseline_accuracy - cfg.accuracy_budget,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reram::mapper::map_model;
+    use crate::serve::{dense_stack, InferenceBackend};
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn toy_stack(rng: &mut Rng) -> Vec<DenseLayer> {
+        let w1 = Tensor::new(vec![8, 5], rng.normal_vec(40, 0.2)).unwrap();
+        let w2 = Tensor::new(vec![5, 3], rng.normal_vec(15, 0.2)).unwrap();
+        let b1 = Tensor::zeros(vec![5]);
+        let b2 = Tensor::zeros(vec![3]);
+        dense_stack(&[("fc1/w".into(), w1), ("fc2/w".into(), w2)], &[b1, b2]).unwrap()
+    }
+
+    /// Held-out set labelled by the exact reference's own argmax, so the
+    /// baseline accuracy is 1.0 by construction and the budget measures
+    /// pure ADC-clipping disagreement.
+    fn oracle_dataset(stack: &[DenseLayer], n: usize, seed: u64) -> Dataset {
+        let dim = stack[0].w.shape()[0];
+        let classes = stack[stack.len() - 1].w.shape()[1];
+        let mut rng = Rng::new(seed);
+        let feats: Vec<f32> = (0..n * dim).map(|_| rng.next_f32()).collect();
+        let x = Tensor::new(vec![n, dim], feats.clone()).unwrap();
+        let reference = ReferenceBackend::new("oracle", stack).unwrap();
+        let logits = reference.infer_batch(&x).unwrap();
+        let labels: Vec<i32> = (0..n)
+            .map(|i| {
+                let row = &logits.data()[i * classes..(i + 1) * classes];
+                (0..classes)
+                    .max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap())
+                    .unwrap() as i32
+            })
+            .collect();
+        Dataset {
+            features: std::sync::Arc::new(feats),
+            labels: std::sync::Arc::new(labels),
+            example_shape: vec![dim],
+            num_classes: classes,
+            source: "oracle".into(),
+        }
+    }
+
+    #[test]
+    fn uniform_plan_reports_uniform_bits() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::new(vec![20, 9], rng.normal_vec(180, 0.1)).unwrap();
+        let m = map_model(&[("a".into(), w.clone()), ("b".into(), w)]).unwrap();
+        let plan = DeploymentPlan::uniform_for(&m, [3, 3, 3, 1]);
+        assert_eq!(plan.uniform_bits(), Some([3, 3, 3, 1]));
+        let mut uneven = plan.clone();
+        uneven.layers[1].adc_bits = [2, 2, 2, 1];
+        assert_eq!(uneven.uniform_bits(), None);
+        let shown = format!("{uneven}");
+        assert!(shown.contains("a:[3, 3, 3, 1]"), "{shown}");
+        assert!(shown.contains("b:[2, 2, 2, 1]"), "{shown}");
+    }
+
+    #[test]
+    fn from_policy_uses_each_layers_own_census() {
+        // layer "dense" needs many MSB bits, layer "tiny" needs few — a
+        // whole-model census would force the max onto both
+        let mut rng = Rng::new(5);
+        let dense = Tensor::new(
+            vec![128, 16],
+            (0..128 * 16)
+                .map(|_| if rng.next_f32() > 0.5 { 0.99 } else { -0.99 })
+                .collect(),
+        )
+        .unwrap();
+        let mut data = vec![0.0f32; 64 * 8];
+        data[0] = 1.0;
+        let tiny = Tensor::new(vec![64, 8], data).unwrap();
+        let m = map_model(&[("dense".into(), dense), ("tiny".into(), tiny)]).unwrap();
+        let plan = DeploymentPlan::from_policy(&m, ResolutionPolicy::Lossless);
+        assert!(
+            plan.layers[0].adc_bits[3] > plan.layers[1].adc_bits[3],
+            "dense {:?} vs tiny {:?}",
+            plan.layers[0].adc_bits,
+            plan.layers[1].adc_bits
+        );
+        let global = resolution::required_bits(&m, ResolutionPolicy::Lossless);
+        assert_eq!(plan.layers[0].adc_bits[3], global[3]);
+    }
+
+    #[test]
+    fn unlimited_budget_collapses_to_min_bits() {
+        let mut rng = Rng::new(11);
+        let stack = toy_stack(&mut rng);
+        let ds = oracle_dataset(&stack, 12, 77);
+        let cfg = PlannerConfig {
+            accuracy_budget: 1.0,
+            ..PlannerConfig::default()
+        };
+        let res = plan_deployment(&stack, &ds, &cfg).unwrap();
+        assert_eq!(res.plan.uniform_bits(), Some([1, 1, 1, 1]));
+        assert!(res.evaluations > 0);
+        assert!(res.cost.energy < res.baseline_cost.energy);
+        let (e, t, a) = res.savings();
+        assert!(e > 1.0 && t > 1.0 && a > 1.0);
+    }
+
+    #[test]
+    fn search_respects_budget_and_never_raises_bits() {
+        let mut rng = Rng::new(13);
+        let stack = toy_stack(&mut rng);
+        let ds = oracle_dataset(&stack, 24, 99);
+        let cfg = PlannerConfig::default(); // 0.5 pt budget, lossless start
+        let res = plan_deployment(&stack, &ds, &cfg).unwrap();
+        assert!((res.baseline_accuracy - 1.0).abs() < 1e-12, "oracle labels");
+        assert!(
+            res.accuracy >= res.baseline_accuracy - cfg.accuracy_budget - 1e-12,
+            "accuracy {} vs baseline {}",
+            res.accuracy,
+            res.baseline_accuracy
+        );
+        let start = DeploymentPlan::from_policy(
+            &map_model(&[
+                ("fc1/w".into(), stack[0].w.clone()),
+                ("fc2/w".into(), stack[1].w.clone()),
+            ])
+            .unwrap(),
+            cfg.start_policy,
+        );
+        for (sel, st) in res.plan.layers.iter().zip(&start.layers) {
+            for k in 0..N_SLICES {
+                assert!(sel.adc_bits[k] <= st.adc_bits[k], "{:?}", sel);
+                assert!(sel.adc_bits[k] >= cfg.min_bits);
+            }
+        }
+        // lossless start agrees with the exact reference bit-for-bit
+        assert_eq!(res.start_accuracy, res.baseline_accuracy);
+        // no subsampling in this test, so the lossless start guarantees it
+        assert!(res.within_budget);
+    }
+
+    #[test]
+    fn zero_budget_keeps_exact_agreement() {
+        let mut rng = Rng::new(17);
+        let stack = toy_stack(&mut rng);
+        let ds = oracle_dataset(&stack, 16, 5);
+        let cfg = PlannerConfig {
+            accuracy_budget: 0.0,
+            ..PlannerConfig::default()
+        };
+        let res = plan_deployment(&stack, &ds, &cfg).unwrap();
+        assert_eq!(res.accuracy, res.baseline_accuracy);
+    }
+}

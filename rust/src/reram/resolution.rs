@@ -7,10 +7,19 @@
 //! on outlier columns (the paper's 1-bit/3-bit operating points clip; the
 //! accuracy impact is validated by [`super::sim`] and the
 //! `mlp_reram_paper` AOT graph).
+//!
+//! The census is available per layer ([`layer_slice_currents`],
+//! [`layer_required_bits`]) as well as whole-model ([`slice_currents`],
+//! [`required_bits`]); the per-layer variant feeds
+//! [`super::planner::DeploymentPlan`]. Unprogrammed (fully-zero) tiles are
+//! excluded — no array is fabricated for them (see [`super::energy`]), so
+//! their all-zero columns must not dilute the percentile statistics. All
+//! bit arrays here are LSB-first; see the bit-order convention in the
+//! [`crate::reram`] module docs.
 
 use crate::quant::N_SLICES;
 
-use super::mapper::MappedModel;
+use super::mapper::{LayerMapping, MappedModel};
 
 /// How to choose the resolution from the column-current distribution.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -41,14 +50,20 @@ impl SliceCurrents {
         }
     }
 
+    /// Ceiling nearest-rank percentile: the smallest census value `v` such
+    /// that at least a fraction `p` of the columns satisfy `sum <= v`. A
+    /// rounded rank could land *below* the requested coverage (e.g. 1000
+    /// columns at p = 0.9991 rounds to rank 999, covering only 99.9%) and
+    /// under-provision the ADC; the ceiling rank guarantees >= p coverage.
     pub fn percentile(&self, p: f64) -> u32 {
         if self.sums.is_empty() {
             return 0;
         }
         let mut sorted = self.sums.clone();
         sorted.sort_unstable();
-        let idx = ((sorted.len() as f64 - 1.0) * p.clamp(0.0, 1.0)).round() as usize;
-        sorted[idx]
+        let n = sorted.len();
+        let rank = (p.clamp(0.0, 1.0) * n as f64).ceil() as usize;
+        sorted[rank.saturating_sub(1).min(n - 1)]
     }
 }
 
@@ -59,26 +74,43 @@ pub fn bits_for_current(max_current: u32) -> u32 {
     ((max_current as u64 + 1).next_power_of_two().trailing_zeros()).max(1)
 }
 
-/// Gather the column-current census per slice group over a mapped model.
-pub fn slice_currents(model: &MappedModel) -> [SliceCurrents; N_SLICES] {
+/// Gather the column-current census per slice group for one mapped layer.
+/// Unprogrammed (fully-zero) tiles contribute no columns: they carry no
+/// ADC, so counting their zero sums would bias percentiles downward.
+pub fn layer_slice_currents(layer: &LayerMapping) -> [SliceCurrents; N_SLICES] {
     let mut out: [SliceCurrents; N_SLICES] = std::array::from_fn(|_| SliceCurrents {
         sums: Vec::new(),
     });
-    for layer in &model.layers {
-        for (k, (pos, neg)) in layer.grids.iter().enumerate() {
-            for grid in [pos, neg] {
-                for tile in &grid.tiles {
-                    out[k].sums.extend(tile.column_conductance_sums());
+    for (k, (pos, neg)) in layer.grids.iter().enumerate() {
+        for grid in [pos, neg] {
+            for tile in &grid.tiles {
+                if tile.nonzero_cells() == 0 {
+                    continue;
                 }
+                out[k].sums.extend(tile.column_conductance_sums());
             }
         }
     }
     out
 }
 
-/// Per-slice ADC resolutions under a policy, LSB-first.
-pub fn required_bits(model: &MappedModel, policy: ResolutionPolicy) -> [u32; N_SLICES] {
-    let currents = slice_currents(model);
+/// Gather the column-current census per slice group over a mapped model.
+pub fn slice_currents(model: &MappedModel) -> [SliceCurrents; N_SLICES] {
+    let mut out: [SliceCurrents; N_SLICES] = std::array::from_fn(|_| SliceCurrents {
+        sums: Vec::new(),
+    });
+    for layer in &model.layers {
+        for (k, cur) in layer_slice_currents(layer).into_iter().enumerate() {
+            out[k].sums.extend(cur.sums);
+        }
+    }
+    out
+}
+
+fn bits_under_policy(
+    currents: &[SliceCurrents; N_SLICES],
+    policy: ResolutionPolicy,
+) -> [u32; N_SLICES] {
     std::array::from_fn(|k| {
         let cur = match policy {
             ResolutionPolicy::Lossless => currents[k].max(),
@@ -88,11 +120,24 @@ pub fn required_bits(model: &MappedModel, policy: ResolutionPolicy) -> [u32; N_S
     })
 }
 
+/// Per-slice ADC resolutions one layer needs under a policy, LSB-first —
+/// the per-layer starting point of [`super::planner::plan_deployment`].
+pub fn layer_required_bits(layer: &LayerMapping, policy: ResolutionPolicy) -> [u32; N_SLICES] {
+    bits_under_policy(&layer_slice_currents(layer), policy)
+}
+
+/// Per-slice ADC resolutions under a policy over the whole model,
+/// LSB-first (the Table-3 single-operating-point semantics).
+pub fn required_bits(model: &MappedModel, policy: ResolutionPolicy) -> [u32; N_SLICES] {
+    bits_under_policy(&slice_currents(model), policy)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::reram::mapper::map_model;
     use crate::tensor::Tensor;
+    use crate::util::check::{check, ensure};
     use crate::util::rng::Rng;
 
     #[test]
@@ -118,6 +163,78 @@ mod tests {
         assert!(c.percentile(0.999) <= c.max());
         assert_eq!(c.percentile(1.0), 999);
         assert_eq!(c.percentile(0.0), 0);
+    }
+
+    #[test]
+    fn percentile_never_under_covers() {
+        // the old rounded nearest-rank picked rank 999 here (99.9% < p)
+        let c = SliceCurrents {
+            sums: (0..1000u32).collect(),
+        };
+        assert_eq!(c.percentile(0.9991), 999);
+        // ceiling-rank guarantee on arbitrary (p, n)
+        check(50, |rng| {
+            let n = 1 + rng.below(40);
+            let sums: Vec<u32> = (0..n).map(|_| rng.below(500) as u32).collect();
+            let c = SliceCurrents { sums: sums.clone() };
+            let p = rng.next_f32() as f64;
+            let v = c.percentile(p);
+            let covered = sums.iter().filter(|&&s| s <= v).count();
+            ensure(
+                covered as f64 >= p * n as f64 - 1e-9,
+                format!("p={p} n={n}: value {v} covers only {covered}"),
+            )?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn percentile_boundaries_at_small_lengths() {
+        let one = SliceCurrents { sums: vec![7] };
+        assert_eq!(one.percentile(0.0), 7);
+        assert_eq!(one.percentile(0.5), 7);
+        assert_eq!(one.percentile(1.0), 7);
+
+        let two = SliceCurrents { sums: vec![9, 1] };
+        assert_eq!(two.percentile(0.0), 1);
+        // exactly half the columns are <= 1: rank ceil(0.5 * 2) = 1
+        assert_eq!(two.percentile(0.5), 1);
+        // any coverage beyond half needs the larger value
+        assert_eq!(two.percentile(0.51), 9);
+        assert_eq!(two.percentile(1.0), 9);
+
+        let empty = SliceCurrents { sums: vec![] };
+        assert_eq!(empty.percentile(0.9), 0);
+    }
+
+    #[test]
+    fn per_layer_census_concatenates_to_model_census() {
+        let mut rng = Rng::new(7);
+        let w1 = Tensor::new(vec![200, 60], rng.normal_vec(200 * 60, 0.1)).unwrap();
+        let w2 = Tensor::new(vec![60, 30], rng.normal_vec(60 * 30, 0.1)).unwrap();
+        let m = map_model(&[("a".into(), w1), ("b".into(), w2)]).unwrap();
+        let whole = slice_currents(&m);
+        for k in 0..N_SLICES {
+            let mut concat = Vec::new();
+            for layer in &m.layers {
+                concat.extend(layer_slice_currents(layer)[k].sums.clone());
+            }
+            assert_eq!(whole[k].sums, concat, "slice {k}");
+        }
+    }
+
+    #[test]
+    fn census_skips_unprogrammed_tiles() {
+        // all-positive weights: every negative-sign grid is fully zero and
+        // must contribute no columns to the census
+        let w = Tensor::new(vec![64, 32], vec![0.5; 64 * 32]).unwrap();
+        let m = map_model(&[("p".into(), w)]).unwrap();
+        let currents = slice_currents(&m);
+        for (k, cur) in currents.iter().enumerate() {
+            // one programmed (pos) tile of 32 columns; the neg tile is out
+            assert_eq!(cur.sums.len(), 32, "slice {k}");
+            assert!(cur.sums.iter().all(|&s| s > 0), "slice {k}");
+        }
     }
 
     #[test]

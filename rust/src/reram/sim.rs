@@ -14,14 +14,25 @@ use crate::util::pool::parallel_map;
 
 use super::mapper::LayerMapping;
 
-/// Quantize non-negative activations to codes (mirrors L2 `_act_quantize`).
-pub fn act_quantize(x: &[f32]) -> (Vec<u8>, f32) {
+/// Quantize non-negative activations to codes (mirrors L2 `_act_quantize`)
+/// into a reusable buffer; returns the quantization step. Callers on the
+/// hot path keep one `codes` buffer per worker so repeated quantization
+/// does not allocate.
+pub fn act_quantize_into(x: &[f32], codes: &mut Vec<u8>) -> f32 {
     let step = quant::qstep(x);
     let inv = 1.0 / step;
-    let codes = x
-        .iter()
-        .map(|&v| ((v.max(0.0) * inv).floor()).min(quant::CODE_MAX as f32) as u8)
-        .collect();
+    codes.clear();
+    codes.extend(
+        x.iter()
+            .map(|&v| ((v.max(0.0) * inv).floor()).min(quant::CODE_MAX as f32) as u8),
+    );
+    step
+}
+
+/// Allocating convenience wrapper around [`act_quantize_into`].
+pub fn act_quantize(x: &[f32]) -> (Vec<u8>, f32) {
+    let mut codes = Vec::with_capacity(x.len());
+    let step = act_quantize_into(x, &mut codes);
     (codes, step)
 }
 
@@ -110,6 +121,12 @@ pub fn forward_codes(layer: &LayerMapping, a_code: &[u8], adc_bits: &[u32; N_SLI
 /// (batch, cols) approximating `x @ W`. Examples are processed in parallel
 /// (one `forward_codes` per row).
 ///
+/// Activations are quantized **per example row** (each row gets its own
+/// qstep), matching `serve::CrossbarBackend` and the backend contract in
+/// `serve`: the result is bit-identical however the batch is composed. A
+/// batch-global qstep — the previous behaviour — made the simulator's
+/// answer depend on which *other* examples shared the batch.
+///
 /// §Perf note (EXPERIMENTS.md iteration 6): a tile-resident batched variant
 /// (accumulate all examples per cell pass) was implemented and measured
 /// 0.68x — the per-example current accumulators evict the tile from L1 —
@@ -121,8 +138,7 @@ pub fn forward(layer: &LayerMapping, x: &Tensor, adc_bits: &[u32; N_SLICES]) -> 
     assert_eq!(shape.len(), 2);
     let (b, rows) = (shape[0], shape[1]);
     assert_eq!(rows, layer.rows);
-    let (codes, a_step) = act_quantize(x.data());
-    let scale = layer.step * a_step;
+    let data = x.data();
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let chunk = b.div_ceil(threads.max(1)).max(1);
     let parts = parallel_map(b.div_ceil(chunk), threads, |ci| {
@@ -130,10 +146,12 @@ pub fn forward(layer: &LayerMapping, x: &Tensor, adc_bits: &[u32; N_SLICES]) -> 
         let hi = (lo + chunk).min(b);
         let mut scratch = SimScratch::default();
         let mut raw = Vec::new();
+        let mut codes = Vec::new();
         let mut part = Vec::with_capacity((hi - lo) * layer.cols);
         for i in lo..hi {
-            let code_row = &codes[i * rows..(i + 1) * rows];
-            forward_codes_into(layer, code_row, adc_bits, &mut scratch, &mut raw);
+            let a_step = act_quantize_into(&data[i * rows..(i + 1) * rows], &mut codes);
+            let scale = layer.step * a_step;
+            forward_codes_into(layer, &codes, adc_bits, &mut scratch, &mut raw);
             part.extend(raw.iter().map(|&v| v as f32 * scale));
         }
         part
@@ -237,6 +255,47 @@ mod tests {
         // single cell per column => max current 3 => 2 bits lossless
         for (a, b) in low.data().iter().zip(high.data()) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn forward_is_batch_composition_invariant() {
+        // rows at deliberately different dynamic ranges: a batch-global
+        // qstep (the old bug) quantized the small-magnitude rows with the
+        // large rows' step, so their outputs depended on batch composition
+        let mut rng = Rng::new(33);
+        let w = Tensor::new(vec![200, 30], rng.normal_vec(200 * 30, 0.1)).unwrap();
+        let layer = map_layer("l", &w).unwrap();
+        let scales = [1.0f32, 0.3, 0.07, 0.011];
+        let data: Vec<f32> = scales
+            .iter()
+            .flat_map(|&s| (0..200).map(|_| s * rng.next_f32()).collect::<Vec<_>>())
+            .collect();
+        let x = Tensor::new(vec![4, 200], data).unwrap();
+        let all = forward(&layer, &x, &LOSSLESS);
+        for i in 0..4 {
+            let row =
+                Tensor::new(vec![1, 200], x.data()[i * 200..(i + 1) * 200].to_vec()).unwrap();
+            let one = forward(&layer, &row, &LOSSLESS);
+            assert_eq!(
+                &all.data()[i * 30..(i + 1) * 30],
+                one.data(),
+                "row {i} (scale {})",
+                scales[i]
+            );
+        }
+    }
+
+    #[test]
+    fn act_quantize_into_matches_wrapper_and_reuses_buffer() {
+        let mut rng = Rng::new(35);
+        let mut codes = Vec::new();
+        for n in [1usize, 7, 300] {
+            let x: Vec<f32> = (0..n).map(|_| rng.next_f32() * 3.0).collect();
+            let step = act_quantize_into(&x, &mut codes);
+            let (want_codes, want_step) = act_quantize(&x);
+            assert_eq!(codes, want_codes);
+            assert_eq!(step, want_step);
         }
     }
 

@@ -4,71 +4,111 @@
 //! and runs every layer through the functional simulator
 //! ([`crate::reram::sim`]) — bit-serial activations, per-crossbar ADC
 //! clipping at the configured resolution, digital recombination. The ADC
-//! resolution comes from a [`ResolutionPolicy`] applied to the mapped
-//! model's column-current census (exactly what `harness::deploy_report`
-//! measures) or from explicit per-slice bits.
+//! resolutions come from a [`DeploymentPlan`] — per-layer x per-slice bits
+//! (LSB-first, see the bit-order docs in [`crate::reram`]) — which a
+//! [`ResolutionPolicy`] over the column-current census or the
+//! [`crate::reram::planner`] search produces; uniform-bits constructors
+//! are kept as thin wrappers.
+//!
+//! The weight mapping is held behind an `Arc`: [`CrossbarBackend::replan`]
+//! and [`CrossbarBackend::rebit`] share it instead of deep-cloning every
+//! tile, so ADC sweeps and the planner's many candidate evaluations re-map
+//! zero times.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::quant::N_SLICES;
-use crate::reram::mapper::{self, LayerMapping, MappedModel};
+use crate::reram::mapper::{self, MappedModel};
+use crate::reram::planner::DeploymentPlan;
 use crate::reram::sim::{self, SimScratch};
 use crate::reram::{resolution, ResolutionPolicy};
 use crate::tensor::Tensor;
 
 use super::{BackendInfo, DenseLayer, InferenceBackend};
 
-struct XbarLayer {
-    mapping: LayerMapping,
+/// Per-layer bias/activation metadata (everything of a [`DenseLayer`] that
+/// is not the mapped weights), shared across `replan`/`rebit` clones.
+struct StackMeta {
     bias: Option<Vec<f32>>,
     relu: bool,
 }
 
-/// Functional crossbar inference at a configurable ADC resolution.
+/// Functional crossbar inference at configurable ADC resolutions.
 pub struct CrossbarBackend {
     name: String,
-    layers: Vec<XbarLayer>,
-    adc_bits: [u32; N_SLICES],
+    model: Arc<MappedModel>,
+    meta: Arc<Vec<StackMeta>>,
+    plan: DeploymentPlan,
     input_dim: usize,
     num_classes: usize,
     intra_threads: usize,
 }
 
 impl CrossbarBackend {
-    /// Map the stack and size the ADCs by `policy` over the whole model's
-    /// column-current distribution (the Table-3 deployment semantics).
+    /// Map the stack and deploy it under an explicit per-layer plan.
+    pub fn with_plan(name: &str, stack: &[DenseLayer], plan: DeploymentPlan) -> Result<Self> {
+        let mapped = Self::map_stack(stack)?;
+        Self::assemble(name, mapped, stack, plan)
+    }
+
+    /// Map the stack and size one global resolution set by `policy` over
+    /// the **whole model's** column-current distribution (the Table-3
+    /// single-operating-point semantics), deployed uniformly per layer.
     pub fn new(name: &str, stack: &[DenseLayer], policy: ResolutionPolicy) -> Result<Self> {
         let mapped = Self::map_stack(stack)?;
         let adc_bits = resolution::required_bits(&mapped, policy);
-        Self::assemble(name, mapped, stack, adc_bits)
+        let plan = DeploymentPlan::uniform_for(&mapped, adc_bits);
+        Self::assemble(name, mapped, stack, plan)
     }
 
-    /// Map the stack and deploy at explicit per-slice resolutions
+    /// Map the stack and size each layer by `policy` over **its own**
+    /// census — the planner's starting point.
+    pub fn with_layer_policy(
+        name: &str,
+        stack: &[DenseLayer],
+        policy: ResolutionPolicy,
+    ) -> Result<Self> {
+        let mapped = Self::map_stack(stack)?;
+        let plan = DeploymentPlan::from_policy(&mapped, policy);
+        Self::assemble(name, mapped, stack, plan)
+    }
+
+    /// Map the stack and deploy at explicit uniform per-slice resolutions
     /// (LSB-first), e.g. the paper's `[3, 3, 3, 1]` operating point.
     pub fn with_bits(name: &str, stack: &[DenseLayer], adc_bits: [u32; N_SLICES]) -> Result<Self> {
         let mapped = Self::map_stack(stack)?;
-        Self::assemble(name, mapped, stack, adc_bits)
+        let plan = DeploymentPlan::uniform_for(&mapped, adc_bits);
+        Self::assemble(name, mapped, stack, plan)
     }
 
-    /// Same mapping, different ADC resolutions — for sweeps, without
-    /// re-mapping the weights per point.
-    pub fn rebit(&self, name: &str, adc_bits: [u32; N_SLICES]) -> CrossbarBackend {
-        CrossbarBackend {
+    /// Same mapping, different deployment plan — for sweeps and the
+    /// planner's candidate evaluations. The mapped tiles are shared via
+    /// `Arc`, so this never re-maps or clones weights.
+    pub fn replan(&self, name: &str, plan: DeploymentPlan) -> Result<CrossbarBackend> {
+        anyhow::ensure!(
+            plan.layers.len() == self.model.layers.len(),
+            "plan has {} layers, mapping has {}",
+            plan.layers.len(),
+            self.model.layers.len()
+        );
+        Ok(CrossbarBackend {
             name: name.to_string(),
-            layers: self
-                .layers
-                .iter()
-                .map(|l| XbarLayer {
-                    mapping: l.mapping.clone(),
-                    bias: l.bias.clone(),
-                    relu: l.relu,
-                })
-                .collect(),
-            adc_bits,
+            model: Arc::clone(&self.model),
+            meta: Arc::clone(&self.meta),
+            plan,
             input_dim: self.input_dim,
             num_classes: self.num_classes,
             intra_threads: self.intra_threads,
-        }
+        })
+    }
+
+    /// Same mapping at uniform per-slice resolutions — thin wrapper over
+    /// [`Self::replan`].
+    pub fn rebit(&self, name: &str, adc_bits: [u32; N_SLICES]) -> CrossbarBackend {
+        self.replan(name, DeploymentPlan::uniform_for(&self.model, adc_bits))
+            .expect("uniform plan always matches its own mapping")
     }
 
     /// Cap the threads one `infer_batch` call may use. Set to 1 when a
@@ -79,9 +119,22 @@ impl CrossbarBackend {
         self
     }
 
-    /// The per-slice ADC resolutions this backend deploys (LSB-first).
+    /// The per-layer deployment plan this backend runs.
+    pub fn plan(&self) -> &DeploymentPlan {
+        &self.plan
+    }
+
+    /// The shared crossbar mapping (use [`Arc::ptr_eq`] to verify that
+    /// sweep clones really share it).
+    pub fn mapped(&self) -> &Arc<MappedModel> {
+        &self.model
+    }
+
+    /// The first layer's per-slice resolutions (LSB-first) — equal to
+    /// every layer's under a uniform plan; see [`Self::plan`] for the
+    /// general case.
     pub fn adc_bits(&self) -> [u32; N_SLICES] {
-        self.adc_bits
+        self.plan.layers[0].adc_bits
     }
 
     fn map_stack(stack: &[DenseLayer]) -> Result<MappedModel> {
@@ -97,46 +150,63 @@ impl CrossbarBackend {
         name: &str,
         mapped: MappedModel,
         stack: &[DenseLayer],
-        adc_bits: [u32; N_SLICES],
+        plan: DeploymentPlan,
     ) -> Result<Self> {
+        anyhow::ensure!(
+            plan.layers.len() == mapped.layers.len(),
+            "plan has {} layers, stack has {}",
+            plan.layers.len(),
+            mapped.layers.len()
+        );
         let input_dim = mapped.layers[0].rows;
         let num_classes = mapped.layers[mapped.layers.len() - 1].cols;
-        let layers = mapped
-            .layers
-            .into_iter()
-            .zip(stack)
-            .map(|(mapping, l)| XbarLayer {
-                mapping,
+        let meta = stack
+            .iter()
+            .map(|l| StackMeta {
                 bias: l.bias.as_ref().map(|b| b.data().to_vec()),
                 relu: l.relu,
             })
             .collect();
         Ok(CrossbarBackend {
             name: name.to_string(),
-            layers,
-            adc_bits,
+            model: Arc::new(mapped),
+            meta: Arc::new(meta),
+            plan,
             input_dim,
             num_classes,
             intra_threads: super::default_intra_threads(),
         })
     }
 
-    /// One example through the stack; `scratch`/`raw` are reused across
-    /// layers and examples by the caller.
-    fn infer_one(&self, row: &[f32], scratch: &mut SimScratch, raw: &mut Vec<i64>) -> Vec<f32> {
+    /// One example through the stack at each layer's own resolutions;
+    /// `scratch`/`raw`/`codes` are reused across layers and examples by
+    /// the caller.
+    fn infer_one(
+        &self,
+        row: &[f32],
+        scratch: &mut SimScratch,
+        raw: &mut Vec<i64>,
+        codes: &mut Vec<u8>,
+    ) -> Vec<f32> {
         let mut act: Vec<f32> = row.to_vec();
-        for layer in &self.layers {
-            let (codes, a_step) = sim::act_quantize(&act);
-            let scale = layer.mapping.step * a_step;
-            sim::forward_codes_into(&layer.mapping, &codes, &self.adc_bits, scratch, raw);
+        for ((mapping, meta), pl) in self
+            .model
+            .layers
+            .iter()
+            .zip(self.meta.iter())
+            .zip(&self.plan.layers)
+        {
+            let a_step = sim::act_quantize_into(&act, codes);
+            let scale = mapping.step * a_step;
+            sim::forward_codes_into(mapping, codes, &pl.adc_bits, scratch, raw);
             act.clear();
             act.extend(raw.iter().map(|&v| v as f32 * scale));
-            if let Some(bias) = &layer.bias {
+            if let Some(bias) = &meta.bias {
                 for (v, &b) in act.iter_mut().zip(bias) {
                     *v += b;
                 }
             }
-            if layer.relu {
+            if meta.relu {
                 for v in act.iter_mut() {
                     *v = v.max(0.0);
                 }
@@ -167,8 +237,8 @@ impl InferenceBackend for CrossbarBackend {
             self.input_dim,
             self.num_classes,
             self.intra_threads,
-            || (SimScratch::default(), Vec::new()),
-            |(scratch, raw), row| self.infer_one(row, scratch, raw),
+            || (SimScratch::default(), Vec::new(), Vec::new()),
+            |(scratch, raw, codes), row| self.infer_one(row, scratch, raw, codes),
         )
     }
 }
@@ -225,6 +295,55 @@ mod tests {
         let a = be.infer_batch(&x).unwrap();
         let b = starved.infer_batch(&x).unwrap();
         assert_ne!(a.data(), b.data());
+    }
+
+    #[test]
+    fn rebit_and_replan_share_the_mapping() {
+        let mut rng = Rng::new(21);
+        let stack = toy_stack(&mut rng);
+        let be = CrossbarBackend::new("xb", &stack, ResolutionPolicy::Lossless).unwrap();
+        let swept = be.rebit("xb-sweep", [3, 3, 3, 1]);
+        assert!(
+            Arc::ptr_eq(be.mapped(), swept.mapped()),
+            "rebit must share tiles, not deep-clone them"
+        );
+        let plan = DeploymentPlan::uniform_for(be.mapped(), [2, 2, 2, 1]);
+        let replanned = be.replan("xb-plan", plan).unwrap();
+        assert!(Arc::ptr_eq(be.mapped(), replanned.mapped()));
+
+        // a plan with the wrong layer count is rejected, not misapplied
+        let mut short = replanned.plan().clone();
+        short.layers.pop();
+        assert!(be.replan("bad", short).is_err());
+    }
+
+    #[test]
+    fn per_layer_plan_applies_bits_per_layer() {
+        let mut rng = Rng::new(23);
+        let stack = toy_stack(&mut rng);
+        let lossless = CrossbarBackend::new("xb", &stack, ResolutionPolicy::Lossless).unwrap();
+        let x = Tensor::new(vec![3, 20], vec![0.8; 60]).unwrap();
+        let want = lossless.infer_batch(&x).unwrap();
+
+        // starving only the *second* layer must change the output...
+        let mut plan = lossless.plan().clone();
+        plan.layers[1].adc_bits = [1; 4];
+        let starved_l2 = lossless.replan("xb-l2", plan).unwrap();
+        assert_ne!(want.data(), starved_l2.infer_batch(&x).unwrap().data());
+
+        // ...and per-layer lossless bits reproduce whole-model lossless
+        // exactly (neither clips anywhere)
+        let per_layer =
+            CrossbarBackend::with_layer_policy("xb-pl", &stack, ResolutionPolicy::Lossless)
+                .unwrap();
+        assert_eq!(want.data(), per_layer.infer_batch(&x).unwrap().data());
+        // the per-layer plan is genuinely non-uniform on this stack or at
+        // least never exceeds the whole-model bits
+        for l in &per_layer.plan().layers {
+            for k in 0..N_SLICES {
+                assert!(l.adc_bits[k] <= lossless.adc_bits()[k]);
+            }
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@
 use anyhow::Result;
 
 use crate::quant;
-use crate::reram::sim::act_quantize;
+use crate::reram::sim::act_quantize_into;
 use crate::tensor::Tensor;
 
 use super::{BackendInfo, DenseLayer, InferenceBackend};
@@ -80,11 +80,12 @@ impl ReferenceBackend {
         self
     }
 
-    /// One example through the whole stack (integer-exact per layer).
-    fn infer_one(&self, row: &[f32], acc: &mut Vec<i64>) -> Vec<f32> {
+    /// One example through the whole stack (integer-exact per layer);
+    /// `acc`/`codes` are reused across layers and examples by the caller.
+    fn infer_one(&self, row: &[f32], acc: &mut Vec<i64>, codes: &mut Vec<u8>) -> Vec<f32> {
         let mut act: Vec<f32> = row.to_vec();
         for layer in &self.layers {
-            let (codes, a_step) = act_quantize(&act);
+            let a_step = act_quantize_into(&act, codes);
             let scale = layer.step * a_step;
             acc.clear();
             acc.resize(layer.cols, 0);
@@ -136,33 +137,39 @@ impl InferenceBackend for ReferenceBackend {
             self.input_dim,
             self.num_classes,
             self.intra_threads,
-            Vec::new,
-            |acc, row| self.infer_one(row, acc),
+            || (Vec::new(), Vec::new()),
+            |(acc, codes), row| self.infer_one(row, acc, codes),
         )
     }
 }
 
-/// Standalone exact quantized matmul in real units, with **batch-global**
-/// activation quantization (the semantic of `reram::sim::forward` and the
-/// AOT crossbar graphs): quantize `w` (Eq. 2), quantize `x` over the whole
-/// batch, accumulate codes exactly, scale back. This is the oracle the
-/// simulator's lossless tests compare against.
+/// Standalone exact quantized matmul in real units, with **per-example**
+/// activation quantization — the one semantic every host forward path
+/// shares (`reram::sim::forward`, [`CrossbarBackend`], this backend):
+/// quantize `w` (Eq. 2), quantize each row of `x` with its own qstep,
+/// accumulate codes exactly, scale back. Batch-composition invariant by
+/// construction; the oracle the simulator's lossless tests compare
+/// against.
+///
+/// [`CrossbarBackend`]: super::CrossbarBackend
 pub fn quantized_matmul(x: &Tensor, w: &Tensor) -> Result<Tensor> {
     anyhow::ensure!(x.shape().len() == 2 && w.shape().len() == 2, "rank-2 only");
     let (b, rows) = (x.shape()[0], x.shape()[1]);
     let cols = w.shape()[1];
     anyhow::ensure!(rows == w.shape()[0], "inner dims {rows} vs {}", w.shape()[0]);
     let q = quant::quantize(w);
-    let (codes, a_step) = act_quantize(x.data());
-    let scale = q.step * a_step;
     let mut out = vec![0.0f32; b * cols];
+    let mut codes = Vec::with_capacity(rows);
+    let mut acc = vec![0i64; cols];
     for i in 0..b {
-        let mut acc = vec![0i64; cols];
-        for k in 0..rows {
-            let c = codes[i * rows + k] as i64;
-            if c == 0 {
+        let a_step = act_quantize_into(&x.data()[i * rows..(i + 1) * rows], &mut codes);
+        let scale = q.step * a_step;
+        acc.fill(0);
+        for (k, &code) in codes.iter().enumerate() {
+            if code == 0 {
                 continue;
             }
+            let c = code as i64;
             for j in 0..cols {
                 let idx = k * cols + j;
                 acc[j] += c * q.signs[idx] as i64 * q.codes[idx] as i64;
@@ -178,6 +185,7 @@ pub fn quantized_matmul(x: &Tensor, w: &Tensor) -> Result<Tensor> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::reram::sim::act_quantize;
     use crate::serve::dense_stack;
     use crate::util::rng::Rng;
 
@@ -213,14 +221,15 @@ mod tests {
         let w = Tensor::new(vec![30, 8], rng.normal_vec(240, 0.2)).unwrap();
         let x = Tensor::new(vec![3, 30], (0..90).map(|_| rng.next_f32()).collect()).unwrap();
         let got = quantized_matmul(&x, &w).unwrap();
-        // float reference on the recovered quantized operands
+        // float reference on the recovered quantized operands, with the
+        // same per-row activation quantization
         let qw = quant::quantize(&w).recover();
-        let (codes, step) = act_quantize(x.data());
         for i in 0..3 {
+            let (codes, step) = act_quantize(&x.data()[i * 30..(i + 1) * 30]);
             for j in 0..8 {
                 let mut want = 0.0f64;
                 for k in 0..30 {
-                    want += (codes[i * 30 + k] as f64 * step as f64) * qw.at2(k, j) as f64;
+                    want += (codes[k] as f64 * step as f64) * qw.at2(k, j) as f64;
                 }
                 let got = got.at2(i, j) as f64;
                 assert!(

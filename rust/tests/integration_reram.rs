@@ -157,8 +157,12 @@ fn aot_reram_graph_matches_rust_end_to_end() {
     for (a, b) in aot_logits.data().iter().zip(logits.data()) {
         max_rel = max_rel.max((a - b).abs() / (b.abs().max(1e-2)));
     }
-    // the two paths share semantics but differ in accumulation order and
-    // the hidden-activation quantization point; allow small relative slack
+    // the two paths differ in accumulation order and — since the Rust sim
+    // quantizes activations per example row while the AOT graph's
+    // `_act_quantize` still takes its qstep over the whole batch (a known
+    // divergence, tracked in ROADMAP.md) — in quantization step whenever a
+    // row's max falls in a lower octave than the batch max; the relative
+    // slack absorbs both
     assert!(max_rel < 0.05, "AOT vs rust logits rel err {max_rel}");
 }
 

@@ -61,6 +61,40 @@ fn reference_and_crossbar_agree_at_lossless_resolution() {
     });
 }
 
+/// The per-layer plan path (each layer sized by its own census) at
+/// lossless resolution must also agree with the reference exactly — and
+/// its plan never asks for more bits than the whole-model policy.
+#[test]
+fn per_layer_lossless_plan_agrees_with_reference() {
+    check(6, |rng| {
+        let stack = random_stack(rng);
+        let d_in = stack[0].w.shape()[0];
+        let reference = ReferenceBackend::new("ref", &stack).map_err(|e| e.to_string())?;
+        let planned =
+            CrossbarBackend::with_layer_policy("xbar-plan", &stack, ResolutionPolicy::Lossless)
+                .map_err(|e| e.to_string())?;
+        let global =
+            CrossbarBackend::new("xbar", &stack, ResolutionPolicy::Lossless)
+                .map_err(|e| e.to_string())?;
+        for layer in &planned.plan().layers {
+            for k in 0..4 {
+                ensure(
+                    layer.adc_bits[k] <= global.adc_bits()[k],
+                    format!("layer {} slice {k} exceeds the whole-model bits", layer.name),
+                )?;
+            }
+        }
+        let x = random_batch(rng, 1 + rng.below(4), d_in);
+        let want = reference.infer_batch(&x).map_err(|e| e.to_string())?;
+        let got = planned.infer_batch(&x).map_err(|e| e.to_string())?;
+        for (g, w) in got.data().iter().zip(want.data()) {
+            let tol = 1e-5 * w.abs().max(1.0);
+            ensure((g - w).abs() <= tol, format!("planned {g} vs reference {w}"))?;
+        }
+        Ok(())
+    });
+}
+
 /// Reduced (clipping) resolution must *not* silently equal lossless on a
 /// dense model — the agreement above is meaningful, not vacuous.
 #[test]
