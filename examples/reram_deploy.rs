@@ -79,6 +79,10 @@ fn main() -> Result<()> {
         "{}",
         report::plan_table("per-layer deployment (p99.9 on each layer's census)", &deploy.plan_rows)
     );
+    println!(
+        "{}",
+        report::storage_table("crossbar storage (density-chosen per tile)", &deploy.storage)
+    );
 
     // 3) functional validation on the test set — every forward path is an
     //    InferenceBackend answering the same accuracy() call

@@ -1,0 +1,172 @@
+//! §Perf: sparsity-aware crossbar storage (Dense vs Compressed tiles).
+//!
+//! Sweeps weight density on a 784x300 MLP layer from dense-random down to
+//! Bl1-level bit-slice sparsity, maps each point twice — once forced to
+//! row-major dense tiles, once with the density-chosen (packed) formats —
+//! and times the batched simulator forward on both. The two layouts must
+//! agree bit-exactly (integer accumulation commutes); the packed layout
+//! must be >= 2x faster once the mean slice sparsity reaches 85% zeros.
+//! Results (per-density timings, speedups, tile-format census, storage
+//! bytes) are written to `BENCH_sparse.json`.
+//!
+//! Run: `cargo bench --bench sparse_sim`
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use bitslice_reram::quant::N_SLICES;
+use bitslice_reram::reram::crossbar::{Crossbar, StorageFormat};
+use bitslice_reram::reram::{mapper, sim};
+use bitslice_reram::tensor::Tensor;
+use bitslice_reram::util::json::{num, obj, Json};
+use bitslice_reram::util::rng::Rng;
+
+const LOSSLESS: [u32; N_SLICES] = [10, 10, 10, 10];
+const ROWS: usize = 784;
+const COLS: usize = 300;
+const BATCH: usize = 32;
+
+/// Weights with an exact fraction `density` of nonzero elements (random
+/// magnitudes spanning all slices) plus a fixed dynamic-range pin, so the
+/// qstep — and therefore the mapped codes of shared elements — is
+/// density-invariant across the sweep.
+fn weights_at_density(rng: &mut Rng, density: f64) -> Tensor {
+    let n = ROWS * COLS;
+    let mut data = vec![0.0f32; n];
+    let target = ((n as f64) * density) as usize;
+    let mut placed = 1usize; // the pin below
+    data[0] = 1.0;
+    while placed < target {
+        let i = rng.below(n);
+        if data[i] == 0.0 {
+            data[i] = (rng.next_f32() - 0.5) * 2.0;
+            placed += 1;
+        }
+    }
+    Tensor::new(vec![ROWS, COLS], data).unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(7);
+    let x = Tensor::new(
+        vec![BATCH, ROWS],
+        (0..BATCH * ROWS).map(|_| rng.next_f32()).collect(),
+    )?;
+
+    harness::section("single-tile bitline scan (128x128, 90% zeros)");
+    {
+        let mut xb = Crossbar::zeros(128, 128);
+        for r in 0..128 {
+            for c in 0..128 {
+                if rng.below(10) == 0 {
+                    xb.set(r, c, 1 + rng.below(3) as u8);
+                }
+            }
+        }
+        let comp = xb.in_format(StorageFormat::Compressed);
+        let bits: Vec<u8> = (0..128).map(|_| rng.below(2) as u8).collect();
+        let mut out = vec![0u32; 128];
+        let sd = harness::bench("dense tile bitline_currents", Duration::from_millis(600), || {
+            xb.bitline_currents(&bits, &mut out);
+            std::hint::black_box(&out);
+        });
+        let mut out2 = vec![0u32; 128];
+        let sc = harness::bench("compressed tile bitline_currents", Duration::from_millis(600), || {
+            comp.bitline_currents(&bits, &mut out2);
+            std::hint::black_box(&out2);
+        });
+        xb.bitline_currents(&bits, &mut out);
+        comp.bitline_currents(&bits, &mut out2);
+        assert_eq!(out, out2, "tile representations disagree");
+        println!(
+            "-> tile scan speedup at 90% zeros: {:.2}x ({} -> {} bytes)",
+            sd.mean.as_secs_f64() / sc.mean.as_secs_f64(),
+            xb.storage_bytes(),
+            comp.storage_bytes(),
+        );
+    }
+
+    harness::section("density sweep: packed (density-chosen) vs forced-dense forward");
+    let mut rows_json: Vec<Json> = Vec::new();
+    let mut sparse_point: Option<(f64, f64)> = None; // (zero_frac, speedup)
+    for density in [1.0f64, 0.5, 0.25, 0.10, 0.05, 0.02] {
+        let w = weights_at_density(&mut rng, density);
+        let packed = mapper::map_layer("w", &w)?;
+        let dense = packed.with_storage(StorageFormat::Dense);
+
+        // paper-style mean slice sparsity of the mapping
+        let numel = (ROWS * COLS) as f64;
+        let zero_frac = (0..N_SLICES)
+            .map(|k| 1.0 - packed.nonzero_cells(k) as f64 / numel)
+            .sum::<f64>()
+            / N_SLICES as f64;
+        let stats = packed.storage_stats();
+
+        let label_d = format!("dense  forward b={BATCH} d={density}");
+        let sd = harness::bench(&label_d, Duration::from_millis(1200), || {
+            let _ = std::hint::black_box(sim::forward(&dense, &x, &LOSSLESS));
+        });
+        let label_p = format!("packed forward b={BATCH} d={density}");
+        let sp = harness::bench(&label_p, Duration::from_millis(1200), || {
+            let _ = std::hint::black_box(sim::forward(&packed, &x, &LOSSLESS));
+        });
+        let speedup = sd.mean.as_secs_f64() / sp.mean.as_secs_f64();
+
+        // the layouts must be a pure representation change: bit-exact
+        let a = sim::forward(&dense, &x, &LOSSLESS);
+        let b = sim::forward(&packed, &x, &LOSSLESS);
+        assert_eq!(a.data(), b.data(), "layouts disagree at density {density}");
+
+        println!(
+            "-> density {density}: slice zeros {:.1}%, tiles {} dense / {} compressed / \
+             {} skipped, bytes {} vs {} dense, speedup {speedup:.2}x",
+            zero_frac * 100.0,
+            stats.dense_tiles,
+            stats.compressed_tiles,
+            stats.skipped_tiles,
+            stats.bytes,
+            stats.dense_bytes,
+        );
+        if zero_frac >= 0.85 && sparse_point.is_none() {
+            sparse_point = Some((zero_frac, speedup));
+        }
+        rows_json.push(obj(vec![
+            ("weight_density", num(density)),
+            ("slice_zero_fraction", num(zero_frac)),
+            ("dense_tiles", num(stats.dense_tiles as f64)),
+            ("compressed_tiles", num(stats.compressed_tiles as f64)),
+            ("skipped_tiles", num(stats.skipped_tiles as f64)),
+            ("bytes", num(stats.bytes as f64)),
+            ("dense_bytes", num(stats.dense_bytes as f64)),
+            ("dense_ms", num(sd.mean_ms())),
+            ("packed_ms", num(sp.mean_ms())),
+            ("speedup", num(speedup)),
+        ]));
+    }
+
+    // Acceptance bar: >= 2x over the dense baseline at Bl1-level slice
+    // sparsity (>= 85% zeros), bit-exactness already asserted above.
+    let (zero_frac, speedup) = sparse_point.expect("sweep reaches >= 85% slice zeros");
+    assert!(
+        speedup >= 2.0,
+        "compressed path only {speedup:.2}x at {:.1}% slice zeros",
+        zero_frac * 100.0
+    );
+    println!(
+        "OK: {speedup:.2}x over dense forward at {:.1}% mean slice zeros",
+        zero_frac * 100.0
+    );
+
+    let doc = obj(vec![
+        ("layer", obj(vec![("rows", num(ROWS as f64)), ("cols", num(COLS as f64))])),
+        ("batch", num(BATCH as f64)),
+        ("bl1_level_speedup", num(speedup)),
+        ("bl1_level_zero_fraction", num(zero_frac)),
+        ("sweep", Json::Arr(rows_json)),
+    ]);
+    std::fs::write("BENCH_sparse.json", doc.to_string())?;
+    println!("wrote BENCH_sparse.json");
+    Ok(())
+}

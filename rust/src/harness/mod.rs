@@ -13,7 +13,7 @@ use crate::coordinator::evaluator::{self, EvalResult};
 use crate::coordinator::metrics::MetricsLog;
 use crate::coordinator::{checkpoint, TrainOutcome, Trainer};
 use crate::data::Dataset;
-use crate::report::{MethodRow, PlanRow};
+use crate::report::{MethodRow, PlanRow, StorageRow};
 use crate::reram::planner::DeploymentPlan;
 use crate::reram::{energy, mapper, resolution, ResolutionPolicy};
 use crate::runtime::{Engine, Manifest};
@@ -185,6 +185,9 @@ pub struct DeployReport {
     pub plan_rows: Vec<PlanRow>,
     /// savings of `plan` vs the 8-bit baseline
     pub plan_savings: (f64, f64, f64),
+    /// per-layer tile storage census (dense vs compressed vs skipped —
+    /// the `report::storage_table` body)
+    pub storage: Vec<StorageRow>,
 }
 
 pub fn deploy_report(
@@ -203,6 +206,7 @@ pub fn deploy_report(
     let plan_rows = energy::layer_costs(&mapped, &plan);
     let plan_savings = energy::plan_savings_vs_baseline(&mapped, &plan);
     let cost = energy::plan_cost(&mapped, &plan);
+    let storage = mapped.storage_rows();
     Ok(DeployReport {
         crossbars: cost.crossbars,
         unprogrammed_tiles: cost.skipped_tiles,
@@ -213,5 +217,6 @@ pub fn deploy_report(
         plan,
         plan_rows,
         plan_savings,
+        storage,
     })
 }

@@ -183,6 +183,14 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         meta.model, meta.method, deploy.crossbars, deploy.unprogrammed_tiles
     );
     println!(
+        "{}",
+        report::storage_table("crossbar storage (per layer)", &deploy.storage)
+    );
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let storage_path = cfg.out_dir.join("storage.json");
+    std::fs::write(&storage_path, report::storage_json(&deploy.storage).to_string())?;
+    println!("storage census written to {}", storage_path.display());
+    println!(
         "lossless ADC bits (LSB..MSB): {:?}; deployed at p{:.1}: {:?}",
         deploy.lossless_bits,
         pct * 100.0,

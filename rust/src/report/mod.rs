@@ -225,6 +225,76 @@ pub fn planner_json(
     ])
 }
 
+/// One row of the crossbar storage report: a layer's tile-format census —
+/// exactly [`mapper::storage_rows`]'s output, consumed directly (like
+/// [`plan_table`] consumes [`PlanRow`]).
+///
+/// [`mapper::storage_rows`]: crate::reram::mapper::MappedModel::storage_rows
+pub use crate::reram::mapper::StorageRow;
+
+/// Render the per-layer crossbar storage census (markdown): tiles dense
+/// vs compressed, the fully-zero tiles the simulator skips, mapped-cell
+/// density, and bytes under the chosen layouts vs an all-dense layout.
+pub fn storage_table(title: &str, rows: &[StorageRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("### {title}\n\n"));
+    out.push_str(
+        "| Layer | Dense | Compressed | Skipped | Density | Bytes | Dense bytes | Saving |\n\
+         |-------|-------|------------|---------|---------|-------|-------------|--------|\n",
+    );
+    let mut total = crate::reram::mapper::StorageStats::default();
+    for r in rows {
+        let s = &r.stats;
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {:.2}% | {} | {} | {:.2}x |\n",
+            r.layer,
+            s.dense_tiles,
+            s.compressed_tiles,
+            s.skipped_tiles,
+            s.density() * 100.0,
+            s.bytes,
+            s.dense_bytes,
+            s.byte_saving(),
+        ));
+        total.merge(s);
+    }
+    if rows.len() > 1 {
+        out.push_str(&format!(
+            "| total | {} | {} | {} | {:.2}% | {} | {} | {:.2}x |\n",
+            total.dense_tiles,
+            total.compressed_tiles,
+            total.skipped_tiles,
+            total.density() * 100.0,
+            total.bytes,
+            total.dense_bytes,
+            total.byte_saving(),
+        ));
+    }
+    out
+}
+
+/// Serialize storage rows — the deploy CLI's `<out>/storage.json`
+/// document.
+pub fn storage_json(rows: &[StorageRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let st = &r.stats;
+                obj(vec![
+                    ("layer", s(&r.layer)),
+                    ("dense_tiles", num(st.dense_tiles as f64)),
+                    ("compressed_tiles", num(st.compressed_tiles as f64)),
+                    ("skipped_tiles", num(st.skipped_tiles as f64)),
+                    ("programmed_cells", num(st.programmed_cells as f64)),
+                    ("cells", num(st.cells as f64)),
+                    ("bytes", num(st.bytes as f64)),
+                    ("dense_bytes", num(st.dense_bytes as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// Per-slice resolution summary (feeds Table 3's "Resolution" column from
 /// the measured mapping instead of asserting it).
 pub fn resolution_summary(bits_lsb_first: [u32; N_SLICES]) -> String {
@@ -354,6 +424,42 @@ mod tests {
         assert_eq!(bits[3].as_usize(), Some(1));
         let savings = back.get("savings").unwrap();
         assert_eq!(savings.get("energy").unwrap().as_f64(), Some(16.3));
+    }
+
+    fn storage_row(layer: &str, dense: usize, comp: usize) -> StorageRow {
+        StorageRow {
+            layer: layer.into(),
+            stats: crate::reram::mapper::StorageStats {
+                dense_tiles: dense,
+                compressed_tiles: comp,
+                skipped_tiles: 1,
+                programmed_cells: 500,
+                cells: 10_000,
+                bytes: 2_600,
+                dense_bytes: 10_000,
+            },
+        }
+    }
+
+    #[test]
+    fn storage_table_formats_rows_and_total() {
+        let t = storage_table("storage", &[storage_row("fc1/w", 2, 5), storage_row("fc2/w", 0, 3)]);
+        assert!(t.contains("| fc1/w | 2 | 5 | 1 | 5.00% | 2600 | 10000 | 3.85x |"), "{t}");
+        assert!(t.contains("| total | 2 | 8 | 2 | 5.00% | 5200 | 20000 | 3.85x |"), "{t}");
+        // single-row tables skip the redundant total line
+        let one = storage_table("storage", &[storage_row("fc1/w", 2, 5)]);
+        assert!(!one.contains("| total |"), "{one}");
+    }
+
+    #[test]
+    fn storage_json_roundtrips() {
+        let j = storage_json(&[storage_row("fc1/w", 2, 5)]);
+        let back = crate::util::json::parse(&j.to_string()).unwrap();
+        let row = &back.as_arr().unwrap()[0];
+        assert_eq!(row.get("layer").unwrap().as_str(), Some("fc1/w"));
+        assert_eq!(row.get("compressed_tiles").unwrap().as_usize(), Some(5));
+        assert_eq!(row.get("bytes").unwrap().as_usize(), Some(2600));
+        assert_eq!(row.get("dense_bytes").unwrap().as_usize(), Some(10000));
     }
 
     #[test]

@@ -7,6 +7,26 @@
 //! bitline current is the dot product of the input bit vector with the
 //! column's conductances, in units of one minimum-conductance cell (the
 //! ADC's LSB).
+//!
+//! # Storage formats
+//!
+//! Bit-slice L1 training drives each 2-bit slice toward ~90%+ zeros, so a
+//! tile's cells live behind a polymorphic `CellArray`:
+//!
+//! * **Dense** — the row-major `Vec<u8>` layout; right for tiles where
+//!   most cells are programmed (sequential scan, one byte per cell).
+//! * **Compressed** — per-row packed `(col, val)` pairs (CSR-style
+//!   `row_ptr` offsets) plus a nonzero-wordline index, so
+//!   [`Crossbar::bitline_currents`] touches only programmed cells on
+//!   active wordlines.
+//!
+//! The representation is chosen per tile from its measured density (see
+//! [`COMPRESS_MAX_DENSITY`] and [`chosen_format`]); the mapper builds
+//! compressed tiles directly without a dense intermediate. The
+//! programmed-cell census is cached in the tile (maintained by
+//! [`Crossbar::set`], established at build time), so
+//! [`Crossbar::nonzero_cells`] is O(1) — the energy roll-up, the planner's
+//! scoring loop and the reports stop recounting `rows * cols` cells.
 
 /// ISAAC-style array geometry.
 pub const XBAR_ROWS: usize = 128;
@@ -15,23 +35,155 @@ pub const XBAR_COLS: usize = 128;
 /// Max cell conductance value for 2-bit cells.
 pub const CELL_MAX: u8 = 3;
 
+/// Densest tile (programmed cells / total cells) still stored compressed.
+///
+/// Measured crossover: one compressed entry costs exactly 3 bytes (the
+/// `(col, val)` pair lives as parallel `u16`/`u8` arrays — a tuple would
+/// pad to 4) and one scattered add, versus the dense row's one byte and
+/// one sequential add per cell, so memory parity sits at 1/3 density and
+/// the sparse scan wins comfortably below it. A quarter leaves margin for
+/// the scatter penalty and the `row_ptr` overhead; Bl1-level slices
+/// (>= 85% zeros, i.e. <= 15% density) sit far below it, while
+/// dense-random slices (~37% per sign grid) stay dense.
+pub const COMPRESS_MAX_DENSITY: f64 = 0.25;
+
+/// How a tile's cells are laid out in memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StorageFormat {
+    /// row-major `Vec<u8>`, one byte per cell
+    Dense,
+    /// per-row packed `(col, val)` pairs + nonzero-wordline index
+    Compressed,
+}
+
+/// The format [`Crossbar::pack`] and the mapper choose for a tile with
+/// `nonzero` of `rows * cols` cells programmed — the one density-threshold
+/// definition every call site shares.
+pub fn chosen_format(nonzero: usize, rows: usize, cols: usize) -> StorageFormat {
+    let cells = (rows * cols).max(1);
+    if nonzero as f64 / cells as f64 <= COMPRESS_MAX_DENSITY {
+        StorageFormat::Compressed
+    } else {
+        StorageFormat::Dense
+    }
+}
+
+/// Physical cell storage of one tile — see the module docs for when each
+/// representation wins.
+#[derive(Debug, Clone)]
+enum CellArray {
+    /// row-major `rows x cols`, values 0..=3
+    Dense(Vec<u8>),
+    Compressed {
+        /// entry range of row `r` is `row_ptr[r]..row_ptr[r + 1]`
+        row_ptr: Vec<u32>,
+        /// `(column, value)` pairs as parallel arrays (3 bytes per entry,
+        /// no tuple padding), column-ascending within each row
+        entry_cols: Vec<u16>,
+        entry_vals: Vec<u8>,
+        /// rows holding >= 1 programmed cell, ascending — the
+        /// nonzero-wordline index the sparse current scan walks
+        active_rows: Vec<u16>,
+    },
+}
+
+/// Assemble the CSR arrays from row-major `(row, col, val)` triples (row
+/// ascending, column ascending within a row, `row < rows`, `val != 0`) —
+/// the one compressed-layout builder [`Crossbar::from_cells`] and
+/// [`Crossbar::convert`] share, so the representation's invariants live in
+/// a single place.
+fn build_compressed(rows: usize, cells: impl Iterator<Item = (usize, u16, u8)>) -> CellArray {
+    let hint = cells.size_hint().0;
+    let mut row_ptr = vec![0u32; rows + 1];
+    let mut entry_cols = Vec::with_capacity(hint);
+    let mut entry_vals = Vec::with_capacity(hint);
+    for (r, c, v) in cells {
+        row_ptr[r + 1] += 1;
+        entry_cols.push(c);
+        entry_vals.push(v);
+    }
+    for r in 0..rows {
+        row_ptr[r + 1] += row_ptr[r];
+    }
+    let active_rows = (0..rows)
+        .filter(|&r| row_ptr[r + 1] > row_ptr[r])
+        .map(|r| r as u16)
+        .collect();
+    CellArray::Compressed {
+        row_ptr,
+        entry_cols,
+        entry_vals,
+        active_rows,
+    }
+}
+
 /// A single crossbar array holding 2-bit cells.
 #[derive(Debug, Clone)]
 pub struct Crossbar {
-    /// row-major `rows x cols`, values 0..=3
-    cells: Vec<u8>,
+    store: CellArray,
     rows: usize,
     cols: usize,
+    /// programmed-cell census, maintained incrementally — never recounted
+    nonzero: usize,
 }
 
 impl Crossbar {
+    /// An all-zero tile in dense layout (the mutable starting point;
+    /// [`Crossbar::pack`] re-chooses the format once programming is done).
     pub fn zeros(rows: usize, cols: usize) -> Self {
         assert!(rows <= XBAR_ROWS && cols <= XBAR_COLS, "{rows}x{cols}");
         Crossbar {
-            cells: vec![0; rows * cols],
+            store: CellArray::Dense(vec![0; rows * cols]),
             rows,
             cols,
+            nonzero: 0,
         }
+    }
+
+    /// Build a tile from its programmed cells `(row, col, val)` — the
+    /// mapper's path. The format is chosen up front from the cell count
+    /// ([`chosen_format`]), so sparse tiles go straight to compressed
+    /// storage with **no dense intermediate**. Cells may arrive in any
+    /// order; values must be non-zero and positions unique.
+    pub fn from_cells(rows: usize, cols: usize, mut cells: Vec<(u16, u16, u8)>) -> Self {
+        assert!(rows <= XBAR_ROWS && cols <= XBAR_COLS, "{rows}x{cols}");
+        cells.sort_unstable();
+        for pair in cells.windows(2) {
+            assert!(
+                (pair[0].0, pair[0].1) != (pair[1].0, pair[1].1),
+                "duplicate cell ({}, {})",
+                pair[0].0,
+                pair[0].1
+            );
+        }
+        let nonzero = cells.len();
+        let store = match chosen_format(nonzero, rows, cols) {
+            StorageFormat::Dense => {
+                let mut data = vec![0u8; rows * cols];
+                for &(r, c, v) in &cells {
+                    Self::check_cell(rows, cols, r as usize, c as usize, v);
+                    data[r as usize * cols + c as usize] = v;
+                }
+                CellArray::Dense(data)
+            }
+            StorageFormat::Compressed => {
+                for &(r, c, v) in &cells {
+                    Self::check_cell(rows, cols, r as usize, c as usize, v);
+                }
+                build_compressed(rows, cells.iter().map(|&(r, c, v)| (r as usize, c, v)))
+            }
+        };
+        Crossbar {
+            store,
+            rows,
+            cols,
+            nonzero,
+        }
+    }
+
+    fn check_cell(rows: usize, cols: usize, r: usize, c: usize, v: u8) {
+        assert!(r < rows && c < cols, "cell ({r},{c}) outside {rows}x{cols}");
+        assert!((1..=CELL_MAX).contains(&v), "cell value {v}");
     }
 
     pub fn rows(&self) -> usize {
@@ -42,45 +194,255 @@ impl Crossbar {
         self.cols
     }
 
+    /// The current storage layout.
+    pub fn format(&self) -> StorageFormat {
+        match self.store {
+            CellArray::Dense(_) => StorageFormat::Dense,
+            CellArray::Compressed { .. } => StorageFormat::Compressed,
+        }
+    }
+
+    /// Programmed fraction of the tile's cells.
+    pub fn density(&self) -> f64 {
+        let cells = self.rows * self.cols;
+        if cells == 0 {
+            0.0
+        } else {
+            self.nonzero as f64 / cells as f64
+        }
+    }
+
+    /// Heap bytes the cell storage occupies under the current format.
+    pub fn storage_bytes(&self) -> usize {
+        match &self.store {
+            CellArray::Dense(cells) => cells.len(),
+            CellArray::Compressed {
+                row_ptr,
+                entry_cols,
+                entry_vals,
+                active_rows,
+            } => {
+                entry_cols.len() * std::mem::size_of::<u16>()
+                    + entry_vals.len()
+                    + row_ptr.len() * std::mem::size_of::<u32>()
+                    + active_rows.len() * std::mem::size_of::<u16>()
+            }
+        }
+    }
+
+    /// Program one cell, maintaining the cached census. Works in either
+    /// representation — compressed updates splice the entry list, which is
+    /// fine off the hot path (programming happens once, at map time).
     pub fn set(&mut self, r: usize, c: usize, v: u8) {
         assert!(v <= CELL_MAX, "cell value {v}");
-        self.cells[r * self.cols + c] = v;
+        assert!(
+            r < self.rows && c < self.cols,
+            "cell ({r},{c}) outside {}x{}",
+            self.rows,
+            self.cols
+        );
+        match &mut self.store {
+            CellArray::Dense(cells) => {
+                let cell = &mut cells[r * self.cols + c];
+                self.nonzero += (v != 0) as usize;
+                self.nonzero -= (*cell != 0) as usize;
+                *cell = v;
+            }
+            CellArray::Compressed {
+                row_ptr,
+                entry_cols,
+                entry_vals,
+                active_rows,
+            } => {
+                let lo = row_ptr[r] as usize;
+                let hi = row_ptr[r + 1] as usize;
+                match entry_cols[lo..hi].binary_search(&(c as u16)) {
+                    Ok(i) if v != 0 => entry_vals[lo + i] = v,
+                    Ok(i) => {
+                        // clearing the row's only entry deactivates it
+                        entry_cols.remove(lo + i);
+                        entry_vals.remove(lo + i);
+                        for p in row_ptr[r + 1..].iter_mut() {
+                            *p -= 1;
+                        }
+                        if hi - lo == 1 {
+                            if let Ok(a) = active_rows.binary_search(&(r as u16)) {
+                                active_rows.remove(a);
+                            }
+                        }
+                        self.nonzero -= 1;
+                    }
+                    Err(_) if v == 0 => {}
+                    Err(i) => {
+                        entry_cols.insert(lo + i, c as u16);
+                        entry_vals.insert(lo + i, v);
+                        for p in row_ptr[r + 1..].iter_mut() {
+                            *p += 1;
+                        }
+                        if hi == lo {
+                            if let Err(a) = active_rows.binary_search(&(r as u16)) {
+                                active_rows.insert(a, r as u16);
+                            }
+                        }
+                        self.nonzero += 1;
+                    }
+                }
+            }
+        }
     }
 
     pub fn get(&self, r: usize, c: usize) -> u8 {
-        self.cells[r * self.cols + c]
+        assert!(
+            r < self.rows && c < self.cols,
+            "cell ({r},{c}) outside {}x{}",
+            self.rows,
+            self.cols
+        );
+        match &self.store {
+            CellArray::Dense(cells) => cells[r * self.cols + c],
+            CellArray::Compressed {
+                row_ptr,
+                entry_cols,
+                entry_vals,
+                ..
+            } => {
+                let (lo, hi) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
+                match entry_cols[lo..hi].binary_search(&(c as u16)) {
+                    Ok(i) => entry_vals[lo + i],
+                    Err(_) => 0,
+                }
+            }
+        }
     }
 
-    /// Number of programmed (non-zero) cells — the mapped-sparsity census.
+    /// Number of programmed (non-zero) cells — the mapped-sparsity census,
+    /// cached at program time (O(1), never a recount).
     pub fn nonzero_cells(&self) -> usize {
-        self.cells.iter().filter(|&&v| v != 0).count()
+        self.nonzero
+    }
+
+    /// Re-lay the cells out in `fmt` (no-op when already there).
+    pub fn convert(&mut self, fmt: StorageFormat) {
+        if self.format() == fmt {
+            return;
+        }
+        match fmt {
+            StorageFormat::Dense => {
+                let mut data = vec![0u8; self.rows * self.cols];
+                if let CellArray::Compressed {
+                    row_ptr,
+                    entry_cols,
+                    entry_vals,
+                    ..
+                } = &self.store
+                {
+                    for r in 0..self.rows {
+                        for i in row_ptr[r] as usize..row_ptr[r + 1] as usize {
+                            data[r * self.cols + entry_cols[i] as usize] = entry_vals[i];
+                        }
+                    }
+                }
+                self.store = CellArray::Dense(data);
+            }
+            StorageFormat::Compressed => {
+                let (rows, cols) = (self.rows, self.cols);
+                let CellArray::Dense(cells) = &self.store else {
+                    return;
+                };
+                let mut triples = Vec::with_capacity(self.nonzero);
+                for r in 0..rows {
+                    for c in 0..cols {
+                        let v = cells[r * cols + c];
+                        if v != 0 {
+                            triples.push((r, c as u16, v));
+                        }
+                    }
+                }
+                let packed = build_compressed(rows, triples.into_iter());
+                self.store = packed;
+            }
+        }
+    }
+
+    /// A clone laid out in `fmt` — the benches' and the representation
+    /// property tests' handle for comparing both paths on identical cells.
+    pub fn in_format(&self, fmt: StorageFormat) -> Crossbar {
+        let mut xb = self.clone();
+        xb.convert(fmt);
+        xb
+    }
+
+    /// Choose the storage format from the measured density (see
+    /// [`COMPRESS_MAX_DENSITY`]) — call once programming is complete.
+    pub fn pack(&mut self) {
+        self.convert(chosen_format(self.nonzero, self.rows, self.cols));
     }
 
     /// Per-column sum of conductances: the worst-case bitline current
     /// (every wordline driving a '1'), in LSB units.
     pub fn column_conductance_sums(&self) -> Vec<u32> {
         let mut sums = vec![0u32; self.cols];
-        for r in 0..self.rows {
-            let row = &self.cells[r * self.cols..(r + 1) * self.cols];
-            for (c, &v) in row.iter().enumerate() {
-                sums[c] += v as u32;
+        match &self.store {
+            CellArray::Dense(cells) => {
+                for r in 0..self.rows {
+                    let row = &cells[r * self.cols..(r + 1) * self.cols];
+                    for (s, &v) in sums.iter_mut().zip(row) {
+                        *s += v as u32;
+                    }
+                }
+            }
+            CellArray::Compressed {
+                entry_cols,
+                entry_vals,
+                ..
+            } => {
+                for (&c, &v) in entry_cols.iter().zip(entry_vals) {
+                    sums[c as usize] += v as u32;
+                }
             }
         }
         sums
     }
 
     /// Bitline currents for one input bit-plane (`bits[r]` in {0,1}).
+    ///
+    /// The buffer lengths are hard asserts in **both** representations and
+    /// all build profiles: a short `out` would silently truncate the `zip`
+    /// accumulation in release builds if only debug-asserted, and a short
+    /// `bits` would drop wordlines.
     pub fn bitline_currents(&self, bits: &[u8], out: &mut [u32]) {
-        debug_assert_eq!(bits.len(), self.rows);
-        debug_assert_eq!(out.len(), self.cols);
+        assert_eq!(bits.len(), self.rows, "input bit-plane length");
+        assert_eq!(out.len(), self.cols, "bitline current buffer length");
         out.fill(0);
-        for r in 0..self.rows {
-            if bits[r] == 0 {
-                continue;
+        match &self.store {
+            CellArray::Dense(cells) => {
+                for (r, &b) in bits.iter().enumerate() {
+                    if b == 0 {
+                        continue;
+                    }
+                    let row = &cells[r * self.cols..(r + 1) * self.cols];
+                    for (o, &v) in out.iter_mut().zip(row) {
+                        *o += v as u32;
+                    }
+                }
             }
-            let row = &self.cells[r * self.cols..(r + 1) * self.cols];
-            for (o, &v) in out.iter_mut().zip(row) {
-                *o += v as u32;
+            CellArray::Compressed {
+                row_ptr,
+                entry_cols,
+                entry_vals,
+                active_rows,
+            } => {
+                // touch only programmed cells on active wordlines
+                for &r in active_rows {
+                    let r = r as usize;
+                    if bits[r] == 0 {
+                        continue;
+                    }
+                    let (lo, hi) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
+                    for (&c, &v) in entry_cols[lo..hi].iter().zip(&entry_vals[lo..hi]) {
+                        out[c as usize] += v as u32;
+                    }
+                }
             }
         }
     }
@@ -95,6 +457,7 @@ mod tests {
     fn geometry_limits_enforced() {
         let xb = Crossbar::zeros(128, 128);
         assert_eq!((xb.rows(), xb.cols()), (128, 128));
+        assert_eq!(xb.format(), StorageFormat::Dense);
     }
 
     #[test]
@@ -108,6 +471,23 @@ mod tests {
     fn cell_value_range_enforced() {
         let mut xb = Crossbar::zeros(2, 2);
         xb.set(0, 0, 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn short_current_buffer_panics_in_every_profile() {
+        // a short `out` used to truncate silently in release builds
+        let xb = Crossbar::zeros(4, 4);
+        let mut out = vec![0u32; 3];
+        xb.bitline_currents(&[1, 1, 1, 1], &mut out);
+    }
+
+    #[test]
+    #[should_panic]
+    fn short_bit_plane_panics() {
+        let xb = Crossbar::zeros(4, 4);
+        let mut out = vec![0u32; 4];
+        xb.bitline_currents(&[1, 1, 1], &mut out);
     }
 
     #[test]
@@ -141,6 +521,10 @@ mod tests {
         let mut cur = vec![0u32; 2];
         xb.bitline_currents(&[1, 0, 1], &mut cur);
         assert_eq!(cur, vec![3, 1]);
+        // identical answers from the compressed layout
+        let comp = xb.in_format(StorageFormat::Compressed);
+        comp.bitline_currents(&[1, 0, 1], &mut cur);
+        assert_eq!(cur, vec![3, 1]);
     }
 
     #[test]
@@ -150,5 +534,158 @@ mod tests {
         xb.set(1, 2, 2);
         xb.set(3, 3, 1);
         assert_eq!(xb.nonzero_cells(), 2);
+        // the cache tracks overwrites and clears, not just first writes
+        xb.set(1, 2, 3);
+        assert_eq!(xb.nonzero_cells(), 2);
+        xb.set(3, 3, 0);
+        assert_eq!(xb.nonzero_cells(), 1);
+        xb.set(3, 3, 0);
+        assert_eq!(xb.nonzero_cells(), 1);
+    }
+
+    /// Property: Dense and Compressed agree bit-exactly on every read path
+    /// across random densities and partial-tile geometries.
+    #[test]
+    fn representations_agree_bit_exactly() {
+        check(40, |rng| {
+            let rows = 1 + rng.below(XBAR_ROWS);
+            let cols = 1 + rng.below(XBAR_COLS);
+            // fill in 0..=100 percent: hits near-empty and near-full tiles
+            let fill = rng.below(101);
+            let mut dense = Crossbar::zeros(rows, cols);
+            for r in 0..rows {
+                for c in 0..cols {
+                    if rng.below(100) < fill {
+                        dense.set(r, c, 1 + rng.below(3) as u8);
+                    }
+                }
+            }
+            let comp = dense.in_format(StorageFormat::Compressed);
+            ensure(comp.format() == StorageFormat::Compressed, "converted")?;
+            ensure(comp.nonzero_cells() == dense.nonzero_cells(), "census")?;
+            ensure(
+                comp.column_conductance_sums() == dense.column_conductance_sums(),
+                "column sums",
+            )?;
+            let bits: Vec<u8> = (0..rows).map(|_| rng.below(2) as u8).collect();
+            let mut a = vec![0u32; cols];
+            let mut b = vec![0u32; cols];
+            dense.bitline_currents(&bits, &mut a);
+            comp.bitline_currents(&bits, &mut b);
+            ensure(a == b, "bitline currents")?;
+            // round-trip back to dense preserves every cell
+            let back = comp.in_format(StorageFormat::Dense);
+            for r in 0..rows {
+                for c in 0..cols {
+                    ensure(back.get(r, c) == dense.get(r, c), "round-trip cell")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: `set` on a compressed tile (update / insert / clear)
+    /// tracks a dense mirror exactly, census included.
+    #[test]
+    fn compressed_set_matches_dense_mirror() {
+        check(30, |rng| {
+            let rows = 1 + rng.below(XBAR_ROWS);
+            let cols = 1 + rng.below(XBAR_COLS);
+            let mut dense = Crossbar::zeros(rows, cols);
+            let mut comp = Crossbar::zeros(rows, cols).in_format(StorageFormat::Compressed);
+            for _ in 0..200 {
+                let (r, c) = (rng.below(rows), rng.below(cols));
+                let v = rng.below(4) as u8; // 0 = clear
+                dense.set(r, c, v);
+                comp.set(r, c, v);
+            }
+            ensure(
+                comp.nonzero_cells() == dense.nonzero_cells(),
+                "census after mutation",
+            )?;
+            for r in 0..rows {
+                for c in 0..cols {
+                    ensure(comp.get(r, c) == dense.get(r, c), "cell after mutation")?;
+                }
+            }
+            let bits = vec![1u8; rows];
+            let mut a = vec![0u32; cols];
+            let mut b = vec![0u32; cols];
+            dense.bitline_currents(&bits, &mut a);
+            comp.bitline_currents(&bits, &mut b);
+            ensure(a == b, "currents after mutation")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn format_edges_all_zero_and_fully_dense() {
+        // all-zero tile: compressed layout holds no entries, reads zeros
+        let z = Crossbar::zeros(5, 7).in_format(StorageFormat::Compressed);
+        assert_eq!(z.nonzero_cells(), 0);
+        assert_eq!(z.density(), 0.0);
+        let mut cur = vec![9u32; 7];
+        z.bitline_currents(&[1; 5], &mut cur);
+        assert!(cur.iter().all(|&v| v == 0));
+        assert_eq!(z.get(4, 6), 0);
+
+        // fully-dense tile survives the compressed detour bit-exactly
+        let mut full = Crossbar::zeros(3, 4);
+        for r in 0..3 {
+            for c in 0..4 {
+                full.set(r, c, CELL_MAX);
+            }
+        }
+        let fc = full.in_format(StorageFormat::Compressed);
+        assert_eq!(fc.nonzero_cells(), 12);
+        assert_eq!(fc.density(), 1.0);
+        assert_eq!(fc.column_conductance_sums(), full.column_conductance_sums());
+    }
+
+    #[test]
+    fn from_cells_picks_format_by_density() {
+        // 2 of 16 cells (12.5%) -> compressed, built with no dense pass
+        let sparse = Crossbar::from_cells(4, 4, vec![(3, 3, 1), (0, 1, 2)]);
+        assert_eq!(sparse.format(), StorageFormat::Compressed);
+        assert_eq!(sparse.nonzero_cells(), 2);
+        assert_eq!(sparse.get(0, 1), 2);
+        assert_eq!(sparse.get(3, 3), 1);
+        assert_eq!(sparse.get(1, 1), 0);
+
+        // 8 of 16 cells (50%) -> dense
+        let cells: Vec<(u16, u16, u8)> = (0u16..8).map(|i| (i / 4, i % 4, 3u8)).collect();
+        let dense = Crossbar::from_cells(4, 4, cells);
+        assert_eq!(dense.format(), StorageFormat::Dense);
+        assert_eq!(dense.nonzero_cells(), 8);
+
+        // pack() applies the same threshold to an already-built tile
+        let mut xb = Crossbar::zeros(4, 4);
+        xb.set(2, 2, 1);
+        xb.pack();
+        assert_eq!(xb.format(), StorageFormat::Compressed);
+        assert_eq!(chosen_format(1, 4, 4), StorageFormat::Compressed);
+        assert_eq!(chosen_format(8, 4, 4), StorageFormat::Dense);
+    }
+
+    #[test]
+    fn storage_bytes_shrink_for_sparse_tiles() {
+        let mut xb = Crossbar::zeros(128, 128);
+        for i in 0..100 {
+            xb.set(i, i, 1 + (i % 3) as u8);
+        }
+        let dense_bytes = xb.storage_bytes();
+        assert_eq!(dense_bytes, 128 * 128);
+        let comp = xb.in_format(StorageFormat::Compressed);
+        assert!(
+            comp.storage_bytes() < dense_bytes / 4,
+            "{} bytes compressed vs {dense_bytes} dense",
+            comp.storage_bytes()
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_cells_rejects_duplicates() {
+        let _ = Crossbar::from_cells(4, 4, vec![(1, 1, 2), (1, 1, 3)]);
     }
 }

@@ -80,6 +80,8 @@ pub struct LayerCost {
 /// of one layer, counting programmed tiles only. This is the weight of one
 /// (layer, slice) group in the energy roll-up — the planner scores its
 /// candidate moves by `conversions * (power(bits) - power(bits - 1))`.
+/// `nonzero_cells` is the cached per-tile census, so the whole tally is
+/// O(tiles) — the planner's scoring loop no longer recounts cells.
 pub fn slice_conversions(layer: &LayerMapping, k: usize) -> f64 {
     let (pos, neg) = &layer.grids[k];
     [pos, neg]
@@ -91,7 +93,9 @@ pub fn slice_conversions(layer: &LayerMapping, k: usize) -> f64 {
 }
 
 /// Tally one layer at per-slice resolutions `bits`:
-/// (crossbars, skipped_tiles, energy, time, area).
+/// (crossbars, skipped_tiles, energy, time, area). The zero-tile test is
+/// the cached census (O(1) per tile), so a whole-model roll-up is
+/// O(tiles), not O(cells).
 fn tally_layer(layer: &LayerMapping, bits: &[u32; N_SLICES]) -> (usize, usize, f64, f64, f64) {
     let mut crossbars = 0usize;
     let mut skipped = 0usize;

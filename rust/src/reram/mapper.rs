@@ -7,13 +7,21 @@
 //! and tiled into 128x128 [`Crossbar`]s. This is exactly the layout the
 //! paper's "4 groups of 128x128 ReRAM crossbars (XBs), with each group
 //! storing 2 bits of the 8-bit weights" describes.
+//!
+//! Each tile's storage representation is chosen at map time from its own
+//! measured density ([`crate::reram::crossbar::chosen_format`]): the
+//! programmed cells are gathered per tile and handed to
+//! [`Crossbar::from_cells`], so Bl1-level sparse slices go straight to
+//! compressed storage with **no dense intermediate**, while dense-random
+//! slices keep the row-major layout. [`LayerMapping::storage_stats`]
+//! reports what was chosen.
 
 use anyhow::Result;
 
 use crate::quant::{self, N_SLICES};
 use crate::tensor::Tensor;
 
-use super::crossbar::{Crossbar, XBAR_COLS, XBAR_ROWS};
+use super::crossbar::{Crossbar, StorageFormat, XBAR_COLS, XBAR_ROWS};
 
 /// Positive / negative differential halves.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -56,6 +64,81 @@ pub struct MappedModel {
     pub layers: Vec<LayerMapping>,
 }
 
+/// Storage census of a set of mapped tiles (one layer or a whole model):
+/// how many tiles each [`StorageFormat`] holds, what the chosen layouts
+/// cost in bytes, and how much an all-dense layout would have cost.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StorageStats {
+    /// programmed tiles stored row-major
+    pub dense_tiles: usize,
+    /// programmed tiles stored as packed `(col, val)` pairs
+    pub compressed_tiles: usize,
+    /// fully-zero tiles: mapped for addressing, never fabricated, and
+    /// skipped outright by the simulator's forward path
+    pub skipped_tiles: usize,
+    /// programmed (non-zero) cells — the cached per-tile census summed
+    pub programmed_cells: usize,
+    /// logical cells (rows x cols summed over every tile)
+    pub cells: usize,
+    /// bytes the chosen representations occupy
+    pub bytes: usize,
+    /// bytes an all-dense layout would occupy (one per cell)
+    pub dense_bytes: usize,
+}
+
+impl StorageStats {
+    fn add_tile(&mut self, t: &Crossbar) {
+        let cells = t.rows() * t.cols();
+        self.cells += cells;
+        self.dense_bytes += cells;
+        self.programmed_cells += t.nonzero_cells();
+        self.bytes += t.storage_bytes();
+        if t.nonzero_cells() == 0 {
+            self.skipped_tiles += 1;
+        } else {
+            match t.format() {
+                StorageFormat::Dense => self.dense_tiles += 1,
+                StorageFormat::Compressed => self.compressed_tiles += 1,
+            }
+        }
+    }
+
+    pub fn merge(&mut self, o: &StorageStats) {
+        self.dense_tiles += o.dense_tiles;
+        self.compressed_tiles += o.compressed_tiles;
+        self.skipped_tiles += o.skipped_tiles;
+        self.programmed_cells += o.programmed_cells;
+        self.cells += o.cells;
+        self.bytes += o.bytes;
+        self.dense_bytes += o.dense_bytes;
+    }
+
+    /// Programmed fraction over all mapped cells.
+    pub fn density(&self) -> f64 {
+        if self.cells == 0 {
+            0.0
+        } else {
+            self.programmed_cells as f64 / self.cells as f64
+        }
+    }
+
+    /// Dense bytes / chosen bytes (1.0 = no saving).
+    pub fn byte_saving(&self) -> f64 {
+        if self.bytes == 0 {
+            1.0
+        } else {
+            self.dense_bytes as f64 / self.bytes as f64
+        }
+    }
+}
+
+/// One layer's storage census — the `report::storage_table` row.
+#[derive(Debug, Clone)]
+pub struct StorageRow {
+    pub layer: String,
+    pub stats: StorageStats,
+}
+
 /// Interpret a weight tensor as (fan-in x fan-out).
 pub fn matrix_view(shape: &[usize]) -> Result<(usize, usize)> {
     match shape.len() {
@@ -65,33 +148,25 @@ pub fn matrix_view(shape: &[usize]) -> Result<(usize, usize)> {
     }
 }
 
-fn empty_grid(rows: usize, cols: usize) -> TileGrid {
-    let row_tiles = rows.div_ceil(XBAR_ROWS);
-    let col_tiles = cols.div_ceil(XBAR_COLS);
-    let mut tiles = Vec::with_capacity(row_tiles * col_tiles);
-    for tr in 0..row_tiles {
-        for tc in 0..col_tiles {
-            let r = (rows - tr * XBAR_ROWS).min(XBAR_ROWS);
-            let c = (cols - tc * XBAR_COLS).min(XBAR_COLS);
-            tiles.push(Crossbar::zeros(r, c));
-        }
-    }
-    TileGrid {
-        tiles,
-        row_tiles,
-        col_tiles,
-    }
-}
+/// Programmed cells of one tile, as `(row, col, val)` —
+/// [`Crossbar::from_cells`]'s input.
+type TileCells = Vec<(u16, u16, u8)>;
 
-/// Map one weight tensor.
+/// Map one weight tensor. Cells are gathered per (tile, sign) and each
+/// tile picks its own storage format from its density.
 pub fn map_layer(name: &str, w: &Tensor) -> Result<LayerMapping> {
     let (rows, cols) = matrix_view(w.shape())?;
     let q = quant::quantize(w);
+    let row_tiles = rows.div_ceil(XBAR_ROWS);
+    let col_tiles = cols.div_ceil(XBAR_COLS);
+    let n_tiles = row_tiles * col_tiles;
     let mut grids = Vec::with_capacity(N_SLICES);
     for k in 0..N_SLICES {
         let slice = q.slice(k);
-        let mut pos = empty_grid(rows, cols);
-        let mut neg = empty_grid(rows, cols);
+        // per-tile programmed-cell lists; the row-major scan emits them
+        // already sorted, so `from_cells` packs without re-shuffling
+        let mut cells: [Vec<TileCells>; 2] =
+            [vec![Vec::new(); n_tiles], vec![Vec::new(); n_tiles]];
         for r in 0..rows {
             for c in 0..cols {
                 let i = r * cols + c;
@@ -101,11 +176,26 @@ pub fn map_layer(name: &str, w: &Tensor) -> Result<LayerMapping> {
                 }
                 let (tr, rr) = (r / XBAR_ROWS, r % XBAR_ROWS);
                 let (tc, cc) = (c / XBAR_COLS, c % XBAR_COLS);
-                let grid = if q.signs[i] >= 0 { &mut pos } else { &mut neg };
-                grid.tiles[tr * grid.col_tiles + tc].set(rr, cc, v);
+                let side = (q.signs[i] < 0) as usize;
+                cells[side][tr * col_tiles + tc].push((rr as u16, cc as u16, v));
             }
         }
-        grids.push((pos, neg));
+        let [pos_cells, neg_cells] = cells;
+        let build = |tile_cells: Vec<TileCells>| -> TileGrid {
+            let mut tiles = Vec::with_capacity(n_tiles);
+            for (ti, list) in tile_cells.into_iter().enumerate() {
+                let (tr, tc) = (ti / col_tiles, ti % col_tiles);
+                let r = (rows - tr * XBAR_ROWS).min(XBAR_ROWS);
+                let c = (cols - tc * XBAR_COLS).min(XBAR_COLS);
+                tiles.push(Crossbar::from_cells(r, c, list));
+            }
+            TileGrid {
+                tiles,
+                row_tiles,
+                col_tiles,
+            }
+        };
+        grids.push((build(pos_cells), build(neg_cells)));
     }
     Ok(LayerMapping {
         name: name.to_string(),
@@ -133,11 +223,41 @@ impl LayerMapping {
     }
 
     /// Programmed-cell census for slice k (pos + neg) — equals the slice's
-    /// non-zero element count from the sparsity module.
+    /// non-zero element count from the sparsity module. Sums the per-tile
+    /// cached counts, so it costs O(tiles), not O(cells).
     pub fn nonzero_cells(&self, k: usize) -> usize {
         let (p, n) = &self.grids[k];
         p.tiles.iter().map(|t| t.nonzero_cells()).sum::<usize>()
             + n.tiles.iter().map(|t| t.nonzero_cells()).sum::<usize>()
+    }
+
+    /// Storage census over every tile of the layer (all slices, both
+    /// signs).
+    pub fn storage_stats(&self) -> StorageStats {
+        let mut stats = StorageStats::default();
+        for (p, n) in &self.grids {
+            for grid in [p, n] {
+                for tile in &grid.tiles {
+                    stats.add_tile(tile);
+                }
+            }
+        }
+        stats
+    }
+
+    /// A clone with every tile re-laid out in `fmt` — the benches' and
+    /// representation tests' handle for comparing both execution paths on
+    /// an identical mapping.
+    pub fn with_storage(&self, fmt: StorageFormat) -> LayerMapping {
+        let mut out = self.clone();
+        for (p, n) in &mut out.grids {
+            for grid in [p, n] {
+                for tile in &mut grid.tiles {
+                    tile.convert(fmt);
+                }
+            }
+        }
+        out
     }
 }
 
@@ -148,6 +268,34 @@ impl MappedModel {
             .iter()
             .map(|l| l.crossbars_per_slice() * N_SLICES)
             .sum()
+    }
+
+    /// Whole-model storage census.
+    pub fn storage_stats(&self) -> StorageStats {
+        let mut stats = StorageStats::default();
+        for layer in &self.layers {
+            stats.merge(&layer.storage_stats());
+        }
+        stats
+    }
+
+    /// Per-layer storage census rows (the `report::storage_table` body).
+    pub fn storage_rows(&self) -> Vec<StorageRow> {
+        self.layers
+            .iter()
+            .map(|l| StorageRow {
+                layer: l.name.clone(),
+                stats: l.storage_stats(),
+            })
+            .collect()
+    }
+
+    /// A clone with every tile re-laid out in `fmt` (see
+    /// [`LayerMapping::with_storage`]).
+    pub fn with_storage(&self, fmt: StorageFormat) -> MappedModel {
+        MappedModel {
+            layers: self.layers.iter().map(|l| l.with_storage(fmt)).collect(),
+        }
     }
 }
 
@@ -244,5 +392,113 @@ mod tests {
         assert_eq!(m.grids.len(), 4);
         let model = map_model(&[("conv".to_string(), w)]).unwrap();
         assert_eq!(model.total_crossbars(), 4 * m.crossbars_per_slice());
+    }
+
+    /// Format selection: a dense-random layer keeps row-major tiles on
+    /// every slice; a near-empty layer compresses every programmed tile.
+    #[test]
+    fn map_layer_picks_expected_format_per_density() {
+        // alternating +-0.99 -> code 253 = 0b11111101: every slice is
+        // nonzero on every element, split 50/50 across the sign grids, so
+        // each programmed tile sits at ~50% density -> Dense everywhere
+        let w = Tensor::new(
+            vec![64, 32],
+            (0..64 * 32)
+                .map(|i| if i % 2 == 0 { 0.99f32 } else { -0.99 })
+                .collect(),
+        )
+        .unwrap();
+        let m = map_layer("dense", &w).unwrap();
+        for (p, n) in &m.grids {
+            for grid in [p, n] {
+                for tile in &grid.tiles {
+                    assert!(tile.nonzero_cells() > 0);
+                    assert_eq!(tile.format(), StorageFormat::Dense, "dense-random layer");
+                }
+            }
+        }
+        let s = m.storage_stats();
+        assert_eq!(s.compressed_tiles, 0);
+        assert_eq!(s.skipped_tiles, 0);
+        assert_eq!(s.dense_tiles, 8); // 4 slices x 2 signs x 1 tile
+
+        // a handful of programmed cells -> every tile compressed (or
+        // fully zero and skipped)
+        let mut data = vec![0.0f32; 64 * 32];
+        for i in 0..20 {
+            data[i * 97 % (64 * 32)] = 0.5;
+        }
+        let w = Tensor::new(vec![64, 32], data).unwrap();
+        let m = map_layer("sparse", &w).unwrap();
+        for (p, n) in &m.grids {
+            for grid in [p, n] {
+                for tile in &grid.tiles {
+                    if tile.nonzero_cells() > 0 {
+                        assert_eq!(
+                            tile.format(),
+                            StorageFormat::Compressed,
+                            "sparse layer tile at density {}",
+                            tile.density()
+                        );
+                    }
+                }
+            }
+        }
+        let s = m.storage_stats();
+        assert_eq!(s.dense_tiles, 0);
+        assert!(s.compressed_tiles > 0);
+        assert!(s.bytes < s.dense_bytes, "{} vs {}", s.bytes, s.dense_bytes);
+        assert!(s.byte_saving() > 1.0);
+    }
+
+    #[test]
+    fn storage_stats_are_internally_consistent() {
+        check(8, |rng| {
+            let rows = 1 + rng.below(300);
+            let cols = 1 + rng.below(200);
+            let w = Tensor::new(vec![rows, cols], rng.normal_vec(rows * cols, 0.1))
+                .unwrap();
+            let m = map_layer("l", &w).unwrap();
+            let s = m.storage_stats();
+            let tiles = N_SLICES * m.crossbars_per_slice(); // pos+neg across slices
+            ensure(
+                s.dense_tiles + s.compressed_tiles + s.skipped_tiles == tiles,
+                "tile partition",
+            )?;
+            let programmed: usize = (0..N_SLICES).map(|k| m.nonzero_cells(k)).sum();
+            ensure(s.programmed_cells == programmed, "programmed census")?;
+            ensure(
+                s.cells == 2 * N_SLICES * rows * cols,
+                format!("logical cells {} vs {}", s.cells, 2 * N_SLICES * rows * cols),
+            )?;
+            ensure(s.dense_bytes == s.cells, "dense bytes = one per cell")?;
+            Ok(())
+        });
+    }
+
+    /// `with_storage` round-trips preserve every cell in both directions,
+    /// including the partial edge tiles of a non-multiple-of-128 layer.
+    #[test]
+    fn with_storage_roundtrip_preserves_cells() {
+        let mut rng = Rng::new(9);
+        let w = rand_tensor(&mut rng, vec![300, 150], 0.08);
+        let m = map_layer("l", &w).unwrap();
+        for fmt in [StorageFormat::Dense, StorageFormat::Compressed] {
+            let conv = m.with_storage(fmt);
+            for k in 0..N_SLICES {
+                assert_eq!(conv.nonzero_cells(k), m.nonzero_cells(k), "slice {k}");
+                let (p0, n0) = &m.grids[k];
+                let (p1, n1) = &conv.grids[k];
+                for (a, b) in [(p0, p1), (n0, n1)] {
+                    for (ta, tb) in a.tiles.iter().zip(&b.tiles) {
+                        assert_eq!(tb.format(), fmt);
+                        assert_eq!(
+                            ta.column_conductance_sums(),
+                            tb.column_conductance_sums()
+                        );
+                    }
+                }
+            }
+        }
     }
 }

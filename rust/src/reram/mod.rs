@@ -6,8 +6,10 @@
 //! module is that deployment stack:
 //!
 //! * [`crossbar`]   — the array model: cells, differential pos/neg pairs,
-//!                    bitline current accumulation.
-//! * [`mapper`]     — tile a layer's slice matrices onto 128x128 arrays.
+//!                    bitline current accumulation over polymorphic tile
+//!                    storage (dense or compressed — see below).
+//! * [`mapper`]     — tile a layer's slice matrices onto 128x128 arrays,
+//!                    choosing each tile's storage format from its density.
 //! * [`adc`]        — the ADC cost model of [17]: power ∝ 2^N/(N+1),
 //!                    sensing time ∝ N, area halves at 6 bits (Table 3).
 //! * [`resolution`] — bitline-current analysis: the ADC resolution each
@@ -22,6 +24,29 @@
 //!                    [`planner::DeploymentPlan`] (per-layer x per-slice
 //!                    resolutions) under an accuracy-drop budget, scored by
 //!                    the [`energy`] cost model.
+//!
+//! # Storage-format selection (Dense vs Compressed tiles)
+//!
+//! Bit-slice L1 training drives each 2-bit slice toward ~90%+ zeros, so
+//! tile cells live behind a polymorphic `CellArray` inside [`Crossbar`]
+//! with two layouts: row-major **dense** bytes, or **compressed** per-row
+//! packed `(col, val)` pairs with a nonzero-wordline index that lets
+//! `bitline_currents` touch only programmed cells on active wordlines.
+//! The format is chosen *per tile at map time* from the tile's measured
+//! density: at or below [`crossbar::COMPRESS_MAX_DENSITY`] (25%) the tile
+//! compresses, above it it stays dense ([`crossbar::chosen_format`] is
+//! the single definition). The threshold comes from the measured
+//! crossover: one compressed entry costs 3 bytes (parallel `u16`/`u8`
+//! column/value arrays — no tuple padding) and a scattered add vs one
+//! byte and a sequential add per dense cell, so memory parity sits at
+//! 1/3 density and the scan wins well below it, while dense-random slices
+//! (~37% density per sign grid) stay row-major. The programmed-cell
+//! census is cached per tile (maintained by `set`, established by
+//! `from_cells`), which makes the zero-tile skips in [`sim`], [`energy`]
+//! and [`resolution`] O(1) and the planner's scoring loop O(tiles).
+//! Fully-zero tiles are never fabricated: the simulator skips them, the
+//! cost model doesn't bill them, and `report::storage_table` lists them
+//! as "skipped".
 //!
 //! # Bit-order convention (LSB-first `adc_bits` vs MSB-first `XB_k`)
 //!
@@ -48,7 +73,7 @@ pub mod resolution;
 pub mod sim;
 
 pub use adc::AdcModel;
-pub use crossbar::{Crossbar, XBAR_COLS, XBAR_ROWS};
-pub use mapper::{LayerMapping, MappedModel};
+pub use crossbar::{Crossbar, StorageFormat, XBAR_COLS, XBAR_ROWS};
+pub use mapper::{LayerMapping, MappedModel, StorageRow, StorageStats};
 pub use planner::{DeploymentPlan, PlannerConfig};
 pub use resolution::ResolutionPolicy;

@@ -238,7 +238,8 @@ pub fn plan_deployment_from(
     let mut accuracy = start_accuracy;
     let mut evaluations = 0usize;
 
-    // candidate-move weights: conversions per (layer, slice group)
+    // candidate-move weights: conversions per (layer, slice group); the
+    // tally reads the cached per-tile census, so scoring is O(tiles)
     let conversions: Vec<[f64; N_SLICES]> = model
         .layers
         .iter()

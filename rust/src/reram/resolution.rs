@@ -76,7 +76,8 @@ pub fn bits_for_current(max_current: u32) -> u32 {
 
 /// Gather the column-current census per slice group for one mapped layer.
 /// Unprogrammed (fully-zero) tiles contribute no columns: they carry no
-/// ADC, so counting their zero sums would bias percentiles downward.
+/// ADC, so counting their zero sums would bias percentiles downward (the
+/// test is the tile's cached census — O(1), no recount).
 pub fn layer_slice_currents(layer: &LayerMapping) -> [SliceCurrents; N_SLICES] {
     let mut out: [SliceCurrents; N_SLICES] = std::array::from_fn(|_| SliceCurrents {
         sums: Vec::new(),

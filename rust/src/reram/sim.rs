@@ -10,7 +10,7 @@
 
 use crate::quant::{self, N_SLICES};
 use crate::tensor::Tensor;
-use crate::util::pool::parallel_map;
+use crate::util::pool::{parallel_map, worker_threads};
 
 use super::mapper::LayerMapping;
 
@@ -64,7 +64,10 @@ pub struct SimScratch {
 /// `layer.step * act_step` for real units. `adc_bits[k]` is the resolution
 /// of slice group k (LSB-first). All 8 bit-planes are materialized once
 /// per example into `scratch` and the current buffer is reused across
-/// tiles, so repeated calls do not allocate.
+/// tiles and both storage representations, so repeated calls do not
+/// allocate. Fully-zero tiles (e.g. the empty negative grid of an
+/// all-positive layer) are skipped outright — they contribute no current,
+/// and the cached per-tile census makes the check O(1).
 pub fn forward_codes_into(
     layer: &LayerMapping,
     a_code: &[u8],
@@ -94,6 +97,9 @@ pub fn forward_codes_into(
                     let r0 = tr * super::XBAR_ROWS;
                     for tc in 0..grid.col_tiles {
                         let tile = grid.tile(tr, tc);
+                        if tile.nonzero_cells() == 0 {
+                            continue; // unprogrammed tile: no current
+                        }
                         let c0 = tc * super::XBAR_COLS;
                         let cur = &mut scratch.cur[..tile.cols()];
                         tile.bitline_currents(&bits[r0..r0 + tile.rows()], cur);
@@ -139,7 +145,8 @@ pub fn forward(layer: &LayerMapping, x: &Tensor, adc_bits: &[u32; N_SLICES]) -> 
     let (b, rows) = (shape[0], shape[1]);
     assert_eq!(rows, layer.rows);
     let data = x.data();
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    // one worker-count policy with the serving backends (util::pool)
+    let threads = worker_threads();
     let chunk = b.div_ceil(threads.max(1)).max(1);
     let parts = parallel_map(b.div_ceil(chunk), threads, |ci| {
         let lo = ci * chunk;
@@ -305,6 +312,64 @@ mod tests {
         assert!(step > 0.0);
         assert!(codes.iter().all(|&c| c as u32 <= 255));
         assert_eq!(codes[0], 0);
+    }
+
+    /// Property: the Dense and Compressed tile layouts agree bit-exactly
+    /// through the whole forward path across random weight densities —
+    /// including all-zero slices, dense slices, and the partial edge tiles
+    /// of a non-multiple-of-128 layer. Integer accumulation commutes, so
+    /// identical cells must give identical outputs however they are laid
+    /// out.
+    #[test]
+    fn storage_formats_agree_bit_exactly_through_forward() {
+        use crate::reram::crossbar::StorageFormat;
+        check(8, |rng| {
+            let rows = 1 + rng.below(300);
+            let cols = 1 + rng.below(120);
+            let n = rows * cols;
+            // density 0..=100%: 0 hits the all-zero mapping, 100 the dense
+            let fill = rng.below(101);
+            let mut data = vec![0.0f32; n];
+            for v in data.iter_mut() {
+                if rng.below(100) < fill {
+                    *v = (rng.next_f32() - 0.5) * 2.0;
+                }
+            }
+            let w = Tensor::new(vec![rows, cols], data).unwrap();
+            let layer = map_layer("l", &w).unwrap();
+            let dense = layer.with_storage(StorageFormat::Dense);
+            let comp = layer.with_storage(StorageFormat::Compressed);
+            let b = 1 + rng.below(3);
+            let x = Tensor::new(
+                vec![b, rows],
+                (0..b * rows).map(|_| rng.next_f32()).collect(),
+            )
+            .unwrap();
+            for bits in [LOSSLESS, [3, 3, 3, 1]] {
+                let auto = forward(&layer, &x, &bits);
+                let d = forward(&dense, &x, &bits);
+                let c = forward(&comp, &x, &bits);
+                ensure(d.data() == auto.data(), "dense vs density-chosen")?;
+                ensure(c.data() == auto.data(), "compressed vs density-chosen")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_tile_skip_preserves_results() {
+        // all-positive weights leave every negative-sign tile fully zero;
+        // the skip must be invisible in the output
+        let w = Tensor::new(vec![200, 40], vec![0.25; 200 * 40]).unwrap();
+        let layer = map_layer("l", &w).unwrap();
+        let mut rng = Rng::new(41);
+        let x = Tensor::new(vec![2, 200], (0..400).map(|_| rng.next_f32()).collect())
+            .unwrap();
+        let out = forward(&layer, &x, &LOSSLESS);
+        let want = crate::serve::reference::quantized_matmul(&x, &w).unwrap();
+        for (got, want) in out.data().iter().zip(want.data()) {
+            assert!((got - want).abs() <= 1e-4 * want.abs().max(1.0), "{got} vs {want}");
+        }
     }
 
     #[test]

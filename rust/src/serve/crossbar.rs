@@ -20,7 +20,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::quant::N_SLICES;
-use crate::reram::mapper::{self, MappedModel};
+use crate::reram::mapper::{self, MappedModel, StorageRow, StorageStats};
 use crate::reram::planner::DeploymentPlan;
 use crate::reram::sim::{self, SimScratch};
 use crate::reram::{resolution, ResolutionPolicy};
@@ -137,6 +137,19 @@ impl CrossbarBackend {
         self.plan.layers[0].adc_bits
     }
 
+    /// Per-layer storage/format census of the shared mapping — which
+    /// tiles are dense vs compressed, the bytes each layout occupies and
+    /// how many fully-zero tiles the simulator skips (rendered by
+    /// `report::storage_table`).
+    pub fn storage_rows(&self) -> Vec<StorageRow> {
+        self.model.storage_rows()
+    }
+
+    /// Whole-model storage census (the roll-up of [`Self::storage_rows`]).
+    pub fn storage_stats(&self) -> StorageStats {
+        self.model.storage_stats()
+    }
+
     fn map_stack(stack: &[DenseLayer]) -> Result<MappedModel> {
         anyhow::ensure!(!stack.is_empty(), "empty dense stack");
         let layers = stack
@@ -174,7 +187,7 @@ impl CrossbarBackend {
             plan,
             input_dim,
             num_classes,
-            intra_threads: super::default_intra_threads(),
+            intra_threads: crate::util::pool::worker_threads(),
         })
     }
 
@@ -344,6 +357,24 @@ mod tests {
                 assert!(l.adc_bits[k] <= lossless.adc_bits()[k]);
             }
         }
+    }
+
+    #[test]
+    fn storage_rows_expose_the_mapping_census() {
+        let mut rng = Rng::new(29);
+        let stack = toy_stack(&mut rng);
+        let be = CrossbarBackend::new("xb", &stack, ResolutionPolicy::Lossless).unwrap();
+        let rows = be.storage_rows();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].layer, "fc1/w");
+        assert_eq!(rows[1].layer, "fc2/w");
+        let total = be.storage_stats();
+        let summed: usize = rows.iter().map(|r| r.stats.bytes).sum();
+        assert_eq!(total.bytes, summed);
+        assert!(total.programmed_cells > 0);
+        // replan clones share the mapping, so they report the same census
+        let swept = be.rebit("xb-sweep", [3, 3, 3, 1]);
+        assert_eq!(swept.storage_stats(), total);
     }
 
     #[test]

@@ -151,10 +151,8 @@ impl ServingEngine {
             backend.name()
         );
         let workers = if opts.workers == 0 {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(4)
-                .min(8)
+            // shared policy with sim + backends, capped for the pool
+            crate::util::pool::worker_threads().min(8)
         } else {
             opts.workers
         };

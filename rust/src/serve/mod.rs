@@ -248,11 +248,6 @@ where
     Tensor::new(vec![b, out_dim], out)
 }
 
-/// Default intra-batch thread count for the host backends.
-pub(crate) fn default_intra_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -69,7 +69,7 @@ impl ReferenceBackend {
             input_dim: layers[0].rows,
             num_classes: layers[layers.len() - 1].cols,
             layers,
-            intra_threads: super::default_intra_threads(),
+            intra_threads: crate::util::pool::worker_threads(),
         })
     }
 

@@ -162,6 +162,19 @@ impl<T: Send + 'static> Drop for Prefetcher<T> {
     }
 }
 
+/// The one worker-count policy shared by every parallel consumer — the
+/// batched simulator forward (`reram::sim::forward`), the host backends'
+/// intra-batch fan-out and the serving engine's worker pool: available
+/// hardware parallelism, falling back to 4 when the platform cannot
+/// report it. Callers that want fewer threads clamp the result (e.g. the
+/// serving engine caps its pool at 8); none should consult
+/// `available_parallelism` directly, so sim and serving always agree.
+pub fn worker_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
 /// Parallel-for over disjoint chunks of a slice, scoped (no 'static bound).
 pub fn parallel_for_chunks<T: Send, F>(data: &mut [T], chunk: usize, f: F)
 where

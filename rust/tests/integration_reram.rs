@@ -4,7 +4,7 @@
 //! self-consistent on trained weights.
 
 use bitslice_reram::quant;
-use bitslice_reram::reram::{energy, mapper, resolution, sim, ResolutionPolicy};
+use bitslice_reram::reram::{energy, mapper, resolution, sim, ResolutionPolicy, StorageFormat};
 use bitslice_reram::runtime::{Engine, Manifest};
 use bitslice_reram::tensor::Tensor;
 use bitslice_reram::util::rng::Rng;
@@ -164,6 +164,62 @@ fn aot_reram_graph_matches_rust_end_to_end() {
     // row's max falls in a lower octave than the batch max; the relative
     // slack absorbs both
     assert!(max_rel < 0.05, "AOT vs rust logits rel err {max_rel}");
+}
+
+/// A Bl1-regime sparse layer must map to mostly compressed tiles, shrink
+/// its cell storage, and run the sparse execution path bit-identically to
+/// a forced-dense layout of the same mapping — end to end through tiling,
+/// partial edge tiles and both resolutions of interest.
+#[test]
+fn sparse_mapping_compresses_and_executes_bit_identically() {
+    let mut rng = Rng::new(21);
+    // ~2% of weights nonzero: the regime bit-slice L1 training reaches
+    let n = 784 * 300;
+    let mut data = vec![0.0f32; n];
+    for _ in 0..n / 50 {
+        let i = rng.below(n);
+        data[i] = rng.normal() * 0.05;
+    }
+    data[0] = 0.9;
+    let w = Tensor::new(vec![784, 300], data).unwrap();
+    let mapped = mapper::map_layer("w", &w).unwrap();
+
+    let stats = mapped.storage_stats();
+    assert_eq!(stats.dense_tiles, 0, "a 2%-dense layer has no dense tiles");
+    assert!(stats.compressed_tiles > 0);
+    assert!(
+        stats.bytes * 4 < stats.dense_bytes,
+        "compressed storage {} bytes vs {} dense",
+        stats.bytes,
+        stats.dense_bytes
+    );
+
+    // the representation is invisible to execution: bit-exact against a
+    // forced-dense clone at lossless and at the paper's operating point
+    let dense = mapped.with_storage(StorageFormat::Dense);
+    let x = Tensor::new(vec![3, 784], (0..3 * 784).map(|_| rng.next_f32()).collect()).unwrap();
+    for bits in [[10u32; 4], [3, 3, 3, 1]] {
+        let a = sim::forward(&mapped, &x, &bits);
+        let b = sim::forward(&dense, &x, &bits);
+        assert_eq!(a.data(), b.data(), "layouts disagree at {bits:?}");
+    }
+
+    // the census, the cost model and the resolution analysis all read the
+    // same cached counts regardless of layout
+    for k in 0..4 {
+        assert_eq!(mapped.nonzero_cells(k), dense.nonzero_cells(k));
+    }
+    let ma = mapper::MappedModel { layers: vec![mapped] };
+    let mb = mapper::MappedModel { layers: vec![dense] };
+    assert_eq!(
+        resolution::required_bits(&ma, ResolutionPolicy::Lossless),
+        resolution::required_bits(&mb, ResolutionPolicy::Lossless)
+    );
+    let ca = energy::deployment_cost(&ma, [3, 3, 3, 1]);
+    let cb = energy::deployment_cost(&mb, [3, 3, 3, 1]);
+    assert_eq!(ca.crossbars, cb.crossbars);
+    assert_eq!(ca.skipped_tiles, cb.skipped_tiles);
+    assert!((ca.energy - cb.energy).abs() < 1e-9);
 }
 
 /// Quantize + slice through the Rust mirror matches what the deployed
