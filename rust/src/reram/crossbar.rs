@@ -18,7 +18,11 @@
 //! * **Compressed** — per-row packed `(col, val)` pairs (CSR-style
 //!   `row_ptr` offsets) plus a nonzero-wordline index, so
 //!   [`Crossbar::bitline_currents`] touches only programmed cells on
-//!   active wordlines.
+//!   active wordlines, and a nonzero-**column** index
+//!   ([`Crossbar::active_cols`]) so the per-tile ADC/recombination loop
+//!   ([`Crossbar::bitline_currents_active`]) skips structurally-zero
+//!   output columns outright — the remaining O(cols) term at extreme
+//!   sparsity.
 //!
 //! The representation is chosen per tile from its measured density (see
 //! [`COMPRESS_MAX_DENSITY`] and [`chosen_format`]); the mapper builds
@@ -84,21 +88,32 @@ enum CellArray {
         /// rows holding >= 1 programmed cell, ascending — the
         /// nonzero-wordline index the sparse current scan walks
         active_rows: Vec<u16>,
+        /// columns holding >= 1 programmed cell, ascending — the
+        /// nonzero-column index the per-tile ADC loop walks; a column
+        /// outside it can never carry current, so its conversion is
+        /// skipped outright
+        active_cols: Vec<u16>,
     },
 }
 
 /// Assemble the CSR arrays from row-major `(row, col, val)` triples (row
-/// ascending, column ascending within a row, `row < rows`, `val != 0`) —
-/// the one compressed-layout builder [`Crossbar::from_cells`] and
-/// [`Crossbar::convert`] share, so the representation's invariants live in
-/// a single place.
-fn build_compressed(rows: usize, cells: impl Iterator<Item = (usize, u16, u8)>) -> CellArray {
+/// ascending, column ascending within a row, `row < rows`, `col < cols`,
+/// `val != 0`) — the one compressed-layout builder
+/// [`Crossbar::from_cells`] and [`Crossbar::convert`] share, so the
+/// representation's invariants live in a single place.
+fn build_compressed(
+    rows: usize,
+    cols: usize,
+    cells: impl Iterator<Item = (usize, u16, u8)>,
+) -> CellArray {
     let hint = cells.size_hint().0;
     let mut row_ptr = vec![0u32; rows + 1];
     let mut entry_cols = Vec::with_capacity(hint);
     let mut entry_vals = Vec::with_capacity(hint);
+    let mut col_seen = vec![false; cols];
     for (r, c, v) in cells {
         row_ptr[r + 1] += 1;
+        col_seen[c as usize] = true;
         entry_cols.push(c);
         entry_vals.push(v);
     }
@@ -109,11 +124,16 @@ fn build_compressed(rows: usize, cells: impl Iterator<Item = (usize, u16, u8)>) 
         .filter(|&r| row_ptr[r + 1] > row_ptr[r])
         .map(|r| r as u16)
         .collect();
+    let active_cols = (0..cols)
+        .filter(|&c| col_seen[c])
+        .map(|c| c as u16)
+        .collect();
     CellArray::Compressed {
         row_ptr,
         entry_cols,
         entry_vals,
         active_rows,
+        active_cols,
     }
 }
 
@@ -170,7 +190,7 @@ impl Crossbar {
                 for &(r, c, v) in &cells {
                     Self::check_cell(rows, cols, r as usize, c as usize, v);
                 }
-                build_compressed(rows, cells.iter().map(|&(r, c, v)| (r as usize, c, v)))
+                build_compressed(rows, cols, cells.iter().map(|&(r, c, v)| (r as usize, c, v)))
             }
         };
         Crossbar {
@@ -221,11 +241,13 @@ impl Crossbar {
                 entry_cols,
                 entry_vals,
                 active_rows,
+                active_cols,
             } => {
                 entry_cols.len() * std::mem::size_of::<u16>()
                     + entry_vals.len()
                     + row_ptr.len() * std::mem::size_of::<u32>()
                     + active_rows.len() * std::mem::size_of::<u16>()
+                    + active_cols.len() * std::mem::size_of::<u16>()
             }
         }
     }
@@ -253,6 +275,7 @@ impl Crossbar {
                 entry_cols,
                 entry_vals,
                 active_rows,
+                active_cols,
             } => {
                 let lo = row_ptr[r] as usize;
                 let hi = row_ptr[r + 1] as usize;
@@ -270,6 +293,14 @@ impl Crossbar {
                                 active_rows.remove(a);
                             }
                         }
+                        // deactivate the column once no other row holds it
+                        // (the membership scan is O(entries) — fine off
+                        // the hot path; programming happens at map time)
+                        if !entry_cols.contains(&(c as u16)) {
+                            if let Ok(a) = active_cols.binary_search(&(c as u16)) {
+                                active_cols.remove(a);
+                            }
+                        }
                         self.nonzero -= 1;
                     }
                     Err(_) if v == 0 => {}
@@ -283,6 +314,9 @@ impl Crossbar {
                             if let Err(a) = active_rows.binary_search(&(r as u16)) {
                                 active_rows.insert(a, r as u16);
                             }
+                        }
+                        if let Err(a) = active_cols.binary_search(&(c as u16)) {
+                            active_cols.insert(a, c as u16);
                         }
                         self.nonzero += 1;
                     }
@@ -358,7 +392,7 @@ impl Crossbar {
                         }
                     }
                 }
-                let packed = build_compressed(rows, triples.into_iter());
+                let packed = build_compressed(rows, cols, triples.into_iter());
                 self.store = packed;
             }
         }
@@ -404,16 +438,65 @@ impl Crossbar {
         sums
     }
 
-    /// Bitline currents for one input bit-plane (`bits[r]` in {0,1}).
-    ///
-    /// The buffer lengths are hard asserts in **both** representations and
-    /// all build profiles: a short `out` would silently truncate the `zip`
-    /// accumulation in release builds if only debug-asserted, and a short
-    /// `bits` would drop wordlines.
-    pub fn bitline_currents(&self, bits: &[u8], out: &mut [u32]) {
-        assert_eq!(bits.len(), self.rows, "input bit-plane length");
-        assert_eq!(out.len(), self.cols, "bitline current buffer length");
-        out.fill(0);
+    /// Wordlines holding >= 1 programmed cell — the rows the sparse
+    /// current scan visits. O(1) in the compressed layout (the cached
+    /// nonzero-wordline index); a recount in the dense layout (stats
+    /// paths only, never the hot loop).
+    pub fn active_wordlines(&self) -> usize {
+        match &self.store {
+            CellArray::Dense(cells) => (0..self.rows)
+                .filter(|&r| cells[r * self.cols..(r + 1) * self.cols].iter().any(|&v| v != 0))
+                .count(),
+            CellArray::Compressed { active_rows, .. } => active_rows.len(),
+        }
+    }
+
+    /// Output columns holding >= 1 programmed cell — the columns whose
+    /// ADC actually converts (structurally-zero columns are skipped, see
+    /// [`Self::bitline_currents_active`]). O(1) in the compressed layout;
+    /// a recount in the dense layout (stats paths only).
+    pub fn active_columns(&self) -> usize {
+        match &self.store {
+            CellArray::Dense(cells) => {
+                let mut seen = vec![false; self.cols];
+                for r in 0..self.rows {
+                    let row = &cells[r * self.cols..(r + 1) * self.cols];
+                    for (s, &v) in seen.iter_mut().zip(row) {
+                        *s |= v != 0;
+                    }
+                }
+                seen.iter().filter(|&&s| s).count()
+            }
+            CellArray::Compressed { active_cols, .. } => active_cols.len(),
+        }
+    }
+
+    /// The nonzero-column index (ascending), when the layout caches one:
+    /// `Some` for compressed tiles, `None` for dense ones. A column
+    /// outside the index holds no programmed cell and can never carry
+    /// current.
+    pub fn active_cols(&self) -> Option<&[u16]> {
+        match &self.store {
+            CellArray::Dense(_) => None,
+            CellArray::Compressed { active_cols, .. } => Some(active_cols),
+        }
+    }
+
+    /// Columns whose ADC actually converts under this layout — what the
+    /// energy model bills and the resolution census counts. Compressed
+    /// tiles convert only their nonzero-column index; dense tiles carry
+    /// no index, so every column converts (matching the dense branch of
+    /// the simulator's ADC loop exactly). O(1) in both layouts.
+    pub fn converting_columns(&self) -> usize {
+        match &self.store {
+            CellArray::Dense(_) => self.cols,
+            CellArray::Compressed { active_cols, .. } => active_cols.len(),
+        }
+    }
+
+    /// Accumulate one bit-plane's currents into `out` (no zeroing — the
+    /// callers own the reset policy).
+    fn accumulate_currents(&self, bits: &[u8], out: &mut [u32]) {
         match &self.store {
             CellArray::Dense(cells) => {
                 for (r, &b) in bits.iter().enumerate() {
@@ -431,6 +514,7 @@ impl Crossbar {
                 entry_cols,
                 entry_vals,
                 active_rows,
+                ..
             } => {
                 // touch only programmed cells on active wordlines
                 for &r in active_rows {
@@ -444,6 +528,44 @@ impl Crossbar {
                     }
                 }
             }
+        }
+    }
+
+    /// Bitline currents for one input bit-plane (`bits[r]` in {0,1}).
+    /// Every slot of `out` is written (zeroed, then accumulated).
+    ///
+    /// The buffer lengths are hard asserts in **both** representations and
+    /// all build profiles: a short `out` would silently truncate the `zip`
+    /// accumulation in release builds if only debug-asserted, and a short
+    /// `bits` would drop wordlines.
+    pub fn bitline_currents(&self, bits: &[u8], out: &mut [u32]) {
+        assert_eq!(bits.len(), self.rows, "input bit-plane length");
+        assert_eq!(out.len(), self.cols, "bitline current buffer length");
+        out.fill(0);
+        self.accumulate_currents(bits, out);
+    }
+
+    /// Sparse variant of [`Self::bitline_currents`] for the per-tile ADC
+    /// loop: in the compressed layout, only **active** columns of `out`
+    /// are zeroed and accumulated — slots of structurally-zero columns
+    /// are neither written nor meaningful afterwards — and the cached
+    /// nonzero-column index is returned so the caller converts exactly
+    /// those columns. In the dense layout this is `bitline_currents`
+    /// (every slot valid) and the index is `None`. Same hard length
+    /// asserts as the full variant.
+    pub fn bitline_currents_active(&self, bits: &[u8], out: &mut [u32]) -> Option<&[u16]> {
+        assert_eq!(bits.len(), self.rows, "input bit-plane length");
+        assert_eq!(out.len(), self.cols, "bitline current buffer length");
+        if let CellArray::Compressed { active_cols, .. } = &self.store {
+            for &c in active_cols {
+                out[c as usize] = 0;
+            }
+            self.accumulate_currents(bits, out);
+            Some(active_cols)
+        } else {
+            out.fill(0);
+            self.accumulate_currents(bits, out);
+            None
         }
     }
 }
@@ -687,5 +809,111 @@ mod tests {
     #[should_panic]
     fn from_cells_rejects_duplicates() {
         let _ = Crossbar::from_cells(4, 4, vec![(1, 1, 2), (1, 1, 3)]);
+    }
+
+    /// Property: the cached active-wordline/column indexes track `set`
+    /// mutations (insert / overwrite / clear) exactly, in both layouts,
+    /// against a brute-force recount.
+    #[test]
+    fn active_indexes_track_mutation() {
+        check(25, |rng| {
+            let rows = 1 + rng.below(XBAR_ROWS);
+            let cols = 1 + rng.below(XBAR_COLS);
+            let mut dense = Crossbar::zeros(rows, cols);
+            let mut comp = Crossbar::zeros(rows, cols).in_format(StorageFormat::Compressed);
+            for _ in 0..150 {
+                let (r, c) = (rng.below(rows), rng.below(cols));
+                let v = rng.below(4) as u8; // 0 = clear
+                dense.set(r, c, v);
+                comp.set(r, c, v);
+            }
+            let live_rows = (0..rows)
+                .filter(|&r| (0..cols).any(|c| dense.get(r, c) != 0))
+                .count();
+            let live_cols = (0..cols)
+                .filter(|&c| (0..rows).any(|r| dense.get(r, c) != 0))
+                .count();
+            for xb in [&dense, &comp] {
+                ensure(xb.active_wordlines() == live_rows, "active wordlines")?;
+                ensure(xb.active_columns() == live_cols, "active columns")?;
+            }
+            // the compressed index itself is sorted and complete
+            let idx = comp.active_cols().expect("compressed tiles carry the index");
+            ensure(idx.windows(2).all(|w| w[0] < w[1]), "index ascending")?;
+            ensure(idx.len() == live_cols, "index length")?;
+            Ok(())
+        });
+    }
+
+    /// `bitline_currents_active` only touches active columns in the
+    /// compressed layout: active slots equal the full variant's, inactive
+    /// slots keep whatever garbage the buffer held — and the returned
+    /// index names exactly the meaningful slots.
+    #[test]
+    fn active_current_scan_matches_full_scan_on_active_columns() {
+        check(25, |rng| {
+            let rows = 1 + rng.below(XBAR_ROWS);
+            let cols = 1 + rng.below(XBAR_COLS);
+            let mut xb = Crossbar::zeros(rows, cols);
+            for _ in 0..rng.below(1 + rows * cols / 8) {
+                xb.set(rng.below(rows), rng.below(cols), 1 + rng.below(3) as u8);
+            }
+            let comp = xb.in_format(StorageFormat::Compressed);
+            let bits: Vec<u8> = (0..rows).map(|_| rng.below(2) as u8).collect();
+            let mut full = vec![0u32; cols];
+            comp.bitline_currents(&bits, &mut full);
+            let mut sparse = vec![0xDEADu32; cols];
+            let idx = comp
+                .bitline_currents_active(&bits, &mut sparse)
+                .expect("compressed layout returns the index")
+                .to_vec();
+            let active: std::collections::BTreeSet<usize> =
+                idx.iter().map(|&c| c as usize).collect();
+            for c in 0..cols {
+                if active.contains(&c) {
+                    ensure(sparse[c] == full[c], format!("active column {c}"))?;
+                } else {
+                    ensure(sparse[c] == 0xDEAD, format!("inactive column {c} written"))?;
+                    ensure(full[c] == 0, "inactive column carries current")?;
+                }
+            }
+            // dense layout: no index, every slot written, same currents
+            let mut d = vec![0xDEADu32; cols];
+            ensure(xb.bitline_currents_active(&bits, &mut d).is_none(), "dense index")?;
+            ensure(d == full, "dense active variant == full scan")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn active_counts_on_edge_tiles() {
+        // all-zero tile: nothing active in either layout
+        let z = Crossbar::zeros(5, 7);
+        assert_eq!(z.active_wordlines(), 0);
+        assert_eq!(z.active_columns(), 0);
+        let zc = z.in_format(StorageFormat::Compressed);
+        assert_eq!(zc.active_cols().unwrap().len(), 0);
+
+        // fully-dense tile: everything active
+        let mut full = Crossbar::zeros(3, 4);
+        for r in 0..3 {
+            for c in 0..4 {
+                full.set(r, c, CELL_MAX);
+            }
+        }
+        assert_eq!(full.active_wordlines(), 3);
+        assert_eq!(full.active_columns(), 4);
+        let fc = full.in_format(StorageFormat::Compressed);
+        assert_eq!(fc.active_cols().unwrap(), &[0, 1, 2, 3]);
+
+        // clearing a column's last cell drops it from the index
+        let mut xb = Crossbar::from_cells(4, 4, vec![(0, 2, 1), (3, 2, 2), (1, 0, 3)]);
+        assert_eq!(xb.format(), StorageFormat::Compressed);
+        assert_eq!(xb.active_cols().unwrap(), &[0, 2]);
+        xb.set(0, 2, 0);
+        assert_eq!(xb.active_cols().unwrap(), &[0, 2], "row 3 still holds col 2");
+        xb.set(3, 2, 0);
+        assert_eq!(xb.active_cols().unwrap(), &[0]);
+        assert_eq!(xb.active_columns(), 1);
     }
 }

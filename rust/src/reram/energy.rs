@@ -3,10 +3,14 @@
 //! Table 3 reports per-crossbar-group ratios (energy / sensing-time / area
 //! saving of the reduced-resolution ADC against the ISAAC 8-bit baseline).
 //! The model-level roll-up weighs each slice group by its ADC conversion
-//! count (columns x activation bit-planes), which is what an end-to-end
-//! deployment would see. Unprogrammed (fully-zero) tiles — e.g. the empty
-//! negative-sign grid of an all-positive layer — are never fabricated, so
-//! they contribute no crossbar, no conversions and no area.
+//! count (converting columns x activation bit-planes), which is what an
+//! end-to-end deployment would see. Unprogrammed (fully-zero) tiles —
+//! e.g. the empty negative-sign grid of an all-positive layer — are never
+//! fabricated, so they contribute no crossbar, no conversions and no
+//! area; structurally-zero columns of *compressed* tiles are skipped by
+//! the per-tile nonzero-column index, so they are not billed either
+//! (dense tiles carry no index and convert — and pay for — every column,
+//! exactly like the simulator's dense ADC loop).
 //!
 //! Costs can be rolled up at one uniform per-slice resolution
 //! ([`deployment_cost`]) or per layer under a
@@ -76,26 +80,34 @@ pub struct LayerCost {
     pub area_saving: f64,
 }
 
-/// ADC conversions (columns x 8 activation bit-planes) of slice group `k`
-/// of one layer, counting programmed tiles only. This is the weight of one
-/// (layer, slice) group in the energy roll-up — the planner scores its
-/// candidate moves by `conversions * (power(bits) - power(bits - 1))`.
-/// `nonzero_cells` is the cached per-tile census, so the whole tally is
-/// O(tiles) — the planner's scoring loop no longer recounts cells.
+/// ADC conversions (**converting** columns x 8 activation bit-planes) of
+/// slice group `k` of one layer, counting programmed tiles only. This is
+/// the weight of one (layer, slice) group in the energy roll-up — the
+/// planner scores its candidate moves by
+/// `conversions * (power(bits) - power(bits - 1))`.
+///
+/// The billing matches execution exactly
+/// ([`crate::reram::crossbar::Crossbar::converting_columns`]): compressed
+/// tiles convert only their nonzero-column index — the simulator skips
+/// structurally-zero columns outright via
+/// [`crate::reram::crossbar::Crossbar::bitline_currents_active`], and
+/// with wordline/column reordering they cluster into whole unbilled
+/// tiles — while dense tiles carry no index and convert every column.
+/// Both counts are cached per tile, so the tally is O(tiles).
 pub fn slice_conversions(layer: &LayerMapping, k: usize) -> f64 {
     let (pos, neg) = &layer.grids[k];
     [pos, neg]
         .iter()
         .flat_map(|g| &g.tiles)
         .filter(|t| t.nonzero_cells() > 0)
-        .map(|t| (t.cols() * 8) as f64)
+        .map(|t| (t.converting_columns() * 8) as f64)
         .sum()
 }
 
 /// Tally one layer at per-slice resolutions `bits`:
 /// (crossbars, skipped_tiles, energy, time, area). The zero-tile test is
-/// the cached census (O(1) per tile), so a whole-model roll-up is
-/// O(tiles), not O(cells).
+/// the cached census (O(1) per tile) and conversions count converting
+/// columns only (see [`slice_conversions`]).
 fn tally_layer(layer: &LayerMapping, bits: &[u32; N_SLICES]) -> (usize, usize, f64, f64, f64) {
     let mut crossbars = 0usize;
     let mut skipped = 0usize;
@@ -109,8 +121,10 @@ fn tally_layer(layer: &LayerMapping, bits: &[u32; N_SLICES]) -> (usize, usize, f
                     continue;
                 }
                 crossbars += 1;
-                // one ADC per crossbar; conversions = columns x 8 planes
-                let conversions = (tile.cols() * 8) as f64;
+                // one ADC per crossbar; conversions = converting columns
+                // x 8 planes (what the ADC loop actually executes under
+                // this tile's layout)
+                let conversions = (tile.converting_columns() * 8) as f64;
                 energy += conversions * AdcModel::power(b);
                 time += conversions * AdcModel::sensing_time(b);
                 area += AdcModel::area(b);
@@ -333,6 +347,40 @@ mod tests {
         assert_eq!(xb, total.crossbars);
         for r in &rows {
             assert!(r.energy_saving >= 1.0, "{}: {}", r.layer, r.energy_saving);
+        }
+    }
+
+    #[test]
+    fn structurally_zero_columns_are_not_billed() {
+        // one populated column + a pin: the other 30 columns of the tile
+        // never convert, so they must not weigh in the energy roll-up
+        let mut data = vec![0.0f32; 64 * 32];
+        for r in 0..64 {
+            data[r * 32] = 0.5;
+        }
+        data[63 * 32 + 31] = 1.0; // pin
+        let w = Tensor::new(vec![64, 32], data).unwrap();
+        let m = map_model(&[("z".into(), w.clone())]).unwrap();
+        // code(0.5) = 128: only slice 3 holds column 0; slices 0..2 hold
+        // just the pin column -> 1 conversion column x 8 planes
+        for k in 0..3 {
+            assert_eq!(slice_conversions(&m.layers[0], k), 8.0, "slice {k}");
+        }
+        assert_eq!(slice_conversions(&m.layers[0], 3), 16.0, "msb slice");
+
+        // single-row-block layer: reordering relocates columns 1:1, so
+        // the per-tile active-column census — and the billing — is exact
+        let r = crate::reram::mapper::map_model_with(
+            &[("z".into(), w)],
+            Some(crate::reram::reorder::ReorderConfig::default()),
+        )
+        .unwrap();
+        for k in 0..4 {
+            assert_eq!(
+                slice_conversions(&r.layers[0], k),
+                slice_conversions(&m.layers[0], k),
+                "slice {k} conversions changed under reorder"
+            );
         }
     }
 

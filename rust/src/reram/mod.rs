@@ -24,6 +24,10 @@
 //!                    [`planner::DeploymentPlan`] (per-layer x per-slice
 //!                    resolutions) under an accuracy-drop budget, scored by
 //!                    the [`energy`] cost model.
+//! * [`reorder`]    — map-time wordline/column permutation engine: greedy
+//!                    column-similarity clustering concentrates nonzero
+//!                    cells into fewer tiles, active wordlines and active
+//!                    columns (arXiv:2511.14202-style placement).
 //!
 //! # Storage-format selection (Dense vs Compressed tiles)
 //!
@@ -46,7 +50,29 @@
 //! and [`resolution`] O(1) and the planner's scoring loop O(tiles).
 //! Fully-zero tiles are never fabricated: the simulator skips them, the
 //! cost model doesn't bill them, and `report::storage_table` lists them
-//! as "skipped".
+//! as "skipped". Compressed tiles additionally cache a nonzero-**column**
+//! index: the per-tile ADC/recombination loop converts only columns that
+//! hold a programmed cell ([`crossbar::Crossbar::bitline_currents_active`]),
+//! and [`energy`] / [`resolution`] bill and census exactly the columns
+//! that convert under each tile's layout
+//! ([`crossbar::Crossbar::converting_columns`] — all of them for dense
+//! tiles, which carry no index).
+//!
+//! # Reorder convention (where codes are permuted, where sums come back)
+//!
+//! Mapping with a [`reorder::ReorderConfig`]
+//! ([`mapper::map_layer_with`] / [`mapper::map_model_with`], the
+//! `--reorder` deploy flag) plans one wordline [`reorder::Permutation`]
+//! and one column permutation **per layer**, shared by all four slice
+//! groups and both signs, and programs every cell at its permuted
+//! position. The simulator applies them only at the layer boundary:
+//! activation codes are permuted into physical wordline order once per
+//! example *before* the bit-planes are built, the accumulator runs in
+//! physical column order, and the final scatter restores logical column
+//! order — the tile loop never indexes through a permutation. Column
+//! reordering is bit-exact at every ADC resolution; wordline reordering
+//! moves rows across 128-row tile blocks and is bit-exact at
+//! non-clipping resolutions (see [`reorder`] for the full argument).
 //!
 //! # Bit-order convention (LSB-first `adc_bits` vs MSB-first `XB_k`)
 //!
@@ -69,6 +95,7 @@ pub mod crossbar;
 pub mod energy;
 pub mod mapper;
 pub mod planner;
+pub mod reorder;
 pub mod resolution;
 pub mod sim;
 
@@ -76,4 +103,5 @@ pub use adc::AdcModel;
 pub use crossbar::{Crossbar, StorageFormat, XBAR_COLS, XBAR_ROWS};
 pub use mapper::{LayerMapping, MappedModel, StorageRow, StorageStats};
 pub use planner::{DeploymentPlan, PlannerConfig};
+pub use reorder::{LayerReorder, Permutation, ReorderConfig, ReorderRow};
 pub use resolution::ResolutionPolicy;

@@ -111,6 +111,17 @@ pub struct PlannerConfig {
     pub start_policy: ResolutionPolicy,
     /// Cap on held-out examples per candidate evaluation (0 = all).
     pub eval_examples: usize,
+    /// Map-time wordline/column reordering for the planned deployment
+    /// (`None` = natural order). [`plan_deployment`] maps the stack
+    /// accordingly, so the census-derived starting plan and every
+    /// candidate evaluation run on the reordered tiles and the selected
+    /// resolutions size the ADCs the reordered layout actually
+    /// fabricates. [`plan_deployment_from`] plans on the caller's
+    /// already-mapped backend and *rejects* a config asking for
+    /// reordering when that mapping is natural-order — silently sizing
+    /// ADCs for the wrong per-tile current distribution is the failure
+    /// mode this field exists to prevent.
+    pub reorder: Option<super::reorder::ReorderConfig>,
 }
 
 impl Default for PlannerConfig {
@@ -120,6 +131,7 @@ impl Default for PlannerConfig {
             min_bits: 1,
             start_policy: ResolutionPolicy::Lossless,
             eval_examples: 256,
+            reorder: None,
         }
     }
 }
@@ -189,16 +201,29 @@ fn head(ds: &Dataset, n: usize) -> Dataset {
 }
 
 /// Search a per-layer ADC deployment plan for `stack` under `cfg`,
-/// validating every candidate on `holdout`. Maps the stack and quantizes
-/// the reference once, then delegates to [`plan_deployment_from`].
+/// validating every candidate on `holdout`. Maps the stack once — in
+/// reordered layout when `cfg.reorder` asks for it — quantizes the
+/// reference once, then delegates to [`plan_deployment_from`].
 pub fn plan_deployment(
     stack: &[DenseLayer],
     holdout: &Dataset,
     cfg: &PlannerConfig,
 ) -> Result<PlanSearch> {
-    let base = CrossbarBackend::with_layer_policy("planner", stack, cfg.start_policy)?;
+    let base = match cfg.reorder {
+        Some(rc) => {
+            CrossbarBackend::with_layer_policy_reordered("planner", stack, cfg.start_policy, rc)?
+        }
+        None => CrossbarBackend::with_layer_policy("planner", stack, cfg.start_policy)?,
+    };
     let reference = ReferenceBackend::new("planner-reference", stack)?;
-    plan_deployment_from(&base, &reference, holdout, cfg)
+    // the reorder pass may normalize to the identity on every layer (tiny
+    // or already-clustered stacks) — then the natural mapping *is* the
+    // reordered one, and the consistency guard below must not fire
+    let mut cfg = *cfg;
+    if !base.is_reordered() {
+        cfg.reorder = None;
+    }
+    plan_deployment_from(&base, &reference, holdout, &cfg)
 }
 
 /// Search starting from an already-mapped backend and reference — callers
@@ -223,6 +248,11 @@ pub fn plan_deployment_from(
 ) -> Result<PlanSearch> {
     anyhow::ensure!(!holdout.is_empty(), "planner needs a non-empty held-out set");
     anyhow::ensure!(cfg.min_bits >= 1, "ADC resolutions start at 1 bit");
+    anyhow::ensure!(
+        cfg.reorder.is_none() || base.is_reordered(),
+        "cfg.reorder asks for a reordered deployment but the supplied mapping is \
+         natural-order — map the backend with reordering (or use plan_deployment)"
+    );
     let ds = head(holdout, cfg.eval_examples);
 
     let base = base.replan(
@@ -492,5 +522,25 @@ mod tests {
         };
         let res = plan_deployment(&stack, &ds, &cfg).unwrap();
         assert_eq!(res.accuracy, res.baseline_accuracy);
+    }
+
+    /// The planner's census and search run on reordered tiles when asked:
+    /// a lossless start on the reordered mapping still agrees exactly
+    /// with the reference at zero budget, and the selected plan never
+    /// exceeds the reordered layout's own starting bits.
+    #[test]
+    fn reordered_planner_search_stays_exact_at_zero_budget() {
+        use crate::reram::reorder::ReorderConfig;
+        let mut rng = Rng::new(19);
+        let stack = toy_stack(&mut rng);
+        let ds = oracle_dataset(&stack, 16, 7);
+        let cfg = PlannerConfig {
+            accuracy_budget: 0.0,
+            reorder: Some(ReorderConfig::default()),
+            ..PlannerConfig::default()
+        };
+        let res = plan_deployment(&stack, &ds, &cfg).unwrap();
+        assert_eq!(res.accuracy, res.baseline_accuracy);
+        assert!(res.within_budget);
     }
 }

@@ -1,0 +1,509 @@
+//! Wordline/column reordering: active-row compaction at map time.
+//!
+//! Bit-slice L1 training leaves each 2-bit slice mostly zero, but the
+//! zeros are scattered: every 128x128 tile still holds a few programmed
+//! cells, so the simulator's compressed scan pays for active wordlines in
+//! every tile and the ADC loop pays for columns in every programmed tile.
+//! Bit-level weight reordering (arXiv:2511.14202) fixes the *placement*:
+//! permute the layer's wordlines and bitline columns so nonzero cells
+//! cluster into a few tiles — the rest become fully zero and are skipped
+//! outright — and so each remaining tile's active wordlines and columns
+//! shrink. SME (arXiv:2103.01705) makes the same point from the ADC side:
+//! the energy win materializes only when the crossbar-level placement
+//! concentrates the bit sparsity.
+//!
+//! # Permutation convention (where codes are permuted, where sums are
+//! un-permuted)
+//!
+//! One [`LayerReorder`] per layer — a wordline [`Permutation`] and a
+//! column [`Permutation`] shared by **all** slice groups and both signs,
+//! so the digital recombination still adds aligned physical columns:
+//!
+//! * **Map time** ([`crate::reram::mapper::map_layer_with`]): logical cell
+//!   `(r, c)` is programmed at physical position
+//!   `(rows.new_of(r), cols.new_of(c))` in the tiled layout.
+//! * **Way in** ([`crate::reram::sim::forward_codes_into`]): activation
+//!   codes are permuted once per example into physical wordline order
+//!   (`perm[rows.new_of(r)] = a_code[r]`) *before* the bit-planes are
+//!   materialized, so the hot loop itself never indexes through the
+//!   permutation.
+//! * **Way out**: the accumulator runs in physical column order; the final
+//!   scatter `out[cols.old_of(j)] = acc[j]` restores logical order once
+//!   per example.
+//!
+//! Column reordering is bit-exact at **any** ADC resolution: a logical
+//! column's cells move between tiles as one unit, so its per-row-block
+//! partial currents — the quantities the ADC clips — are unchanged.
+//! Wordline reordering moves rows *across* 128-row tile blocks, which
+//! re-partitions the partial sums; it is bit-exact at resolutions wide
+//! enough not to clip (e.g. `Lossless`), and at clipping resolutions it is
+//! a different — usually no worse — operating point, exactly as a
+//! different physical placement would be on real hardware.
+//!
+//! # The clustering heuristic
+//!
+//! Greedy column-similarity chaining, per arXiv:2511.14202: each column is
+//! summarized by the bitmask of 128-row blocks its nonzeros occupy, the
+//! most-populated column seeds the chain, and each step appends the
+//! unplaced column sharing the most blocks with the chain tail (fewest
+//! fresh blocks, then population, as tie-breaks). Never-occupied columns
+//! sort to the end, where whole tiles of them become fully zero. Rows are
+//! then chained the same way against the bitmask of *reordered* column
+//! blocks they touch. Both passes are deterministic.
+
+use super::crossbar::{XBAR_COLS, XBAR_ROWS};
+use super::mapper::{MappedModel, StorageStats};
+
+/// Which axes the map-time reorder pass permutes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReorderConfig {
+    /// permute wordlines (input rows) — active-wordline compaction
+    pub rows: bool,
+    /// permute bitline columns — zero-column clustering
+    pub cols: bool,
+}
+
+impl Default for ReorderConfig {
+    fn default() -> Self {
+        ReorderConfig {
+            rows: true,
+            cols: true,
+        }
+    }
+}
+
+impl ReorderConfig {
+    /// Wordline compaction only — bit-exact under clipping is *not*
+    /// guaranteed (rows cross tile-block boundaries).
+    pub fn rows_only() -> Self {
+        ReorderConfig {
+            rows: true,
+            cols: false,
+        }
+    }
+
+    /// Column clustering only — bit-exact at every ADC resolution (see
+    /// the module docs).
+    pub fn cols_only() -> Self {
+        ReorderConfig {
+            rows: false,
+            cols: true,
+        }
+    }
+}
+
+/// A permutation of `0..len` with both directions materialized: `to_new`
+/// maps a logical index to its physical position, `to_old` is the inverse.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Permutation {
+    /// `to_new[old] = new`
+    to_new: Vec<u32>,
+    /// `to_old[new] = old`
+    to_old: Vec<u32>,
+    /// cached at construction so the simulator's per-example identity
+    /// checks are O(1), not O(n)
+    ident: bool,
+}
+
+impl Permutation {
+    pub fn identity(n: usize) -> Permutation {
+        let v: Vec<u32> = (0..n as u32).collect();
+        Permutation {
+            to_new: v.clone(),
+            to_old: v,
+            ident: true,
+        }
+    }
+
+    /// Build from a placement order: `order[new] = old`. Panics unless
+    /// `order` visits every index exactly once.
+    pub fn from_order(order: Vec<u32>) -> Permutation {
+        let n = order.len();
+        let mut to_new = vec![u32::MAX; n];
+        let mut ident = true;
+        for (new, &old) in order.iter().enumerate() {
+            assert!((old as usize) < n, "order index {old} out of 0..{n}");
+            assert!(
+                to_new[old as usize] == u32::MAX,
+                "order visits index {old} twice"
+            );
+            to_new[old as usize] = new as u32;
+            ident &= old as usize == new;
+        }
+        Permutation {
+            to_new,
+            to_old: order,
+            ident,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.to_new.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.to_new.is_empty()
+    }
+
+    /// O(1) — cached at construction.
+    pub fn is_identity(&self) -> bool {
+        self.ident
+    }
+
+    /// Physical position of logical index `old`.
+    #[inline]
+    pub fn new_of(&self, old: usize) -> usize {
+        self.to_new[old] as usize
+    }
+
+    /// Logical index stored at physical position `new`.
+    #[inline]
+    pub fn old_of(&self, new: usize) -> usize {
+        self.to_old[new] as usize
+    }
+
+    /// `to_new` as a slice (`[old] = new`) — the mapper's direction.
+    pub fn to_new(&self) -> &[u32] {
+        &self.to_new
+    }
+
+    /// `to_old` as a slice (`[new] = old`) — the un-permute direction.
+    pub fn to_old(&self) -> &[u32] {
+        &self.to_old
+    }
+}
+
+/// One layer's planned permutations, stored in
+/// [`crate::reram::mapper::LayerMapping::reorder`]. Both permutations are
+/// shared by every slice group and both signs (see the module docs for
+/// why).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerReorder {
+    /// wordline permutation: logical input row `r` drives physical
+    /// wordline `rows.new_of(r)`
+    pub rows: Permutation,
+    /// column permutation: logical output column `c` accumulates on
+    /// physical bitline `cols.new_of(c)`
+    pub cols: Permutation,
+}
+
+impl LayerReorder {
+    pub fn is_identity(&self) -> bool {
+        self.rows.is_identity() && self.cols.is_identity()
+    }
+}
+
+/// Greedy similarity chain over items summarized by block-occupancy
+/// bitmasks: seed at the most-populated item, then repeatedly append the
+/// unplaced item sharing the most blocks with the chain tail (ties: fewest
+/// fresh blocks, largest population, lowest index — fully deterministic).
+/// Never-occupied items go last in their original order, so whole tiles of
+/// them become fully zero. Returns the placement order (`order[new] =
+/// old`).
+fn similarity_chain(sigs: &[u64], counts: &[u32]) -> Vec<u32> {
+    use std::cmp::Reverse;
+    let n = sigs.len();
+    let mut order: Vec<u32> = Vec::with_capacity(n);
+    let mut used = vec![false; n];
+    let live: Vec<usize> = (0..n).filter(|&i| counts[i] > 0).collect();
+    if let Some(&seed) = live.iter().max_by_key(|&&i| (counts[i], Reverse(i))) {
+        order.push(seed as u32);
+        used[seed] = true;
+        let mut last = seed;
+        for _ in 1..live.len() {
+            let next = live
+                .iter()
+                .copied()
+                .filter(|&i| !used[i])
+                .max_by_key(|&i| {
+                    let shared = (sigs[last] & sigs[i]).count_ones();
+                    let fresh = (sigs[i] & !sigs[last]).count_ones();
+                    (shared, Reverse(fresh), counts[i], Reverse(i))
+                })
+                .expect("unplaced live items remain");
+            order.push(next as u32);
+            used[next] = true;
+            last = next;
+        }
+    }
+    order.extend((0..n).filter(|&i| counts[i] == 0).map(|i| i as u32));
+    order
+}
+
+/// Plan a layer's permutations from its quantized code matrix (`codes[r *
+/// cols + c]`, row-major; an element participates in the occupancy iff its
+/// code is nonzero — the union of all four slices and both signs, since
+/// one permutation pair serves every grid). Returns `None` when the
+/// planned permutations are both the identity, so callers store no
+/// reorder and the simulator skips the permute/un-permute copies.
+pub fn plan_from_codes(
+    rows: usize,
+    cols: usize,
+    codes: &[u8],
+    cfg: ReorderConfig,
+) -> Option<LayerReorder> {
+    assert_eq!(codes.len(), rows * cols, "code matrix shape");
+    // column pass: cluster columns whose nonzeros share 128-row blocks
+    // (blocks beyond 64 fold with wrap — coarser signatures, same greedy)
+    let col_perm = if cfg.cols {
+        let mut sigs = vec![0u64; cols];
+        let mut counts = vec![0u32; cols];
+        for r in 0..rows {
+            let block = 1u64 << ((r / XBAR_ROWS) % 64);
+            let row = &codes[r * cols..(r + 1) * cols];
+            for (c, &v) in row.iter().enumerate() {
+                if v != 0 {
+                    sigs[c] |= block;
+                    counts[c] += 1;
+                }
+            }
+        }
+        Permutation::from_order(similarity_chain(&sigs, &counts))
+    } else {
+        Permutation::identity(cols)
+    };
+    // row pass: cluster rows whose nonzeros share *reordered* column
+    // blocks — run after the column pass so the signatures see the final
+    // column placement
+    let row_perm = if cfg.rows {
+        let mut sigs = vec![0u64; rows];
+        let mut counts = vec![0u32; rows];
+        for r in 0..rows {
+            let row = &codes[r * cols..(r + 1) * cols];
+            for (c, &v) in row.iter().enumerate() {
+                if v != 0 {
+                    sigs[r] |= 1u64 << ((col_perm.new_of(c) / XBAR_COLS) % 64);
+                    counts[r] += 1;
+                }
+            }
+        }
+        Permutation::from_order(similarity_chain(&sigs, &counts))
+    } else {
+        Permutation::identity(rows)
+    };
+    let ro = LayerReorder {
+        rows: row_perm,
+        cols: col_perm,
+    };
+    (!ro.is_identity()).then_some(ro)
+}
+
+/// One layer's reorder effect: the storage census of the reordered mapping
+/// next to the identical layer mapped in natural order — the
+/// `report::reorder_table` row.
+#[derive(Debug, Clone)]
+pub struct ReorderRow {
+    pub layer: String,
+    /// census of the layer mapped in natural (unpermuted) order
+    pub baseline: StorageStats,
+    /// census of the reordered mapping
+    pub reordered: StorageStats,
+}
+
+/// Savings ratio with the all-zero guard: 1.0 when both sides are zero,
+/// infinite when only the reordered side is.
+fn saving(base: usize, ours: usize) -> f64 {
+    if ours == 0 {
+        if base == 0 {
+            1.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        base as f64 / ours as f64
+    }
+}
+
+impl ReorderRow {
+    /// Active wordlines, natural / reordered (1.0 = no change).
+    pub fn wordline_saving(&self) -> f64 {
+        saving(self.baseline.active_wordlines, self.reordered.active_wordlines)
+    }
+
+    /// Active output columns, natural / reordered.
+    pub fn column_saving(&self) -> f64 {
+        saving(self.baseline.active_columns, self.reordered.active_columns)
+    }
+
+    /// Programmed (fabricated) tiles, natural / reordered.
+    pub fn tile_saving(&self) -> f64 {
+        saving(
+            self.baseline.dense_tiles + self.baseline.compressed_tiles,
+            self.reordered.dense_tiles + self.reordered.compressed_tiles,
+        )
+    }
+}
+
+/// Per-layer reorder-effect rows for a (natural, reordered) mapping pair
+/// of the same model.
+pub fn reorder_rows(baseline: &MappedModel, reordered: &MappedModel) -> Vec<ReorderRow> {
+    assert_eq!(
+        baseline.layers.len(),
+        reordered.layers.len(),
+        "mapping layer count"
+    );
+    baseline
+        .layers
+        .iter()
+        .zip(&reordered.layers)
+        .map(|(b, r)| {
+            assert_eq!(b.name, r.name, "mapping layer order");
+            ReorderRow {
+                layer: b.name.clone(),
+                baseline: b.storage_stats(),
+                reordered: r.storage_stats(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, ensure};
+
+    #[test]
+    fn identity_roundtrip_and_flags() {
+        let p = Permutation::identity(5);
+        assert_eq!(p.len(), 5);
+        assert!(p.is_identity());
+        assert!(!p.is_empty());
+        for i in 0..5 {
+            assert_eq!(p.new_of(i), i);
+            assert_eq!(p.old_of(i), i);
+        }
+        assert!(Permutation::identity(0).is_empty());
+    }
+
+    #[test]
+    fn from_order_inverts_exactly() {
+        let p = Permutation::from_order(vec![2, 0, 3, 1]);
+        assert!(!p.is_identity());
+        // order[new] = old: position 0 holds old index 2
+        assert_eq!(p.old_of(0), 2);
+        assert_eq!(p.new_of(2), 0);
+        for old in 0..4 {
+            assert_eq!(p.old_of(p.new_of(old)), old);
+        }
+        for new in 0..4 {
+            assert_eq!(p.new_of(p.old_of(new)), new);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_order_rejects_duplicates() {
+        let _ = Permutation::from_order(vec![0, 0, 1]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_order_rejects_out_of_range() {
+        let _ = Permutation::from_order(vec![0, 3]);
+    }
+
+    /// Property: permutation ∘ inverse = identity in both directions for
+    /// every permutation the planner produces, across random shapes and
+    /// densities (including all-zero and fully-dense matrices).
+    #[test]
+    fn planned_permutations_invert_exactly() {
+        check(30, |rng| {
+            let rows = 1 + rng.below(300);
+            let cols = 1 + rng.below(200);
+            let fill = rng.below(101);
+            let codes: Vec<u8> = (0..rows * cols)
+                .map(|_| {
+                    if rng.below(100) < fill {
+                        1 + rng.below(255) as u8
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            let Some(ro) = plan_from_codes(rows, cols, &codes, ReorderConfig::default()) else {
+                return Ok(()); // identity plan — nothing to invert
+            };
+            ensure(ro.rows.len() == rows && ro.cols.len() == cols, "lengths")?;
+            for r in 0..rows {
+                ensure(ro.rows.old_of(ro.rows.new_of(r)) == r, "row inverse")?;
+            }
+            for c in 0..cols {
+                ensure(ro.cols.new_of(ro.cols.old_of(c)) == c, "col inverse")?;
+            }
+            // both directions are complete permutations: every physical
+            // position is hit exactly once
+            let mut seen = vec![false; rows];
+            for r in 0..rows {
+                let p = ro.rows.new_of(r);
+                ensure(!seen[p], "row position hit twice")?;
+                seen[p] = true;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn all_zero_and_fully_dense_plan_to_identity() {
+        // all-zero: no occupancy anywhere — the chain is empty, the zero
+        // tail keeps original order, the plan normalizes away
+        assert!(plan_from_codes(10, 8, &[0u8; 80], ReorderConfig::default()).is_none());
+        // fully dense: every signature is identical, so the chain keeps
+        // falling back to index order after the count tie-break — any
+        // non-identity outcome would still be valid, but the single-tile
+        // case must normalize away (nothing to move between blocks)
+        let dense = vec![1u8; 6 * 4];
+        if let Some(ro) = plan_from_codes(6, 4, &dense, ReorderConfig::default()) {
+            // a plan is allowed, but it must still be a permutation
+            for r in 0..6 {
+                assert_eq!(ro.rows.old_of(ro.rows.new_of(r)), r);
+            }
+        }
+    }
+
+    #[test]
+    fn disabled_axes_stay_identity() {
+        let mut codes = vec![0u8; 256 * 300];
+        for i in 0..40 {
+            codes[(i * 131) % (256 * 300)] = 3;
+        }
+        let ro = plan_from_codes(256, 300, &codes, ReorderConfig::cols_only())
+            .expect("sparse scattered matrix reorders");
+        assert!(ro.rows.is_identity(), "rows frozen under cols_only");
+        let ro = plan_from_codes(256, 300, &codes, ReorderConfig::rows_only())
+            .expect("sparse scattered matrix reorders");
+        assert!(ro.cols.is_identity(), "cols frozen under rows_only");
+    }
+
+    #[test]
+    fn chain_clusters_structured_columns_into_one_block() {
+        // 256 rows (2 blocks), 256 cols (2 blocks): nonzero columns are
+        // the even indices, each occupied only in row block 0. Clustering
+        // must place every occupied column in the first column block.
+        let (rows, cols) = (256usize, 256usize);
+        let mut codes = vec![0u8; rows * cols];
+        for c in (0..cols).step_by(2) {
+            codes[c] = 1; // row 0 only
+        }
+        let ro = plan_from_codes(rows, cols, &codes, ReorderConfig::default()).unwrap();
+        for c in (0..cols).step_by(2) {
+            assert!(
+                ro.cols.new_of(c) < 128,
+                "occupied column {c} placed at {}",
+                ro.cols.new_of(c)
+            );
+        }
+        // the single occupied row compacts to wordline 0
+        assert_eq!(ro.rows.new_of(0), 0);
+    }
+
+    #[test]
+    fn never_occupied_items_keep_relative_order_at_the_tail() {
+        // columns 0 and 2 occupied, 1 and 3 empty: empties go last, in
+        // original order
+        let codes = vec![1, 0, 1, 0];
+        let ro = plan_from_codes(1, 4, &codes, ReorderConfig::cols_only()).unwrap();
+        assert!(ro.cols.new_of(0) < 2 && ro.cols.new_of(2) < 2);
+        assert_eq!(ro.cols.new_of(1), 2);
+        assert_eq!(ro.cols.new_of(3), 3);
+    }
+}

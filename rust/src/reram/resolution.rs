@@ -77,7 +77,14 @@ pub fn bits_for_current(max_current: u32) -> u32 {
 /// Gather the column-current census per slice group for one mapped layer.
 /// Unprogrammed (fully-zero) tiles contribute no columns: they carry no
 /// ADC, so counting their zero sums would bias percentiles downward (the
-/// test is the tile's cached census — O(1), no recount).
+/// test is the tile's cached census — O(1), no recount). Structurally-zero
+/// columns of *compressed* tiles are excluded for the same reason: the
+/// per-tile nonzero-column index skips their conversions outright
+/// ([`crate::reram::crossbar::Crossbar::bitline_currents_active`]), so no
+/// ADC ever sees them — with reordering they additionally cluster into
+/// whole skipped tiles. Dense tiles carry no index: every one of their
+/// columns converts, so every one enters the census. The census therefore
+/// covers exactly the conversions [`crate::reram::energy`] bills.
 pub fn layer_slice_currents(layer: &LayerMapping) -> [SliceCurrents; N_SLICES] {
     let mut out: [SliceCurrents; N_SLICES] = std::array::from_fn(|_| SliceCurrents {
         sums: Vec::new(),
@@ -88,7 +95,14 @@ pub fn layer_slice_currents(layer: &LayerMapping) -> [SliceCurrents; N_SLICES] {
                 if tile.nonzero_cells() == 0 {
                     continue;
                 }
-                out[k].sums.extend(tile.column_conductance_sums());
+                let sums = tile.column_conductance_sums();
+                if tile.active_cols().is_some() {
+                    // compressed: only indexed (converting) columns
+                    out[k].sums.extend(sums.into_iter().filter(|&s| s > 0));
+                } else {
+                    // dense: every column converts, zeros included
+                    out[k].sums.extend(sums);
+                }
             }
         }
     }
@@ -222,6 +236,32 @@ mod tests {
             }
             assert_eq!(whole[k].sums, concat, "slice {k}");
         }
+    }
+
+    #[test]
+    fn census_skips_structurally_zero_columns() {
+        // a programmed tile whose columns 1..31 hold no cell: only the
+        // converting columns (0 and the pin column) may enter the census
+        let mut data = vec![0.0f32; 64 * 32];
+        for r in 0..64 {
+            data[r * 32] = 0.5; // column 0 fully populated
+        }
+        data[63 * 32 + 31] = 1.0; // dynamic-range pin in column 31
+        let w = Tensor::new(vec![64, 32], data).unwrap();
+        let m = map_model(&[("z".into(), w)]).unwrap();
+        let currents = layer_slice_currents(&m.layers[0]);
+        for (k, cur) in currents.iter().enumerate() {
+            assert!(
+                cur.sums.len() <= 2,
+                "slice {k}: {} columns entered the census",
+                cur.sums.len()
+            );
+            assert!(cur.sums.iter().all(|&s| s > 0), "slice {k}");
+        }
+        // a zero-heavy census would drag the percentile to 0 bits; the
+        // filtered census sizes the ADC for the columns that convert
+        let bits = required_bits(&m, ResolutionPolicy::Percentile(0.5));
+        assert!(bits.iter().all(|&b| b >= 1));
     }
 
     #[test]

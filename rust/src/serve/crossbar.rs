@@ -22,6 +22,7 @@ use anyhow::Result;
 use crate::quant::N_SLICES;
 use crate::reram::mapper::{self, MappedModel, StorageRow, StorageStats};
 use crate::reram::planner::DeploymentPlan;
+use crate::reram::reorder::ReorderConfig;
 use crate::reram::sim::{self, SimScratch};
 use crate::reram::{resolution, ResolutionPolicy};
 use crate::tensor::Tensor;
@@ -49,7 +50,7 @@ pub struct CrossbarBackend {
 impl CrossbarBackend {
     /// Map the stack and deploy it under an explicit per-layer plan.
     pub fn with_plan(name: &str, stack: &[DenseLayer], plan: DeploymentPlan) -> Result<Self> {
-        let mapped = Self::map_stack(stack)?;
+        let mapped = Self::map_stack(stack, None)?;
         Self::assemble(name, mapped, stack, plan)
     }
 
@@ -57,7 +58,7 @@ impl CrossbarBackend {
     /// the **whole model's** column-current distribution (the Table-3
     /// single-operating-point semantics), deployed uniformly per layer.
     pub fn new(name: &str, stack: &[DenseLayer], policy: ResolutionPolicy) -> Result<Self> {
-        let mapped = Self::map_stack(stack)?;
+        let mapped = Self::map_stack(stack, None)?;
         let adc_bits = resolution::required_bits(&mapped, policy);
         let plan = DeploymentPlan::uniform_for(&mapped, adc_bits);
         Self::assemble(name, mapped, stack, plan)
@@ -70,7 +71,7 @@ impl CrossbarBackend {
         stack: &[DenseLayer],
         policy: ResolutionPolicy,
     ) -> Result<Self> {
-        let mapped = Self::map_stack(stack)?;
+        let mapped = Self::map_stack(stack, None)?;
         let plan = DeploymentPlan::from_policy(&mapped, policy);
         Self::assemble(name, mapped, stack, plan)
     }
@@ -78,8 +79,66 @@ impl CrossbarBackend {
     /// Map the stack and deploy at explicit uniform per-slice resolutions
     /// (LSB-first), e.g. the paper's `[3, 3, 3, 1]` operating point.
     pub fn with_bits(name: &str, stack: &[DenseLayer], adc_bits: [u32; N_SLICES]) -> Result<Self> {
-        let mapped = Self::map_stack(stack)?;
+        let mapped = Self::map_stack(stack, None)?;
         let plan = DeploymentPlan::uniform_for(&mapped, adc_bits);
+        Self::assemble(name, mapped, stack, plan)
+    }
+
+    /// Map the stack with the wordline/column reorder pass
+    /// ([`crate::reram::reorder`]) and deploy at explicit uniform
+    /// per-slice resolutions.
+    pub fn with_bits_reordered(
+        name: &str,
+        stack: &[DenseLayer],
+        adc_bits: [u32; N_SLICES],
+        reorder: ReorderConfig,
+    ) -> Result<Self> {
+        let mapped = Self::map_stack(stack, Some(reorder))?;
+        let plan = DeploymentPlan::uniform_for(&mapped, adc_bits);
+        Self::assemble(name, mapped, stack, plan)
+    }
+
+    /// Map the stack with the reorder pass and size each layer by `policy`
+    /// over its own (reordered) census — the reordered planner's starting
+    /// point.
+    pub fn with_layer_policy_reordered(
+        name: &str,
+        stack: &[DenseLayer],
+        policy: ResolutionPolicy,
+        reorder: ReorderConfig,
+    ) -> Result<Self> {
+        let mapped = Self::map_stack(stack, Some(reorder))?;
+        let plan = DeploymentPlan::from_policy(&mapped, policy);
+        Self::assemble(name, mapped, stack, plan)
+    }
+
+    /// Deploy an already-mapped model (e.g. a reordered mapping built
+    /// through [`mapper::map_model_with`]) under `plan`; `stack` supplies
+    /// the bias/activation metadata and must match the mapping layer for
+    /// layer.
+    pub fn from_mapping(
+        name: &str,
+        mapped: MappedModel,
+        stack: &[DenseLayer],
+        plan: DeploymentPlan,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            mapped.layers.len() == stack.len(),
+            "mapping has {} layers, stack has {}",
+            mapped.layers.len(),
+            stack.len()
+        );
+        for (layer, dense) in mapped.layers.iter().zip(stack) {
+            let (rows, cols) = mapper::matrix_view(dense.w.shape())?;
+            anyhow::ensure!(
+                layer.rows == rows && layer.cols == cols,
+                "mapping layer {:?} is {}x{}, stack layer {:?} is {rows}x{cols}",
+                layer.name,
+                layer.rows,
+                layer.cols,
+                dense.name
+            );
+        }
         Self::assemble(name, mapped, stack, plan)
     }
 
@@ -150,11 +209,17 @@ impl CrossbarBackend {
         self.model.storage_stats()
     }
 
-    fn map_stack(stack: &[DenseLayer]) -> Result<MappedModel> {
+    /// Whether the shared mapping carries map-time wordline/column
+    /// permutations on any layer.
+    pub fn is_reordered(&self) -> bool {
+        self.model.is_reordered()
+    }
+
+    fn map_stack(stack: &[DenseLayer], reorder: Option<ReorderConfig>) -> Result<MappedModel> {
         anyhow::ensure!(!stack.is_empty(), "empty dense stack");
         let layers = stack
             .iter()
-            .map(|l| mapper::map_layer(&l.name, &l.w))
+            .map(|l| mapper::map_layer_with(&l.name, &l.w, reorder))
             .collect::<Result<Vec<_>>>()?;
         Ok(MappedModel { layers })
     }
@@ -384,5 +449,61 @@ mod tests {
         let be = CrossbarBackend::new("xb", &stack, ResolutionPolicy::Lossless).unwrap();
         let x = Tensor::new(vec![2, 7], vec![0.1; 14]).unwrap();
         assert!(be.infer_batch(&x).is_err());
+    }
+
+    #[test]
+    fn reordered_backend_is_bit_identical_at_lossless() {
+        let mut rng = Rng::new(31);
+        let stack = toy_stack(&mut rng);
+        let natural =
+            CrossbarBackend::with_layer_policy("xb", &stack, ResolutionPolicy::Lossless).unwrap();
+        let reordered = CrossbarBackend::with_layer_policy_reordered(
+            "xb-ro",
+            &stack,
+            ResolutionPolicy::Lossless,
+            ReorderConfig::default(),
+        )
+        .unwrap();
+        let x = Tensor::new(vec![4, 20], (0..80).map(|_| rng.next_f32()).collect()).unwrap();
+        assert_eq!(
+            natural.infer_batch(&x).unwrap().data(),
+            reordered.infer_batch(&x).unwrap().data(),
+            "reordered placement must be invisible at lossless resolution"
+        );
+        // rebit/replan clones keep the reordered mapping
+        let swept = reordered.rebit("xb-ro-sweep", [3, 3, 3, 1]);
+        assert!(Arc::ptr_eq(reordered.mapped(), swept.mapped()));
+        assert_eq!(swept.is_reordered(), reordered.is_reordered());
+    }
+
+    #[test]
+    fn from_mapping_validates_stack_shapes() {
+        use crate::reram::mapper;
+        let mut rng = Rng::new(37);
+        let stack = toy_stack(&mut rng);
+        let named: Vec<(String, Tensor)> = stack
+            .iter()
+            .map(|l| (l.name.clone(), l.w.clone()))
+            .collect();
+        let mapped =
+            mapper::map_model_with(&named, Some(ReorderConfig::default())).unwrap();
+        let plan = DeploymentPlan::uniform_for(&mapped, [10; 4]);
+        let be =
+            CrossbarBackend::from_mapping("xb-m", mapped.clone(), &stack, plan.clone()).unwrap();
+        let x = Tensor::new(vec![2, 20], (0..40).map(|_| rng.next_f32()).collect()).unwrap();
+        // same answer as mapping the stack directly at the same bits
+        let direct = CrossbarBackend::with_bits_reordered(
+            "xb-d",
+            &stack,
+            [10; 4],
+            ReorderConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(
+            be.infer_batch(&x).unwrap().data(),
+            direct.infer_batch(&x).unwrap().data()
+        );
+        // a stack that does not match the mapping is rejected
+        assert!(CrossbarBackend::from_mapping("bad", mapped, &stack[..1], plan).is_err());
     }
 }

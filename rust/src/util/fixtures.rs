@@ -1,0 +1,313 @@
+//! Shared seeded fixtures: the constructed bit-slice-sparse layer stacks
+//! the benches (`sparse_sim`, `planner_sweep`, `reorder_sim`), the
+//! integration tests and the property suites all exercise.
+//!
+//! Before this module each bench/test carried its own copy of "weights at
+//! an exact density with a dynamic-range pin" and "a class-template MLP
+//! that is bit-slice sparse by construction"; one seeded generator here
+//! keeps the regimes identical everywhere, parameterized by density (and,
+//! for the reorder fixtures, by row/column structure). Everything is
+//! deterministic from the caller's [`Rng`] or seed.
+//!
+//! Compiled for unit tests and under the `bench` feature; the crate's
+//! dev-dependency on itself enables the feature for every `cargo test`,
+//! `cargo bench` and example build.
+
+use crate::data::Dataset;
+use crate::quant::N_SLICES;
+use crate::reram::mapper::LayerMapping;
+use crate::serve::{dense_stack, DenseLayer};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Weights with an exact fraction `density` of nonzero elements (random
+/// magnitudes spanning all slices) plus a fixed dynamic-range pin at
+/// element 0, so the qstep — and therefore the mapped codes of shared
+/// elements — is density-invariant across a sweep.
+pub fn weights_at_density(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> Tensor {
+    let n = rows * cols;
+    let mut data = vec![0.0f32; n];
+    let target = ((n as f64) * density) as usize;
+    let mut placed = 1usize; // the pin below
+    data[0] = 1.0;
+    while placed < target {
+        let i = rng.below(n);
+        if data[i] == 0.0 {
+            data[i] = (rng.next_f32() - 0.5) * 2.0;
+            placed += 1;
+        }
+    }
+    Tensor::new(vec![rows, cols], data).expect("fixture shape")
+}
+
+/// Structured-sparse weights: nonzeros live only on a scattered subset of
+/// rows (`row_frac`) crossed with a scattered subset of columns
+/// (`col_frac`), filled at `fill` within the active block — the "dead
+/// neuron / dead feature" structure bit-slice L1 training produces, and
+/// the regime where wordline/column reordering pays (the active lines are
+/// scattered across every tile until the permutation clusters them). The
+/// dynamic-range pin sits on the first active (row, col) so the qstep is
+/// structure-invariant.
+pub fn structured_sparse_weights(
+    rng: &mut Rng,
+    rows: usize,
+    cols: usize,
+    row_frac: f64,
+    col_frac: f64,
+    fill: f64,
+) -> Tensor {
+    let pick = |n: usize, frac: f64, rng: &mut Rng| -> Vec<usize> {
+        let want = (((n as f64) * frac).round() as usize).clamp(1, n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let mut chosen = idx[..want].to_vec();
+        chosen.sort_unstable();
+        chosen
+    };
+    let active_rows = pick(rows, row_frac, rng);
+    let active_cols = pick(cols, col_frac, rng);
+    let mut data = vec![0.0f32; rows * cols];
+    for &r in &active_rows {
+        for &c in &active_cols {
+            if (rng.next_f32() as f64) < fill {
+                data[r * cols + c] = (rng.next_f32() - 0.5) * 2.0;
+            }
+        }
+    }
+    // pin the dynamic range inside the active block
+    data[active_rows[0] * cols + active_cols[0]] = 1.0;
+    Tensor::new(vec![rows, cols], data).expect("fixture shape")
+}
+
+/// Zero biases for a stack of the given fan-outs.
+fn zero_biases(dims: &[usize]) -> Vec<Tensor> {
+    dims.iter().map(|&d| Tensor::zeros(vec![d])).collect()
+}
+
+/// An MLP stack (`dims[0] -> dims[1] -> ...`) of [`weights_at_density`]
+/// layers with zero biases — the serving/agreement tests' sparse model.
+pub fn sparse_stack(seed: u64, dims: &[usize], density: f64) -> Vec<DenseLayer> {
+    assert!(dims.len() >= 2, "a stack needs at least one layer");
+    let mut rng = Rng::new(seed);
+    let weights: Vec<(String, Tensor)> = dims
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| {
+            (
+                format!("fc{}/w", i + 1),
+                weights_at_density(&mut rng, w[0], w[1], density),
+            )
+        })
+        .collect();
+    dense_stack(&weights, &zero_biases(&dims[1..])).expect("fixture stack")
+}
+
+/// An MLP stack of [`structured_sparse_weights`] layers with zero biases
+/// — the reorder benches'/tests' structured model.
+pub fn structured_stack(
+    seed: u64,
+    dims: &[usize],
+    row_frac: f64,
+    col_frac: f64,
+    fill: f64,
+) -> Vec<DenseLayer> {
+    assert!(dims.len() >= 2, "a stack needs at least one layer");
+    let mut rng = Rng::new(seed);
+    let weights: Vec<(String, Tensor)> = dims
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| {
+            (
+                format!("fc{}/w", i + 1),
+                structured_sparse_weights(&mut rng, w[0], w[1], row_frac, col_frac, fill),
+            )
+        })
+        .collect();
+    dense_stack(&weights, &zero_biases(&dims[1..])).expect("fixture stack")
+}
+
+/// Paper-style mean slice-zero fraction of a mapped layer (the quantity
+/// the density sweeps report on their x axis).
+pub fn mean_slice_zero_fraction(layer: &LayerMapping) -> f64 {
+    let numel = (layer.rows * layer.cols) as f64;
+    (0..N_SLICES)
+        .map(|k| 1.0 - layer.nonzero_cells(k) as f64 / numel)
+        .sum::<f64>()
+        / N_SLICES as f64
+}
+
+/// A class-template MLP, bit-slice sparse by construction — the planner
+/// bench's model (moved here from `benches/planner_sweep.rs` so the
+/// regime is shared).
+///
+/// Layer 1 (dim -> classes + 1): column `c < classes` holds, per 128-row
+/// tile, the two most positive and two most negative
+/// (class-mean - global-mean) pixels at code 12 = 0b1100 — slice 1 only,
+/// tile-column currents <= 6, so the discriminative weights clip nowhere
+/// at the paper's 3-bit low-slice ADCs. The last column holds the single
+/// dynamic-range pin (code 255); its output is killed by a large negative
+/// bias and feeds nothing, so MSB clipping on the pin never reaches the
+/// logits. Layer 2 is the identity on the class units — a single code-255
+/// cell per column, whose MSB clipping is a uniform monotone rescale that
+/// preserves the argmax.
+pub fn planted_class_stack(train: &Dataset) -> Vec<DenseLayer> {
+    let dim = train.dim();
+    let classes = train.num_classes;
+    let hidden = classes + 1; // class units + the range-pin unit
+
+    let mut mean = vec![0.0f64; classes * dim];
+    let mut count = vec![0usize; classes];
+    for i in 0..train.len() {
+        let c = train.labels[i] as usize;
+        count[c] += 1;
+        for (j, &v) in train.features[i * dim..(i + 1) * dim].iter().enumerate() {
+            mean[c * dim + j] += v as f64;
+        }
+    }
+    for c in 0..classes {
+        let inv = 1.0 / count[c].max(1) as f64;
+        for j in 0..dim {
+            mean[c * dim + j] *= inv;
+        }
+    }
+    let mut gmean = vec![0.0f64; dim];
+    for c in 0..classes {
+        for j in 0..dim {
+            gmean[j] += mean[c * dim + j] / classes as f64;
+        }
+    }
+
+    let small = 12.0f32 / 256.0; // code 12 at qstep 2^-8 (pin = 1.0)
+    let mut w1 = vec![0.0f32; dim * hidden];
+    for c in 0..classes {
+        let mut t0 = 0;
+        while t0 < dim {
+            let t1 = (t0 + 128).min(dim);
+            let mut idx: Vec<usize> = (t0..t1).collect();
+            idx.sort_by(|&a, &b| {
+                let da = mean[c * dim + a] - gmean[a];
+                let db = mean[c * dim + b] - gmean[b];
+                db.partial_cmp(&da).unwrap()
+            });
+            for &j in idx.iter().take(2) {
+                w1[j * hidden + c] = small;
+            }
+            for &j in idx.iter().rev().take(2) {
+                w1[j * hidden + c] = -small;
+            }
+            t0 = t1;
+        }
+    }
+    w1[classes] = 1.0; // row 0, pin column: sets the layer's dynamic range
+
+    let mut b1 = vec![0.0f32; hidden];
+    b1[classes] = -1e4; // the pin unit never survives the ReLU
+
+    let mut w2 = vec![0.0f32; hidden * classes];
+    for c in 0..classes {
+        w2[c * classes + c] = 1.0;
+    }
+
+    dense_stack(
+        &[
+            (
+                "fc1/w".into(),
+                Tensor::new(vec![dim, hidden], w1).expect("fixture shape"),
+            ),
+            (
+                "fc2/w".into(),
+                Tensor::new(vec![hidden, classes], w2).expect("fixture shape"),
+            ),
+        ],
+        &[
+            Tensor::new(vec![hidden], b1).expect("fixture shape"),
+            Tensor::new(vec![classes], vec![0.0; classes]).expect("fixture shape"),
+        ],
+    )
+    .expect("fixture stack")
+}
+
+/// The golden reorder fixture: a fixed seeded structured-sparse stack
+/// plus the minimum savings the reorder engine must achieve on it. The
+/// regression test asserts *from these recorded fields* — not from magic
+/// constants inline — so a silently weakened clustering heuristic fails
+/// the build, and a deliberate change to the heuristic updates the
+/// recorded floor here, in one reviewed place.
+pub struct ReorderGolden {
+    pub stack: Vec<DenseLayer>,
+    /// active wordlines, natural / reordered, whole model — the floor the
+    /// clustering must clear
+    pub min_wordline_saving: f64,
+    /// fully-zero (skipped) tiles the reordered mapping must reach, at
+    /// minimum, across the model
+    pub min_skipped_tiles: usize,
+}
+
+/// Fixed parameters: 784 -> 300 -> 10, 15% of rows and columns active,
+/// 30% fill inside the active block (~0.7% element density — the Bl1
+/// regime with dead-line structure). On this stack the greedy clustering
+/// compacts the ~118 scattered active rows and ~45 active columns of
+/// layer 1 into one tile region per grid; anything below a 1.5x
+/// active-wordline saving means the heuristic regressed.
+pub fn reorder_golden() -> ReorderGolden {
+    ReorderGolden {
+        stack: structured_stack(0xB175_11CE, &[784, 300, 10], 0.15, 0.15, 0.3),
+        min_wordline_saving: 1.5,
+        min_skipped_tiles: 60,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant;
+
+    #[test]
+    fn weights_at_density_hits_exact_count_and_pins_range() {
+        let mut rng = Rng::new(3);
+        let w = weights_at_density(&mut rng, 50, 40, 0.1);
+        let nonzero = w.data().iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nonzero, 200);
+        assert_eq!(w.data()[0], 1.0);
+        // the pin fixes the qstep at 2^-8 regardless of density
+        assert_eq!(quant::quantize(&w).step, 2.0f32.powi(-8));
+        let w2 = weights_at_density(&mut rng, 50, 40, 0.9);
+        assert_eq!(quant::quantize(&w2).step, 2.0f32.powi(-8));
+    }
+
+    #[test]
+    fn structured_weights_confine_nonzeros_to_active_lines() {
+        let mut rng = Rng::new(5);
+        let w = structured_sparse_weights(&mut rng, 200, 100, 0.2, 0.2, 0.5);
+        let data = w.data();
+        let active_rows: Vec<usize> = (0..200)
+            .filter(|&r| (0..100).any(|c| data[r * 100 + c] != 0.0))
+            .collect();
+        let active_cols: Vec<usize> = (0..100)
+            .filter(|&c| (0..200).any(|r| data[r * 100 + c] != 0.0))
+            .collect();
+        assert!(!active_rows.is_empty() && active_rows.len() <= 40);
+        assert!(!active_cols.is_empty() && active_cols.len() <= 20);
+        assert!(data.iter().any(|&v| v == 1.0), "pin present");
+    }
+
+    #[test]
+    fn stacks_chain_and_are_deterministic() {
+        let a = sparse_stack(7, &[30, 20, 5], 0.1);
+        let b = sparse_stack(7, &[30, 20, 5], 0.1);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].w.shape(), &[30, 20]);
+        assert_eq!(a[1].w.shape(), &[20, 5]);
+        assert!(a[0].relu && !a[1].relu);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.w.data(), y.w.data(), "same seed, same stack");
+        }
+        let s = structured_stack(9, &[64, 32, 4], 0.25, 0.25, 0.5);
+        assert_eq!(s.len(), 2);
+
+        let g1 = reorder_golden();
+        let g2 = reorder_golden();
+        assert_eq!(g1.stack[0].w.data(), g2.stack[0].w.data());
+        assert!(g1.min_wordline_saving > 1.0);
+    }
+}

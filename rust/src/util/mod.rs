@@ -15,9 +15,16 @@
 //! * [`check`]  — mini property-testing harness (seeded case generation
 //!   with failure-seed reporting), used by the unit tests in place of
 //!   proptest.
+//! * [`fixtures`] — shared seeded generators for the constructed
+//!   bit-slice-sparse layer stacks the benches, integration tests and
+//!   property tests all exercise (compiled for tests and under the
+//!   `bench` feature only — the dev-dependency on ourselves turns it on
+//!   for every `cargo test` / `cargo bench` build).
 
 pub mod check;
 pub mod cli;
+#[cfg(any(test, feature = "bench"))]
+pub mod fixtures;
 pub mod json;
 pub mod pool;
 pub mod rng;

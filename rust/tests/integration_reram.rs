@@ -4,9 +4,12 @@
 //! self-consistent on trained weights.
 
 use bitslice_reram::quant;
-use bitslice_reram::reram::{energy, mapper, resolution, sim, ResolutionPolicy, StorageFormat};
+use bitslice_reram::reram::{
+    energy, mapper, reorder, resolution, sim, ReorderConfig, ResolutionPolicy, StorageFormat,
+};
 use bitslice_reram::runtime::{Engine, Manifest};
 use bitslice_reram::tensor::Tensor;
+use bitslice_reram::util::fixtures;
 use bitslice_reram::util::rng::Rng;
 
 fn setup() -> Option<(Engine, Manifest)> {
@@ -204,8 +207,9 @@ fn sparse_mapping_compresses_and_executes_bit_identically() {
         assert_eq!(a.data(), b.data(), "layouts disagree at {bits:?}");
     }
 
-    // the census, the cost model and the resolution analysis all read the
-    // same cached counts regardless of layout
+    // the census and the lossless resolution analysis read the same
+    // cached counts regardless of layout (lossless = max column sum,
+    // which zero columns never carry)
     for k in 0..4 {
         assert_eq!(mapped.nonzero_cells(k), dense.nonzero_cells(k));
     }
@@ -215,11 +219,116 @@ fn sparse_mapping_compresses_and_executes_bit_identically() {
         resolution::required_bits(&ma, ResolutionPolicy::Lossless),
         resolution::required_bits(&mb, ResolutionPolicy::Lossless)
     );
+    // the cost model bills what each layout *executes*: compressed tiles
+    // convert only their nonzero-column index, a forced-dense clone
+    // converts every column — so at ~2% density the chosen layout is
+    // billed strictly less energy on the same tiles/geometry
     let ca = energy::deployment_cost(&ma, [3, 3, 3, 1]);
     let cb = energy::deployment_cost(&mb, [3, 3, 3, 1]);
     assert_eq!(ca.crossbars, cb.crossbars);
     assert_eq!(ca.skipped_tiles, cb.skipped_tiles);
-    assert!((ca.energy - cb.energy).abs() < 1e-9);
+    assert!(
+        ca.energy < cb.energy,
+        "compressed billing {} vs forced-dense {}",
+        ca.energy,
+        cb.energy
+    );
+}
+
+/// Golden-stats regression for the reorder engine: on the fixed seeded
+/// structured-sparse stack, reordering must cut active wordlines by at
+/// least the fixture's recorded minimum and reach its recorded skipped-
+/// tile floor. The thresholds live in `util::fixtures::reorder_golden` —
+/// not inline — so a silently weakened clustering heuristic fails here,
+/// and a deliberate heuristic change updates one reviewed place.
+#[test]
+fn reorder_golden_stats_meet_recorded_minimum() {
+    let golden = fixtures::reorder_golden();
+    let named: Vec<(String, Tensor)> = golden
+        .stack
+        .iter()
+        .map(|l| (l.name.clone(), l.w.clone()))
+        .collect();
+    let natural = mapper::map_model(&named).unwrap();
+    let reordered = mapper::map_model_with(&named, Some(ReorderConfig::default())).unwrap();
+
+    let rows = reorder::reorder_rows(&natural, &reordered);
+    assert_eq!(rows.len(), golden.stack.len());
+    let (ns, rs) = (natural.storage_stats(), reordered.storage_stats());
+    assert_eq!(rs.programmed_cells, ns.programmed_cells, "pure relocation");
+
+    let wl_saving = ns.active_wordlines as f64 / rs.active_wordlines.max(1) as f64;
+    assert!(
+        wl_saving >= golden.min_wordline_saving,
+        "active-wordline saving {wl_saving:.2}x below the recorded floor {:.2}x \
+         ({} -> {} active wordlines) — the clustering heuristic regressed",
+        golden.min_wordline_saving,
+        ns.active_wordlines,
+        rs.active_wordlines,
+    );
+    assert!(
+        rs.skipped_tiles >= golden.min_skipped_tiles,
+        "only {} tiles fully zero after reordering (fixture floor: {})",
+        rs.skipped_tiles,
+        golden.min_skipped_tiles,
+    );
+    // clustering may only *shrink* the fabricated deployment
+    assert!(rs.skipped_tiles >= ns.skipped_tiles, "reorder un-skipped tiles");
+    assert!(rs.active_columns <= ns.active_columns, "reorder grew active columns");
+
+    // and the compacted placement is still the same function: bit-exact
+    // forward agreement at lossless resolution, layer by layer
+    let mut rng = Rng::new(31);
+    let x = Tensor::new(vec![2, 784], (0..2 * 784).map(|_| rng.next_f32()).collect()).unwrap();
+    let a = sim::forward(&natural.layers[0], &x, &[10; 4]);
+    let b = sim::forward(&reordered.layers[0], &x, &[10; 4]);
+    assert_eq!(a.data(), b.data(), "golden stack layer 1 diverged");
+}
+
+/// The deployment chain stays self-consistent on a reordered mapping:
+/// census == slice nonzeros, lossless bits really are lossless, zero
+/// columns clustered into skipped tiles cheapen the billed deployment.
+#[test]
+fn reordered_deployment_chain_is_self_consistent() {
+    let golden = fixtures::reorder_golden();
+    let w = golden.stack[0].w.clone();
+    let natural = mapper::map_model(&[("w".into(), w.clone())]).unwrap();
+    let reordered =
+        mapper::map_model_with(&[("w".into(), w.clone())], Some(ReorderConfig::default()))
+            .unwrap();
+
+    // the mapped-cell census is placement-invariant
+    let stats = bitslice_reram::sparsity::census(std::slice::from_ref(&w));
+    for k in 0..4 {
+        assert_eq!(reordered.layers[0].nonzero_cells(k), stats.nonzero[k]);
+    }
+    // column-only reordering relocates each column's per-tile partial
+    // sums as units, so its lossless bits are placement-invariant; full
+    // (row) reordering merges partials across row blocks and may
+    // legitimately need *more* bits — assert only the invariant that
+    // actually holds, then that the reordered bits really are lossless
+    let cols_only =
+        mapper::map_model_with(&[("w".into(), w.clone())], Some(ReorderConfig::cols_only()))
+            .unwrap();
+    let bits_n = resolution::required_bits(&natural, ResolutionPolicy::Lossless);
+    let bits_c = resolution::required_bits(&cols_only, ResolutionPolicy::Lossless);
+    assert_eq!(bits_n, bits_c, "cols-only lossless bits moved under reorder");
+    let bits_r = resolution::required_bits(&reordered, ResolutionPolicy::Lossless);
+    let mut rng = Rng::new(7);
+    let x = Tensor::new(vec![3, 784], (0..3 * 784).map(|_| rng.next_f32()).collect()).unwrap();
+    let out_lossless = sim::forward(&reordered.layers[0], &x, &bits_r);
+    let out_10bit = sim::forward(&reordered.layers[0], &x, &[10; 4]);
+    for (a, b) in out_lossless.data().iter().zip(out_10bit.data()) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+    // fewer programmed tiles -> the reordered deployment is never billed
+    // more energy or area than the natural one at the same bits
+    let cn = energy::deployment_cost(&natural, [3, 3, 3, 1]);
+    let cr = energy::deployment_cost(&reordered, [3, 3, 3, 1]);
+    assert!(cr.crossbars <= cn.crossbars);
+    assert!(cr.energy <= cn.energy + 1e-9, "{} vs {}", cr.energy, cn.energy);
+    assert!(cr.area <= cn.area + 1e-9);
+    assert!(cr.skipped_tiles >= cn.skipped_tiles);
 }
 
 /// Quantize + slice through the Rust mirror matches what the deployed

@@ -9,13 +9,14 @@
 
 use std::sync::Arc;
 
-use bitslice_reram::reram::ResolutionPolicy;
+use bitslice_reram::reram::{ReorderConfig, ResolutionPolicy};
 use bitslice_reram::serve::{
     accuracy, dense_stack, CrossbarBackend, DenseLayer, InferenceBackend, ReferenceBackend,
     ServeOptions, ServingEngine, SharedBackend,
 };
 use bitslice_reram::tensor::Tensor;
 use bitslice_reram::util::check::{check, ensure};
+use bitslice_reram::util::fixtures;
 use bitslice_reram::util::rng::Rng;
 
 fn random_stack(rng: &mut Rng) -> Vec<DenseLayer> {
@@ -154,6 +155,93 @@ fn serving_engine_is_bit_identical_to_direct_calls() {
                     backend.name()
                 );
             }
+        }
+    }
+}
+
+/// Cross-backend agreement for a **reordered** crossbar deployment: the
+/// wordline/column permutations must be invisible against the exact
+/// quantized reference at lossless resolution — on random sparse MLPs,
+/// directly and through the serving engine's dynamic batching.
+#[test]
+fn reordered_crossbar_agrees_with_reference() {
+    check(6, |rng| {
+        let seed = rng.next_u64();
+        let dims = [1 + rng.below(200), 1 + rng.below(40), 2 + rng.below(8)];
+        let stack = fixtures::sparse_stack(seed, &dims, 0.05);
+        let reference = ReferenceBackend::new("ref", &stack).map_err(|e| e.to_string())?;
+        let reordered = CrossbarBackend::with_layer_policy_reordered(
+            "xbar-ro",
+            &stack,
+            ResolutionPolicy::Lossless,
+            ReorderConfig::default(),
+        )
+        .map_err(|e| e.to_string())?;
+        let b = 1 + rng.below(5);
+        let x = random_batch(rng, b, dims[0]);
+        let want = reference.infer_batch(&x).map_err(|e| e.to_string())?;
+        let got = reordered.infer_batch(&x).map_err(|e| e.to_string())?;
+        for (g, w) in got.data().iter().zip(want.data()) {
+            let tol = 1e-5 * w.abs().max(1.0);
+            ensure(
+                (g - w).abs() <= tol,
+                format!("reordered crossbar {g} vs reference {w}"),
+            )?;
+        }
+        // and bit-identical to the natural-order crossbar at lossless
+        let natural =
+            CrossbarBackend::with_layer_policy("xbar", &stack, ResolutionPolicy::Lossless)
+                .map_err(|e| e.to_string())?;
+        ensure(
+            natural.infer_batch(&x).map_err(|e| e.to_string())?.data() == got.data(),
+            "reordered vs natural-order crossbar at lossless",
+        )?;
+        Ok(())
+    });
+}
+
+/// The serving engine is a pure transport over a reordered backend too:
+/// whatever batches it assembles, outputs are bit-identical to direct
+/// `infer_batch` calls on the same reordered deployment.
+#[test]
+fn serving_engine_is_bit_identical_over_reordered_backend() {
+    let stack = fixtures::sparse_stack(0x5EED, &[120, 30, 6], 0.04);
+    let reordered = CrossbarBackend::with_layer_policy_reordered(
+        "xbar-ro",
+        &stack,
+        ResolutionPolicy::Lossless,
+        ReorderConfig::default(),
+    )
+    .unwrap();
+    assert!(reordered.is_reordered(), "4%-dense scattered stack reorders");
+    let backend: SharedBackend = Arc::new(reordered);
+    let mut rng = Rng::new(43);
+    let n = 24;
+    let x = random_batch(&mut rng, n, 120);
+    let direct = backend.infer_batch(&x).unwrap();
+    for (workers, max_batch) in [(1usize, 5usize), (3, 4), (4, 64)] {
+        let eng = ServingEngine::start(
+            backend.clone(),
+            ServeOptions {
+                max_batch,
+                workers,
+                queue_depth: 8,
+            },
+        )
+        .unwrap();
+        let requests: Vec<Vec<f32>> = (0..n)
+            .map(|i| x.data()[i * 120..(i + 1) * 120].to_vec())
+            .collect();
+        let out = eng.infer_many(requests).unwrap();
+        let stats = eng.shutdown();
+        assert_eq!(stats.requests, n);
+        assert_eq!(stats.errors, 0);
+        for (i, row) in out.iter().enumerate() {
+            assert_eq!(
+                row.as_slice(),
+                &direct.data()[i * 6..(i + 1) * 6],
+                "row {i} (workers {workers}, max_batch {max_batch})"
+            );
         }
     }
 }
