@@ -100,6 +100,7 @@ fn main() -> Result<()> {
         &trainer.state.named_qws(entry),
         ResolutionPolicy::Percentile(0.999),
         None,
+        None,
     )?;
     println!(
         "   {} crossbars; lossless ADC bits (LSB..MSB) {:?}; p99.9 {:?}",

@@ -17,7 +17,14 @@
 //! reorder pass (`reram::reorder`) and the per-layer reorder table
 //! (active wordlines/columns vs natural order) is printed.
 //!
-//! Run: `cargo run --release --example reram_deploy -- [--checkpoint DIR] [--reorder]`
+//! With `--replicate-budget F`, extra crossbar replicas are water-filled
+//! onto the pipeline's bottleneck layers (`reram::timing`; F = multiples
+//! of the bottleneck layer's fabricated cells) and the serving section
+//! runs the replica-sharded backend — bit-identical logits, higher
+//! throughput.
+//!
+//! Run: `cargo run --release --example reram_deploy -- [--checkpoint DIR]
+//!       [--reorder] [--replicate-budget 2.0]`
 
 use std::sync::Arc;
 
@@ -28,7 +35,7 @@ use bitslice_reram::coordinator::{checkpoint, ModelState};
 use bitslice_reram::data::Dataset;
 use bitslice_reram::harness;
 use bitslice_reram::report;
-use bitslice_reram::reram::{DeploymentPlan, ResolutionPolicy};
+use bitslice_reram::reram::{timing, DeploymentPlan, ResolutionPolicy};
 use bitslice_reram::runtime::{Engine, Manifest};
 use bitslice_reram::serve::{
     self, CrossbarBackend, InferenceBackend, ReferenceBackend, ServeOptions, ServingEngine,
@@ -44,6 +51,7 @@ fn main() -> Result<()> {
     } else {
         None
     };
+    let replicate_budget = args.f32_or("replicate-budget", 0.0)? as f64;
     let mut cfg = RunConfig::from_args(&args)?;
     args.finish()?;
     cfg.model = "mlp".into();
@@ -80,6 +88,7 @@ fn main() -> Result<()> {
         &state.named_qws(entry),
         ResolutionPolicy::Percentile(0.999),
         reorder_cfg,
+        (replicate_budget > 0.0).then_some(replicate_budget),
     )?;
     println!(
         "mapping: {} crossbars; lossless bits (LSB..MSB) {:?}; p99.9 bits {:?}",
@@ -100,6 +109,10 @@ fn main() -> Result<()> {
             report::reorder_table("wordline/column reorder (vs natural order)", rows)
         );
     }
+    println!(
+        "{}",
+        report::timing_table("pipeline timing (latency x replicas)", &deploy.timing)
+    );
 
     // 3) functional validation on the test set — every forward path is an
     //    InferenceBackend answering the same accuracy() call
@@ -163,8 +176,37 @@ fn main() -> Result<()> {
         test_ds.write_example(i, &mut x);
         requests.push(x);
     }
-    let shared: SharedBackend = Arc::new(at_measured.with_intra_threads(1));
-    let eng = ServingEngine::start(shared, ServeOptions::default())?;
+    // with a replication budget, serve the replica-sharded deployment:
+    // batch rows fan out across the bottleneck layers' Arc-shared copies
+    // (bit-identical logits, higher throughput)
+    let serve_backend = if replicate_budget > 0.0 {
+        let mapped = at_measured.mapped().clone();
+        let mut plan = at_measured.plan().clone();
+        timing::fill_replicas_factor(&mapped, &mut plan, replicate_budget);
+        println!(
+            "{}",
+            report::timing_table(
+                "replicated pipeline timing (at deployed bits)",
+                &timing::plan_timing(&mapped, &plan)
+            )
+        );
+        at_measured.replan("sim@p99.9-replicated", plan)?
+    } else {
+        at_measured
+    };
+    // engine workers x replica shards must not oversubscribe the cores:
+    // replicas already parallelize inside each batch, so scale the batch
+    // worker pool down by the replica fan-out
+    let workers = (bitslice_reram::util::pool::worker_threads() / serve_backend.max_replicas())
+        .clamp(1, 8);
+    let shared: SharedBackend = Arc::new(serve_backend.with_intra_threads(1));
+    let eng = ServingEngine::start(
+        shared,
+        ServeOptions {
+            workers,
+            ..ServeOptions::default()
+        },
+    )?;
     let responses = eng.infer_many(requests)?;
     let mut correct = 0usize;
     for (i, row) in responses.iter().enumerate() {

@@ -1,0 +1,202 @@
+//! §Perf: pipeline timing model + replica-sharded serving.
+//!
+//! Deploys the bottleneck-skewed fixture stack (`util::fixtures::
+//! bottleneck_stack`: the wide fc2 carries ~4x every other layer's ADC
+//! conversion load), prices it with the `reram::timing` cycle model,
+//! water-fills a replication budget of **2x the bottleneck layer's
+//! fabricated cells** onto the pipeline (`timing::fill_replicas`), and
+//! then serves an identical request load through the batched
+//! `ServingEngine` twice — unreplicated vs replica-sharded — on a
+//! single-worker engine so the replicas' parallelism is the only
+//! difference.
+//!
+//! Acceptance bar (full run): the replica-sharded deployment is
+//! **bit-identical** to the unsharded path and >= 1.5x its serving
+//! throughput on hosts with >= 3 cores (a 2-core host caps the bottleneck
+//! at 2 shards, where ~1.5x is the theoretical ceiling, so a reduced
+//! floor applies; a single core has nowhere to shard and skips the
+//! floor). `--smoke` runs a short load for per-PR CI
+//! visibility: bit-exactness is still asserted, the throughput floor is
+//! recorded in the JSON instead of enforced. Results land in
+//! `BENCH_pipeline.json`.
+//!
+//! Run: `cargo bench --bench pipeline_throughput [-- --smoke]`
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bitslice_reram::report;
+use bitslice_reram::reram::timing;
+use bitslice_reram::serve::{
+    CrossbarBackend, InferenceBackend, ServeOptions, ServingEngine, SharedBackend,
+};
+use bitslice_reram::tensor::Tensor;
+use bitslice_reram::util::fixtures;
+use bitslice_reram::util::json::{num, obj, s, Json};
+use bitslice_reram::util::pool::worker_threads;
+use bitslice_reram::util::rng::Rng;
+
+const IN_DIM: usize = 64;
+const MIN_SPEEDUP: f64 = 1.5;
+
+fn drive(backend: SharedBackend, requests: &[Vec<f32>]) -> (Vec<Vec<f32>>, report::ServingRow) {
+    // one worker, no intra-batch fan-out: the replicas (or their absence)
+    // are the only source of parallelism under test
+    let eng = ServingEngine::start(
+        backend,
+        ServeOptions {
+            max_batch: 128,
+            workers: 1,
+            queue_depth: 512,
+            ..ServeOptions::default()
+        },
+    )
+    .expect("start serving engine");
+    let out = eng.infer_many(requests.to_vec()).expect("serving requests");
+    let stats = eng.shutdown();
+    println!(
+        "{:<28}: {:>8.0} req/s, p50 {:.3} ms, p99 {:.3} ms, mean batch {:.1}",
+        stats.backend,
+        stats.throughput_rps,
+        stats.latency_ms(0.50),
+        stats.latency_ms(0.99),
+        stats.mean_batch
+    );
+    (out, stats.row())
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let requests_n = if smoke { 96 } else { 512 };
+    let stack = fixtures::bottleneck_stack(0xBEEF);
+
+    // deploy at the paper's operating point; the timing model prices the
+    // plan's own resolutions
+    let base =
+        CrossbarBackend::with_bits("xbar@paper", &stack, [3, 3, 3, 1])?.with_intra_threads(1);
+    let plan = base.plan().clone();
+    let model = base.mapped().clone();
+
+    harness::section("pipeline timing (unreplicated)");
+    let timing0 = timing::plan_timing(&model, &plan);
+    println!("{}", report::timing_table("unreplicated", &timing0));
+    let bneck = timing0.bottleneck().expect("programmed stack");
+    assert_eq!(
+        timing0.layers[bneck].layer, "fc2/w",
+        "the fixture's wide layer must be the bottleneck"
+    );
+
+    // water-fill a budget of 2x the bottleneck layer's fabricated cells
+    let bneck_cells = model.layers[bneck].fabricated_cells();
+    let budget = 2 * bneck_cells;
+    let mut plan_r = plan.clone();
+    let spent = timing::fill_replicas(&model, &mut plan_r, budget);
+    let replicas = plan_r.layers[bneck].replicas;
+    assert!(
+        replicas >= 2,
+        "a 2x-cells budget must afford at least one extra bottleneck copy"
+    );
+    assert!(spent <= budget, "water-fill overspent: {spent} > {budget}");
+
+    harness::section("pipeline timing (replicated)");
+    let timing1 = timing::plan_timing(&model, &plan_r);
+    println!("{}", report::timing_table("replicated", &timing1));
+    let model_speedup = timing0.bottleneck_cycles() / timing1.bottleneck_cycles();
+    println!(
+        "model throughput: {:.2} -> {:.2} examples/kcycle ({model_speedup:.2}x), \
+         {replicas} replicas of {} ({spent} of {budget} cells spent)",
+        timing0.throughput_per_kcycle(),
+        timing1.throughput_per_kcycle(),
+        timing0.layers[bneck].layer,
+    );
+
+    // the sharded backend: same Arc-shared mapping, replicated plan
+    let sharded = base.replan("xbar@replicated", plan_r.clone())?.with_intra_threads(1);
+    assert!(Arc::ptr_eq(base.mapped(), sharded.mapped()));
+
+    // bit-exactness on a direct batch before any serving
+    let mut rng = Rng::new(7);
+    let b = 64;
+    let x = Tensor::new(
+        vec![b, IN_DIM],
+        (0..b * IN_DIM).map(|_| rng.next_f32()).collect(),
+    )?;
+    assert_eq!(
+        base.infer_batch(&x)?.data(),
+        sharded.infer_batch(&x)?.data(),
+        "replica-sharded infer_batch must be bit-identical"
+    );
+
+    harness::section("direct infer_batch, batch 64 (1 host thread vs replica shards)");
+    let target = Duration::from_millis(if smoke { 300 } else { 1200 });
+    let s0 = harness::bench("unreplicated infer_batch", target, || {
+        let _ = std::hint::black_box(base.infer_batch(&x).unwrap());
+    });
+    let s1 = harness::bench("replica-sharded infer_batch", target, || {
+        let _ = std::hint::black_box(sharded.infer_batch(&x).unwrap());
+    });
+    let batch_speedup = s0.mean.as_secs_f64() / s1.mean.as_secs_f64();
+    println!("direct-batch speedup: {batch_speedup:.2}x");
+
+    harness::section(&format!("serving {requests_n} requests, 1 engine worker"));
+    let requests: Vec<Vec<f32>> = (0..requests_n)
+        .map(|_| (0..IN_DIM).map(|_| rng.next_f32()).collect())
+        .collect();
+    let unsharded: SharedBackend = Arc::new(base);
+    let sharded: SharedBackend = Arc::new(sharded);
+    let (out0, row0) = drive(unsharded, &requests);
+    let (out1, row1) = drive(sharded, &requests);
+    assert_eq!(
+        out0, out1,
+        "replica-sharded serving must be bit-identical to the unsharded path"
+    );
+    let serving_speedup = row1.throughput_rps / row0.throughput_rps;
+    println!(
+        "serving throughput: {:.0} -> {:.0} req/s ({serving_speedup:.2}x)",
+        row0.throughput_rps, row1.throughput_rps
+    );
+
+    // the floor is cores-aware: on a 2-core host the bottleneck layer can
+    // use at most 2 of its replicas, so ~1.5x is the *theoretical* ceiling
+    // (Amdahl over the ~70% bottleneck share) — enforcing the full floor
+    // there would fail a correct implementation. 3+ cores clear 1.5x with
+    // margin; 1 core has nowhere to shard at all.
+    let cores = worker_threads();
+    let floor = if cores >= 3 { MIN_SPEEDUP } else { 1.2 };
+    if smoke {
+        println!("(smoke run: throughput floor recorded, not enforced)");
+    } else if cores < 2 {
+        println!("(single-core host: nowhere to shard, throughput floor skipped)");
+    } else {
+        assert!(
+            serving_speedup >= floor,
+            "replica-sharded serving only {serving_speedup:.2}x (floor {floor}x, \
+             {cores} cores)"
+        );
+        println!("OK: {serving_speedup:.2}x >= {floor}x ({cores} cores)");
+    }
+
+    let doc = obj(vec![
+        ("smoke", Json::Bool(smoke)),
+        ("requests", num(requests_n as f64)),
+        ("cores", num(cores as f64)),
+        ("bottleneck_layer", s(&timing0.layers[bneck].layer)),
+        ("bottleneck_replicas", num(replicas as f64)),
+        ("budget_cells", num(budget as f64)),
+        ("spent_cells", num(spent as f64)),
+        ("model_speedup", num(model_speedup)),
+        ("batch_speedup", num(batch_speedup)),
+        ("serving_speedup", num(serving_speedup)),
+        ("acceptance_min_speedup", num(MIN_SPEEDUP)),
+        ("enforced_floor", num(floor)),
+        ("unreplicated", report::timing_json(&timing0)),
+        ("replicated", report::timing_json(&timing1)),
+        ("serving", report::serving_json(&[row0, row1])),
+    ]);
+    std::fs::write("BENCH_pipeline.json", doc.to_string())?;
+    println!("wrote BENCH_pipeline.json");
+    Ok(())
+}

@@ -120,6 +120,7 @@ fn main() -> anyhow::Result<()> {
         0.005,
         headline.savings(),
         headline.evaluations,
+        &bitslice_reram::reram::timing::plan_timing(&mapped, &headline.plan),
     );
     std::fs::write("BENCH_planner.json", json.to_string())?;
     println!(

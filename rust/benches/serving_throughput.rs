@@ -58,6 +58,7 @@ fn drive(backend: SharedBackend, max_batch: usize, requests: &[Vec<f32>]) -> rep
             max_batch,
             workers: 0,
             queue_depth: 256,
+            ..ServeOptions::default()
         },
     )
     .expect("start serving engine");

@@ -16,6 +16,7 @@ use crate::data::Dataset;
 use crate::report::{MethodRow, PlanRow, StorageRow};
 use crate::reram::planner::DeploymentPlan;
 use crate::reram::reorder::{self, ReorderConfig, ReorderRow};
+use crate::reram::timing::{self, PipelineTiming};
 use crate::reram::{energy, mapper, resolution, ResolutionPolicy};
 use crate::runtime::{Engine, Manifest};
 use crate::sparsity::{self, SliceStats, TracePoint};
@@ -199,12 +200,23 @@ pub struct DeployReport {
     /// present, every other field of this report describes the
     /// *reordered* mapping.
     pub reorder: Option<Vec<ReorderRow>>,
+    /// pipeline timing of `plan` (replica counts applied when a
+    /// replication budget was given) — the `report::timing_table` body
+    pub timing: PipelineTiming,
+    /// fabricated cells spent on extra replicas (0 without a budget)
+    pub replica_cells: usize,
 }
 
+/// Build the deployment report for a set of quantized weights.
+/// `replicate_budget` water-fills extra crossbar replicas onto the
+/// pipeline's bottleneck layers ([`timing::fill_replicas`]); its unit is
+/// multiples of the **bottleneck layer's** fabricated cells, so `2.0`
+/// buys about two extra copies of the slowest layer.
 pub fn deploy_report(
     named_qws: &[(String, crate::tensor::Tensor)],
     policy: ResolutionPolicy,
     reorder_cfg: Option<ReorderConfig>,
+    replicate_budget: Option<f64>,
 ) -> Result<DeployReport> {
     let natural = mapper::map_model(named_qws)?;
     let (mapped, reorder) = match reorder_cfg {
@@ -230,7 +242,10 @@ pub fn deploy_report(
         .map(|k| energy::saving_row(k, deployed_bits[k]))
         .collect();
     let savings = energy::savings_vs_baseline(&mapped, deployed_bits);
-    let plan = DeploymentPlan::from_policy(&mapped, policy);
+    let mut plan = DeploymentPlan::from_policy(&mapped, policy);
+    let replica_cells =
+        timing::fill_replicas_factor(&mapped, &mut plan, replicate_budget.unwrap_or(0.0));
+    let timing = timing::plan_timing(&mapped, &plan);
     let plan_rows = energy::layer_costs(&mapped, &plan);
     let plan_savings = energy::plan_savings_vs_baseline(&mapped, &plan);
     let cost = energy::plan_cost(&mapped, &plan);
@@ -248,5 +263,7 @@ pub fn deploy_report(
         plan_savings,
         storage,
         reorder,
+        timing,
+        replica_cells,
     })
 }

@@ -15,6 +15,10 @@
 //!            [--reorder]  map with the wordline/column reorder pass
 //!            (active-row compaction + zero-column clustering; prints the
 //!            reorder table and writes <out>/reorder.json)
+//!            [--replicate-budget 2.0]  water-fill extra crossbar replicas
+//!            onto the pipeline's bottleneck layers (unit: multiples of the
+//!            bottleneck layer's fabricated cells; per-layer
+//!            latency/replica/throughput rows land in plan.json)
 //! reproduce  table1|table2|table3|fig2 [--quick] [table2: --model vgg11]
 //! bench-adc                              ADC cost model sweep (1..8 bits)
 //! ```
@@ -30,7 +34,7 @@ use bitslice_reram::data::Dataset;
 use bitslice_reram::harness;
 use bitslice_reram::report;
 use bitslice_reram::reram::planner::{self, PlannerConfig};
-use bitslice_reram::reram::{energy, AdcModel, ResolutionPolicy};
+use bitslice_reram::reram::{energy, timing, AdcModel, ResolutionPolicy};
 use bitslice_reram::runtime::{Engine, Manifest};
 use bitslice_reram::serve::{self, CrossbarBackend, InferenceBackend, ReferenceBackend};
 use bitslice_reram::sparsity;
@@ -157,6 +161,7 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         &state.named_qws(entry),
         ResolutionPolicy::Percentile(0.999),
         None,
+        None,
     )?;
     println!("measured ADC requirements (p99.9 of bitline currents):");
     println!("{}", report::resolution_summary(deploy.deployed_bits));
@@ -179,6 +184,10 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     } else {
         None
     };
+    // replication budget: multiples of the bottleneck layer's fabricated
+    // cells, water-filled onto bottleneck layers for pipeline throughput
+    let replicate_budget = args.f32_or("replicate-budget", 0.0)? as f64;
+    let replicate_budget = (replicate_budget > 0.0).then_some(replicate_budget);
     let cfg = RunConfig::from_args(args)?;
     args.finish()?;
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
@@ -188,6 +197,7 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         &state.named_qws(entry),
         ResolutionPolicy::Percentile(pct),
         reorder_cfg,
+        replicate_budget,
     )?;
     println!(
         "deployment of {} ({}): {} crossbars (128x128, 2-bit cells, differential; \
@@ -239,6 +249,16 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     );
     let (pe, pt, pa) = deploy.plan_savings;
     println!("per-layer plan savings: energy {pe:.1}x, time {pt:.2}x, area {pa:.1}x");
+    println!(
+        "{}",
+        report::timing_table("pipeline timing (latency x replicas)", &deploy.timing)
+    );
+    if deploy.replica_cells > 0 {
+        println!(
+            "replication spent {} fabricated cells on extra copies of the bottleneck layers",
+            deploy.replica_cells
+        );
+    }
 
     // Functional validation through the unified backend seam: deployed
     // crossbar resolution vs the exact quantized reference on the test
@@ -295,7 +315,12 @@ fn cmd_deploy(args: &Args) -> Result<()> {
             );
         }
         let mapped = xbar.mapped();
-        let plan_rows = energy::layer_costs(mapped, &search.plan);
+        // spend the replication budget on the *searched* plan, so latency
+        // is priced at the resolutions the search actually selected
+        let mut plan = search.plan.clone();
+        timing::fill_replicas_factor(mapped, &mut plan, replicate_budget.unwrap_or(0.0));
+        let plan_timing = timing::plan_timing(mapped, &plan);
+        let plan_rows = energy::layer_costs(mapped, &plan);
         println!(
             "{}",
             report::plan_table(
@@ -306,6 +331,10 @@ fn cmd_deploy(args: &Args) -> Result<()> {
                 ),
                 &plan_rows
             )
+        );
+        println!(
+            "{}",
+            report::timing_table("planned pipeline timing", &plan_timing)
         );
         let (se, st, sa) = search.savings();
         println!(
@@ -321,6 +350,7 @@ fn cmd_deploy(args: &Args) -> Result<()> {
             plan_budget,
             search.savings(),
             search.evaluations,
+            &plan_timing,
         );
         std::fs::create_dir_all(&cfg.out_dir)?;
         let path = cfg.out_dir.join("plan.json");
@@ -418,6 +448,7 @@ fn reproduce_table3(args: &Args) -> Result<()> {
         let deploy = harness::deploy_report(
             &state.named_qws(entry),
             ResolutionPolicy::Percentile(0.999),
+            None,
             None,
         )?;
         println!(

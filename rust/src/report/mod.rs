@@ -183,7 +183,10 @@ pub fn plan_table(title: &str, rows: &[PlanRow]) -> String {
     out
 }
 
-/// Serialize a planner run as the `BENCH_planner.json` document.
+/// Serialize a planner run as the `BENCH_planner.json` / `plan.json`
+/// document. `timing` carries the per-layer latency/replica rows and the
+/// pipeline throughput roll-up of the same plan (see
+/// [`crate::reram::timing`]).
 pub fn planner_json(
     rows: &[PlanRow],
     baseline_accuracy: f64,
@@ -191,6 +194,7 @@ pub fn planner_json(
     accuracy_budget: f64,
     savings: (f64, f64, f64),
     evaluations: usize,
+    timing: &PipelineTiming,
 ) -> Json {
     let layers = rows
         .iter()
@@ -201,6 +205,7 @@ pub fn planner_json(
                     "adc_bits_lsb_first",
                     Json::Arr(r.adc_bits.iter().map(|&b| num(b as f64)).collect()),
                 ),
+                ("replicas", num(r.replicas as f64)),
                 ("crossbars", num(r.crossbars as f64)),
                 ("energy_saving", num(r.energy_saving)),
                 ("time_saving", num(r.time_saving)),
@@ -222,6 +227,7 @@ pub fn planner_json(
             ]),
         ),
         ("layers", Json::Arr(layers)),
+        ("timing", timing_json(timing)),
     ])
 }
 
@@ -394,6 +400,82 @@ pub fn reorder_json(rows: &[ReorderRow]) -> Json {
     )
 }
 
+/// The whole-pipeline timing roll-up under a plan — exactly
+/// [`timing::plan_timing`]'s output, consumed directly (like
+/// [`plan_table`] consumes [`PlanRow`]). One [`TimingRow`] per layer.
+///
+/// [`timing::plan_timing`]: crate::reram::timing::plan_timing
+pub use crate::reram::timing::{LayerTiming as TimingRow, PipelineTiming};
+
+/// Render the per-layer pipeline timing (markdown): each layer's
+/// per-example latency in cycles, replica count, replica-divided
+/// effective stage latency and total conversion cycles, with the
+/// bottleneck stage marked, followed by the steady-state throughput
+/// roll-up. A cycle is one ADC bit-resolution step (see the timing
+/// convention in [`crate::reram`]).
+pub fn timing_table(title: &str, timing: &PipelineTiming) -> String {
+    let bottleneck = timing.bottleneck();
+    let mut out = String::new();
+    out.push_str(&format!("### {title}\n\n"));
+    out.push_str(
+        "| Layer | Replicas | Latency (cyc) | Effective (cyc) | Conversion (cyc) | Bottleneck |\n\
+         |-------|----------|---------------|-----------------|------------------|------------|\n",
+    );
+    for (i, r) in timing.layers.iter().enumerate() {
+        out.push_str(&format!(
+            "| {} | {} | {} | {:.1} | {} | {} |\n",
+            r.layer,
+            r.replicas,
+            r.latency_cycles,
+            r.effective_cycles(),
+            r.conversion_cycles,
+            if bottleneck == Some(i) { "<-" } else { "" },
+        ));
+    }
+    out.push_str(&format!(
+        "\npipeline: {:.1} cyc/example steady-state ({:.2} examples/kcycle), \
+         fill latency {} cyc\n",
+        timing.bottleneck_cycles(),
+        timing.throughput_per_kcycle(),
+        timing.pipeline_fill_cycles(),
+    ));
+    out
+}
+
+/// Serialize a pipeline timing roll-up — the `timing` object of
+/// `plan.json` and `BENCH_pipeline.json`.
+pub fn timing_json(timing: &PipelineTiming) -> Json {
+    let layers = timing
+        .layers
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("layer", s(&r.layer)),
+                ("replicas", num(r.replicas as f64)),
+                ("latency_cycles", num(r.latency_cycles as f64)),
+                ("effective_cycles", num(r.effective_cycles())),
+                ("conversion_cycles", num(r.conversion_cycles as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        (
+            "bottleneck_layer",
+            match timing.bottleneck() {
+                Some(i) => s(&timing.layers[i].layer),
+                None => Json::Null,
+            },
+        ),
+        ("bottleneck_cycles", num(timing.bottleneck_cycles())),
+        ("throughput_per_kcycle", num(timing.throughput_per_kcycle())),
+        (
+            "pipeline_fill_cycles",
+            num(timing.pipeline_fill_cycles() as f64),
+        ),
+        ("layers", Json::Arr(layers)),
+    ])
+}
+
 /// Per-slice resolution summary (feeds Table 3's "Resolution" column from
 /// the measured mapping instead of asserting it).
 pub fn resolution_summary(bits_lsb_first: [u32; N_SLICES]) -> String {
@@ -492,6 +574,7 @@ mod tests {
         PlanRow {
             layer: "fc1/w".into(),
             adc_bits: [3, 3, 2, 1], // LSB-first
+            replicas: 1,
             crossbars: 42,
             energy: 120.0,
             time: 40.0,
@@ -510,19 +593,78 @@ mod tests {
         assert!(t.contains("XB_3"));
     }
 
+    fn timing_fixture() -> PipelineTiming {
+        PipelineTiming {
+            layers: vec![
+                TimingRow {
+                    layer: "fc1/w".into(),
+                    replicas: 1,
+                    latency_cycles: 768,
+                    conversion_cycles: 768,
+                },
+                TimingRow {
+                    layer: "fc2/w".into(),
+                    replicas: 2,
+                    latency_cycles: 3072,
+                    conversion_cycles: 9216,
+                },
+            ],
+        }
+    }
+
     #[test]
     fn planner_json_roundtrips() {
-        let j = planner_json(&[plan_row()], 0.9767, 0.9741, 0.005, (16.3, 2.91, 2.0), 37);
+        let j = planner_json(
+            &[plan_row()],
+            0.9767,
+            0.9741,
+            0.005,
+            (16.3, 2.91, 2.0),
+            37,
+            &timing_fixture(),
+        );
         let back = crate::util::json::parse(&j.to_string()).unwrap();
         assert_eq!(back.get("baseline_accuracy").unwrap().as_f64(), Some(0.9767));
         assert_eq!(back.get("evaluations").unwrap().as_usize(), Some(37));
         let layers = back.get("layers").unwrap().as_arr().unwrap();
         assert_eq!(layers[0].get("layer").unwrap().as_str(), Some("fc1/w"));
+        assert_eq!(layers[0].get("replicas").unwrap().as_usize(), Some(1));
         let bits = layers[0].get("adc_bits_lsb_first").unwrap().as_arr().unwrap();
         assert_eq!(bits.len(), 4);
         assert_eq!(bits[3].as_usize(), Some(1));
         let savings = back.get("savings").unwrap();
         assert_eq!(savings.get("energy").unwrap().as_f64(), Some(16.3));
+        // the timing rows ride along in the same document
+        let timing = back.get("timing").unwrap();
+        assert_eq!(timing.get("bottleneck_layer").unwrap().as_str(), Some("fc2/w"));
+        let trows = timing.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(trows[1].get("replicas").unwrap().as_usize(), Some(2));
+        assert_eq!(trows[1].get("latency_cycles").unwrap().as_usize(), Some(3072));
+    }
+
+    #[test]
+    fn timing_table_marks_the_bottleneck() {
+        let t = timing_table("pipeline", &timing_fixture());
+        // fc2 at 3072/2 = 1536 effective is the bottleneck stage
+        assert!(t.contains("| fc2/w | 2 | 3072 | 1536.0 | 9216 | <- |"), "{t}");
+        assert!(t.contains("| fc1/w | 1 | 768 | 768.0 | 768 |  |"), "{t}");
+        assert!(t.contains("1536.0 cyc/example"), "{t}");
+        assert!(t.contains("fill latency 3840 cyc"), "{t}");
+    }
+
+    #[test]
+    fn timing_json_roundtrips() {
+        let j = timing_json(&timing_fixture());
+        let back = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("bottleneck_layer").unwrap().as_str(), Some("fc2/w"));
+        assert_eq!(back.get("bottleneck_cycles").unwrap().as_f64(), Some(1536.0));
+        assert_eq!(
+            back.get("pipeline_fill_cycles").unwrap().as_usize(),
+            Some(3840)
+        );
+        let layers = back.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers[0].get("layer").unwrap().as_str(), Some("fc1/w"));
+        assert_eq!(layers[0].get("effective_cycles").unwrap().as_f64(), Some(768.0));
     }
 
     fn storage_row(layer: &str, dense: usize, comp: usize) -> StorageRow {

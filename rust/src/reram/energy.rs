@@ -66,11 +66,16 @@ pub struct DeploymentCost {
 
 /// Per-layer roll-up row under a plan: the layer's resolutions, crossbar
 /// count and savings against the 8-bit baseline on the same mapping.
+/// `crossbars` and `area` cover every fabricated replica; `energy`/`time`
+/// stay per example (each example runs on exactly one replica), so
+/// replication shows up as an area price, never an energy discount.
 #[derive(Debug, Clone)]
 pub struct LayerCost {
     pub layer: String,
     /// per-slice resolutions this layer deploys, LSB-first
     pub adc_bits: [u32; N_SLICES],
+    /// fabricated copies of the layer (>= 1)
+    pub replicas: usize,
     pub crossbars: usize,
     pub energy: f64,
     pub time: f64,
@@ -152,11 +157,15 @@ pub fn plan_cost(model: &MappedModel, plan: &DeploymentPlan) -> DeploymentCost {
     };
     for (layer, pl) in model.layers.iter().zip(&plan.layers) {
         let (xb, skipped, e, t, a) = tally_layer(layer, &pl.adc_bits);
-        out.crossbars += xb;
-        out.skipped_tiles += skipped;
+        // replication fabricates `r` copies of the layer's arrays: the
+        // static/area side scales, the per-example conversion cost does
+        // not (each example runs on exactly one replica)
+        let r = pl.replicas.max(1);
+        out.crossbars += xb * r;
+        out.skipped_tiles += skipped * r;
         out.energy += e;
         out.time += t;
-        out.area += a;
+        out.area += a * r as f64;
     }
     out
 }
@@ -192,16 +201,22 @@ pub fn layer_costs(model: &MappedModel, plan: &DeploymentPlan) -> Vec<LayerCost>
         .map(|(layer, pl)| {
             let (xb, _, e, t, a) = tally_layer(layer, &pl.adc_bits);
             let (_, _, be, bt, ba) = tally_layer(layer, &[super::adc::BASELINE_BITS; N_SLICES]);
+            // the 8-bit baseline is unreplicated, so extra replicas eat
+            // into the layer's area saving — area is the price of the
+            // throughput the timing model credits
+            let r = pl.replicas.max(1);
+            let area = a * r as f64;
             LayerCost {
                 layer: layer.name.clone(),
                 adc_bits: pl.adc_bits,
-                crossbars: xb,
+                replicas: r,
+                crossbars: xb * r,
                 energy: e,
                 time: t,
-                area: a,
+                area,
                 energy_saving: ratio(be, e),
                 time_saving: ratio(bt, t),
-                area_saving: ratio(ba, a),
+                area_saving: ratio(ba, area),
             }
         })
         .collect()
@@ -348,6 +363,31 @@ mod tests {
         for r in &rows {
             assert!(r.energy_saving >= 1.0, "{}: {}", r.layer, r.energy_saving);
         }
+    }
+
+    /// Replication fabricates copies: crossbars and area scale with the
+    /// replica count, per-example conversion energy/time do not, and the
+    /// layer row's area saving pays for the copies.
+    #[test]
+    fn replication_scales_area_not_energy() {
+        let m = mapped();
+        let mut plan = DeploymentPlan::uniform_for(&m, [3, 3, 3, 1]);
+        let base = plan_cost(&m, &plan);
+        let base_rows = layer_costs(&m, &plan);
+        plan.layers[0].replicas = 3;
+        let rep = plan_cost(&m, &plan);
+        assert_eq!(rep.crossbars, 3 * base.crossbars);
+        assert!((rep.area - 3.0 * base.area).abs() < 1e-9);
+        assert_eq!(rep.energy, base.energy);
+        assert_eq!(rep.time, base.time);
+        let rows = layer_costs(&m, &plan);
+        assert_eq!(rows[0].replicas, 3);
+        assert_eq!(rows[0].crossbars, 3 * base_rows[0].crossbars);
+        assert!(
+            (rows[0].area_saving - base_rows[0].area_saving / 3.0).abs() < 1e-9,
+            "replicas eat the area saving"
+        );
+        assert_eq!(rows[0].energy_saving, base_rows[0].energy_saving);
     }
 
     #[test]

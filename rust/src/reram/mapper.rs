@@ -23,6 +23,8 @@
 //! permuted on the way in, sums un-permuted on the way out — see the
 //! reorder module docs for the full convention).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::quant::{self, N_SLICES};
@@ -71,10 +73,25 @@ pub struct LayerMapping {
     pub reorder: Option<LayerReorder>,
 }
 
-/// A whole model mapped onto crossbars.
+/// A whole model mapped onto crossbars. Layers live behind `Arc` so a
+/// replica view ([`MappedModel::replicated`]) and the serving backends can
+/// hold extra handles on a layer's tiles without ever deep-cloning them —
+/// cloning the model itself is likewise a handle copy, not a re-map.
 #[derive(Debug, Clone)]
 pub struct MappedModel {
-    pub layers: Vec<LayerMapping>,
+    pub layers: Vec<Arc<LayerMapping>>,
+}
+
+/// Replica-expanded view of a mapped model: layer `i` appears once per
+/// fabricated copy, every handle an `Arc` on the **same** tiles — in
+/// simulation a replica costs a pointer, never a deep clone (the hardware
+/// analogy: identical arrays programmed from one weight image). Built by
+/// [`MappedModel::replicated`]; the replica-sharded serving path hands one
+/// handle to each batch shard.
+#[derive(Debug, Clone)]
+pub struct ReplicatedModel {
+    /// `layers[i]` holds layer i's replica handles (>= 1 entries)
+    pub layers: Vec<Vec<Arc<LayerMapping>>>,
 }
 
 /// Storage census of a set of mapped tiles (one layer or a whole model):
@@ -296,7 +313,7 @@ pub fn map_model_with(
 ) -> Result<MappedModel> {
     let layers = weights
         .iter()
-        .map(|(n, w)| map_layer_with(n, w, reorder_cfg))
+        .map(|(n, w)| map_layer_with(n, w, reorder_cfg).map(Arc::new))
         .collect::<Result<Vec<_>>>()?;
     Ok(MappedModel { layers })
 }
@@ -351,6 +368,22 @@ impl LayerMapping {
     pub fn is_reordered(&self) -> bool {
         self.reorder.is_some()
     }
+
+    /// Fabricated cells of this layer: full tile geometry (rows x cols)
+    /// summed over **programmed** tiles across every slice group and both
+    /// signs — fully-zero tiles are never fabricated. This is the area
+    /// price of one replica, the unit the replication planner
+    /// ([`crate::reram::timing::fill_replicas`]) water-fills its budget
+    /// in.
+    pub fn fabricated_cells(&self) -> usize {
+        self.grids
+            .iter()
+            .flat_map(|(p, n)| [p, n])
+            .flat_map(|g| &g.tiles)
+            .filter(|t| t.nonzero_cells() > 0)
+            .map(|t| t.rows() * t.cols())
+            .sum()
+    }
 }
 
 impl MappedModel {
@@ -386,13 +419,39 @@ impl MappedModel {
     /// [`LayerMapping::with_storage`]).
     pub fn with_storage(&self, fmt: StorageFormat) -> MappedModel {
         MappedModel {
-            layers: self.layers.iter().map(|l| l.with_storage(fmt)).collect(),
+            layers: self
+                .layers
+                .iter()
+                .map(|l| Arc::new(l.with_storage(fmt)))
+                .collect(),
         }
     }
 
     /// Whether any layer carries map-time permutations.
     pub fn is_reordered(&self) -> bool {
         self.layers.iter().any(|l| l.is_reordered())
+    }
+
+    /// Replica view: layer `i` appears `replicas[i].max(1)` times, every
+    /// entry an `Arc` handle on the same tiles — no tile is cloned, ever
+    /// (assert with [`Arc::ptr_eq`]). The serving backend shards batch
+    /// rows across these handles.
+    pub fn replicated(&self, replicas: &[usize]) -> ReplicatedModel {
+        assert_eq!(
+            replicas.len(),
+            self.layers.len(),
+            "{} replica counts for {} layers",
+            replicas.len(),
+            self.layers.len()
+        );
+        ReplicatedModel {
+            layers: self
+                .layers
+                .iter()
+                .zip(replicas)
+                .map(|(l, &r)| vec![Arc::clone(l); r.max(1)])
+                .collect(),
+        }
     }
 }
 
@@ -655,6 +714,40 @@ mod tests {
         }
         // natural-order mapping carries no permutations
         assert!(!map_layer("l", &w).unwrap().is_reordered());
+    }
+
+    /// Replica views are `Arc` handle fan-outs on the same tiles — never
+    /// clones — and a model clone is a handle copy too.
+    #[test]
+    fn replicated_view_shares_tiles_via_arc() {
+        let mut rng = Rng::new(13);
+        let w = rand_tensor(&mut rng, vec![100, 40], 0.1);
+        let model = map_model(&[("a".into(), w.clone()), ("b".into(), w)]).unwrap();
+        let rep = model.replicated(&[3, 1]);
+        assert_eq!(rep.layers[0].len(), 3);
+        assert_eq!(rep.layers[1].len(), 1);
+        for h in &rep.layers[0] {
+            assert!(
+                Arc::ptr_eq(h, &model.layers[0]),
+                "replicas are handles, not clones"
+            );
+        }
+        // a zero count still yields one handle (a layer exists at least once)
+        assert_eq!(model.replicated(&[0, 1]).layers[0].len(), 1);
+        let clone = model.clone();
+        assert!(Arc::ptr_eq(&clone.layers[0], &model.layers[0]));
+    }
+
+    #[test]
+    fn fabricated_cells_count_programmed_tiles_only() {
+        // all-positive layer: the negative-sign grids are fully zero and
+        // never fabricated, so only the 4 pos tiles carry area
+        let w = Tensor::new(vec![64, 32], vec![0.5; 64 * 32]).unwrap();
+        let m = map_layer("p", &w).unwrap();
+        assert_eq!(m.fabricated_cells(), 4 * 64 * 32);
+        // an all-zero layer fabricates nothing
+        let z = map_layer("z", &Tensor::zeros(vec![64, 32])).unwrap();
+        assert_eq!(z.fabricated_cells(), 0);
     }
 
     /// `with_storage` round-trips preserve every cell in both directions,

@@ -28,6 +28,10 @@
 //!                    column-similarity clustering concentrates nonzero
 //!                    cells into fewer tiles, active wordlines and active
 //!                    columns (arXiv:2511.14202-style placement).
+//! * [`timing`]     — pipeline cycle model over the same conversion
+//!                    census the energy model bills, plus the replication
+//!                    planner that water-fills an area budget onto
+//!                    bottleneck layers for throughput.
 //!
 //! # Storage-format selection (Dense vs Compressed tiles)
 //!
@@ -74,6 +78,35 @@
 //! moves rows across 128-row tile blocks and is bit-exact at
 //! non-clipping resolutions (see [`reorder`] for the full argument).
 //!
+//! # Timing / replication convention (what a cycle is, how replicas share)
+//!
+//! One **cycle** = one ADC bit-resolution step, so a column conversion at
+//! resolution `b` costs `b` cycles ([`adc::AdcModel::sensing_time`]).
+//! Each example drives [`timing::PLANES`] (= 8) bit-serial wordline
+//! waves; within a wave, a tile's single column-multiplexed ADC serially
+//! converts the tile's **converting** columns — exactly the columns
+//! [`crossbar::Crossbar::bitline_currents_active`] converts, so the cycle
+//! price, the energy bill and the executed work all count the same set.
+//! Tiles run in parallel (one ADC each): a layer's per-example latency is
+//! its slowest tile, and the layer pipeline's steady-state throughput is
+//! set by the bottleneck stage's *effective* latency, `latency /
+//! replicas`.
+//!
+//! **Replicas** ([`planner::PlanLayer::replicas`], chosen by
+//! [`timing::fill_replicas`] water-filling an area budget onto bottleneck
+//! layers) are fabricated copies of one layer's arrays: area, crossbar
+//! and skipped-tile counts scale by the replica count, per-example
+//! conversion energy does not. In simulation a replica is an `Arc` handle
+//! on the same tiles ([`mapper::MappedModel::replicated`]) — never a deep
+//! clone — and the serving backend shards batch rows across the handles,
+//! which is bit-identical to the unsharded path because rows are
+//! independent and each runs the exact same per-row pipeline. In
+//! `plan.json`, the `timing` object carries one row per layer
+//! (`layer`, `replicas`, `latency_cycles`, `effective_cycles`,
+//! `conversion_cycles`) plus the `bottleneck_layer`,
+//! `bottleneck_cycles`, `throughput_per_kcycle` and
+//! `pipeline_fill_cycles` roll-ups.
+//!
 //! # Bit-order convention (LSB-first `adc_bits` vs MSB-first `XB_k`)
 //!
 //! Every per-slice array in this codebase — `adc_bits: [u32; N_SLICES]`,
@@ -98,6 +131,7 @@ pub mod planner;
 pub mod reorder;
 pub mod resolution;
 pub mod sim;
+pub mod timing;
 
 pub use adc::AdcModel;
 pub use crossbar::{Crossbar, StorageFormat, XBAR_COLS, XBAR_ROWS};
@@ -105,3 +139,4 @@ pub use mapper::{LayerMapping, MappedModel, StorageRow, StorageStats};
 pub use planner::{DeploymentPlan, PlannerConfig};
 pub use reorder::{LayerReorder, Permutation, ReorderConfig, ReorderRow};
 pub use resolution::ResolutionPolicy;
+pub use timing::{LayerTiming, PipelineTiming};

@@ -32,11 +32,20 @@ use super::resolution::{self, ResolutionPolicy};
 /// XB_0..XB_2, 1-bit on the MSB group XB_3.
 pub const PAPER_BITS: [u32; N_SLICES] = [3, 3, 3, 1];
 
-/// Per-slice ADC resolutions of one layer, LSB-first.
+/// Per-slice ADC resolutions of one layer, LSB-first, plus the number of
+/// fabricated copies of the layer's crossbars.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PlanLayer {
     pub name: String,
     pub adc_bits: [u32; N_SLICES],
+    /// Fabricated copies of this layer (>= 1). Extra replicas buy pipeline
+    /// throughput — the bottleneck stage advances `replicas` examples per
+    /// latency — at `replicas` x the layer's area/static cost; per-example
+    /// conversion energy is unchanged (each example still converts once).
+    /// Chosen by [`crate::reram::timing::fill_replicas`] water-filling an
+    /// area budget onto bottleneck layers; replicas share one set of
+    /// tiles in simulation ([`super::mapper::MappedModel::replicated`]).
+    pub replicas: usize,
 }
 
 /// Per-layer x per-slice ADC resolutions for a whole deployment — the
@@ -57,6 +66,7 @@ impl DeploymentPlan {
                 .map(|l| PlanLayer {
                     name: l.name.clone(),
                     adc_bits,
+                    replicas: 1,
                 })
                 .collect(),
         }
@@ -72,6 +82,7 @@ impl DeploymentPlan {
                 .map(|l| PlanLayer {
                     name: l.name.clone(),
                     adc_bits: resolution::layer_required_bits(l, policy),
+                    replicas: 1,
                 })
                 .collect(),
         }
@@ -94,6 +105,9 @@ impl std::fmt::Display for DeploymentPlan {
                 write!(f, " ")?;
             }
             write!(f, "{}:{:?}", l.name, l.adc_bits)?;
+            if l.replicas > 1 {
+                write!(f, "x{}", l.replicas)?;
+            }
         }
         Ok(())
     }

@@ -1,0 +1,470 @@
+//! Pipeline timing model: cycles per example, per tile -> per layer ->
+//! whole-pipeline throughput — and the replication planner that spends an
+//! area budget on the bottleneck layers.
+//!
+//! The energy model ([`super::energy`]) bills ADC conversions; this module
+//! prices the *same* conversions in cycles, so the planner can trade area
+//! for speed (SME, arXiv:2103.01705, and the A/D co-design line,
+//! arXiv:2402.06164, both identify conversions per active column as the
+//! cycle-level bottleneck of ReRAM pipelines).
+//!
+//! # What a cycle is
+//!
+//! One cycle = one ADC bit-resolution step (one SAR compare), so one
+//! column conversion at resolution `b` costs [`AdcModel::sensing_time`]`(b)
+//! = b` cycles. Activations drive bit-serially: each example takes
+//! [`PLANES`] (= [`crate::quant::N_BITS`]) wordline activation waves, and
+//! within each wave a tile's single column-multiplexed ADC serially
+//! converts the tile's **converting** columns
+//! ([`Crossbar::converting_columns`] — the cached nonzero-column index for
+//! compressed tiles, every column for dense tiles, nothing for
+//! fully-zero tiles). The per-tile count is therefore bit-consistent with
+//! what [`Crossbar::bitline_currents_active`] actually executes: a column
+//! is priced exactly when the simulator converts it.
+//!
+//! # Latency and throughput roll-up
+//!
+//! Every programmed tile carries its own ADC and all tiles of a layer run
+//! in parallel, so a layer's per-example **latency** is its slowest
+//! tile's conversion serialization ([`LayerTiming::latency_cycles`]). The
+//! layers form a pipeline (one stage per layer): steady-state
+//! **throughput** is set by the bottleneck stage's *effective* latency —
+//! `latency / replicas`, since `r` fabricated copies of a layer each take
+//! every r-th example ([`PipelineTiming::throughput_per_kcycle`]).
+//!
+//! # Replication planner
+//!
+//! [`fill_replicas`] water-fills an area budget (in fabricated crossbar
+//! cells, [`LayerMapping::fabricated_cells`]) onto the pipeline: while
+//! the current bottleneck layer's copy still fits the remaining budget,
+//! it gains one replica — replicating any *other* layer can never raise
+//! throughput, which is what makes the greedy fill optimal here. Replica
+//! counts land in [`super::planner::PlanLayer::replicas`]; the mapper
+//! exposes the replicas as `Arc` handles on the same tiles
+//! ([`super::mapper::MappedModel::replicated`]) and the serving backend
+//! shards batch rows across them.
+//!
+//! [`Crossbar::converting_columns`]:
+//! crate::reram::crossbar::Crossbar::converting_columns
+//! [`Crossbar::bitline_currents_active`]:
+//! crate::reram::crossbar::Crossbar::bitline_currents_active
+
+use crate::quant;
+
+use super::adc::AdcModel;
+use super::crossbar::Crossbar;
+use super::mapper::{LayerMapping, MappedModel};
+use super::planner::{DeploymentPlan, PlanLayer};
+
+/// Wordline activation waves per example — one per activation code bit
+/// (the same 8 the energy model's conversion counts multiply by).
+pub const PLANES: usize = quant::N_BITS as usize;
+
+/// Per-layer replica ceiling: a backstop so a mistakenly huge budget
+/// cannot spin [`fill_replicas`] forever, far above any sane deployment.
+pub const MAX_REPLICAS: usize = 64;
+
+/// Cycles one tile takes to convert one example at resolution `bits`:
+/// `PLANES` waves x converting columns x `sensing_time(bits)` cycles per
+/// conversion (the tile's one ADC serializes its columns). Fully-zero
+/// tiles are never fabricated and cost nothing.
+pub fn tile_cycles(tile: &Crossbar, bits: u32) -> u64 {
+    if tile.nonzero_cells() == 0 {
+        return 0;
+    }
+    // sensing_time(b) = b exactly — kept behind the AdcModel name so the
+    // cycle price and Table 3's speedup column share one definition
+    PLANES as u64 * tile.converting_columns() as u64 * AdcModel::sensing_time(bits) as u64
+}
+
+/// One layer's timing under a plan — the `report::timing_table` row.
+#[derive(Debug, Clone)]
+pub struct LayerTiming {
+    pub layer: String,
+    /// fabricated copies of this layer (>= 1)
+    pub replicas: usize,
+    /// per-example latency: the slowest tile's conversion serialization,
+    /// in cycles (tiles run in parallel, each behind its own ADC)
+    pub latency_cycles: u64,
+    /// total conversion-cycles per example summed over every programmed
+    /// tile — the serial-work (and energy-proportional) view
+    pub conversion_cycles: u64,
+}
+
+impl LayerTiming {
+    /// Pipeline-stage latency with replication: `r` copies each take
+    /// every r-th example, so the stage advances `r` examples per
+    /// `latency_cycles`.
+    pub fn effective_cycles(&self) -> f64 {
+        self.latency_cycles as f64 / self.replicas.max(1) as f64
+    }
+}
+
+/// Timing of one layer at its planned per-slice resolutions.
+pub fn layer_timing(layer: &LayerMapping, pl: &PlanLayer) -> LayerTiming {
+    let mut latency = 0u64;
+    let mut total = 0u64;
+    for (k, (pos, neg)) in layer.grids.iter().enumerate() {
+        let bits = pl.adc_bits[k];
+        for grid in [pos, neg] {
+            for tile in &grid.tiles {
+                let c = tile_cycles(tile, bits);
+                latency = latency.max(c);
+                total += c;
+            }
+        }
+    }
+    LayerTiming {
+        layer: layer.name.clone(),
+        replicas: pl.replicas.max(1),
+        latency_cycles: latency,
+        conversion_cycles: total,
+    }
+}
+
+/// Whole-pipeline timing under a plan.
+#[derive(Debug, Clone)]
+pub struct PipelineTiming {
+    pub layers: Vec<LayerTiming>,
+}
+
+impl PipelineTiming {
+    /// Index of the bottleneck stage — the largest *effective* (replica-
+    /// divided) latency; `None` when nothing converts anywhere.
+    pub fn bottleneck(&self) -> Option<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.latency_cycles > 0)
+            .max_by(|a, b| {
+                a.1.effective_cycles()
+                    .partial_cmp(&b.1.effective_cycles())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .map(|(i, _)| i)
+    }
+
+    /// Effective cycles of the bottleneck stage (0.0 when nothing
+    /// converts): the steady-state cost of one example.
+    pub fn bottleneck_cycles(&self) -> f64 {
+        self.bottleneck()
+            .map(|i| self.layers[i].effective_cycles())
+            .unwrap_or(0.0)
+    }
+
+    /// Steady-state pipeline throughput, examples per 1000 cycles.
+    pub fn throughput_per_kcycle(&self) -> f64 {
+        let b = self.bottleneck_cycles();
+        if b == 0.0 {
+            0.0
+        } else {
+            1000.0 / b
+        }
+    }
+
+    /// Cycles for one example to traverse the empty pipeline (the fill
+    /// latency): stage latencies summed — replication does not shorten an
+    /// individual example's path.
+    pub fn pipeline_fill_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.latency_cycles).sum()
+    }
+}
+
+/// Roll up a mapped model's timing under a per-layer deployment plan.
+pub fn plan_timing(model: &MappedModel, plan: &DeploymentPlan) -> PipelineTiming {
+    assert_eq!(
+        plan.layers.len(),
+        model.layers.len(),
+        "plan has {} layers, mapping has {}",
+        plan.layers.len(),
+        model.layers.len()
+    );
+    PipelineTiming {
+        layers: model
+            .layers
+            .iter()
+            .zip(&plan.layers)
+            .map(|(layer, pl)| layer_timing(layer, pl))
+            .collect(),
+    }
+}
+
+/// Water-fill `budget_cells` of extra fabricated area onto the plan's
+/// bottleneck layers: while the current bottleneck's copy
+/// ([`LayerMapping::fabricated_cells`]) still fits the remaining budget
+/// (and the layer is under [`MAX_REPLICAS`]), it gains one replica.
+/// Returns the cells actually spent. Replicating a non-bottleneck layer
+/// can never raise pipeline throughput, so the greedy fill never
+/// considers one.
+pub fn fill_replicas(model: &MappedModel, plan: &mut DeploymentPlan, budget_cells: usize) -> usize {
+    let mut remaining = budget_cells;
+    loop {
+        let timing = plan_timing(model, plan);
+        let Some(b) = timing.bottleneck() else { break };
+        let cost = model.layers[b].fabricated_cells();
+        if cost == 0 || cost > remaining || plan.layers[b].replicas >= MAX_REPLICAS {
+            break;
+        }
+        plan.layers[b].replicas += 1;
+        remaining -= cost;
+    }
+    budget_cells - remaining
+}
+
+/// [`fill_replicas`] with the CLI's budget unit: `factor` multiples of
+/// the **bottleneck layer's** fabricated cells (so `2.0` buys about two
+/// extra copies of the slowest layer). This is the one definition of
+/// what `--replicate-budget F` means — the deploy CLI, the harness
+/// report and the example all call it. Non-positive factors (and models
+/// with no bottleneck) change nothing and spend nothing.
+pub fn fill_replicas_factor(model: &MappedModel, plan: &mut DeploymentPlan, factor: f64) -> usize {
+    if factor <= 0.0 {
+        return 0;
+    }
+    let budget = plan_timing(model, plan)
+        .bottleneck()
+        .map(|b| (factor * model.layers[b].fabricated_cells() as f64) as usize)
+        .unwrap_or(0);
+    fill_replicas(model, plan, budget)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reram::crossbar::StorageFormat;
+    use crate::reram::mapper::{map_layer, map_layer_with, map_model};
+    use crate::reram::reorder::ReorderConfig;
+    use crate::serve::DenseLayer;
+    use crate::tensor::Tensor;
+    use crate::util::fixtures;
+    use crate::util::rng::Rng;
+
+    /// Hand-computed tile cycles in both layouts: a dense tile converts
+    /// every column, a compressed tile only its nonzero-column index, a
+    /// fully-zero tile nothing.
+    #[test]
+    fn tile_cycles_by_hand() {
+        let mut xb = Crossbar::zeros(4, 4);
+        xb.set(0, 1, 2);
+        xb.set(3, 1, 1);
+        xb.set(2, 3, 3);
+        // dense layout: 4 converting columns x 8 waves x 3 cycles
+        assert_eq!(tile_cycles(&xb, 3), 8 * 4 * 3);
+        // compressed layout: only columns 1 and 3 hold cells
+        let comp = xb.in_format(StorageFormat::Compressed);
+        assert_eq!(comp.converting_columns(), 2);
+        assert_eq!(tile_cycles(&comp, 3), 8 * 2 * 3);
+        assert_eq!(tile_cycles(&comp, 1), 8 * 2);
+        // fully-zero tiles cost nothing in either layout
+        let z = Crossbar::zeros(4, 4);
+        assert_eq!(tile_cycles(&z, 5), 0);
+        assert_eq!(tile_cycles(&z.in_format(StorageFormat::Compressed), 5), 0);
+    }
+
+    /// The cycle price counts exactly the conversions
+    /// `bitline_currents_active` executes: per tile, the columns the
+    /// simulator's ADC loop walks (the returned index for compressed
+    /// tiles, every slot for dense ones) times waves times bits.
+    #[test]
+    fn tile_cycles_match_executed_conversions() {
+        let mut rng = Rng::new(17);
+        let w = Tensor::new(vec![200, 150], {
+            let mut d = vec![0.0f32; 200 * 150];
+            for _ in 0..900 {
+                d[rng.below(200 * 150)] = (rng.next_f32() - 0.5) * 2.0;
+            }
+            d
+        })
+        .unwrap();
+        let layer = map_layer("l", &w).unwrap();
+        for fmt in [StorageFormat::Dense, StorageFormat::Compressed] {
+            let m = layer.with_storage(fmt);
+            for (pos, neg) in &m.grids {
+                for grid in [pos, neg] {
+                    for tile in &grid.tiles {
+                        if tile.nonzero_cells() == 0 {
+                            continue;
+                        }
+                        let bits = vec![1u8; tile.rows()];
+                        let mut cur = vec![0u32; tile.cols()];
+                        // what one wave actually converts under this layout
+                        let converted = match tile.bitline_currents_active(&bits, &mut cur) {
+                            Some(active) => active.len(),
+                            None => tile.cols(),
+                        };
+                        assert_eq!(
+                            tile_cycles(tile, 3),
+                            (PLANES * converted * 3) as u64,
+                            "layout {fmt:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Layer latency is the slowest tile; the roll-up agrees with a direct
+    /// recomputation in dense, compressed and reordered layouts (each
+    /// layout's own converting-column census drives its price).
+    #[test]
+    fn layer_timing_is_max_tile_in_every_layout() {
+        let mut rng = Rng::new(23);
+        let w = fixtures::structured_sparse_weights(&mut rng, 300, 150, 0.2, 0.2, 0.4);
+        let natural = map_layer("l", &w).unwrap();
+        let reordered = map_layer_with("l", &w, Some(ReorderConfig::default())).unwrap();
+        let pl = PlanLayer {
+            name: "l".into(),
+            adc_bits: [3, 3, 3, 1],
+            replicas: 1,
+        };
+        for m in [
+            natural.clone(),
+            natural.with_storage(StorageFormat::Dense),
+            natural.with_storage(StorageFormat::Compressed),
+            reordered,
+        ] {
+            let t = layer_timing(&m, &pl);
+            let mut want_max = 0u64;
+            let mut want_sum = 0u64;
+            for (k, (pos, neg)) in m.grids.iter().enumerate() {
+                for grid in [pos, neg] {
+                    for tile in &grid.tiles {
+                        let c = tile_cycles(tile, pl.adc_bits[k]);
+                        want_max = want_max.max(c);
+                        want_sum += c;
+                    }
+                }
+            }
+            assert_eq!(t.latency_cycles, want_max);
+            assert_eq!(t.conversion_cycles, want_sum);
+            assert!(t.latency_cycles > 0);
+        }
+    }
+
+    fn skewed_model() -> (MappedModel, DeploymentPlan) {
+        let stack = fixtures::bottleneck_stack(0xBEEF);
+        let named: Vec<(String, Tensor)> = stack
+            .iter()
+            .map(|l: &DenseLayer| (l.name.clone(), l.w.clone()))
+            .collect();
+        let model = map_model(&named).unwrap();
+        let plan = DeploymentPlan::uniform_for(&model, [3, 3, 3, 1]);
+        (model, plan)
+    }
+
+    /// The bottleneck-skewed fixture really skews: the wide hidden layer
+    /// is the bottleneck at ~4x every other layer's latency.
+    #[test]
+    fn bottleneck_fixture_skews_latency() {
+        let (model, plan) = skewed_model();
+        let timing = plan_timing(&model, &plan);
+        let b = timing.bottleneck().expect("programmed model");
+        assert_eq!(timing.layers[b].layer, "fc2/w", "wide layer bottleneck");
+        let others = timing
+            .layers
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != b)
+            .map(|(_, l)| l.latency_cycles)
+            .max()
+            .unwrap();
+        assert!(
+            timing.layers[b].latency_cycles as f64 >= 3.5 * others as f64,
+            "bottleneck {} vs next {}",
+            timing.layers[b].latency_cycles,
+            others
+        );
+        assert!(timing.throughput_per_kcycle() > 0.0);
+        assert!(timing.pipeline_fill_cycles() >= timing.layers[b].latency_cycles);
+    }
+
+    /// Water-filling spends the budget on the bottleneck: with 2x the
+    /// bottleneck layer's cells it fabricates extra copies of exactly that
+    /// layer, throughput rises accordingly, and the spend never exceeds
+    /// the budget. A zero budget changes nothing.
+    #[test]
+    fn fill_replicas_water_fills_the_bottleneck() {
+        let (model, plan) = skewed_model();
+        let timing0 = plan_timing(&model, &plan);
+        let b = timing0.bottleneck().unwrap();
+        let cells = model.layers[b].fabricated_cells();
+        assert!(cells > 0);
+
+        let mut untouched = plan.clone();
+        assert_eq!(fill_replicas(&model, &mut untouched, 0), 0);
+        assert!(untouched.layers.iter().all(|l| l.replicas == 1));
+
+        let mut filled = plan.clone();
+        let spent = fill_replicas(&model, &mut filled, 2 * cells);
+        assert!(spent <= 2 * cells);
+        assert!(
+            filled.layers[b].replicas >= 2,
+            "budget of 2x bottleneck cells affords at least one extra copy"
+        );
+        for (i, l) in filled.layers.iter().enumerate() {
+            if i != b {
+                // at ~4x skew the bottleneck stays the bottleneck until
+                // the budget runs out — no one else is replicated
+                assert_eq!(l.replicas, 1, "layer {}", l.layer);
+            }
+        }
+        let timing1 = plan_timing(&model, &filled);
+        assert!(
+            timing1.throughput_per_kcycle()
+                >= timing0.throughput_per_kcycle() * filled.layers[b].replicas as f64 * 0.99
+                || timing1.bottleneck().unwrap() != b,
+            "replication must raise pipeline throughput"
+        );
+        assert!(timing1.bottleneck_cycles() < timing0.bottleneck_cycles());
+        // an individual example's path is not shortened by replication
+        assert_eq!(
+            timing1.pipeline_fill_cycles(),
+            timing0.pipeline_fill_cycles()
+        );
+    }
+
+    /// The factor form is the budget in multiples of the bottleneck
+    /// layer's cells — the one definition the CLI/harness/example share.
+    #[test]
+    fn fill_replicas_factor_matches_explicit_budget() {
+        let (model, plan) = skewed_model();
+        let b = plan_timing(&model, &plan).bottleneck().unwrap();
+        let cells = model.layers[b].fabricated_cells();
+
+        let mut by_factor = plan.clone();
+        let spent_f = fill_replicas_factor(&model, &mut by_factor, 2.0);
+        let mut by_cells = plan.clone();
+        let spent_c = fill_replicas(&model, &mut by_cells, 2 * cells);
+        assert_eq!(spent_f, spent_c);
+        assert_eq!(by_factor, by_cells);
+
+        // non-positive factors are no-ops
+        let mut untouched = plan.clone();
+        assert_eq!(fill_replicas_factor(&model, &mut untouched, 0.0), 0);
+        assert_eq!(fill_replicas_factor(&model, &mut untouched, -1.0), 0);
+        assert_eq!(untouched, plan);
+    }
+
+    /// The replica ceiling bounds a runaway budget.
+    #[test]
+    fn fill_replicas_respects_the_ceiling() {
+        let (model, mut plan) = skewed_model();
+        let total: usize = model.layers.iter().map(|l| l.fabricated_cells()).sum();
+        fill_replicas(&model, &mut plan, total * MAX_REPLICAS * 4);
+        assert!(plan.layers.iter().all(|l| l.replicas <= MAX_REPLICAS));
+        assert!(plan.layers.iter().any(|l| l.replicas > 1));
+    }
+
+    /// An all-zero model has no bottleneck and accepts no replication.
+    #[test]
+    fn empty_model_has_no_bottleneck() {
+        let w = Tensor::zeros(vec![64, 32]);
+        let model = map_model(&[("z".into(), w)]).unwrap();
+        let mut plan = DeploymentPlan::uniform_for(&model, [3, 3, 3, 1]);
+        let timing = plan_timing(&model, &plan);
+        assert_eq!(timing.bottleneck(), None);
+        assert_eq!(timing.bottleneck_cycles(), 0.0);
+        assert_eq!(timing.throughput_per_kcycle(), 0.0);
+        assert_eq!(fill_replicas(&model, &mut plan, 1_000_000), 0);
+    }
+}

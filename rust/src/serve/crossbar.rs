@@ -14,6 +14,21 @@
 //! and [`CrossbarBackend::rebit`] share it instead of deep-cloning every
 //! tile, so ADC sweeps and the planner's many candidate evaluations re-map
 //! zero times.
+//!
+//! # Replica-sharded batches
+//!
+//! When the plan carries per-layer replicas
+//! ([`crate::reram::planner::PlanLayer::replicas`] > 1 anywhere),
+//! `infer_batch` switches to a layer-major path: each layer processes the
+//! whole batch before the next starts, with the batch rows sharded across
+//! the layer's replica handles ([`mapper::MappedModel::replicated`] —
+//! `Arc`s on the same tiles, one per shard thread via
+//! [`crate::util::pool::parallel_map`]). Rows are independent and every
+//! shard runs the exact per-row pipeline of the unsharded path, so the
+//! result is **bit-identical** to it — replication buys wall-clock on the
+//! bottleneck layers, never a different answer. Shards are capped at the
+//! host's worker count: simulated replicas beyond the cores can't run
+//! anywhere (physical ones would).
 
 use std::sync::Arc;
 
@@ -173,6 +188,14 @@ impl CrossbarBackend {
     /// Cap the threads one `infer_batch` call may use. Set to 1 when a
     /// `ServingEngine` worker pool already provides the parallelism —
     /// nested fan-out would only oversubscribe the cores.
+    ///
+    /// This knob governs the **row-major** (unreplicated) path only. A
+    /// plan with replicas deliberately ignores it: the replica-sharded
+    /// path's fan-out is the replica count itself (capped at the host's
+    /// cores) — that parallelism is the hardware being modelled, not a
+    /// host tuning knob. Callers that put a replicated backend behind a
+    /// worker pool should scale the pool down by
+    /// [`Self::max_replicas`] instead (see the reram_deploy example).
     pub fn with_intra_threads(mut self, threads: usize) -> Self {
         self.intra_threads = threads.max(1);
         self
@@ -215,11 +238,28 @@ impl CrossbarBackend {
         self.model.is_reordered()
     }
 
+    /// Largest per-layer replica count in the deployed plan (1 = no
+    /// replication; the batch path stays row-major).
+    pub fn max_replicas(&self) -> usize {
+        self.plan
+            .layers
+            .iter()
+            .map(|l| l.replicas.max(1))
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Pipeline timing of the deployed plan on the shared mapping (the
+    /// `report::timing_table` body).
+    pub fn timing(&self) -> crate::reram::timing::PipelineTiming {
+        crate::reram::timing::plan_timing(&self.model, &self.plan)
+    }
+
     fn map_stack(stack: &[DenseLayer], reorder: Option<ReorderConfig>) -> Result<MappedModel> {
         anyhow::ensure!(!stack.is_empty(), "empty dense stack");
         let layers = stack
             .iter()
-            .map(|l| mapper::map_layer_with(&l.name, &l.w, reorder))
+            .map(|l| mapper::map_layer_with(&l.name, &l.w, reorder).map(Arc::new))
             .collect::<Result<Vec<_>>>()?;
         Ok(MappedModel { layers })
     }
@@ -267,6 +307,7 @@ impl CrossbarBackend {
         codes: &mut Vec<u8>,
     ) -> Vec<f32> {
         let mut act: Vec<f32> = row.to_vec();
+        let mut next: Vec<f32> = Vec::new();
         for ((mapping, meta), pl) in self
             .model
             .layers
@@ -274,23 +315,113 @@ impl CrossbarBackend {
             .zip(self.meta.iter())
             .zip(&self.plan.layers)
         {
-            let a_step = sim::act_quantize_into(&act, codes);
-            let scale = mapping.step * a_step;
-            sim::forward_codes_into(mapping, codes, &pl.adc_bits, scratch, raw);
-            act.clear();
-            act.extend(raw.iter().map(|&v| v as f32 * scale));
-            if let Some(bias) = &meta.bias {
-                for (v, &b) in act.iter_mut().zip(bias) {
-                    *v += b;
-                }
-            }
-            if meta.relu {
-                for v in act.iter_mut() {
-                    *v = v.max(0.0);
-                }
-            }
+            Self::layer_step(
+                mapping,
+                meta,
+                &pl.adc_bits,
+                &act,
+                scratch,
+                raw,
+                codes,
+                &mut next,
+            );
+            std::mem::swap(&mut act, &mut next);
         }
         act
+    }
+
+    /// One layer's step for one activation row: quantize, run the mapped
+    /// crossbars, rescale, bias, ReLU — exactly one iteration of
+    /// [`Self::infer_one`]'s loop, shared by the sharded path so both
+    /// orders run the identical per-row float operations.
+    #[allow(clippy::too_many_arguments)]
+    fn layer_step(
+        mapping: &mapper::LayerMapping,
+        meta: &StackMeta,
+        adc_bits: &[u32; N_SLICES],
+        row: &[f32],
+        scratch: &mut SimScratch,
+        raw: &mut Vec<i64>,
+        codes: &mut Vec<u8>,
+        out: &mut Vec<f32>,
+    ) {
+        let a_step = sim::act_quantize_into(row, codes);
+        let scale = mapping.step * a_step;
+        sim::forward_codes_into(mapping, codes, adc_bits, scratch, raw);
+        out.clear();
+        out.extend(raw.iter().map(|&v| v as f32 * scale));
+        if let Some(bias) = &meta.bias {
+            for (v, &b) in out.iter_mut().zip(bias) {
+                *v += b;
+            }
+        }
+        if meta.relu {
+            for v in out.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+    }
+
+    /// Layer-major batch path for replicated plans: every layer runs the
+    /// whole batch, rows sharded across its replica handles in parallel.
+    /// Bit-identical to the row-major path (see the module docs).
+    fn infer_batch_sharded(&self, x: &Tensor) -> Result<Tensor> {
+        let shape = x.shape();
+        anyhow::ensure!(!shape.is_empty(), "batch tensor wants a leading axis");
+        let b = shape[0];
+        let dim: usize = shape[1..].iter().product();
+        anyhow::ensure!(
+            dim == self.input_dim,
+            "{}: example dim {dim} != expected {}",
+            self.name,
+            self.input_dim
+        );
+        let cores = crate::util::pool::worker_threads();
+        let replicas: Vec<usize> = self.plan.layers.iter().map(|l| l.replicas).collect();
+        // one Arc handle per replica, all on the same tiles — the mapper's
+        // replica view is what each shard thread drives
+        let rep = self.model.replicated(&replicas);
+        let mut act: Vec<f32> = x.data().to_vec();
+        let mut width = dim;
+        for ((handles, meta), pl) in rep.layers.iter().zip(self.meta.iter()).zip(&self.plan.layers)
+        {
+            let out_w = handles[0].cols;
+            let shards = handles.len().min(cores).min(b.max(1));
+            let chunk = b.div_ceil(shards.max(1)).max(1);
+            let run_shard = |si: usize| -> Vec<f32> {
+                let mapping: &mapper::LayerMapping = &handles[si % handles.len()];
+                let (lo, hi) = (si * chunk, ((si + 1) * chunk).min(b));
+                let mut scratch = SimScratch::default();
+                let (mut raw, mut codes, mut row_out) = (Vec::new(), Vec::new(), Vec::new());
+                let mut part = Vec::with_capacity((hi - lo) * out_w);
+                for i in lo..hi {
+                    Self::layer_step(
+                        mapping,
+                        meta,
+                        &pl.adc_bits,
+                        &act[i * width..(i + 1) * width],
+                        &mut scratch,
+                        &mut raw,
+                        &mut codes,
+                        &mut row_out,
+                    );
+                    part.extend_from_slice(&row_out);
+                }
+                part
+            };
+            let n_shards = b.div_ceil(chunk);
+            let mut next = Vec::with_capacity(b * out_w);
+            if n_shards <= 1 {
+                next.extend(run_shard(0));
+            } else {
+                for part in crate::util::pool::parallel_map(n_shards, n_shards, run_shard) {
+                    next.extend(part);
+                }
+            }
+            act = next;
+            width = out_w;
+        }
+        Tensor::new(vec![b, width], act)
     }
 }
 
@@ -309,6 +440,9 @@ impl InferenceBackend for CrossbarBackend {
     }
 
     fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
+        if self.max_replicas() > 1 {
+            return self.infer_batch_sharded(x);
+        }
         super::rows_parallel(
             &self.name,
             x,
@@ -474,6 +608,44 @@ mod tests {
         let swept = reordered.rebit("xb-ro-sweep", [3, 3, 3, 1]);
         assert!(Arc::ptr_eq(reordered.mapped(), swept.mapped()));
         assert_eq!(swept.is_reordered(), reordered.is_reordered());
+    }
+
+    /// A replicated plan shards batch rows across `Arc` replica handles:
+    /// the answer is bit-identical to the row-major path on the same
+    /// shared mapping, for multi-row and single-row batches alike.
+    #[test]
+    fn replicated_plan_is_bit_identical_and_shares_tiles() {
+        let mut rng = Rng::new(41);
+        let stack = toy_stack(&mut rng);
+        let base = CrossbarBackend::new("xb", &stack, ResolutionPolicy::Lossless).unwrap();
+        assert_eq!(base.max_replicas(), 1);
+        let mut plan = base.plan().clone();
+        plan.layers[0].replicas = 3;
+        plan.layers[1].replicas = 2;
+        let sharded = base.replan("xb-rep", plan).unwrap();
+        assert_eq!(sharded.max_replicas(), 3);
+        assert!(
+            Arc::ptr_eq(base.mapped(), sharded.mapped()),
+            "replicas share the mapping, never re-map"
+        );
+        for b in [1usize, 2, 7, 16] {
+            let x = Tensor::new(vec![b, 20], (0..b * 20).map(|_| rng.next_f32()).collect())
+                .unwrap();
+            assert_eq!(
+                base.infer_batch(&x).unwrap().data(),
+                sharded.infer_batch(&x).unwrap().data(),
+                "batch of {b}"
+            );
+        }
+        // the timing roll-up sees the plan's replicas
+        let t = sharded.timing();
+        assert_eq!(t.layers[0].replicas, 3);
+        assert_eq!(t.layers[1].replicas, 2);
+        assert!(t.layers[0].latency_cycles > 0);
+        assert!(
+            t.layers[0].effective_cycles() < t.layers[0].latency_cycles as f64,
+            "replication divides the stage latency"
+        );
     }
 
     #[test]

@@ -29,10 +29,14 @@ use super::{InferenceBackend as _, SharedBackend};
 pub struct ServeOptions {
     /// largest batch a worker will assemble from the queue
     pub max_batch: usize,
-    /// worker threads; 0 = one per available core (capped at 8)
+    /// worker threads; 0 = one per available core, capped at `worker_cap`
     pub workers: usize,
-    /// request-queue capacity (enqueue blocks beyond this — backpressure)
+    /// request-queue capacity: [`ServingEngine::submit`] blocks beyond it
+    /// and [`ServingEngine::try_submit`] sheds — never unbounded growth
     pub queue_depth: usize,
+    /// ceiling on the auto-sized pool (`workers == 0`); explicit `workers`
+    /// values are taken as-is
+    pub worker_cap: usize,
 }
 
 impl Default for ServeOptions {
@@ -41,6 +45,7 @@ impl Default for ServeOptions {
             max_batch: 64,
             workers: 0,
             queue_depth: 256,
+            worker_cap: 8,
         }
     }
 }
@@ -151,8 +156,9 @@ impl ServingEngine {
             backend.name()
         );
         let workers = if opts.workers == 0 {
-            // shared policy with sim + backends, capped for the pool
-            crate::util::pool::worker_threads().min(8)
+            // shared policy with sim + backends, capped for the pool — the
+            // cap is a config knob, not a constant
+            crate::util::pool::worker_threads().min(opts.worker_cap.max(1))
         } else {
             opts.workers
         };
@@ -248,9 +254,7 @@ impl ServingEngine {
         self.num_classes
     }
 
-    /// Enqueue one example (flattened features). Blocks when the queue is
-    /// at capacity (backpressure on the client).
-    pub fn submit(&self, x: Vec<f32>) -> Result<PendingInference> {
+    fn make_request(&self, x: Vec<f32>) -> Result<(InferRequest, PendingInference)> {
         anyhow::ensure!(
             x.len() == self.input_dim,
             "request dim {} != backend input dim {}",
@@ -263,12 +267,33 @@ impl ServingEngine {
             enqueued: Instant::now(),
             tx,
         };
+        Ok((req, PendingInference { rx }))
+    }
+
+    /// Enqueue one example (flattened features). Blocks when the queue is
+    /// at capacity (backpressure on the client).
+    pub fn submit(&self, x: Vec<f32>) -> Result<PendingInference> {
+        let (req, pending) = self.make_request(x)?;
         self.tx
             .as_ref()
             .expect("engine is running")
             .send(req)
             .map_err(|_| anyhow::anyhow!("serving queue closed"))?;
-        Ok(PendingInference { rx })
+        Ok(pending)
+    }
+
+    /// Non-blocking [`Self::submit`]: `Ok(None)` when the bounded request
+    /// queue is at capacity — the caller sheds or retries instead of
+    /// blocking (the backpressure path for latency-sensitive producers).
+    pub fn try_submit(&self, x: Vec<f32>) -> Result<Option<PendingInference>> {
+        let (req, pending) = self.make_request(x)?;
+        match self.tx.as_ref().expect("engine is running").try_send(req) {
+            Ok(()) => Ok(Some(pending)),
+            Err(crate::util::pool::TrySendError::Full(_)) => Ok(None),
+            Err(crate::util::pool::TrySendError::Closed(_)) => {
+                Err(anyhow::anyhow!("serving queue closed"))
+            }
+        }
     }
 
     /// Convenience: submit a whole set and wait for every response, in
@@ -377,6 +402,7 @@ mod tests {
                 max_batch,
                 workers,
                 queue_depth: 32,
+                ..ServeOptions::default()
             },
         )
         .unwrap()
@@ -453,7 +479,98 @@ mod tests {
     fn rejects_wrong_request_dim() {
         let eng = engine(1, 4, false);
         assert!(eng.submit(vec![0.0; 5]).is_err());
+        assert!(eng.try_submit(vec![0.0; 5]).is_err());
         let _ = eng.shutdown();
+    }
+
+    /// The auto-sized pool honors the configurable cap instead of the old
+    /// hard-coded 8.
+    #[test]
+    fn worker_cap_bounds_the_auto_sized_pool() {
+        let backend: crate::serve::SharedBackend = Arc::new(SumBackend {
+            dim: 3,
+            classes: 2,
+            fail: false,
+        });
+        let eng = ServingEngine::start(
+            backend,
+            ServeOptions {
+                workers: 0,
+                worker_cap: 2,
+                ..ServeOptions::default()
+            },
+        )
+        .unwrap();
+        let stats = eng.shutdown();
+        assert!(stats.workers <= 2, "cap 2, got {}", stats.workers);
+        assert!(stats.workers >= 1);
+    }
+
+    /// A backend gated on a channel lets us fill the bounded queue
+    /// deterministically: `try_submit` sheds with `Ok(None)` instead of
+    /// blocking, and completes normally once the queue drains.
+    #[test]
+    fn try_submit_sheds_when_the_queue_is_full() {
+        use crate::util::pool::bounded as chan;
+
+        struct GateBackend {
+            started: crate::util::pool::Sender<()>,
+            release: crate::util::pool::Receiver<()>,
+        }
+        impl InferenceBackend for GateBackend {
+            fn name(&self) -> &str {
+                "gate"
+            }
+            fn info(&self) -> BackendInfo {
+                BackendInfo {
+                    input_dim: 1,
+                    num_classes: 1,
+                    native_batch: None,
+                    logits: true,
+                }
+            }
+            fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
+                let _ = self.started.send(());
+                self.release.recv(); // hold the worker until released
+                Tensor::new(vec![x.shape()[0], 1], vec![0.0; x.shape()[0]])
+            }
+        }
+
+        let (started_tx, started_rx) = chan::<()>(16);
+        let (release_tx, release_rx) = chan::<()>(16);
+        let backend: crate::serve::SharedBackend = Arc::new(GateBackend {
+            started: started_tx,
+            release: release_rx,
+        });
+        let eng = ServingEngine::start(
+            backend,
+            ServeOptions {
+                max_batch: 1,
+                workers: 1,
+                queue_depth: 1,
+                ..ServeOptions::default()
+            },
+        )
+        .unwrap();
+        // r1 is picked up by the worker (blocks inside the backend)...
+        let r1 = eng.submit(vec![0.0]).unwrap();
+        started_rx.recv().expect("worker entered the backend");
+        // ...r2 occupies the queue's single slot...
+        let r2 = eng.submit(vec![0.0]).unwrap();
+        // ...so the next non-blocking submit must shed, not hang
+        assert!(eng.try_submit(vec![0.0]).unwrap().is_none());
+        // release both batches and drain
+        release_tx.send(()).unwrap();
+        release_tx.send(()).unwrap();
+        assert!(r1.wait().is_ok());
+        assert!(r2.wait().is_ok());
+        // with room again, try_submit enqueues
+        let r3 = eng.try_submit(vec![0.0]).unwrap().expect("queue drained");
+        let _ = started_rx.recv();
+        release_tx.send(()).unwrap();
+        assert!(r3.wait().is_ok());
+        let stats = eng.shutdown();
+        assert_eq!(stats.requests, 3);
     }
 
     #[test]

@@ -126,6 +126,37 @@ pub fn structured_stack(
     dense_stack(&weights, &zero_biases(&dims[1..])).expect("fixture stack")
 }
 
+/// A bottleneck-skewed MLP stack (64 -> 32 -> 512 -> 32 -> 10) shared by
+/// the pipeline-timing bench and tests: the wide fc2 (32x512, moderately
+/// dense) carries ~4x the per-tile ADC conversion load of every other
+/// layer — its tiles convert ~128 columns where the narrow layers convert
+/// <= 32 — so it is the pipeline bottleneck by construction, and most of
+/// the simulator's wall-clock lives there too (which is what makes
+/// replica-sharding measurably faster, not just cheaper on paper). fc3 is
+/// extremely sparse: a wide hidden layer forces many rows on its
+/// successor, and the sparsity keeps that successor off the critical
+/// path.
+pub fn bottleneck_stack(seed: u64) -> Vec<DenseLayer> {
+    let mut rng = Rng::new(seed);
+    let specs: [(usize, usize, f64); 4] = [
+        (64, 32, 0.35),
+        (32, 512, 0.35),
+        (512, 32, 0.02),
+        (32, 10, 0.3),
+    ];
+    let weights: Vec<(String, Tensor)> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, &(rows, cols, density))| {
+            (
+                format!("fc{}/w", i + 1),
+                weights_at_density(&mut rng, rows, cols, density),
+            )
+        })
+        .collect();
+    dense_stack(&weights, &zero_biases(&[32, 512, 32, 10])).expect("fixture stack")
+}
+
 /// Paper-style mean slice-zero fraction of a mapped layer (the quantity
 /// the density sweeps report on their x axis).
 pub fn mean_slice_zero_fraction(layer: &LayerMapping) -> f64 {
@@ -289,6 +320,24 @@ mod tests {
         assert!(!active_rows.is_empty() && active_rows.len() <= 40);
         assert!(!active_cols.is_empty() && active_cols.len() <= 20);
         assert!(data.iter().any(|&v| v == 1.0), "pin present");
+    }
+
+    #[test]
+    fn bottleneck_stack_chains_and_is_deterministic() {
+        let a = bottleneck_stack(3);
+        let b = bottleneck_stack(3);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a[0].w.shape(), &[64, 32]);
+        assert_eq!(a[1].w.shape(), &[32, 512]);
+        assert_eq!(a[2].w.shape(), &[512, 32]);
+        assert_eq!(a[3].w.shape(), &[32, 10]);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.w.data(), y.w.data(), "same seed, same stack");
+        }
+        // fc2 is dense-ish, fc3 nearly empty — the skew the name promises
+        let nz = |t: &Tensor| t.data().iter().filter(|&&v| v != 0.0).count() as f64;
+        assert!(nz(&a[1].w) / (32.0 * 512.0) > 0.3);
+        assert!(nz(&a[2].w) / (512.0 * 32.0) < 0.03);
     }
 
     #[test]

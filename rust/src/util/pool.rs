@@ -47,7 +47,32 @@ pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
     )
 }
 
+/// Why [`Sender::try_send`] handed the item back.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TrySendError<T> {
+    /// queue at capacity — the backpressure signal; retry or shed load
+    Full(T),
+    /// receiver gone; no send can ever succeed again
+    Closed(T),
+}
+
 impl<T> Sender<T> {
+    /// Non-blocking send: enqueue if there is room, otherwise hand the
+    /// item straight back with the reason — the bounded-queue
+    /// backpressure path for producers that must not block.
+    pub fn try_send(&self, item: T) -> Result<(), TrySendError<T>> {
+        let mut q = self.shared.queue.lock().unwrap();
+        if q.closed {
+            return Err(TrySendError::Closed(item));
+        }
+        if q.items.len() >= q.cap {
+            return Err(TrySendError::Full(item));
+        }
+        q.items.push_back(item);
+        self.shared.cond.notify_all();
+        Ok(())
+    }
+
     /// Blocks while the queue is full. Returns Err if the receiver is gone.
     pub fn send(&self, item: T) -> Result<(), T> {
         let mut q = self.shared.queue.lock().unwrap();
@@ -256,6 +281,19 @@ mod tests {
         let (tx, rx) = bounded(1);
         drop(rx);
         assert!(tx.send(1).is_err());
+    }
+
+    #[test]
+    fn try_send_distinguishes_full_from_closed() {
+        let (tx, rx) = bounded(2);
+        assert_eq!(tx.try_send(1), Ok(()));
+        assert_eq!(tx.try_send(2), Ok(()));
+        // at capacity: the item comes straight back, nothing blocks
+        assert_eq!(tx.try_send(3), Err(TrySendError::Full(3)));
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(tx.try_send(3), Ok(()));
+        drop(rx);
+        assert_eq!(tx.try_send(4), Err(TrySendError::Closed(4)));
     }
 
     #[test]

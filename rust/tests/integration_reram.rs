@@ -213,8 +213,12 @@ fn sparse_mapping_compresses_and_executes_bit_identically() {
     for k in 0..4 {
         assert_eq!(mapped.nonzero_cells(k), dense.nonzero_cells(k));
     }
-    let ma = mapper::MappedModel { layers: vec![mapped] };
-    let mb = mapper::MappedModel { layers: vec![dense] };
+    let ma = mapper::MappedModel {
+        layers: vec![std::sync::Arc::new(mapped)],
+    };
+    let mb = mapper::MappedModel {
+        layers: vec![std::sync::Arc::new(dense)],
+    };
     assert_eq!(
         resolution::required_bits(&ma, ResolutionPolicy::Lossless),
         resolution::required_bits(&mb, ResolutionPolicy::Lossless)

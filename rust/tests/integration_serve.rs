@@ -137,6 +137,7 @@ fn serving_engine_is_bit_identical_to_direct_calls() {
                     max_batch,
                     workers,
                     queue_depth: 8,
+                    ..ServeOptions::default()
                 },
             )
             .unwrap();
@@ -226,6 +227,7 @@ fn serving_engine_is_bit_identical_over_reordered_backend() {
                 max_batch,
                 workers,
                 queue_depth: 8,
+                ..ServeOptions::default()
             },
         )
         .unwrap();
@@ -240,6 +242,65 @@ fn serving_engine_is_bit_identical_over_reordered_backend() {
             assert_eq!(
                 row.as_slice(),
                 &direct.data()[i * 6..(i + 1) * 6],
+                "row {i} (workers {workers}, max_batch {max_batch})"
+            );
+        }
+    }
+}
+
+/// Replica-sharded serving is bit-identical to the single-replica path:
+/// the replication planner puts extra copies on the bottleneck-skewed
+/// fixture's wide layer, and a multi-threaded `ServingEngine` over the
+/// sharded backend returns exactly the logits the unreplicated backend
+/// computes directly — whatever batches the workers assemble.
+#[test]
+fn replica_sharded_serving_is_bit_identical_to_single_replica() {
+    use bitslice_reram::reram::timing;
+
+    let stack = fixtures::bottleneck_stack(0x7173);
+    let single = CrossbarBackend::with_bits("xbar", &stack, [3, 3, 3, 1])
+        .unwrap()
+        .with_intra_threads(1);
+    let model = single.mapped().clone();
+    let mut plan = single.plan().clone();
+    let timing0 = timing::plan_timing(&model, &plan);
+    let b = timing0.bottleneck().expect("programmed stack");
+    assert_eq!(timing0.layers[b].layer, "fc2/w", "fixture bottleneck");
+    let spent = timing::fill_replicas(&model, &mut plan, 2 * model.layers[b].fabricated_cells());
+    assert!(spent > 0);
+    assert!(plan.layers[b].replicas >= 2, "budget buys replicas");
+    let sharded = single.replan("xbar-rep", plan).unwrap().with_intra_threads(1);
+
+    let mut rng = Rng::new(59);
+    let n = 24;
+    let x = random_batch(&mut rng, n, 64);
+    let direct = single.infer_batch(&x).unwrap();
+    // direct sharded call agrees bit-for-bit...
+    assert_eq!(sharded.infer_batch(&x).unwrap().data(), direct.data());
+    // ...and so does every batching the multi-threaded engine picks
+    let backend: SharedBackend = Arc::new(sharded);
+    for (workers, max_batch) in [(1usize, 6usize), (3, 4), (4, 64)] {
+        let eng = ServingEngine::start(
+            backend.clone(),
+            ServeOptions {
+                max_batch,
+                workers,
+                queue_depth: 8,
+                ..ServeOptions::default()
+            },
+        )
+        .unwrap();
+        let requests: Vec<Vec<f32>> = (0..n)
+            .map(|i| x.data()[i * 64..(i + 1) * 64].to_vec())
+            .collect();
+        let out = eng.infer_many(requests).unwrap();
+        let stats = eng.shutdown();
+        assert_eq!(stats.requests, n);
+        assert_eq!(stats.errors, 0);
+        for (i, row) in out.iter().enumerate() {
+            assert_eq!(
+                row.as_slice(),
+                &direct.data()[i * 10..(i + 1) * 10],
                 "row {i} (workers {workers}, max_batch {max_batch})"
             );
         }
