@@ -1,12 +1,24 @@
-//! §Perf L3: the training hot path and the standalone kernel graphs.
+//! §Perf L3: the simulator's bit-plane tile hot path, the training hot
+//! path and the standalone kernel graphs.
 //!
-//! Measures (a) one full coordinator step — batch assembly + literal
-//! conversion + `train_step` execution + metric extraction — against (b)
-//! the bare executable call, isolating coordinator overhead, plus the
-//! standalone L1 kernel graphs (quantize / bl1 / crossbar tile) and the
-//! AOT inference path through the unified `serve::InferenceBackend` seam.
+//! The first section needs no XLA artifacts: it sweeps the mid density
+//! band (25-60% programmed cells, where neither zero-skip leverage nor
+//! the compressed scan applies) on a single 128x128 tile, measuring the
+//! byte-wise Dense scan against the popcount `BitPlanes` path, asserts
+//! bit-exact agreement across all three storage layouts at every swept
+//! density and resolution, and writes `BENCH_bitplane.json` (CI runs it
+//! with `--smoke`). The acceptance bar: >= 1.5x over the Dense byte path
+//! at 40% cell density.
 //!
-//! Run: `cargo bench --bench runtime_hot_path`
+//! The remaining sections measure (a) one full coordinator step — batch
+//! assembly + literal conversion + `train_step` execution + metric
+//! extraction — against (b) the bare executable call, isolating
+//! coordinator overhead, plus the standalone L1 kernel graphs (quantize /
+//! bl1 / crossbar tile) and the AOT inference path through the unified
+//! `serve::InferenceBackend` seam; they SKIP when `make artifacts` has
+//! not run.
+//!
+//! Run: `cargo bench --bench runtime_hot_path [-- --smoke]`
 
 #[path = "harness.rs"]
 mod harness;
@@ -18,16 +30,162 @@ use bitslice_reram::coordinator::metrics::MetricsLog;
 use bitslice_reram::coordinator::Trainer;
 use bitslice_reram::data::loader::{assemble, BatchPlan};
 use bitslice_reram::data::Dataset;
+use bitslice_reram::quant::N_SLICES;
+use bitslice_reram::reram::crossbar::{pack_wave, Crossbar, StorageFormat, XBAR_COLS, XBAR_ROWS};
+use bitslice_reram::reram::{mapper, sim};
 use bitslice_reram::runtime::{Engine, Manifest};
 use bitslice_reram::tensor::Tensor;
+use bitslice_reram::util::json::{num, obj, Json};
 use bitslice_reram::util::rng::Rng;
 
+const LOSSLESS: [u32; N_SLICES] = [10, 10, 10, 10];
+
+/// A full 128x128 tile with exactly `round(density * 128 * 128)` cells
+/// programmed to random nonzero values at uniformly random positions.
+fn tile_at_density(rng: &mut Rng, density: f64) -> Crossbar {
+    let cells = XBAR_ROWS * XBAR_COLS;
+    let n = (density * cells as f64).round() as usize;
+    // Fisher-Yates over the flat cell index: exactly n distinct slots
+    let mut slots: Vec<usize> = (0..cells).collect();
+    for i in (1..cells).rev() {
+        slots.swap(i, rng.below(i + 1));
+    }
+    let mut xb = Crossbar::zeros(XBAR_ROWS, XBAR_COLS);
+    for &s in slots.iter().take(n) {
+        xb.set(s / XBAR_COLS, s % XBAR_COLS, 1 + rng.below(3) as u8);
+    }
+    xb
+}
+
+/// The artifact-independent bit-plane hot-path sweep (see module docs).
+fn bitplane_sweep(smoke: bool) -> anyhow::Result<()> {
+    let mut rng = Rng::new(29);
+    let target = Duration::from_millis(if smoke { 150 } else { 600 });
+    harness::section("bit-plane popcount scan vs dense byte scan (mid-band tile densities)");
+    let mut rows_json: Vec<Json> = Vec::new();
+    let mut speedup_at_040 = None;
+    for density in [0.25f64, 0.30, 0.40, 0.50, 0.60] {
+        let tile = tile_at_density(&mut rng, density);
+        let dense = tile.in_format(StorageFormat::Dense);
+        let bp = tile.in_format(StorageFormat::BitPlanes);
+        let comp = tile.in_format(StorageFormat::Compressed);
+        // a half-on activation plane, the byte form and its packed wave
+        let bits: Vec<u8> = (0..XBAR_ROWS).map(|_| rng.below(2) as u8).collect();
+        let wave = pack_wave(&bits);
+
+        let mut out = vec![0u32; XBAR_COLS];
+        let sd = harness::bench(&format!("dense byte scan d={density}"), target, || {
+            dense.bitline_currents(&bits, &mut out);
+            std::hint::black_box(&out);
+        });
+        let mut out_bp = vec![0u32; XBAR_COLS];
+        let sb = harness::bench(&format!("bit-plane wave scan d={density}"), target, || {
+            let _ = bp.bitline_currents_wave(&wave, &mut out_bp);
+            std::hint::black_box(&out_bp);
+        });
+        let speedup = sd.mean.as_secs_f64() / sb.mean.as_secs_f64();
+
+        // tile-level bit-exactness: every layout, byte and wave entry
+        // points, one shared answer
+        dense.bitline_currents(&bits, &mut out);
+        let _ = bp.bitline_currents_wave(&wave, &mut out_bp);
+        assert_eq!(out, out_bp, "dense byte vs bit-plane wave at d={density}");
+        let mut check = vec![0u32; XBAR_COLS];
+        comp.bitline_currents(&bits, &mut check);
+        assert_eq!(out, check, "compressed byte scan at d={density}");
+        bp.bitline_currents(&bits, &mut check);
+        assert_eq!(out, check, "bit-plane byte entry point at d={density}");
+        let _ = dense.bitline_currents_wave(&wave, &mut check);
+        assert_eq!(out, check, "dense wave entry point at d={density}");
+
+        println!(
+            "-> cell density {density}: {} bytes dense / {} bit-plane, speedup {speedup:.2}x",
+            dense.storage_bytes(),
+            bp.storage_bytes(),
+        );
+        if density == 0.40 {
+            speedup_at_040 = Some(speedup);
+        }
+        rows_json.push(obj(vec![
+            ("cell_density", num(density)),
+            ("dense_ms", num(sd.mean_ms())),
+            ("bitplane_ms", num(sb.mean_ms())),
+            ("speedup", num(speedup)),
+            ("dense_bytes", num(dense.storage_bytes() as f64)),
+            ("bitplane_bytes", num(bp.storage_bytes() as f64)),
+        ]));
+    }
+
+    // forward-level bit-exactness across the same band, all three
+    // layouts, at clipping and non-clipping ADC resolutions
+    let batch = if smoke { 2 } else { 8 };
+    let x = Tensor::new(
+        vec![batch, 256],
+        (0..batch * 256).map(|_| rng.next_f32()).collect(),
+    )?;
+    for density in [0.25f64, 0.40, 0.60] {
+        let mut data = vec![0.0f32; 256 * 96];
+        for v in data.iter_mut() {
+            if (rng.below(1000) as f64) < density * 1000.0 {
+                *v = (rng.next_f32() - 0.5) * 2.0;
+            }
+        }
+        let w = Tensor::new(vec![256, 96], data)?;
+        let layer = mapper::map_layer("w", &w)?;
+        for bits in [LOSSLESS, [3, 3, 3, 1], [2, 2, 2, 2]] {
+            let auto = sim::forward(&layer, &x, &bits);
+            for fmt in [
+                StorageFormat::Dense,
+                StorageFormat::Compressed,
+                StorageFormat::BitPlanes,
+            ] {
+                let forced = sim::forward(&layer.with_storage(fmt), &x, &bits);
+                assert_eq!(
+                    forced.data(),
+                    auto.data(),
+                    "{fmt:?} disagrees at weight density {density}, adc {bits:?}"
+                );
+            }
+        }
+    }
+    println!("OK: all three layouts bit-exact at every swept density and resolution");
+
+    // Acceptance bar: the popcount path must beat the byte-wise Dense
+    // scan by >= 1.5x in the middle of the band
+    let speedup = speedup_at_040.expect("0.40 is in the sweep");
+    assert!(
+        speedup >= 1.5,
+        "bit-plane path only {speedup:.2}x over the dense byte scan at 40% cell density"
+    );
+    println!("OK: {speedup:.2}x over the dense byte scan at 40% cell density");
+
+    let doc = obj(vec![
+        (
+            "tile",
+            obj(vec![
+                ("rows", num(XBAR_ROWS as f64)),
+                ("cols", num(XBAR_COLS as f64)),
+            ]),
+        ),
+        ("smoke", Json::Bool(smoke)),
+        ("speedup_at_040_density", num(speedup)),
+        ("sweep", Json::Arr(rows_json)),
+    ]);
+    std::fs::write("BENCH_bitplane.json", doc.to_string())?;
+    println!("wrote BENCH_bitplane.json");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // runs first: needs no artifacts, and CI exercises exactly this part
+    bitplane_sweep(smoke)?;
+
     let cfg = RunConfig::defaults("mlp");
     let manifest = match Manifest::load(&cfg.artifacts_dir) {
         Ok(m) => m,
         Err(_) => {
-            eprintln!("SKIP: run `make artifacts` first");
+            eprintln!("SKIP remaining sections: run `make artifacts` first");
             return Ok(());
         }
     };

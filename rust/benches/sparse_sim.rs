@@ -1,11 +1,15 @@
-//! §Perf: sparsity-aware crossbar storage (Dense vs Compressed tiles).
+//! §Perf: sparsity-aware crossbar storage (Dense vs BitPlanes vs
+//! Compressed tiles).
 //!
-//! Sweeps weight density on a 784x300 MLP layer from dense-random down to
-//! Bl1-level bit-slice sparsity, maps each point twice — once forced to
-//! row-major dense tiles, once with the density-chosen (packed) formats —
-//! and times the batched simulator forward on both. The two layouts must
-//! agree bit-exactly (integer accumulation commutes); the packed layout
-//! must be >= 2x faster once the mean slice sparsity reaches 85% zeros.
+//! Sweeps weight density on a 784x300 MLP layer from dense-random through
+//! the mid band (25-60%, where the density-chosen mapping packs
+//! bit-planes) down to Bl1-level bit-slice sparsity, maps each point
+//! twice — once forced to row-major dense tiles, once with the
+//! density-chosen (packed) formats — and times the batched simulator
+//! forward on both. The layouts must agree bit-exactly (integer
+//! accumulation commutes); the packed layout must be >= 2x faster once
+//! the mean slice sparsity reaches 85% zeros (the mid-band popcount win
+//! has its own bar in `runtime_hot_path` / `BENCH_bitplane.json`).
 //! Results (per-density timings, speedups, tile-format census, storage
 //! bytes) are written to `BENCH_sparse.json`.
 //!
@@ -72,7 +76,7 @@ fn main() -> anyhow::Result<()> {
     harness::section("density sweep: packed (density-chosen) vs forced-dense forward");
     let mut rows_json: Vec<Json> = Vec::new();
     let mut sparse_point: Option<(f64, f64)> = None; // (zero_frac, speedup)
-    for density in [1.0f64, 0.5, 0.25, 0.10, 0.05, 0.02] {
+    for density in [1.0f64, 0.6, 0.5, 0.4, 0.3, 0.25, 0.10, 0.05, 0.02] {
         let w = fixtures::weights_at_density(&mut rng, ROWS, COLS, density);
         let packed = mapper::map_layer("w", &w)?;
         let dense = packed.with_storage(StorageFormat::Dense);
@@ -97,10 +101,11 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(a.data(), b.data(), "layouts disagree at density {density}");
 
         println!(
-            "-> density {density}: slice zeros {:.1}%, tiles {} dense / {} compressed / \
-             {} skipped, bytes {} vs {} dense, speedup {speedup:.2}x",
+            "-> density {density}: slice zeros {:.1}%, tiles {} dense / {} bit-plane / \
+             {} compressed / {} skipped, bytes {} vs {} dense, speedup {speedup:.2}x",
             zero_frac * 100.0,
             stats.dense_tiles,
+            stats.bitplane_tiles,
             stats.compressed_tiles,
             stats.skipped_tiles,
             stats.bytes,
@@ -113,6 +118,7 @@ fn main() -> anyhow::Result<()> {
             ("weight_density", num(density)),
             ("slice_zero_fraction", num(zero_frac)),
             ("dense_tiles", num(stats.dense_tiles as f64)),
+            ("bitplane_tiles", num(stats.bitplane_tiles as f64)),
             ("compressed_tiles", num(stats.compressed_tiles as f64)),
             ("skipped_tiles", num(stats.skipped_tiles as f64)),
             ("bytes", num(stats.bytes as f64)),

@@ -239,23 +239,25 @@ pub fn planner_json(
 pub use crate::reram::mapper::StorageRow;
 
 /// Render the per-layer crossbar storage census (markdown): tiles dense
-/// vs compressed, the fully-zero tiles the simulator skips, mapped-cell
-/// density, active wordline/column occupancy of the programmed tiles,
-/// and bytes under the chosen layouts vs an all-dense layout.
+/// vs bit-plane vs compressed, the fully-zero tiles the simulator skips,
+/// mapped-cell density, active wordline/column occupancy of the
+/// programmed tiles, and bytes under the chosen layouts vs an all-dense
+/// layout.
 pub fn storage_table(title: &str, rows: &[StorageRow]) -> String {
     let mut out = String::new();
     out.push_str(&format!("### {title}\n\n"));
     out.push_str(
-        "| Layer | Dense | Compressed | Skipped | Density | Act. WL | Act. cols | Bytes | Dense bytes | Saving |\n\
-         |-------|-------|------------|---------|---------|---------|-----------|-------|-------------|--------|\n",
+        "| Layer | Dense | BitPlanes | Compressed | Skipped | Density | Act. WL | Act. cols | Bytes | Dense bytes | Saving |\n\
+         |-------|-------|-----------|------------|---------|---------|---------|-----------|-------|-------------|--------|\n",
     );
     let mut total = crate::reram::mapper::StorageStats::default();
     for r in rows {
         let s = &r.stats;
         out.push_str(&format!(
-            "| {} | {} | {} | {} | {:.2}% | {:.1}% | {:.1}% | {} | {} | {:.2}x |\n",
+            "| {} | {} | {} | {} | {} | {:.2}% | {:.1}% | {:.1}% | {} | {} | {:.2}x |\n",
             r.layer,
             s.dense_tiles,
+            s.bitplane_tiles,
             s.compressed_tiles,
             s.skipped_tiles,
             s.density() * 100.0,
@@ -269,8 +271,9 @@ pub fn storage_table(title: &str, rows: &[StorageRow]) -> String {
     }
     if rows.len() > 1 {
         out.push_str(&format!(
-            "| total | {} | {} | {} | {:.2}% | {:.1}% | {:.1}% | {} | {} | {:.2}x |\n",
+            "| total | {} | {} | {} | {} | {:.2}% | {:.1}% | {:.1}% | {} | {} | {:.2}x |\n",
             total.dense_tiles,
+            total.bitplane_tiles,
             total.compressed_tiles,
             total.skipped_tiles,
             total.density() * 100.0,
@@ -294,6 +297,7 @@ pub fn storage_json(rows: &[StorageRow]) -> Json {
                 obj(vec![
                     ("layer", s(&r.layer)),
                     ("dense_tiles", num(st.dense_tiles as f64)),
+                    ("bitplane_tiles", num(st.bitplane_tiles as f64)),
                     ("compressed_tiles", num(st.compressed_tiles as f64)),
                     ("skipped_tiles", num(st.skipped_tiles as f64)),
                     ("programmed_cells", num(st.programmed_cells as f64)),
@@ -376,10 +380,7 @@ pub fn reorder_json(rows: &[ReorderRow]) -> Json {
             ("wordline_slots", num(st.wordline_slots as f64)),
             ("active_columns", num(st.active_columns as f64)),
             ("column_slots", num(st.column_slots as f64)),
-            (
-                "programmed_tiles",
-                num((st.dense_tiles + st.compressed_tiles) as f64),
-            ),
+            ("programmed_tiles", num(st.programmed_tiles() as f64)),
             ("skipped_tiles", num(st.skipped_tiles as f64)),
             ("bytes", num(st.bytes as f64)),
         ])
@@ -667,11 +668,12 @@ mod tests {
         assert_eq!(layers[0].get("effective_cycles").unwrap().as_f64(), Some(768.0));
     }
 
-    fn storage_row(layer: &str, dense: usize, comp: usize) -> StorageRow {
+    fn storage_row(layer: &str, dense: usize, bp: usize, comp: usize) -> StorageRow {
         StorageRow {
             layer: layer.into(),
             stats: crate::reram::mapper::StorageStats {
                 dense_tiles: dense,
+                bitplane_tiles: bp,
                 compressed_tiles: comp,
                 skipped_tiles: 1,
                 programmed_cells: 500,
@@ -688,26 +690,30 @@ mod tests {
 
     #[test]
     fn storage_table_formats_rows_and_total() {
-        let t = storage_table("storage", &[storage_row("fc1/w", 2, 5), storage_row("fc2/w", 0, 3)]);
+        let t = storage_table(
+            "storage",
+            &[storage_row("fc1/w", 2, 4, 5), storage_row("fc2/w", 0, 1, 3)],
+        );
         assert!(
-            t.contains("| fc1/w | 2 | 5 | 1 | 5.00% | 40.0% | 40.0% | 2600 | 10000 | 3.85x |"),
+            t.contains("| fc1/w | 2 | 4 | 5 | 1 | 5.00% | 40.0% | 40.0% | 2600 | 10000 | 3.85x |"),
             "{t}"
         );
         assert!(
-            t.contains("| total | 2 | 8 | 2 | 5.00% | 40.0% | 40.0% | 5200 | 20000 | 3.85x |"),
+            t.contains("| total | 2 | 5 | 8 | 2 | 5.00% | 40.0% | 40.0% | 5200 | 20000 | 3.85x |"),
             "{t}"
         );
         // single-row tables skip the redundant total line
-        let one = storage_table("storage", &[storage_row("fc1/w", 2, 5)]);
+        let one = storage_table("storage", &[storage_row("fc1/w", 2, 4, 5)]);
         assert!(!one.contains("| total |"), "{one}");
     }
 
     #[test]
     fn storage_json_roundtrips() {
-        let j = storage_json(&[storage_row("fc1/w", 2, 5)]);
+        let j = storage_json(&[storage_row("fc1/w", 2, 4, 5)]);
         let back = crate::util::json::parse(&j.to_string()).unwrap();
         let row = &back.as_arr().unwrap()[0];
         assert_eq!(row.get("layer").unwrap().as_str(), Some("fc1/w"));
+        assert_eq!(row.get("bitplane_tiles").unwrap().as_usize(), Some(4));
         assert_eq!(row.get("compressed_tiles").unwrap().as_usize(), Some(5));
         assert_eq!(row.get("bytes").unwrap().as_usize(), Some(2600));
         assert_eq!(row.get("dense_bytes").unwrap().as_usize(), Some(10000));
@@ -716,7 +722,7 @@ mod tests {
     }
 
     fn reorder_row() -> ReorderRow {
-        let mut baseline = storage_row("fc1/w", 2, 5).stats;
+        let mut baseline = storage_row("fc1/w", 2, 4, 5).stats;
         baseline.active_wordlines = 120;
         baseline.active_columns = 60;
         baseline.skipped_tiles = 0;
@@ -759,6 +765,8 @@ mod tests {
         assert_eq!(b.get("active_wordlines").unwrap().as_usize(), Some(120));
         assert_eq!(r.get("active_wordlines").unwrap().as_usize(), Some(40));
         assert_eq!(r.get("skipped_tiles").unwrap().as_usize(), Some(4));
+        // programmed tiles sum all three storage formats
+        assert_eq!(b.get("programmed_tiles").unwrap().as_usize(), Some(11));
     }
 
     #[test]

@@ -23,11 +23,23 @@
 //!   ([`Crossbar::bitline_currents_active`]) skips structurally-zero
 //!   output columns outright — the remaining O(cols) term at extreme
 //!   sparsity.
+//! * **BitPlanes** — column-major packed cell-bit masks: per column, one
+//!   `[u64; 2]` mask per cell bit over the <= 128 rows (see the packing
+//!   convention in the `reram` module docs). With the activation
+//!   bit-plane packed into the same `[u64; 2]` wave form, a column's
+//!   current is `popcount(plane0 & wave) + (popcount(plane1 & wave) << 1)`
+//!   — ~4 word ops instead of up to 128 byte multiply-adds, the win in
+//!   the *moderate* density band where `Compressed` has no skip leverage
+//!   left but the dense byte scan is pure waste. Carries the same
+//!   nonzero-column index as `Compressed`, so the ADC / energy /
+//!   resolution / timing accounting is identical.
 //!
-//! The representation is chosen per tile from its measured density (see
-//! [`COMPRESS_MAX_DENSITY`] and [`chosen_format`]); the mapper builds
-//! compressed tiles directly without a dense intermediate. The
-//! programmed-cell census is cached in the tile (maintained by
+//! The representation is chosen per tile from its measured density — a
+//! three-band policy with one definition, [`chosen_format`]: `Compressed`
+//! at or below [`COMPRESS_MAX_DENSITY`], `BitPlanes` in the mid band up
+//! to [`BITPLANE_MAX_DENSITY`], `Dense` above it. The mapper builds
+//! compressed and bit-plane tiles directly without a dense intermediate.
+//! The programmed-cell census is cached in the tile (maintained by
 //! [`Crossbar::set`], established at build time), so
 //! [`Crossbar::nonzero_cells`] is O(1) — the energy roll-up, the planner's
 //! scoring loop and the reports stop recounting `rows * cols` cells.
@@ -47,9 +59,23 @@ pub const CELL_MAX: u8 = 3;
 /// one sequential add per cell, so memory parity sits at 1/3 density and
 /// the sparse scan wins comfortably below it. A quarter leaves margin for
 /// the scatter penalty and the `row_ptr` overhead; Bl1-level slices
-/// (>= 85% zeros, i.e. <= 15% density) sit far below it, while
-/// dense-random slices (~37% per sign grid) stay dense.
+/// (>= 85% zeros, i.e. <= 15% density) sit far below it.
 pub const COMPRESS_MAX_DENSITY: f64 = 0.25;
+
+/// Densest tile stored as packed bit-planes; above this the tile stays in
+/// the row-major byte layout.
+///
+/// The popcount scan's cost is density-independent (~4 word ops per
+/// column per plane), so the band's *lower* edge is simply where
+/// `Compressed` stops winning ([`COMPRESS_MAX_DENSITY`]). The upper edge
+/// keeps the byte layout as the canonical near-full representation:
+/// above ~60% density nearly every column is active anyway, `set`-heavy
+/// programming is cheapest on flat bytes, and the dense scan is the
+/// paper's naive digital baseline — the benches need it to stay honestly
+/// reachable. Dense-random slices (~37% per sign grid) land mid-band and
+/// get the popcount path; bit-slice-L1-trained slices fall through to
+/// `Compressed`.
+pub const BITPLANE_MAX_DENSITY: f64 = 0.60;
 
 /// How a tile's cells are laid out in memory.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -58,18 +84,37 @@ pub enum StorageFormat {
     Dense,
     /// per-row packed `(col, val)` pairs + nonzero-wordline index
     Compressed,
+    /// column-major `[u64; 2]` cell-bit masks + nonzero-column index
+    BitPlanes,
 }
 
 /// The format [`Crossbar::pack`] and the mapper choose for a tile with
-/// `nonzero` of `rows * cols` cells programmed — the one density-threshold
-/// definition every call site shares.
+/// `nonzero` of `rows * cols` cells programmed — the one density-band
+/// policy every call site shares: `Compressed` at or below
+/// [`COMPRESS_MAX_DENSITY`], `BitPlanes` up to [`BITPLANE_MAX_DENSITY`],
+/// `Dense` above.
 pub fn chosen_format(nonzero: usize, rows: usize, cols: usize) -> StorageFormat {
     let cells = (rows * cols).max(1);
-    if nonzero as f64 / cells as f64 <= COMPRESS_MAX_DENSITY {
+    let density = nonzero as f64 / cells as f64;
+    if density <= COMPRESS_MAX_DENSITY {
         StorageFormat::Compressed
+    } else if density <= BITPLANE_MAX_DENSITY {
+        StorageFormat::BitPlanes
     } else {
         StorageFormat::Dense
     }
+}
+
+/// Pack a byte bit-plane (`bits[r]` non-zero = wordline `r` driven) into
+/// the `[u64; 2]` wave-mask form of the BitPlanes convention: wordline
+/// `r` is bit `r % 64` of word `r / 64`.
+pub fn pack_wave(bits: &[u8]) -> [u64; 2] {
+    assert!(bits.len() <= XBAR_ROWS, "wave of {} wordlines", bits.len());
+    let mut wave = [0u64; 2];
+    for (r, &b) in bits.iter().enumerate() {
+        wave[r >> 6] |= ((b != 0) as u64) << (r & 63);
+    }
+    wave
 }
 
 /// Physical cell storage of one tile — see the module docs for when each
@@ -94,6 +139,48 @@ enum CellArray {
         /// skipped outright
         active_cols: Vec<u16>,
     },
+    BitPlanes {
+        /// per column, the mask of rows whose cell has bit 0 set —
+        /// row `r` is bit `r % 64` of word `r / 64`
+        plane0: Vec<[u64; 2]>,
+        /// per column, the mask of rows whose cell has bit 1 set
+        plane1: Vec<[u64; 2]>,
+        /// nonzero-column index, ascending — same ADC-skip semantics as
+        /// the compressed layout's
+        active_cols: Vec<u16>,
+    },
+}
+
+/// Assemble the packed bit-plane arrays from `(row, col, val)` triples
+/// (positions unique, `row < rows`, `col < cols`, `val` in `1..=3`) — the
+/// one bit-plane builder [`Crossbar::from_cells`] and
+/// [`Crossbar::convert`] share. Triples may arrive in any order: each
+/// lands as independent OR-ed bits.
+fn build_bitplanes(
+    rows: usize,
+    cols: usize,
+    cells: impl Iterator<Item = (usize, u16, u8)>,
+) -> CellArray {
+    debug_assert!(rows <= XBAR_ROWS);
+    let mut plane0 = vec![[0u64; 2]; cols];
+    let mut plane1 = vec![[0u64; 2]; cols];
+    let mut col_seen = vec![false; cols];
+    for (r, c, v) in cells {
+        let c = c as usize;
+        let (w, b) = (r >> 6, r & 63);
+        plane0[c][w] |= ((v & 1) as u64) << b;
+        plane1[c][w] |= (((v >> 1) & 1) as u64) << b;
+        col_seen[c] = true;
+    }
+    let active_cols = (0..cols)
+        .filter(|&c| col_seen[c])
+        .map(|c| c as u16)
+        .collect();
+    CellArray::BitPlanes {
+        plane0,
+        plane1,
+        active_cols,
+    }
 }
 
 /// Assemble the CSR arrays from row-major `(row, col, val)` triples (row
@@ -192,6 +279,12 @@ impl Crossbar {
                 }
                 build_compressed(rows, cols, cells.iter().map(|&(r, c, v)| (r as usize, c, v)))
             }
+            StorageFormat::BitPlanes => {
+                for &(r, c, v) in &cells {
+                    Self::check_cell(rows, cols, r as usize, c as usize, v);
+                }
+                build_bitplanes(rows, cols, cells.iter().map(|&(r, c, v)| (r as usize, c, v)))
+            }
         };
         Crossbar {
             store,
@@ -219,6 +312,7 @@ impl Crossbar {
         match self.store {
             CellArray::Dense(_) => StorageFormat::Dense,
             CellArray::Compressed { .. } => StorageFormat::Compressed,
+            CellArray::BitPlanes { .. } => StorageFormat::BitPlanes,
         }
     }
 
@@ -247,6 +341,14 @@ impl Crossbar {
                     + entry_vals.len()
                     + row_ptr.len() * std::mem::size_of::<u32>()
                     + active_rows.len() * std::mem::size_of::<u16>()
+                    + active_cols.len() * std::mem::size_of::<u16>()
+            }
+            CellArray::BitPlanes {
+                plane0,
+                plane1,
+                active_cols,
+            } => {
+                (plane0.len() + plane1.len()) * std::mem::size_of::<[u64; 2]>()
                     + active_cols.len() * std::mem::size_of::<u16>()
             }
         }
@@ -322,6 +424,28 @@ impl Crossbar {
                     }
                 }
             }
+            CellArray::BitPlanes {
+                plane0,
+                plane1,
+                active_cols,
+            } => {
+                let (w, b) = (r >> 6, r & 63);
+                let old = (((plane1[c][w] >> b) & 1) << 1) | ((plane0[c][w] >> b) & 1);
+                plane0[c][w] = (plane0[c][w] & !(1 << b)) | (((v & 1) as u64) << b);
+                plane1[c][w] = (plane1[c][w] & !(1 << b)) | ((((v >> 1) & 1) as u64) << b);
+                self.nonzero += (v != 0) as usize;
+                self.nonzero -= (old != 0) as usize;
+                // keep the nonzero-column index exact: the column is live
+                // iff any plane word still holds a bit
+                let live = (plane0[c][0] | plane0[c][1] | plane1[c][0] | plane1[c][1]) != 0;
+                match (live, active_cols.binary_search(&(c as u16))) {
+                    (true, Err(i)) => active_cols.insert(i, c as u16),
+                    (false, Ok(i)) => {
+                        active_cols.remove(i);
+                    }
+                    _ => {}
+                }
+            }
         }
     }
 
@@ -346,6 +470,10 @@ impl Crossbar {
                     Err(_) => 0,
                 }
             }
+            CellArray::BitPlanes { plane0, plane1, .. } => {
+                let (w, b) = (r >> 6, r & 63);
+                ((((plane1[c][w] >> b) & 1) << 1) | ((plane0[c][w] >> b) & 1)) as u8
+            }
         }
     }
 
@@ -355,47 +483,67 @@ impl Crossbar {
         self.nonzero
     }
 
+    /// The programmed cells as row-major `(row, col, val)` triples (row
+    /// ascending, column ascending within a row) — the layout-neutral
+    /// interchange form `convert` rebuilds any representation from.
+    fn triples(&self) -> Vec<(usize, u16, u8)> {
+        let mut out = Vec::with_capacity(self.nonzero);
+        match &self.store {
+            CellArray::Dense(cells) => {
+                for r in 0..self.rows {
+                    for c in 0..self.cols {
+                        let v = cells[r * self.cols + c];
+                        if v != 0 {
+                            out.push((r, c as u16, v));
+                        }
+                    }
+                }
+            }
+            CellArray::Compressed {
+                row_ptr,
+                entry_cols,
+                entry_vals,
+                ..
+            } => {
+                for r in 0..self.rows {
+                    for i in row_ptr[r] as usize..row_ptr[r + 1] as usize {
+                        out.push((r, entry_cols[i], entry_vals[i]));
+                    }
+                }
+            }
+            CellArray::BitPlanes { plane0, plane1, .. } => {
+                for r in 0..self.rows {
+                    let (w, b) = (r >> 6, r & 63);
+                    for c in 0..self.cols {
+                        let v = ((((plane1[c][w] >> b) & 1) << 1) | ((plane0[c][w] >> b) & 1)) as u8;
+                        if v != 0 {
+                            out.push((r, c as u16, v));
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
     /// Re-lay the cells out in `fmt` (no-op when already there).
     pub fn convert(&mut self, fmt: StorageFormat) {
         if self.format() == fmt {
             return;
         }
-        match fmt {
+        let (rows, cols) = (self.rows, self.cols);
+        let triples = self.triples();
+        self.store = match fmt {
             StorageFormat::Dense => {
-                let mut data = vec![0u8; self.rows * self.cols];
-                if let CellArray::Compressed {
-                    row_ptr,
-                    entry_cols,
-                    entry_vals,
-                    ..
-                } = &self.store
-                {
-                    for r in 0..self.rows {
-                        for i in row_ptr[r] as usize..row_ptr[r + 1] as usize {
-                            data[r * self.cols + entry_cols[i] as usize] = entry_vals[i];
-                        }
-                    }
+                let mut data = vec![0u8; rows * cols];
+                for &(r, c, v) in &triples {
+                    data[r * cols + c as usize] = v;
                 }
-                self.store = CellArray::Dense(data);
+                CellArray::Dense(data)
             }
-            StorageFormat::Compressed => {
-                let (rows, cols) = (self.rows, self.cols);
-                let CellArray::Dense(cells) = &self.store else {
-                    return;
-                };
-                let mut triples = Vec::with_capacity(self.nonzero);
-                for r in 0..rows {
-                    for c in 0..cols {
-                        let v = cells[r * cols + c];
-                        if v != 0 {
-                            triples.push((r, c as u16, v));
-                        }
-                    }
-                }
-                let packed = build_compressed(rows, cols, triples.into_iter());
-                self.store = packed;
-            }
-        }
+            StorageFormat::Compressed => build_compressed(rows, cols, triples.into_iter()),
+            StorageFormat::BitPlanes => build_bitplanes(rows, cols, triples.into_iter()),
+        };
     }
 
     /// A clone laid out in `fmt` — the benches' and the representation
@@ -406,8 +554,9 @@ impl Crossbar {
         xb
     }
 
-    /// Choose the storage format from the measured density (see
-    /// [`COMPRESS_MAX_DENSITY`]) — call once programming is complete.
+    /// Choose the storage format from the measured density (the
+    /// [`chosen_format`] band policy) — call once programming is
+    /// complete.
     pub fn pack(&mut self) {
         self.convert(chosen_format(self.nonzero, self.rows, self.cols));
     }
@@ -434,20 +583,36 @@ impl Crossbar {
                     sums[c as usize] += v as u32;
                 }
             }
+            CellArray::BitPlanes { plane0, plane1, .. } => {
+                for (s, (p0, p1)) in sums.iter_mut().zip(plane0.iter().zip(plane1)) {
+                    *s = p0[0].count_ones()
+                        + p0[1].count_ones()
+                        + ((p1[0].count_ones() + p1[1].count_ones()) << 1);
+                }
+            }
         }
         sums
     }
 
     /// Wordlines holding >= 1 programmed cell — the rows the sparse
     /// current scan visits. O(1) in the compressed layout (the cached
-    /// nonzero-wordline index); a recount in the dense layout (stats
-    /// paths only, never the hot loop).
+    /// nonzero-wordline index); a recount in the dense layout and a
+    /// cheap per-column OR in the bit-plane layout (stats paths only,
+    /// never the hot loop).
     pub fn active_wordlines(&self) -> usize {
         match &self.store {
             CellArray::Dense(cells) => (0..self.rows)
                 .filter(|&r| cells[r * self.cols..(r + 1) * self.cols].iter().any(|&v| v != 0))
                 .count(),
             CellArray::Compressed { active_rows, .. } => active_rows.len(),
+            CellArray::BitPlanes { plane0, plane1, .. } => {
+                let mut live = [0u64; 2];
+                for (p0, p1) in plane0.iter().zip(plane1) {
+                    live[0] |= p0[0] | p1[0];
+                    live[1] |= p0[1] | p1[1];
+                }
+                (live[0].count_ones() + live[1].count_ones()) as usize
+            }
         }
     }
 
@@ -468,29 +633,32 @@ impl Crossbar {
                 seen.iter().filter(|&&s| s).count()
             }
             CellArray::Compressed { active_cols, .. } => active_cols.len(),
+            CellArray::BitPlanes { active_cols, .. } => active_cols.len(),
         }
     }
 
     /// The nonzero-column index (ascending), when the layout caches one:
-    /// `Some` for compressed tiles, `None` for dense ones. A column
-    /// outside the index holds no programmed cell and can never carry
-    /// current.
+    /// `Some` for compressed and bit-plane tiles, `None` for dense ones.
+    /// A column outside the index holds no programmed cell and can never
+    /// carry current.
     pub fn active_cols(&self) -> Option<&[u16]> {
         match &self.store {
             CellArray::Dense(_) => None,
             CellArray::Compressed { active_cols, .. } => Some(active_cols),
+            CellArray::BitPlanes { active_cols, .. } => Some(active_cols),
         }
     }
 
     /// Columns whose ADC actually converts under this layout — what the
     /// energy model bills and the resolution census counts. Compressed
-    /// tiles convert only their nonzero-column index; dense tiles carry
-    /// no index, so every column converts (matching the dense branch of
-    /// the simulator's ADC loop exactly). O(1) in both layouts.
+    /// and bit-plane tiles convert only their nonzero-column index; dense
+    /// tiles carry no index, so every column converts (matching the dense
+    /// branch of the simulator's ADC loop exactly). O(1) in every layout.
     pub fn converting_columns(&self) -> usize {
         match &self.store {
             CellArray::Dense(_) => self.cols,
             CellArray::Compressed { active_cols, .. } => active_cols.len(),
+            CellArray::BitPlanes { active_cols, .. } => active_cols.len(),
         }
     }
 
@@ -528,7 +696,77 @@ impl Crossbar {
                     }
                 }
             }
+            // the popcount layout has no byte path: pack and take it
+            CellArray::BitPlanes { .. } => self.accumulate_currents_wave(&pack_wave(bits), out),
         }
+    }
+
+    /// Wave-mask twin of [`Self::accumulate_currents`]: one bit-plane's
+    /// currents from the packed `[u64; 2]` wordline mask. In the
+    /// bit-plane layout this is the popcount hot path — ~4 word ops per
+    /// active column; the byte layouts unpack the wave bit-by-row so
+    /// every representation answers the same wave bit-exactly.
+    fn accumulate_currents_wave(&self, wave: &[u64; 2], out: &mut [u32]) {
+        match &self.store {
+            CellArray::BitPlanes {
+                plane0,
+                plane1,
+                active_cols,
+            } => {
+                for &c in active_cols {
+                    let c = c as usize;
+                    let (p0, p1) = (plane0[c], plane1[c]);
+                    let ones = (p0[0] & wave[0]).count_ones() + (p0[1] & wave[1]).count_ones();
+                    let twos = (p1[0] & wave[0]).count_ones() + (p1[1] & wave[1]).count_ones();
+                    out[c] += ones + (twos << 1);
+                }
+            }
+            CellArray::Dense(cells) => {
+                for r in 0..self.rows {
+                    if (wave[r >> 6] >> (r & 63)) & 1 == 0 {
+                        continue;
+                    }
+                    let row = &cells[r * self.cols..(r + 1) * self.cols];
+                    for (o, &v) in out.iter_mut().zip(row) {
+                        *o += v as u32;
+                    }
+                }
+            }
+            CellArray::Compressed {
+                row_ptr,
+                entry_cols,
+                entry_vals,
+                active_rows,
+                ..
+            } => {
+                for &r in active_rows {
+                    let r = r as usize;
+                    if (wave[r >> 6] >> (r & 63)) & 1 == 0 {
+                        continue;
+                    }
+                    let (lo, hi) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
+                    for (&c, &v) in entry_cols[lo..hi].iter().zip(&entry_vals[lo..hi]) {
+                        out[c as usize] += v as u32;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Hard-assert the wave drives no wordline at or beyond `self.rows`.
+    /// Every layout would ignore such bits (the scans are row-bounded and
+    /// the plane masks hold no high bits), so a stray bit is always a
+    /// caller packing bug — surfaced here rather than silently dropped,
+    /// mirroring the byte path's `bits.len()` hard assert.
+    fn check_wave(&self, wave: &[u64; 2]) {
+        let excess = if self.rows >= 128 {
+            0
+        } else if self.rows >= 64 {
+            wave[1] >> (self.rows - 64)
+        } else {
+            (wave[0] >> self.rows) | wave[1]
+        };
+        assert_eq!(excess, 0, "wave drives wordlines beyond row {}", self.rows);
     }
 
     /// Bitline currents for one input bit-plane (`bits[r]` in {0,1}).
@@ -546,26 +784,59 @@ impl Crossbar {
     }
 
     /// Sparse variant of [`Self::bitline_currents`] for the per-tile ADC
-    /// loop: in the compressed layout, only **active** columns of `out`
-    /// are zeroed and accumulated — slots of structurally-zero columns
-    /// are neither written nor meaningful afterwards — and the cached
-    /// nonzero-column index is returned so the caller converts exactly
-    /// those columns. In the dense layout this is `bitline_currents`
-    /// (every slot valid) and the index is `None`. Same hard length
-    /// asserts as the full variant.
+    /// loop: in the indexed layouts (compressed, bit-planes), only
+    /// **active** columns of `out` are zeroed and accumulated — slots of
+    /// structurally-zero columns are neither written nor meaningful
+    /// afterwards — and the cached nonzero-column index is returned so
+    /// the caller converts exactly those columns. In the dense layout
+    /// this is `bitline_currents` (every slot valid) and the index is
+    /// `None`. Same hard length asserts as the full variant.
     pub fn bitline_currents_active(&self, bits: &[u8], out: &mut [u32]) -> Option<&[u16]> {
         assert_eq!(bits.len(), self.rows, "input bit-plane length");
         assert_eq!(out.len(), self.cols, "bitline current buffer length");
-        if let CellArray::Compressed { active_cols, .. } = &self.store {
-            for &c in active_cols {
-                out[c as usize] = 0;
+        match &self.store {
+            CellArray::Compressed { active_cols, .. }
+            | CellArray::BitPlanes { active_cols, .. } => {
+                for &c in active_cols {
+                    out[c as usize] = 0;
+                }
+                self.accumulate_currents(bits, out);
+                Some(active_cols)
             }
-            self.accumulate_currents(bits, out);
-            Some(active_cols)
-        } else {
-            out.fill(0);
-            self.accumulate_currents(bits, out);
-            None
+            CellArray::Dense(_) => {
+                out.fill(0);
+                self.accumulate_currents(bits, out);
+                None
+            }
+        }
+    }
+
+    /// Wave-mask twin of [`Self::bitline_currents_active`], for callers
+    /// that already hold the bit-plane packed as a `[u64; 2]` wordline
+    /// mask (bit `r % 64` of word `r / 64` drives wordline `r`). On a
+    /// bit-plane tile this is the popcount hot path; the byte layouts
+    /// unpack the wave per row, so all three answer bit-exactly. Same
+    /// active-column contract: indexed layouts zero and fill only active
+    /// slots and return the index, the dense layout fills every slot and
+    /// returns `None`. Hard asserts: `out` length, and no wave bit at or
+    /// beyond `rows`.
+    pub fn bitline_currents_wave(&self, wave: &[u64; 2], out: &mut [u32]) -> Option<&[u16]> {
+        assert_eq!(out.len(), self.cols, "bitline current buffer length");
+        self.check_wave(wave);
+        match &self.store {
+            CellArray::Compressed { active_cols, .. }
+            | CellArray::BitPlanes { active_cols, .. } => {
+                for &c in active_cols {
+                    out[c as usize] = 0;
+                }
+                self.accumulate_currents_wave(wave, out);
+                Some(active_cols)
+            }
+            CellArray::Dense(_) => {
+                out.fill(0);
+                self.accumulate_currents_wave(wave, out);
+                None
+            }
         }
     }
 }
@@ -643,10 +914,12 @@ mod tests {
         let mut cur = vec![0u32; 2];
         xb.bitline_currents(&[1, 0, 1], &mut cur);
         assert_eq!(cur, vec![3, 1]);
-        // identical answers from the compressed layout
-        let comp = xb.in_format(StorageFormat::Compressed);
-        comp.bitline_currents(&[1, 0, 1], &mut cur);
-        assert_eq!(cur, vec![3, 1]);
+        // identical answers from the other layouts
+        for fmt in [StorageFormat::Compressed, StorageFormat::BitPlanes] {
+            let other = xb.in_format(fmt);
+            other.bitline_currents(&[1, 0, 1], &mut cur);
+            assert_eq!(cur, vec![3, 1], "{fmt:?}");
+        }
     }
 
     #[test]
@@ -665,8 +938,16 @@ mod tests {
         assert_eq!(xb.nonzero_cells(), 1);
     }
 
-    /// Property: Dense and Compressed agree bit-exactly on every read path
-    /// across random densities and partial-tile geometries.
+    const ALL_FORMATS: [StorageFormat; 3] = [
+        StorageFormat::Dense,
+        StorageFormat::Compressed,
+        StorageFormat::BitPlanes,
+    ];
+
+    /// Property: all three layouts agree bit-exactly, pairwise, on every
+    /// read path — census, column sums, byte-plane currents, wave-mask
+    /// currents, cell reads after a round trip — across random densities
+    /// and partial-tile geometries.
     #[test]
     fn representations_agree_bit_exactly() {
         check(40, |rng| {
@@ -682,86 +963,99 @@ mod tests {
                     }
                 }
             }
-            let comp = dense.in_format(StorageFormat::Compressed);
-            ensure(comp.format() == StorageFormat::Compressed, "converted")?;
-            ensure(comp.nonzero_cells() == dense.nonzero_cells(), "census")?;
-            ensure(
-                comp.column_conductance_sums() == dense.column_conductance_sums(),
-                "column sums",
-            )?;
             let bits: Vec<u8> = (0..rows).map(|_| rng.below(2) as u8).collect();
-            let mut a = vec![0u32; cols];
-            let mut b = vec![0u32; cols];
-            dense.bitline_currents(&bits, &mut a);
-            comp.bitline_currents(&bits, &mut b);
-            ensure(a == b, "bitline currents")?;
-            // round-trip back to dense preserves every cell
-            let back = comp.in_format(StorageFormat::Dense);
-            for r in 0..rows {
-                for c in 0..cols {
-                    ensure(back.get(r, c) == dense.get(r, c), "round-trip cell")?;
+            let wave = pack_wave(&bits);
+            let layouts: Vec<Crossbar> = ALL_FORMATS.iter().map(|&f| dense.in_format(f)).collect();
+            let mut cur: Vec<Vec<u32>> = Vec::new();
+            for (xb, fmt) in layouts.iter().zip(ALL_FORMATS) {
+                ensure(xb.format() == fmt, "converted")?;
+                ensure(xb.nonzero_cells() == dense.nonzero_cells(), "census")?;
+                ensure(
+                    xb.column_conductance_sums() == dense.column_conductance_sums(),
+                    "column sums",
+                )?;
+                let mut a = vec![0u32; cols];
+                xb.bitline_currents(&bits, &mut a);
+                let mut w = vec![0u32; cols];
+                xb.bitline_currents_wave(&wave, &mut w);
+                ensure(a == w, format!("{fmt:?} byte plane vs wave"))?;
+                cur.push(a);
+                // round-trip back to dense preserves every cell
+                let back = xb.in_format(StorageFormat::Dense);
+                for r in 0..rows {
+                    for c in 0..cols {
+                        ensure(back.get(r, c) == dense.get(r, c), "round-trip cell")?;
+                    }
                 }
+            }
+            for pair in cur.windows(2) {
+                ensure(pair[0] == pair[1], "pairwise bitline currents")?;
             }
             Ok(())
         });
     }
 
-    /// Property: `set` on a compressed tile (update / insert / clear)
-    /// tracks a dense mirror exactly, census included.
+    /// Property: `set` on an indexed tile (update / insert / clear)
+    /// tracks a dense mirror exactly, census included — for both the
+    /// compressed and the bit-plane layout.
     #[test]
-    fn compressed_set_matches_dense_mirror() {
-        check(30, |rng| {
-            let rows = 1 + rng.below(XBAR_ROWS);
-            let cols = 1 + rng.below(XBAR_COLS);
-            let mut dense = Crossbar::zeros(rows, cols);
-            let mut comp = Crossbar::zeros(rows, cols).in_format(StorageFormat::Compressed);
-            for _ in 0..200 {
-                let (r, c) = (rng.below(rows), rng.below(cols));
-                let v = rng.below(4) as u8; // 0 = clear
-                dense.set(r, c, v);
-                comp.set(r, c, v);
-            }
-            ensure(
-                comp.nonzero_cells() == dense.nonzero_cells(),
-                "census after mutation",
-            )?;
-            for r in 0..rows {
-                for c in 0..cols {
-                    ensure(comp.get(r, c) == dense.get(r, c), "cell after mutation")?;
+    fn indexed_set_matches_dense_mirror() {
+        for fmt in [StorageFormat::Compressed, StorageFormat::BitPlanes] {
+            check(30, |rng| {
+                let rows = 1 + rng.below(XBAR_ROWS);
+                let cols = 1 + rng.below(XBAR_COLS);
+                let mut dense = Crossbar::zeros(rows, cols);
+                let mut other = Crossbar::zeros(rows, cols).in_format(fmt);
+                for _ in 0..200 {
+                    let (r, c) = (rng.below(rows), rng.below(cols));
+                    let v = rng.below(4) as u8; // 0 = clear
+                    dense.set(r, c, v);
+                    other.set(r, c, v);
                 }
-            }
-            let bits = vec![1u8; rows];
-            let mut a = vec![0u32; cols];
-            let mut b = vec![0u32; cols];
-            dense.bitline_currents(&bits, &mut a);
-            comp.bitline_currents(&bits, &mut b);
-            ensure(a == b, "currents after mutation")?;
-            Ok(())
-        });
+                ensure(
+                    other.nonzero_cells() == dense.nonzero_cells(),
+                    "census after mutation",
+                )?;
+                for r in 0..rows {
+                    for c in 0..cols {
+                        ensure(other.get(r, c) == dense.get(r, c), "cell after mutation")?;
+                    }
+                }
+                let bits = vec![1u8; rows];
+                let mut a = vec![0u32; cols];
+                let mut b = vec![0u32; cols];
+                dense.bitline_currents(&bits, &mut a);
+                other.bitline_currents(&bits, &mut b);
+                ensure(a == b, "currents after mutation")?;
+                Ok(())
+            });
+        }
     }
 
     #[test]
     fn format_edges_all_zero_and_fully_dense() {
-        // all-zero tile: compressed layout holds no entries, reads zeros
-        let z = Crossbar::zeros(5, 7).in_format(StorageFormat::Compressed);
-        assert_eq!(z.nonzero_cells(), 0);
-        assert_eq!(z.density(), 0.0);
-        let mut cur = vec![9u32; 7];
-        z.bitline_currents(&[1; 5], &mut cur);
-        assert!(cur.iter().all(|&v| v == 0));
-        assert_eq!(z.get(4, 6), 0);
+        for fmt in [StorageFormat::Compressed, StorageFormat::BitPlanes] {
+            // all-zero tile: the indexed layouts hold no entries, read zeros
+            let z = Crossbar::zeros(5, 7).in_format(fmt);
+            assert_eq!(z.nonzero_cells(), 0);
+            assert_eq!(z.density(), 0.0);
+            let mut cur = vec![9u32; 7];
+            z.bitline_currents(&[1; 5], &mut cur);
+            assert!(cur.iter().all(|&v| v == 0), "{fmt:?}");
+            assert_eq!(z.get(4, 6), 0);
 
-        // fully-dense tile survives the compressed detour bit-exactly
-        let mut full = Crossbar::zeros(3, 4);
-        for r in 0..3 {
-            for c in 0..4 {
-                full.set(r, c, CELL_MAX);
+            // fully-dense tile survives the layout detour bit-exactly
+            let mut full = Crossbar::zeros(3, 4);
+            for r in 0..3 {
+                for c in 0..4 {
+                    full.set(r, c, CELL_MAX);
+                }
             }
+            let fc = full.in_format(fmt);
+            assert_eq!(fc.nonzero_cells(), 12);
+            assert_eq!(fc.density(), 1.0);
+            assert_eq!(fc.column_conductance_sums(), full.column_conductance_sums());
         }
-        let fc = full.in_format(StorageFormat::Compressed);
-        assert_eq!(fc.nonzero_cells(), 12);
-        assert_eq!(fc.density(), 1.0);
-        assert_eq!(fc.column_conductance_sums(), full.column_conductance_sums());
     }
 
     #[test]
@@ -774,19 +1068,48 @@ mod tests {
         assert_eq!(sparse.get(3, 3), 1);
         assert_eq!(sparse.get(1, 1), 0);
 
-        // 8 of 16 cells (50%) -> dense
+        // 8 of 16 cells (50%) -> the mid band, packed bit-planes
         let cells: Vec<(u16, u16, u8)> = (0u16..8).map(|i| (i / 4, i % 4, 3u8)).collect();
+        let mid = Crossbar::from_cells(4, 4, cells);
+        assert_eq!(mid.format(), StorageFormat::BitPlanes);
+        assert_eq!(mid.nonzero_cells(), 8);
+        for i in 0u16..8 {
+            assert_eq!(mid.get((i / 4) as usize, (i % 4) as usize), 3);
+        }
+
+        // 12 of 16 cells (75%) -> dense
+        let cells: Vec<(u16, u16, u8)> = (0u16..12).map(|i| (i / 4, i % 4, 3u8)).collect();
         let dense = Crossbar::from_cells(4, 4, cells);
         assert_eq!(dense.format(), StorageFormat::Dense);
-        assert_eq!(dense.nonzero_cells(), 8);
+        assert_eq!(dense.nonzero_cells(), 12);
 
-        // pack() applies the same threshold to an already-built tile
+        // pack() applies the same band policy to an already-built tile
         let mut xb = Crossbar::zeros(4, 4);
         xb.set(2, 2, 1);
         xb.pack();
         assert_eq!(xb.format(), StorageFormat::Compressed);
+    }
+
+    /// The one [`chosen_format`] definition places every density band —
+    /// boundaries inclusive on the sparse side.
+    #[test]
+    fn format_band_thresholds() {
+        let cells = 128 * 128;
+        let at = |d: f64| (d * cells as f64).round() as usize;
+        assert_eq!(chosen_format(0, 128, 128), StorageFormat::Compressed);
+        assert_eq!(chosen_format(at(0.25), 128, 128), StorageFormat::Compressed);
+        assert_eq!(
+            chosen_format(at(0.25) + 1, 128, 128),
+            StorageFormat::BitPlanes
+        );
+        assert_eq!(chosen_format(at(0.40), 128, 128), StorageFormat::BitPlanes);
+        assert_eq!(chosen_format(at(0.60), 128, 128), StorageFormat::BitPlanes);
+        assert_eq!(chosen_format(at(0.60) + 1, 128, 128), StorageFormat::Dense);
+        assert_eq!(chosen_format(cells, 128, 128), StorageFormat::Dense);
+        // small / degenerate geometries use the same bands
         assert_eq!(chosen_format(1, 4, 4), StorageFormat::Compressed);
-        assert_eq!(chosen_format(8, 4, 4), StorageFormat::Dense);
+        assert_eq!(chosen_format(8, 4, 4), StorageFormat::BitPlanes);
+        assert_eq!(chosen_format(16, 4, 4), StorageFormat::Dense);
     }
 
     #[test]
@@ -803,6 +1126,10 @@ mod tests {
             "{} bytes compressed vs {dense_bytes} dense",
             comp.storage_bytes()
         );
+        // bit-planes: 32 bytes per column + the index, density-independent
+        let bp = xb.in_format(StorageFormat::BitPlanes);
+        assert_eq!(bp.storage_bytes(), 2 * 128 * 16 + 100 * 2);
+        assert!(bp.storage_bytes() < dense_bytes / 2);
     }
 
     #[test]
@@ -812,7 +1139,7 @@ mod tests {
     }
 
     /// Property: the cached active-wordline/column indexes track `set`
-    /// mutations (insert / overwrite / clear) exactly, in both layouts,
+    /// mutations (insert / overwrite / clear) exactly, in every layout,
     /// against a brute-force recount.
     #[test]
     fn active_indexes_track_mutation() {
@@ -821,11 +1148,13 @@ mod tests {
             let cols = 1 + rng.below(XBAR_COLS);
             let mut dense = Crossbar::zeros(rows, cols);
             let mut comp = Crossbar::zeros(rows, cols).in_format(StorageFormat::Compressed);
+            let mut bp = Crossbar::zeros(rows, cols).in_format(StorageFormat::BitPlanes);
             for _ in 0..150 {
                 let (r, c) = (rng.below(rows), rng.below(cols));
                 let v = rng.below(4) as u8; // 0 = clear
                 dense.set(r, c, v);
                 comp.set(r, c, v);
+                bp.set(r, c, v);
             }
             let live_rows = (0..rows)
                 .filter(|&r| (0..cols).any(|c| dense.get(r, c) != 0))
@@ -833,22 +1162,24 @@ mod tests {
             let live_cols = (0..cols)
                 .filter(|&c| (0..rows).any(|r| dense.get(r, c) != 0))
                 .count();
-            for xb in [&dense, &comp] {
+            for xb in [&dense, &comp, &bp] {
                 ensure(xb.active_wordlines() == live_rows, "active wordlines")?;
                 ensure(xb.active_columns() == live_cols, "active columns")?;
             }
-            // the compressed index itself is sorted and complete
-            let idx = comp.active_cols().expect("compressed tiles carry the index");
-            ensure(idx.windows(2).all(|w| w[0] < w[1]), "index ascending")?;
-            ensure(idx.len() == live_cols, "index length")?;
+            // each cached index itself is sorted and complete
+            for xb in [&comp, &bp] {
+                let idx = xb.active_cols().expect("indexed tiles carry the index");
+                ensure(idx.windows(2).all(|w| w[0] < w[1]), "index ascending")?;
+                ensure(idx.len() == live_cols, "index length")?;
+            }
             Ok(())
         });
     }
 
-    /// `bitline_currents_active` only touches active columns in the
-    /// compressed layout: active slots equal the full variant's, inactive
-    /// slots keep whatever garbage the buffer held — and the returned
-    /// index names exactly the meaningful slots.
+    /// `bitline_currents_active` (and its wave twin) only touches active
+    /// columns in the indexed layouts: active slots equal the full
+    /// variant's, inactive slots keep whatever garbage the buffer held —
+    /// and the returned index names exactly the meaningful slots.
     #[test]
     fn active_current_scan_matches_full_scan_on_active_columns() {
         check(25, |rng| {
@@ -858,41 +1189,93 @@ mod tests {
             for _ in 0..rng.below(1 + rows * cols / 8) {
                 xb.set(rng.below(rows), rng.below(cols), 1 + rng.below(3) as u8);
             }
-            let comp = xb.in_format(StorageFormat::Compressed);
             let bits: Vec<u8> = (0..rows).map(|_| rng.below(2) as u8).collect();
+            let wave = pack_wave(&bits);
             let mut full = vec![0u32; cols];
-            comp.bitline_currents(&bits, &mut full);
-            let mut sparse = vec![0xDEADu32; cols];
-            let idx = comp
-                .bitline_currents_active(&bits, &mut sparse)
-                .expect("compressed layout returns the index")
-                .to_vec();
-            let active: std::collections::BTreeSet<usize> =
-                idx.iter().map(|&c| c as usize).collect();
-            for c in 0..cols {
-                if active.contains(&c) {
-                    ensure(sparse[c] == full[c], format!("active column {c}"))?;
-                } else {
-                    ensure(sparse[c] == 0xDEAD, format!("inactive column {c} written"))?;
-                    ensure(full[c] == 0, "inactive column carries current")?;
+            xb.bitline_currents(&bits, &mut full);
+            for fmt in [StorageFormat::Compressed, StorageFormat::BitPlanes] {
+                let indexed = xb.in_format(fmt);
+                let mut sparse = vec![0xDEADu32; cols];
+                let idx = indexed
+                    .bitline_currents_active(&bits, &mut sparse)
+                    .expect("indexed layout returns the index")
+                    .to_vec();
+                let mut waved = vec![0xBEEFu32; cols];
+                let widx = indexed
+                    .bitline_currents_wave(&wave, &mut waved)
+                    .expect("indexed layout returns the index")
+                    .to_vec();
+                ensure(idx == widx, "byte and wave variants agree on the index")?;
+                let active: std::collections::BTreeSet<usize> =
+                    idx.iter().map(|&c| c as usize).collect();
+                for c in 0..cols {
+                    if active.contains(&c) {
+                        ensure(sparse[c] == full[c], format!("{fmt:?} active column {c}"))?;
+                        ensure(waved[c] == full[c], format!("{fmt:?} wave column {c}"))?;
+                    } else {
+                        ensure(sparse[c] == 0xDEAD, format!("inactive column {c} written"))?;
+                        ensure(waved[c] == 0xBEEF, format!("inactive column {c} waved"))?;
+                        ensure(full[c] == 0, "inactive column carries current")?;
+                    }
                 }
             }
             // dense layout: no index, every slot written, same currents
             let mut d = vec![0xDEADu32; cols];
             ensure(xb.bitline_currents_active(&bits, &mut d).is_none(), "dense index")?;
             ensure(d == full, "dense active variant == full scan")?;
+            let mut dw = vec![0xDEADu32; cols];
+            ensure(xb.bitline_currents_wave(&wave, &mut dw).is_none(), "dense wave index")?;
+            ensure(dw == full, "dense wave variant == full scan")?;
             Ok(())
         });
     }
 
+    /// The `[u64; 2]` word seam sits at row 64: exercise tiles whose row
+    /// count straddles it so a packing off-by-one can't hide in the
+    /// random-geometry properties.
+    #[test]
+    fn wave_scan_agrees_across_word_boundaries() {
+        for rows in [1, 63, 64, 65, 127, 128] {
+            let cols = 8;
+            let mut xb = Crossbar::zeros(rows, cols);
+            // program the boundary rows and a spread of columns
+            for (i, r) in [0, rows.saturating_sub(1), rows / 2].into_iter().enumerate() {
+                for c in 0..cols {
+                    xb.set(r, c, 1 + ((r + c + i) % 3) as u8);
+                }
+            }
+            // drive only the last row: the highest packed bit
+            let mut bits = vec![0u8; rows];
+            bits[rows - 1] = 1;
+            let wave = pack_wave(&bits);
+            let mut want = vec![0u32; cols];
+            xb.bitline_currents(&bits, &mut want);
+            for fmt in ALL_FORMATS {
+                let mut got = vec![0u32; cols];
+                xb.in_format(fmt).bitline_currents_wave(&wave, &mut got);
+                assert_eq!(got, want, "{fmt:?} at {rows} rows");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn wave_beyond_rows_panics() {
+        let xb = Crossbar::zeros(64, 4).in_format(StorageFormat::BitPlanes);
+        let mut out = vec![0u32; 4];
+        // bit 64 names wordline 64 of a 64-row tile — out of range
+        xb.bitline_currents_wave(&[0, 1], &mut out);
+    }
+
     #[test]
     fn active_counts_on_edge_tiles() {
-        // all-zero tile: nothing active in either layout
+        // all-zero tile: nothing active in any layout
         let z = Crossbar::zeros(5, 7);
         assert_eq!(z.active_wordlines(), 0);
         assert_eq!(z.active_columns(), 0);
-        let zc = z.in_format(StorageFormat::Compressed);
-        assert_eq!(zc.active_cols().unwrap().len(), 0);
+        for fmt in [StorageFormat::Compressed, StorageFormat::BitPlanes] {
+            assert_eq!(z.in_format(fmt).active_cols().unwrap().len(), 0);
+        }
 
         // fully-dense tile: everything active
         let mut full = Crossbar::zeros(3, 4);
@@ -903,17 +1286,20 @@ mod tests {
         }
         assert_eq!(full.active_wordlines(), 3);
         assert_eq!(full.active_columns(), 4);
-        let fc = full.in_format(StorageFormat::Compressed);
-        assert_eq!(fc.active_cols().unwrap(), &[0, 1, 2, 3]);
+        for fmt in [StorageFormat::Compressed, StorageFormat::BitPlanes] {
+            assert_eq!(full.in_format(fmt).active_cols().unwrap(), &[0, 1, 2, 3]);
+        }
 
         // clearing a column's last cell drops it from the index
-        let mut xb = Crossbar::from_cells(4, 4, vec![(0, 2, 1), (3, 2, 2), (1, 0, 3)]);
-        assert_eq!(xb.format(), StorageFormat::Compressed);
-        assert_eq!(xb.active_cols().unwrap(), &[0, 2]);
-        xb.set(0, 2, 0);
-        assert_eq!(xb.active_cols().unwrap(), &[0, 2], "row 3 still holds col 2");
-        xb.set(3, 2, 0);
-        assert_eq!(xb.active_cols().unwrap(), &[0]);
-        assert_eq!(xb.active_columns(), 1);
+        for fmt in [StorageFormat::Compressed, StorageFormat::BitPlanes] {
+            let mut xb = Crossbar::from_cells(4, 4, vec![(0, 2, 1), (3, 2, 2), (1, 0, 3)])
+                .in_format(fmt);
+            assert_eq!(xb.active_cols().unwrap(), &[0, 2]);
+            xb.set(0, 2, 0);
+            assert_eq!(xb.active_cols().unwrap(), &[0, 2], "row 3 still holds col 2");
+            xb.set(3, 2, 0);
+            assert_eq!(xb.active_cols().unwrap(), &[0]);
+            assert_eq!(xb.active_columns(), 1);
+        }
     }
 }

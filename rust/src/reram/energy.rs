@@ -7,10 +7,10 @@
 //! end-to-end deployment would see. Unprogrammed (fully-zero) tiles —
 //! e.g. the empty negative-sign grid of an all-positive layer — are never
 //! fabricated, so they contribute no crossbar, no conversions and no
-//! area; structurally-zero columns of *compressed* tiles are skipped by
-//! the per-tile nonzero-column index, so they are not billed either
-//! (dense tiles carry no index and convert — and pay for — every column,
-//! exactly like the simulator's dense ADC loop).
+//! area; structurally-zero columns of *compressed* and *bit-plane* tiles
+//! are skipped by the per-tile nonzero-column index, so they are not
+//! billed either (dense tiles carry no index and convert — and pay for —
+//! every column, exactly like the simulator's dense ADC loop).
 //!
 //! Costs can be rolled up at one uniform per-slice resolution
 //! ([`deployment_cost`]) or per layer under a
@@ -93,8 +93,8 @@ pub struct LayerCost {
 ///
 /// The billing matches execution exactly
 /// ([`crate::reram::crossbar::Crossbar::converting_columns`]): compressed
-/// tiles convert only their nonzero-column index — the simulator skips
-/// structurally-zero columns outright via
+/// and bit-plane tiles convert only their nonzero-column index — the
+/// simulator skips structurally-zero columns outright via
 /// [`crate::reram::crossbar::Crossbar::bitline_currents_active`], and
 /// with wordline/column reordering they cluster into whole unbilled
 /// tiles — while dense tiles carry no index and convert every column.

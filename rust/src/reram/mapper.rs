@@ -9,12 +9,13 @@
 //! storing 2 bits of the 8-bit weights" describes.
 //!
 //! Each tile's storage representation is chosen at map time from its own
-//! measured density ([`crate::reram::crossbar::chosen_format`]): the
-//! programmed cells are gathered per tile and handed to
-//! [`Crossbar::from_cells`], so Bl1-level sparse slices go straight to
-//! compressed storage with **no dense intermediate**, while dense-random
-//! slices keep the row-major layout. [`LayerMapping::storage_stats`]
-//! reports what was chosen.
+//! measured density — the [`crate::reram::crossbar::chosen_format`]
+//! three-band policy: the programmed cells are gathered per tile and
+//! handed to [`Crossbar::from_cells`], so Bl1-level sparse slices go
+//! straight to compressed storage with **no dense intermediate**,
+//! mid-band slices (dense-random weights land here) pack into popcount
+//! bit-planes, and only near-full tiles keep the row-major byte layout.
+//! [`LayerMapping::storage_stats`] reports what was chosen.
 //!
 //! [`map_layer_with`] optionally runs the wordline/column reorder pass
 //! ([`crate::reram::reorder`]) before tiling: cell `(r, c)` is programmed
@@ -103,6 +104,8 @@ pub struct StorageStats {
     pub dense_tiles: usize,
     /// programmed tiles stored as packed `(col, val)` pairs
     pub compressed_tiles: usize,
+    /// programmed tiles stored as packed popcount bit-planes
+    pub bitplane_tiles: usize,
     /// fully-zero tiles: mapped for addressing, never fabricated, and
     /// skipped outright by the simulator's forward path
     pub skipped_tiles: usize,
@@ -139,6 +142,7 @@ impl StorageStats {
             match t.format() {
                 StorageFormat::Dense => self.dense_tiles += 1,
                 StorageFormat::Compressed => self.compressed_tiles += 1,
+                StorageFormat::BitPlanes => self.bitplane_tiles += 1,
             }
             // fully-zero tiles are never fabricated, so only programmed
             // tiles contribute wordline/column slots to the census
@@ -152,6 +156,7 @@ impl StorageStats {
     pub fn merge(&mut self, o: &StorageStats) {
         self.dense_tiles += o.dense_tiles;
         self.compressed_tiles += o.compressed_tiles;
+        self.bitplane_tiles += o.bitplane_tiles;
         self.skipped_tiles += o.skipped_tiles;
         self.programmed_cells += o.programmed_cells;
         self.cells += o.cells;
@@ -161,6 +166,12 @@ impl StorageStats {
         self.wordline_slots += o.wordline_slots;
         self.active_columns += o.active_columns;
         self.column_slots += o.column_slots;
+    }
+
+    /// Tiles actually fabricated — every programmed layout summed
+    /// (dense + compressed + bit-planes); skipped tiles excluded.
+    pub fn programmed_tiles(&self) -> usize {
+        self.dense_tiles + self.compressed_tiles + self.bitplane_tiles
     }
 
     /// Active wordlines over wordline slots of the programmed tiles
@@ -550,13 +561,26 @@ mod tests {
         assert_eq!(model.total_crossbars(), 4 * m.crossbars_per_slice());
     }
 
-    /// Format selection: a dense-random layer keeps row-major tiles on
-    /// every slice; a near-empty layer compresses every programmed tile.
+    /// Format selection: a one-signed saturated layer keeps row-major
+    /// tiles, a sign-split 50%-density layer packs into bit-planes, and a
+    /// near-empty layer compresses every programmed tile.
     #[test]
     fn map_layer_picks_expected_format_per_density() {
-        // alternating +-0.99 -> code 253 = 0b11111101: every slice is
-        // nonzero on every element, split 50/50 across the sign grids, so
-        // each programmed tile sits at ~50% density -> Dense everywhere
+        // all +0.99 -> code 253 = 0b11111101: slices 1..=3 are nonzero on
+        // every element and everything lands on the pos grid, so those
+        // tiles sit at 100% density -> Dense
+        let w = Tensor::new(vec![64, 32], vec![0.99f32; 64 * 32]).unwrap();
+        let m = map_layer("full", &w).unwrap();
+        for (p, _) in &m.grids[1..] {
+            for tile in &p.tiles {
+                assert_eq!(tile.density(), 1.0);
+                assert_eq!(tile.format(), StorageFormat::Dense, "saturated layer");
+            }
+        }
+
+        // alternating +-0.99: the same codes split 50/50 across the sign
+        // grids, so each programmed tile sits at ~50% density -> the mid
+        // band, packed bit-planes everywhere
         let w = Tensor::new(
             vec![64, 32],
             (0..64 * 32)
@@ -564,19 +588,26 @@ mod tests {
                 .collect(),
         )
         .unwrap();
-        let m = map_layer("dense", &w).unwrap();
+        let m = map_layer("mid", &w).unwrap();
         for (p, n) in &m.grids {
             for grid in [p, n] {
                 for tile in &grid.tiles {
                     assert!(tile.nonzero_cells() > 0);
-                    assert_eq!(tile.format(), StorageFormat::Dense, "dense-random layer");
+                    assert_eq!(
+                        tile.format(),
+                        StorageFormat::BitPlanes,
+                        "sign-split dense-random layer at density {}",
+                        tile.density()
+                    );
                 }
             }
         }
         let s = m.storage_stats();
         assert_eq!(s.compressed_tiles, 0);
+        assert_eq!(s.dense_tiles, 0);
         assert_eq!(s.skipped_tiles, 0);
-        assert_eq!(s.dense_tiles, 8); // 4 slices x 2 signs x 1 tile
+        assert_eq!(s.bitplane_tiles, 8); // 4 slices x 2 signs x 1 tile
+        assert_eq!(s.programmed_tiles(), 8);
 
         // a handful of programmed cells -> every tile compressed (or
         // fully zero and skipped)
@@ -618,7 +649,7 @@ mod tests {
             let s = m.storage_stats();
             let tiles = N_SLICES * m.crossbars_per_slice(); // pos+neg across slices
             ensure(
-                s.dense_tiles + s.compressed_tiles + s.skipped_tiles == tiles,
+                s.programmed_tiles() + s.skipped_tiles == tiles,
                 "tile partition",
             )?;
             let programmed: usize = (0..N_SLICES).map(|k| m.nonzero_cells(k)).sum();
@@ -708,7 +739,11 @@ mod tests {
         let w = Tensor::new(vec![300, 150], data).unwrap();
         let m = map_layer_with("l", &w, Some(ReorderConfig::default())).unwrap();
         assert!(m.is_reordered(), "scattered sparse layer reorders");
-        for fmt in [StorageFormat::Dense, StorageFormat::Compressed] {
+        for fmt in [
+            StorageFormat::Dense,
+            StorageFormat::Compressed,
+            StorageFormat::BitPlanes,
+        ] {
             let conv = m.with_storage(fmt);
             assert_eq!(conv.reorder, m.reorder, "format change kept placement");
         }
@@ -757,7 +792,11 @@ mod tests {
         let mut rng = Rng::new(9);
         let w = rand_tensor(&mut rng, vec![300, 150], 0.08);
         let m = map_layer("l", &w).unwrap();
-        for fmt in [StorageFormat::Dense, StorageFormat::Compressed] {
+        for fmt in [
+            StorageFormat::Dense,
+            StorageFormat::Compressed,
+            StorageFormat::BitPlanes,
+        ] {
             let conv = m.with_storage(fmt);
             for k in 0..N_SLICES {
                 assert_eq!(conv.nonzero_cells(k), m.nonzero_cells(k), "slice {k}");

@@ -7,7 +7,7 @@
 //!
 //! * [`crossbar`]   — the array model: cells, differential pos/neg pairs,
 //!                    bitline current accumulation over polymorphic tile
-//!                    storage (dense or compressed — see below).
+//!                    storage (dense, bit-plane or compressed — see below).
 //! * [`mapper`]     — tile a layer's slice matrices onto 128x128 arrays,
 //!                    choosing each tile's storage format from its density.
 //! * [`adc`]        — the ADC cost model of [17]: power ∝ 2^N/(N+1),
@@ -33,34 +33,61 @@
 //!                    planner that water-fills an area budget onto
 //!                    bottleneck layers for throughput.
 //!
-//! # Storage-format selection (Dense vs Compressed tiles)
+//! # Storage-format selection (Dense vs BitPlanes vs Compressed tiles)
 //!
 //! Bit-slice L1 training drives each 2-bit slice toward ~90%+ zeros, so
 //! tile cells live behind a polymorphic `CellArray` inside [`Crossbar`]
-//! with two layouts: row-major **dense** bytes, or **compressed** per-row
-//! packed `(col, val)` pairs with a nonzero-wordline index that lets
-//! `bitline_currents` touch only programmed cells on active wordlines.
-//! The format is chosen *per tile at map time* from the tile's measured
-//! density: at or below [`crossbar::COMPRESS_MAX_DENSITY`] (25%) the tile
-//! compresses, above it it stays dense ([`crossbar::chosen_format`] is
-//! the single definition). The threshold comes from the measured
-//! crossover: one compressed entry costs 3 bytes (parallel `u16`/`u8`
-//! column/value arrays — no tuple padding) and a scattered add vs one
-//! byte and a sequential add per dense cell, so memory parity sits at
-//! 1/3 density and the scan wins well below it, while dense-random slices
-//! (~37% density per sign grid) stay row-major. The programmed-cell
-//! census is cached per tile (maintained by `set`, established by
-//! `from_cells`), which makes the zero-tile skips in [`sim`], [`energy`]
-//! and [`resolution`] O(1) and the planner's scoring loop O(tiles).
-//! Fully-zero tiles are never fabricated: the simulator skips them, the
-//! cost model doesn't bill them, and `report::storage_table` lists them
-//! as "skipped". Compressed tiles additionally cache a nonzero-**column**
-//! index: the per-tile ADC/recombination loop converts only columns that
-//! hold a programmed cell ([`crossbar::Crossbar::bitline_currents_active`]),
-//! and [`energy`] / [`resolution`] bill and census exactly the columns
-//! that convert under each tile's layout
+//! with three layouts: row-major **dense** bytes, column-major packed
+//! **bit-planes** (below), or **compressed** per-row packed `(col, val)`
+//! pairs with a nonzero-wordline index that lets `bitline_currents` touch
+//! only programmed cells on active wordlines. The format is chosen *per
+//! tile at map time* from the tile's measured density as a three-band
+//! policy ([`crossbar::chosen_format`] is the single definition): at or
+//! below [`crossbar::COMPRESS_MAX_DENSITY`] (25%) the tile compresses, in
+//! the mid band up to [`crossbar::BITPLANE_MAX_DENSITY`] (60%) it packs
+//! bit-planes, above that it stays dense. The lower threshold comes from
+//! the measured crossover: one compressed entry costs 3 bytes (parallel
+//! `u16`/`u8` column/value arrays — no tuple padding) and a scattered add
+//! vs one byte and a sequential add per dense cell, so memory parity sits
+//! at 1/3 density and the scan wins well below it. The mid band is where
+//! neither skip-style leverage nor the naive byte walk helps —
+//! dense-random slices (~37% density per sign grid) land here — and the
+//! popcount path's cost is density-independent, so it takes the whole
+//! band; the dense byte layout above 60% keeps the canonical
+//! near-full-tile representation (and the honest naive baseline the
+//! benches compare against). The programmed-cell census is cached per
+//! tile (maintained by `set`, established by `from_cells`), which makes
+//! the zero-tile skips in [`sim`], [`energy`] and [`resolution`] O(1) and
+//! the planner's scoring loop O(tiles). Fully-zero tiles are never
+//! fabricated: the simulator skips them, the cost model doesn't bill
+//! them, and `report::storage_table` lists them as "skipped". Compressed
+//! and bit-plane tiles additionally cache a nonzero-**column** index: the
+//! per-tile ADC/recombination loop converts only columns that hold a
+//! programmed cell ([`crossbar::Crossbar::bitline_currents_active`]), and
+//! [`energy`] / [`resolution`] / [`timing`] bill and census exactly the
+//! columns that convert under each tile's layout
 //! ([`crossbar::Crossbar::converting_columns`] — all of them for dense
 //! tiles, which carry no index).
+//!
+//! # BitPlanes packing convention (word order, row→bit mapping)
+//!
+//! A bit-plane tile stores, per physical column, two 128-bit masks packed
+//! as `[u64; 2]`: `plane0` holds each cell's low bit, `plane1` its high
+//! bit, so `cell(r, c) = bit(plane1[c], r) << 1 | bit(plane0[c], r)`.
+//! Physical tile row `r` (0-based within the tile, *after* any reorder
+//! permutation has been applied at programming time) maps to bit `r & 63`
+//! of word `r >> 6` — word 0 covers rows 0..64, word 1 rows 64..128,
+//! little-endian within a word — and rows `>= tile.rows()` are zero
+//! padding. Activation bit-planes are packed into the *same* shape once
+//! per (plane, 128-row block) by [`crossbar::pack_wave`] (the simulator
+//! reuses them across every tile and sign grid of a row block), so a
+//! column's current is two AND+popcounts:
+//! `popcount(plane0 & wave) + (popcount(plane1 & wave) << 1)`. Because
+//! both weight planes and activation waves are built from already-
+//! permuted positions, reordering needs no extra handling on this path —
+//! the packed planes are bit-exact with the byte layouts' permuted cells,
+//! and a wave whose mask is all-zero over a block is skipped outright
+//! (zero currents convert to zero; see `sim`'s zero-wave skip).
 //!
 //! # Reorder convention (where codes are permuted, where sums come back)
 //!
@@ -134,9 +161,9 @@ pub mod sim;
 pub mod timing;
 
 pub use adc::AdcModel;
-pub use crossbar::{Crossbar, StorageFormat, XBAR_COLS, XBAR_ROWS};
+pub use crossbar::{pack_wave, Crossbar, StorageFormat, XBAR_COLS, XBAR_ROWS};
 pub use mapper::{LayerMapping, MappedModel, StorageRow, StorageStats};
-pub use planner::{DeploymentPlan, PlannerConfig};
+pub use planner::{DeploymentPlan, DescentStrategy, PlannerConfig};
 pub use reorder::{LayerReorder, Permutation, ReorderConfig, ReorderRow};
 pub use resolution::ResolutionPolicy;
 pub use timing::{LayerTiming, PipelineTiming};

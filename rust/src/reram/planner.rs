@@ -4,15 +4,19 @@
 //! crossbar group, 3-bit on the rest — by hand from a whole-model current
 //! census. This module automates and refines that search *per layer*: each
 //! layer's own column-current census ([`super::resolution`]) sets a
-//! starting [`DeploymentPlan`], and a greedy descent then lowers one
-//! (layer, slice-group) resolution at a time wherever held-out accuracy
-//! (the crossbar simulator evaluated through `serve::accuracy` against the
-//! exact quantized [`crate::serve::ReferenceBackend`] baseline) stays
-//! within a configurable drop budget. Candidate moves are scored by their
+//! starting [`DeploymentPlan`], and a descent then lowers (layer,
+//! slice-group) resolutions wherever held-out accuracy (the crossbar
+//! simulator evaluated through `serve::accuracy` against the exact
+//! quantized [`crate::serve::ReferenceBackend`] baseline) stays within a
+//! configurable drop budget. Candidate moves are scored by their
 //! [`super::energy`] saving, so the cheapest profitable reduction is
-//! always tried first. The paper's hand-picked point ([`PAPER_BITS`])
-//! serves as a warm start: when it already holds the budget, the search
-//! jumps there and can only improve on it.
+//! always tried first. The descent comes in two flavours
+//! ([`DescentStrategy`]): the original one-bit-at-a-time greedy loop, and
+//! the default per-group binary search that finds each group's lowest
+//! budget-holding resolution in logarithmically many held-out
+//! evaluations. The paper's hand-picked point ([`PAPER_BITS`]) serves as
+//! a warm start: when it already holds the budget, the search jumps there
+//! and can only improve on it.
 //!
 //! All bit arrays are LSB-first (see the bit-order convention in the
 //! [`crate::reram`] module docs).
@@ -113,6 +117,24 @@ impl std::fmt::Display for DeploymentPlan {
     }
 }
 
+/// How the search descends (layer, slice-group) resolutions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DescentStrategy {
+    /// Lower the best-gain group one bit at a time, re-scoring after
+    /// every accepted move — evaluation count is linear in the total
+    /// bits shed.
+    Linear,
+    /// Binary-search each group's lowest budget-holding resolution (best
+    /// energy gain first, one group at a time, then freeze it) —
+    /// logarithmically many held-out evaluations per group. Within one
+    /// group feasibility is monotone in its own bits (fewer bits only
+    /// clip more columns), so the search is exact there; it can differ
+    /// from [`DescentStrategy::Linear`] only through cross-group
+    /// interactions, and either way the selected plan is re-validated
+    /// against the budget.
+    Binary,
+}
+
 /// Planner search knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct PlannerConfig {
@@ -136,6 +158,9 @@ pub struct PlannerConfig {
     /// ADCs for the wrong per-tile current distribution is the failure
     /// mode this field exists to prevent.
     pub reorder: Option<super::reorder::ReorderConfig>,
+    /// How each (layer, slice-group) resolution descends toward the
+    /// budget floor (see [`DescentStrategy`]).
+    pub descent: DescentStrategy,
 }
 
 impl Default for PlannerConfig {
@@ -146,6 +171,7 @@ impl Default for PlannerConfig {
             start_policy: ResolutionPolicy::Lossless,
             eval_examples: 256,
             reorder: None,
+            descent: DescentStrategy::Binary,
         }
     }
 }
@@ -212,6 +238,29 @@ fn head(ds: &Dataset, n: usize) -> Dataset {
     } else {
         slice(ds, 0, n)
     }
+}
+
+/// Smallest value in `[lo, hi]` accepted by `feasible`, assuming
+/// feasibility is monotone over the range (everything at or above the
+/// answer holds, everything below fails) and that `feasible(hi)` is
+/// already known to hold — `hi` itself is never probed. Probes
+/// `ceil(log2(hi - lo + 1))` values, the [`DescentStrategy::Binary`]
+/// evaluation bound.
+fn lowest_feasible(
+    lo: u32,
+    hi: u32,
+    mut feasible: impl FnMut(u32) -> Result<bool>,
+) -> Result<u32> {
+    let (mut lo, mut hi) = (lo, hi);
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if feasible(mid)? {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    Ok(hi)
 }
 
 /// Search a per-layer ADC deployment plan for `stack` under `cfg`,
@@ -313,11 +362,9 @@ pub fn plan_deployment_from(
         }
     }
 
-    // Greedy descent: repeatedly try to lower one (layer, slice group) by
-    // one bit, best energy saving first. A group that fails the budget is
-    // frozen — lowering *other* groups never makes it more affordable.
-    let mut frozen = vec![[false; N_SLICES]; plan.layers.len()];
-    loop {
+    // Moves are scored by the energy a one-bit reduction buys at the
+    // group's current resolution; higher gain descends first.
+    let score = |plan: &DeploymentPlan, frozen: &[[bool; N_SLICES]]| {
         let mut moves: Vec<(f64, usize, usize)> = Vec::new();
         for (l, pl) in plan.layers.iter().enumerate() {
             for k in 0..N_SLICES {
@@ -330,22 +377,66 @@ pub fn plan_deployment_from(
             }
         }
         moves.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+        moves
+    };
 
-        let mut progressed = false;
-        for &(_, l, k) in &moves {
-            let mut cand = plan.clone();
-            cand.layers[l].adc_bits[k] -= 1;
-            let a = eval(&cand, &mut evaluations)?;
-            if a >= floor {
-                plan = cand;
-                accuracy = a;
-                progressed = true;
-                break; // re-score remaining moves against the new plan
+    match cfg.descent {
+        // Greedy descent: repeatedly try to lower one (layer, slice
+        // group) by one bit, best energy saving first. A group that fails
+        // the budget is frozen — lowering *other* groups never makes it
+        // more affordable.
+        DescentStrategy::Linear => {
+            let mut frozen = vec![[false; N_SLICES]; plan.layers.len()];
+            loop {
+                let moves = score(&plan, &frozen);
+                let mut progressed = false;
+                for &(_, l, k) in &moves {
+                    let mut cand = plan.clone();
+                    cand.layers[l].adc_bits[k] -= 1;
+                    let a = eval(&cand, &mut evaluations)?;
+                    if a >= floor {
+                        plan = cand;
+                        accuracy = a;
+                        progressed = true;
+                        break; // re-score remaining moves against the new plan
+                    }
+                    frozen[l][k] = true;
+                }
+                if !progressed {
+                    break;
+                }
             }
-            frozen[l][k] = true;
         }
-        if !progressed {
-            break;
+        // Per-group binary search, best energy gain first. A group's gain
+        // depends only on its *own* current bits, so fully descending one
+        // group never re-orders the remaining ones — a single sorted pass
+        // visits the same groups the greedy loop would.
+        DescentStrategy::Binary => {
+            let frozen = vec![[false; N_SLICES]; plan.layers.len()];
+            for &(_, l, k) in &score(&plan, &frozen) {
+                let b = plan.layers[l].adc_bits[k];
+                // accuracies of the feasible probes, so the accepted
+                // resolution's accuracy needs no re-evaluation
+                let mut probed: Vec<(u32, f64)> = Vec::new();
+                let best = lowest_feasible(cfg.min_bits, b, |v| {
+                    let mut cand = plan.clone();
+                    cand.layers[l].adc_bits[k] = v;
+                    let a = eval(&cand, &mut evaluations)?;
+                    let ok = a >= floor;
+                    if ok {
+                        probed.push((v, a));
+                    }
+                    Ok(ok)
+                })?;
+                if best < b {
+                    plan.layers[l].adc_bits[k] = best;
+                    accuracy = probed
+                        .iter()
+                        .find(|&&(v, _)| v == best)
+                        .expect("accepted resolution was probed feasible")
+                        .1;
+                }
+            }
         }
     }
 
@@ -556,5 +647,61 @@ mod tests {
         let res = plan_deployment(&stack, &ds, &cfg).unwrap();
         assert_eq!(res.accuracy, res.baseline_accuracy);
         assert!(res.within_budget);
+    }
+
+    #[test]
+    fn lowest_feasible_is_exact_and_logarithmic() {
+        // cliff at 6 within [1, 9]: found in at most ceil(log2(9)) probes
+        let mut probes = 0usize;
+        let v = lowest_feasible(1, 9, |v| {
+            probes += 1;
+            Ok(v >= 6)
+        })
+        .unwrap();
+        assert_eq!(v, 6);
+        assert!(probes <= 4, "{probes} probes");
+        // nothing below hi feasible: stays at the known-good hi
+        let mut probes = 0usize;
+        let v = lowest_feasible(1, 9, |v| {
+            probes += 1;
+            Ok(v >= 9)
+        })
+        .unwrap();
+        assert_eq!(v, 9);
+        assert!(probes <= 4, "{probes} probes");
+        // everything feasible: collapses to lo; degenerate range: 0 probes
+        assert_eq!(lowest_feasible(1, 9, |_| Ok(true)).unwrap(), 1);
+        assert_eq!(lowest_feasible(3, 3, |_| panic!("no probe")).unwrap(), 3);
+    }
+
+    /// Satellite: on the planted class-template fixture (the planner
+    /// bench's model, bit-slice sparse by construction) the binary
+    /// descent selects exactly the plan the linear descent selects,
+    /// without spending more held-out evaluations.
+    #[test]
+    fn binary_descent_matches_linear_on_planted_fixture() {
+        use crate::data::synthetic;
+        use crate::util::fixtures;
+        let train = synthetic::mnist(600, 11);
+        let holdout = synthetic::mnist(160, 12);
+        let stack = fixtures::planted_class_stack(&train);
+        let run = |descent| {
+            let cfg = PlannerConfig {
+                eval_examples: 0, // search on the full holdout
+                descent,
+                ..PlannerConfig::default()
+            };
+            plan_deployment(&stack, &holdout, &cfg).unwrap()
+        };
+        let linear = run(DescentStrategy::Linear);
+        let binary = run(DescentStrategy::Binary);
+        assert_eq!(binary.plan, linear.plan, "descent strategies diverged");
+        assert!(
+            binary.evaluations <= linear.evaluations,
+            "binary spent {} evaluations, linear {}",
+            binary.evaluations,
+            linear.evaluations
+        );
+        assert!(binary.within_budget && linear.within_budget);
     }
 }

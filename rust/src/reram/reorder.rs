@@ -328,8 +328,8 @@ impl ReorderRow {
     /// Programmed (fabricated) tiles, natural / reordered.
     pub fn tile_saving(&self) -> f64 {
         saving(
-            self.baseline.dense_tiles + self.baseline.compressed_tiles,
-            self.reordered.dense_tiles + self.reordered.compressed_tiles,
+            self.baseline.programmed_tiles(),
+            self.reordered.programmed_tiles(),
         )
     }
 }

@@ -78,8 +78,9 @@ pub fn bits_for_current(max_current: u32) -> u32 {
 /// Unprogrammed (fully-zero) tiles contribute no columns: they carry no
 /// ADC, so counting their zero sums would bias percentiles downward (the
 /// test is the tile's cached census — O(1), no recount). Structurally-zero
-/// columns of *compressed* tiles are excluded for the same reason: the
-/// per-tile nonzero-column index skips their conversions outright
+/// columns of *compressed* and *bit-plane* tiles are excluded for the
+/// same reason: the per-tile nonzero-column index skips their conversions
+/// outright
 /// ([`crate::reram::crossbar::Crossbar::bitline_currents_active`]), so no
 /// ADC ever sees them — with reordering they additionally cluster into
 /// whole skipped tiles. Dense tiles carry no index: every one of their
@@ -97,7 +98,7 @@ pub fn layer_slice_currents(layer: &LayerMapping) -> [SliceCurrents; N_SLICES] {
                 }
                 let sums = tile.column_conductance_sums();
                 if tile.active_cols().is_some() {
-                    // compressed: only indexed (converting) columns
+                    // indexed layouts: only indexed (converting) columns
                     out[k].sums.extend(sums.into_iter().filter(|&s| s > 0));
                 } else {
                     // dense: every column converts, zeros included

@@ -12,6 +12,7 @@ use crate::quant::{self, N_SLICES};
 use crate::tensor::Tensor;
 use crate::util::pool::{parallel_map, worker_threads};
 
+use super::crossbar::{pack_wave, StorageFormat};
 use super::mapper::LayerMapping;
 
 /// Quantize non-negative activations to codes (mirrors L2 `_act_quantize`)
@@ -49,14 +50,18 @@ pub fn adc_clip(current: u32, bits: u32) -> u32 {
 }
 
 /// Reusable per-example buffers for [`forward_codes_into`]: the 8
-/// activation bit-planes, the per-tile bitline-current accumulator, and —
-/// for reordered mappings — the permuted code vector and the
-/// physical-column accumulator. One `SimScratch` per worker thread keeps
-/// the hot loop allocation-free.
+/// activation bit-planes (byte and packed wave forms), the per-tile
+/// bitline-current accumulator, and — for reordered mappings — the
+/// permuted code vector and the physical-column accumulator. One
+/// `SimScratch` per worker thread keeps the hot loop allocation-free.
 #[derive(Debug, Default)]
 pub struct SimScratch {
     /// plane-major: `planes[t * rows + r]` is bit t of activation code r
     planes: Vec<u8>,
+    /// the same bit-planes packed per tile row-span into the `[u64; 2]`
+    /// wave-mask form of the BitPlanes convention:
+    /// `waves[t * row_tiles + tr]` covers rows `tr * 128 ..` of plane t
+    waves: Vec<[u64; 2]>,
     /// current accumulator, sliced per tile to `tile.cols()`
     cur: Vec<u32>,
     /// activation codes permuted into physical wordline order (reordered
@@ -75,11 +80,17 @@ pub struct SimScratch {
 /// tiles and both storage representations, so repeated calls do not
 /// allocate. Fully-zero tiles (e.g. the empty negative grid of an
 /// all-positive layer) are skipped outright — they contribute no current,
-/// and the cached per-tile census makes the check O(1). Within each
-/// programmed compressed tile, the ADC/recombination loop walks only the
-/// tile's nonzero-column index ([`Crossbar::bitline_currents_active`]):
-/// structurally-zero columns carry no current and no conversion, closing
-/// the remaining O(cols) term at extreme sparsity.
+/// and the cached per-tile census makes the check O(1). Each bit-plane is
+/// additionally packed once per tile row-span into the `[u64; 2]`
+/// wave-mask form: bit-plane tiles consume the wave directly through the
+/// popcount path ([`Crossbar::bitline_currents_wave`]), and an all-zero
+/// wave skips the whole row-block — no wordline is driven, so every
+/// current is identically zero and every ADC conversion of that plane is
+/// dropped bit-exactly, in every layout. Within each programmed indexed
+/// tile, the ADC/recombination loop walks only the tile's nonzero-column
+/// index ([`Crossbar::bitline_currents_active`]): structurally-zero
+/// columns carry no current and no conversion, closing the remaining
+/// O(cols) term at extreme sparsity.
 ///
 /// Reordered mappings ([`LayerMapping::reorder`]) are handled entirely at
 /// the boundaries, per the convention in [`crate::reram::reorder`]: the
@@ -90,6 +101,8 @@ pub struct SimScratch {
 ///
 /// [`Crossbar::bitline_currents_active`]:
 /// crate::reram::crossbar::Crossbar::bitline_currents_active
+/// [`Crossbar::bitline_currents_wave`]:
+/// crate::reram::crossbar::Crossbar::bitline_currents_wave
 pub fn forward_codes_into(
     layer: &LayerMapping,
     a_code: &[u8],
@@ -103,6 +116,7 @@ pub fn forward_codes_into(
     out.resize(layer.cols, 0);
     let SimScratch {
         planes,
+        waves,
         cur,
         perm_codes,
         phys,
@@ -126,6 +140,19 @@ pub fn forward_codes_into(
             planes[t * rows + r] = (c >> t) & 1;
         }
     }
+    // the same planes, packed once per tile row-span into wave masks —
+    // what the bit-plane tiles consume and the zero-wave skip tests
+    let row_tiles = rows.div_ceil(super::XBAR_ROWS);
+    waves.clear();
+    waves.resize(8 * row_tiles, [0u64; 2]);
+    for (t, span) in waves.chunks_exact_mut(row_tiles).enumerate() {
+        let plane = &planes[t * rows..(t + 1) * rows];
+        for (tr, wave) in span.iter_mut().enumerate() {
+            let r0 = tr * super::XBAR_ROWS;
+            let r1 = (r0 + super::XBAR_ROWS).min(rows);
+            *wave = pack_wave(&plane[r0..r1]);
+        }
+    }
     cur.resize(super::XBAR_COLS, 0);
     // the accumulator runs in physical column order; unless the *column*
     // permutation is real, physical == logical and it writes `out`
@@ -142,11 +169,21 @@ pub fn forward_codes_into(
     // bit-serial over the 8 activation bit planes
     for t in 0..8u32 {
         let bits = &planes[t as usize * rows..(t as usize + 1) * rows];
+        let plane_waves = &waves[t as usize * row_tiles..(t as usize + 1) * row_tiles];
         for (k, (pos, neg)) in layer.grids.iter().enumerate() {
             let full = adc_bits[k];
             for (grid, sign) in [(pos, 1i64), (neg, -1i64)] {
                 for tr in 0..grid.row_tiles {
                     let r0 = tr * super::XBAR_ROWS;
+                    let wave = &plane_waves[tr];
+                    if *wave == [0, 0] {
+                        // zero-wave skip: no wordline of this row-block is
+                        // driven on this plane, so every current is
+                        // identically zero and adc_clip(0) contributes
+                        // nothing — drop the whole block's accumulation
+                        // and ADC conversions, in every layout
+                        continue;
+                    }
                     for tc in 0..grid.col_tiles {
                         let tile = grid.tile(tr, tc);
                         if tile.nonzero_cells() == 0 {
@@ -154,9 +191,15 @@ pub fn forward_codes_into(
                         }
                         let c0 = tc * super::XBAR_COLS;
                         let cur = &mut cur[..tile.cols()];
-                        match tile.bitline_currents_active(&bits[r0..r0 + tile.rows()], cur)
-                        {
-                            // compressed tile: convert only the columns
+                        // bit-plane tiles take the popcount path on the
+                        // packed wave; byte layouts scan the byte plane
+                        let idx = if tile.format() == StorageFormat::BitPlanes {
+                            tile.bitline_currents_wave(wave, cur)
+                        } else {
+                            tile.bitline_currents_active(&bits[r0..r0 + tile.rows()], cur)
+                        };
+                        match idx {
+                            // indexed tile: convert only the columns
                             // that hold programmed cells — zero columns
                             // contribute nothing by construction
                             Some(active) => {
@@ -389,15 +432,14 @@ mod tests {
         assert_eq!(codes[0], 0);
     }
 
-    /// Property: the Dense and Compressed tile layouts agree bit-exactly
-    /// through the whole forward path across random weight densities —
-    /// including all-zero slices, dense slices, and the partial edge tiles
-    /// of a non-multiple-of-128 layer. Integer accumulation commutes, so
+    /// Property: all three tile layouts agree bit-exactly through the
+    /// whole forward path across random weight densities — including
+    /// all-zero slices, dense slices, and the partial edge tiles of a
+    /// non-multiple-of-128 layer. Integer accumulation commutes, so
     /// identical cells must give identical outputs however they are laid
     /// out.
     #[test]
     fn storage_formats_agree_bit_exactly_through_forward() {
-        use crate::reram::crossbar::StorageFormat;
         check(8, |rng| {
             let rows = 1 + rng.below(300);
             let cols = 1 + rng.below(120);
@@ -412,8 +454,6 @@ mod tests {
             }
             let w = Tensor::new(vec![rows, cols], data).unwrap();
             let layer = map_layer("l", &w).unwrap();
-            let dense = layer.with_storage(StorageFormat::Dense);
-            let comp = layer.with_storage(StorageFormat::Compressed);
             let b = 1 + rng.below(3);
             let x = Tensor::new(
                 vec![b, rows],
@@ -422,13 +462,58 @@ mod tests {
             .unwrap();
             for bits in [LOSSLESS, [3, 3, 3, 1]] {
                 let auto = forward(&layer, &x, &bits);
-                let d = forward(&dense, &x, &bits);
-                let c = forward(&comp, &x, &bits);
-                ensure(d.data() == auto.data(), "dense vs density-chosen")?;
-                ensure(c.data() == auto.data(), "compressed vs density-chosen")?;
+                for fmt in [
+                    StorageFormat::Dense,
+                    StorageFormat::Compressed,
+                    StorageFormat::BitPlanes,
+                ] {
+                    let forced = forward(&layer.with_storage(fmt), &x, &bits);
+                    ensure(
+                        forced.data() == auto.data(),
+                        format!("{fmt:?} vs density-chosen at {bits:?}"),
+                    )?;
+                }
             }
             Ok(())
         });
+    }
+
+    /// Satellite: the zero-wave skip must be bit-exact. Craft an
+    /// activation whose high bit planes are all-zero (codes < 4 ⇒ planes
+    /// 2..8 never drive a wordline) and whose nonzero codes sit only in
+    /// rows 0..40 of a 200-row layer, so the second row-block's waves —
+    /// and the high `u64` word of the first — are all-zero too. All that
+    /// skipped work must contribute exactly nothing: the output has to
+    /// match a brute-force integer reference, in every storage layout.
+    #[test]
+    fn zero_wave_skip_is_bit_exact() {
+        let mut rng = Rng::new(77);
+        let (rows, cols) = (200, 24);
+        let w = random_sparse_tensor(&mut rng, rows, cols, 45);
+        let layer = map_layer("l", &w).unwrap();
+        let mut a = vec![0u8; rows];
+        for code in a.iter_mut().take(40) {
+            *code = 1 + rng.below(3) as u8; // codes 1..=3: planes 2..8 empty
+        }
+        // brute-force reference: out[c] = Σ_r a[r] · sign · code[r][c]
+        let q = quant::quantize(&w);
+        let mut want = vec![0i64; cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                want[c] += a[r] as i64
+                    * q.signs[r * cols + c] as i64
+                    * q.codes[r * cols + c] as i64;
+            }
+        }
+        assert_eq!(forward_codes(&layer, &a, &LOSSLESS), want);
+        for fmt in [
+            StorageFormat::Dense,
+            StorageFormat::Compressed,
+            StorageFormat::BitPlanes,
+        ] {
+            let m = layer.with_storage(fmt);
+            assert_eq!(forward_codes(&m, &a, &LOSSLESS), want, "{fmt:?}");
+        }
     }
 
     #[test]
@@ -506,7 +591,6 @@ mod tests {
     #[test]
     #[ignore = "broad reorder x format sweep; CI runs it with --include-ignored"]
     fn reordered_forward_broad_format_sweep() {
-        use crate::reram::crossbar::StorageFormat;
         use crate::reram::mapper::map_layer_with;
         use crate::reram::reorder::ReorderConfig;
         check(16, |rng| {
@@ -528,7 +612,11 @@ mod tests {
                 ReorderConfig::cols_only(),
             ] {
                 let reordered = map_layer_with("l", &w, Some(cfg)).unwrap();
-                for fmt in [StorageFormat::Dense, StorageFormat::Compressed] {
+                for fmt in [
+                    StorageFormat::Dense,
+                    StorageFormat::Compressed,
+                    StorageFormat::BitPlanes,
+                ] {
                     let m = reordered.with_storage(fmt);
                     let got = forward(&m, &x, &LOSSLESS);
                     ensure(

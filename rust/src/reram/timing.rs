@@ -17,8 +17,8 @@
 //! within each wave a tile's single column-multiplexed ADC serially
 //! converts the tile's **converting** columns
 //! ([`Crossbar::converting_columns`] — the cached nonzero-column index for
-//! compressed tiles, every column for dense tiles, nothing for
-//! fully-zero tiles). The per-tile count is therefore bit-consistent with
+//! compressed and bit-plane tiles, every column for dense tiles, nothing
+//! for fully-zero tiles). The per-tile count is therefore bit-consistent with
 //! what [`Crossbar::bitline_currents_active`] actually executes: a column
 //! is priced exactly when the simulator converts it.
 //!
@@ -239,9 +239,9 @@ mod tests {
     use crate::util::fixtures;
     use crate::util::rng::Rng;
 
-    /// Hand-computed tile cycles in both layouts: a dense tile converts
-    /// every column, a compressed tile only its nonzero-column index, a
-    /// fully-zero tile nothing.
+    /// Hand-computed tile cycles in every layout: a dense tile converts
+    /// every column; compressed and bit-plane tiles only their
+    /// nonzero-column index; a fully-zero tile nothing.
     #[test]
     fn tile_cycles_by_hand() {
         let mut xb = Crossbar::zeros(4, 4);
@@ -250,21 +250,24 @@ mod tests {
         xb.set(2, 3, 3);
         // dense layout: 4 converting columns x 8 waves x 3 cycles
         assert_eq!(tile_cycles(&xb, 3), 8 * 4 * 3);
-        // compressed layout: only columns 1 and 3 hold cells
-        let comp = xb.in_format(StorageFormat::Compressed);
-        assert_eq!(comp.converting_columns(), 2);
-        assert_eq!(tile_cycles(&comp, 3), 8 * 2 * 3);
-        assert_eq!(tile_cycles(&comp, 1), 8 * 2);
-        // fully-zero tiles cost nothing in either layout
+        // indexed layouts: only columns 1 and 3 hold cells
+        for fmt in [StorageFormat::Compressed, StorageFormat::BitPlanes] {
+            let ix = xb.in_format(fmt);
+            assert_eq!(ix.converting_columns(), 2, "{fmt:?}");
+            assert_eq!(tile_cycles(&ix, 3), 8 * 2 * 3, "{fmt:?}");
+            assert_eq!(tile_cycles(&ix, 1), 8 * 2, "{fmt:?}");
+        }
+        // fully-zero tiles cost nothing in any layout
         let z = Crossbar::zeros(4, 4);
         assert_eq!(tile_cycles(&z, 5), 0);
         assert_eq!(tile_cycles(&z.in_format(StorageFormat::Compressed), 5), 0);
+        assert_eq!(tile_cycles(&z.in_format(StorageFormat::BitPlanes), 5), 0);
     }
 
     /// The cycle price counts exactly the conversions
     /// `bitline_currents_active` executes: per tile, the columns the
-    /// simulator's ADC loop walks (the returned index for compressed
-    /// tiles, every slot for dense ones) times waves times bits.
+    /// simulator's ADC loop walks (the returned index for compressed and
+    /// bit-plane tiles, every slot for dense ones) times waves times bits.
     #[test]
     fn tile_cycles_match_executed_conversions() {
         let mut rng = Rng::new(17);
@@ -277,7 +280,11 @@ mod tests {
         })
         .unwrap();
         let layer = map_layer("l", &w).unwrap();
-        for fmt in [StorageFormat::Dense, StorageFormat::Compressed] {
+        for fmt in [
+            StorageFormat::Dense,
+            StorageFormat::Compressed,
+            StorageFormat::BitPlanes,
+        ] {
             let m = layer.with_storage(fmt);
             for (pos, neg) in &m.grids {
                 for grid in [pos, neg] {
@@ -321,6 +328,7 @@ mod tests {
             natural.clone(),
             natural.with_storage(StorageFormat::Dense),
             natural.with_storage(StorageFormat::Compressed),
+            natural.with_storage(StorageFormat::BitPlanes),
             reordered,
         ] {
             let t = layer_timing(&m, &pl);

@@ -220,9 +220,9 @@ impl CrossbarBackend {
     }
 
     /// Per-layer storage/format census of the shared mapping — which
-    /// tiles are dense vs compressed, the bytes each layout occupies and
-    /// how many fully-zero tiles the simulator skips (rendered by
-    /// `report::storage_table`).
+    /// tiles are dense vs bit-plane vs compressed, the bytes each layout
+    /// occupies and how many fully-zero tiles the simulator skips
+    /// (rendered by `report::storage_table`).
     pub fn storage_rows(&self) -> Vec<StorageRow> {
         self.model.storage_rows()
     }
