@@ -29,7 +29,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use bitslice_reram::report;
-use bitslice_reram::reram::timing;
+use bitslice_reram::reram::{audit, timing};
 use bitslice_reram::serve::{
     CrossbarBackend, InferenceBackend, ServeOptions, ServingEngine, SharedBackend,
 };
@@ -113,6 +113,14 @@ fn main() -> anyhow::Result<()> {
         timing0.layers[bneck].layer,
     );
 
+    // static audit of the replicated artifact this bench is about to
+    // serve — a faulty deployment would make every number below fiction
+    let audit_rep = audit::audit_deployment(&model, &plan_r);
+    assert!(
+        audit_rep.summary.errors == 0,
+        "replicated deployment failed its static audit — {audit_rep}"
+    );
+
     // the sharded backend: same Arc-shared mapping, replicated plan
     let sharded = base.replan("xbar@replicated", plan_r.clone())?.with_intra_threads(1);
     assert!(Arc::ptr_eq(base.mapped(), sharded.mapped()));
@@ -192,6 +200,7 @@ fn main() -> anyhow::Result<()> {
         ("serving_speedup", num(serving_speedup)),
         ("acceptance_min_speedup", num(MIN_SPEEDUP)),
         ("enforced_floor", num(floor)),
+        ("audit", report::audit_summary_json(&audit_rep.summary)),
         ("unreplicated", report::timing_json(&timing0)),
         ("replicated", report::timing_json(&timing1)),
         ("serving", report::serving_json(&[row0, row1])),

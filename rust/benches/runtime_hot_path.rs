@@ -32,7 +32,8 @@ use bitslice_reram::data::loader::{assemble, BatchPlan};
 use bitslice_reram::data::Dataset;
 use bitslice_reram::quant::N_SLICES;
 use bitslice_reram::reram::crossbar::{pack_wave, Crossbar, StorageFormat, XBAR_COLS, XBAR_ROWS};
-use bitslice_reram::reram::{mapper, sim};
+use bitslice_reram::report;
+use bitslice_reram::reram::{audit, mapper, sim};
 use bitslice_reram::runtime::{Engine, Manifest};
 use bitslice_reram::tensor::Tensor;
 use bitslice_reram::util::json::{num, obj, Json};
@@ -119,6 +120,7 @@ fn bitplane_sweep(smoke: bool) -> anyhow::Result<()> {
     // forward-level bit-exactness across the same band, all three
     // layouts, at clipping and non-clipping ADC resolutions
     let batch = if smoke { 2 } else { 8 };
+    let mut audit_tiles = 0usize;
     let x = Tensor::new(
         vec![batch, 256],
         (0..batch * 256).map(|_| rng.next_f32()).collect(),
@@ -132,6 +134,16 @@ fn bitplane_sweep(smoke: bool) -> anyhow::Result<()> {
         }
         let w = Tensor::new(vec![256, 96], data)?;
         let layer = mapper::map_layer("w", &w)?;
+        // every mapped artifact the sweep exercises passes the static
+        // verifier before any current is sampled from it
+        let layer_audit = audit::audit_model(&mapper::MappedModel {
+            layers: vec![std::sync::Arc::new(layer.clone())],
+        });
+        assert!(
+            layer_audit.is_clean(),
+            "mapped layer at weight density {density} failed its audit — {layer_audit}"
+        );
+        audit_tiles += layer_audit.summary.tiles;
         for bits in [LOSSLESS, [3, 3, 3, 1], [2, 2, 2, 2]] {
             let auto = sim::forward(&layer, &x, &bits);
             for fmt in [
@@ -169,6 +181,14 @@ fn bitplane_sweep(smoke: bool) -> anyhow::Result<()> {
         ),
         ("smoke", Json::Bool(smoke)),
         ("speedup_at_040_density", num(speedup)),
+        (
+            "audit",
+            report::audit_summary_json(&audit::AuditSummary {
+                tiles: audit_tiles,
+                errors: 0,
+                warnings: 0,
+            }),
+        ),
         ("sweep", Json::Arr(rows_json)),
     ]);
     std::fs::write("BENCH_bitplane.json", doc.to_string())?;

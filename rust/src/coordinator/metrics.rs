@@ -34,6 +34,16 @@ pub struct MetricsLog {
     pub trace: Vec<TracePoint>,
 }
 
+impl std::fmt::Debug for MetricsLog {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MetricsLog")
+            .field("steps", &self.history.len())
+            .field("trace_points", &self.trace.len())
+            .field("to_file", &self.file.is_some())
+            .finish()
+    }
+}
+
 impl MetricsLog {
     /// `dir = None` keeps everything in memory (tests, benches).
     pub fn create(dir: Option<&Path>) -> Result<Self> {

@@ -45,6 +45,15 @@ pub struct Trainer<'e> {
     n_state_out: usize,
 }
 
+impl std::fmt::Debug for Trainer<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Trainer")
+            .field("model", &self.cfg.model)
+            .field("method", &self.cfg.method.name())
+            .finish_non_exhaustive()
+    }
+}
+
 impl<'e> Trainer<'e> {
     pub fn new(engine: &'e Engine, manifest: &Manifest, cfg: RunConfig) -> Result<Self> {
         let entry = manifest.model(&cfg.model)?.clone();

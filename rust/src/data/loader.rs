@@ -66,6 +66,12 @@ pub struct BatchStream {
     inner: Prefetcher<Batch>,
 }
 
+impl std::fmt::Debug for BatchStream {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BatchStream").field("inner", &self.inner).finish()
+    }
+}
+
 impl BatchStream {
     pub fn new(ds: Dataset, batch: usize, steps: usize, seed: u64, depth: usize) -> Self {
         let plan = BatchPlan::new(ds.len(), batch, seed);

@@ -17,7 +17,7 @@ use crate::report::{MethodRow, PlanRow, StorageRow};
 use crate::reram::planner::DeploymentPlan;
 use crate::reram::reorder::{self, ReorderConfig, ReorderRow};
 use crate::reram::timing::{self, PipelineTiming};
-use crate::reram::{energy, mapper, resolution, ResolutionPolicy};
+use crate::reram::{audit, energy, mapper, resolution, ResolutionPolicy};
 use crate::runtime::{Engine, Manifest};
 use crate::sparsity::{self, SliceStats, TracePoint};
 
@@ -30,6 +30,19 @@ pub struct RunResult {
     pub trace: Vec<TracePoint>,
     pub dataset_source: String,
     pub checkpoint_dir: Option<PathBuf>,
+}
+
+impl std::fmt::Debug for RunResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RunResult")
+            .field("model", &self.cfg.model)
+            .field("method", &self.cfg.method.name())
+            .field("steps_run", &self.outcome.steps_run)
+            .field("accuracy", &self.eval.accuracy)
+            .field("dataset_source", &self.dataset_source)
+            .field("checkpoint_dir", &self.checkpoint_dir)
+            .finish_non_exhaustive()
+    }
 }
 
 impl RunResult {
@@ -205,6 +218,24 @@ pub struct DeployReport {
     pub timing: PipelineTiming,
     /// fabricated cells spent on extra replicas (0 without a budget)
     pub replica_cells: usize,
+    /// static audit of the final (mapped, plan) deployment — every report
+    /// built here ran on a verified artifact, and `audit.errors == 0` is
+    /// guaranteed (a faulty artifact makes `deploy_report` fail instead)
+    pub audit: audit::AuditReport,
+}
+
+impl std::fmt::Debug for DeployReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DeployReport")
+            .field("crossbars", &self.crossbars)
+            .field("unprogrammed_tiles", &self.unprogrammed_tiles)
+            .field("lossless_bits", &self.lossless_bits)
+            .field("deployed_bits", &self.deployed_bits)
+            .field("reordered", &self.reorder.is_some())
+            .field("replica_cells", &self.replica_cells)
+            .field("audit", &self.audit.summary)
+            .finish_non_exhaustive()
+    }
 }
 
 /// Build the deployment report for a set of quantized weights.
@@ -245,6 +276,22 @@ pub fn deploy_report(
     let mut plan = DeploymentPlan::from_policy(&mapped, policy);
     let replica_cells =
         timing::fill_replicas_factor(&mapped, &mut plan, replicate_budget.unwrap_or(0.0));
+    // a positive budget that buys zero replicas is a config error (the
+    // budget is below one copy of the bottleneck layer) — fail loudly
+    // instead of shipping a silently unreplicated plan
+    if let Some(factor) = replicate_budget {
+        if let Some(d) = audit::replica_budget_diagnostic(&mapped, &plan, factor, replica_cells) {
+            anyhow::bail!(
+                "{d}\nhint: --replicate-budget is in multiples of the bottleneck layer's \
+                 fabricated cells; give at least 1.0 to buy one extra copy, or drop the flag"
+            );
+        }
+    }
+    let audit = audit::audit_deployment(&mapped, &plan);
+    anyhow::ensure!(
+        audit.summary.errors == 0,
+        "deployment artifact failed its static audit — {audit}"
+    );
     let timing = timing::plan_timing(&mapped, &plan);
     let plan_rows = energy::layer_costs(&mapped, &plan);
     let plan_savings = energy::plan_savings_vs_baseline(&mapped, &plan);
@@ -265,5 +312,6 @@ pub fn deploy_report(
         reorder,
         timing,
         replica_cells,
+        audit,
     })
 }

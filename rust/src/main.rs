@@ -19,9 +19,30 @@
 //!            onto the pipeline's bottleneck layers (unit: multiples of the
 //!            bottleneck layer's fabricated cells; per-layer
 //!            latency/replica/throughput rows land in plan.json)
+//!            [--audit]  print the static audit table and write
+//!            <out>/audit.json beside the other deploy artifacts
+//! audit      --checkpoint ... | --fixture planted|bottleneck
+//!            [--reorder --replicate-budget F --percentile F]
+//!            static verification only: map, plan, audit, exit non-zero on
+//!            any Error-severity diagnostic (--fixture needs the `bench`
+//!            feature; it audits the seeded fixture stacks with no
+//!            checkpoint or artifacts required — the CI smoke path)
 //! reproduce  table1|table2|table3|fig2 [--quick] [table2: --model vgg11]
 //! bench-adc                              ADC cost model sweep (1..8 bits)
 //! ```
+//!
+//! # Verifying a deployment
+//!
+//! Every deployment artifact this CLI builds is statically verified by
+//! `reram::audit` before anything runs: `deploy` audits the final
+//! (mapping, plan) pair inside `harness::deploy_report` and fails on any
+//! Error-severity diagnostic, and serving construction re-checks the
+//! artifact it is handed. The `audit` subcommand runs *only* that pass —
+//! walk every tile, permutation, plan row and replica handle, print the
+//! findings table (`report::audit_table`), write `<out>/audit.json`, and
+//! exit non-zero if the artifact is faulty. The diagnostic catalogue
+//! (stable `A0xx` codes → the convention each enforces) lives in the
+//! `reram` module docs.
 //!
 //! Python never runs here: all compute graphs come from `artifacts/`
 //! (`make artifacts`), loaded through the PJRT CPU client.
@@ -34,7 +55,7 @@ use bitslice_reram::data::Dataset;
 use bitslice_reram::harness;
 use bitslice_reram::report;
 use bitslice_reram::reram::planner::{self, PlannerConfig};
-use bitslice_reram::reram::{energy, timing, AdcModel, ResolutionPolicy};
+use bitslice_reram::reram::{audit, energy, mapper, timing, AdcModel, ResolutionPolicy};
 use bitslice_reram::runtime::{Engine, Manifest};
 use bitslice_reram::serve::{self, CrossbarBackend, InferenceBackend, ReferenceBackend};
 use bitslice_reram::sparsity;
@@ -54,11 +75,13 @@ fn run() -> Result<()> {
         Some("eval") => cmd_eval(&args),
         Some("analyze") => cmd_analyze(&args),
         Some("deploy") => cmd_deploy(&args),
+        Some("audit") => cmd_audit(&args),
         Some("reproduce") => cmd_reproduce(&args),
         Some("bench-adc") => cmd_bench_adc(&args),
         other => {
             eprintln!(
-                "usage: bitslice-reram <train|eval|analyze|deploy|reproduce|bench-adc> [flags]"
+                "usage: bitslice-reram <train|eval|analyze|deploy|audit|reproduce|bench-adc> \
+                 [flags]"
             );
             anyhow::bail!("unknown subcommand {other:?}");
         }
@@ -188,6 +211,9 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     // cells, water-filled onto bottleneck layers for pipeline throughput
     let replicate_budget = args.f32_or("replicate-budget", 0.0)? as f64;
     let replicate_budget = (replicate_budget > 0.0).then_some(replicate_budget);
+    // print the static verifier's findings and write <out>/audit.json
+    // (the audit itself always runs inside deploy_report)
+    let show_audit = args.flag("audit");
     let cfg = RunConfig::from_args(args)?;
     args.finish()?;
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
@@ -220,6 +246,15 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     let storage_path = cfg.out_dir.join("storage.json");
     std::fs::write(&storage_path, report::storage_json(&deploy.storage).to_string())?;
     println!("storage census written to {}", storage_path.display());
+    if show_audit {
+        println!(
+            "{}",
+            report::audit_table("deployment audit (static verifier)", &deploy.audit)
+        );
+        let audit_path = cfg.out_dir.join("audit.json");
+        std::fs::write(&audit_path, report::audit_json(&deploy.audit).to_string())?;
+        println!("audit report written to {}", audit_path.display());
+    }
     if let Some(rows) = &deploy.reorder {
         println!(
             "{}",
@@ -318,7 +353,17 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         // spend the replication budget on the *searched* plan, so latency
         // is priced at the resolutions the search actually selected
         let mut plan = search.plan.clone();
-        timing::fill_replicas_factor(mapped, &mut plan, replicate_budget.unwrap_or(0.0));
+        let spent =
+            timing::fill_replicas_factor(mapped, &mut plan, replicate_budget.unwrap_or(0.0));
+        // the pre-search deployment above already hard-failed on a
+        // too-small budget; the searched plan can still underflow if the
+        // search moved the bottleneck to a bigger layer — warn, the plan
+        // itself is sound
+        if let Some(f) = replicate_budget {
+            if let Some(d) = audit::replica_budget_diagnostic(mapped, &plan, f, spent) {
+                println!("warning: {d} (searched plan)");
+            }
+        }
         let plan_timing = timing::plan_timing(mapped, &plan);
         let plan_rows = energy::layer_costs(mapped, &plan);
         println!(
@@ -361,6 +406,89 @@ fn cmd_deploy(args: &Args) -> Result<()> {
             "(planner skipped: --plan-budget/--plan-examples drive the MLP host stack only)"
         );
     }
+    Ok(())
+}
+
+/// The seeded fixture stacks the CI smoke audit drives — no checkpoint or
+/// XLA artifacts needed. Compiled only with the `bench` feature, which
+/// exposes `util::fixtures` outside tests.
+#[cfg(feature = "bench")]
+fn fixture_stack(
+    which: &str,
+) -> Result<(String, Vec<(String, bitslice_reram::tensor::Tensor)>)> {
+    use bitslice_reram::util::fixtures;
+    let stack = match which {
+        "planted" => {
+            let train = bitslice_reram::data::synthetic::mnist(2000, 11);
+            fixtures::planted_class_stack(&train)
+        }
+        "bottleneck" => fixtures::bottleneck_stack(0xF1A7),
+        other => anyhow::bail!("--fixture {other:?} (planted|bottleneck)"),
+    };
+    let named = stack.iter().map(|l| (l.name.clone(), l.w.clone())).collect();
+    Ok((format!("fixture {which}"), named))
+}
+
+#[cfg(not(feature = "bench"))]
+fn fixture_stack(
+    which: &str,
+) -> Result<(String, Vec<(String, bitslice_reram::tensor::Tensor)>)> {
+    anyhow::bail!(
+        "--fixture {which} needs the `bench` feature: \
+         cargo run --features bench -- audit --fixture {which}"
+    )
+}
+
+/// Static verification only: map, plan, audit, report — no inference. The
+/// process exits non-zero on any Error-severity diagnostic, so CI can run
+/// this as a gate.
+fn cmd_audit(args: &Args) -> Result<()> {
+    let ckpt = args.str_opt("checkpoint");
+    let fixture = args.str_opt("fixture");
+    let pct = args.f32_or("percentile", 0.999)? as f64;
+    let reorder_cfg = if args.flag("reorder") {
+        Some(bitslice_reram::reram::ReorderConfig::default())
+    } else {
+        None
+    };
+    let replicate_budget = args.f32_or("replicate-budget", 0.0)? as f64;
+    let cfg = RunConfig::from_args(args)?;
+    args.finish()?;
+
+    let (label, named) = match (&ckpt, &fixture) {
+        (Some(dir), None) => {
+            let manifest = Manifest::load(&cfg.artifacts_dir)?;
+            let (state, meta) = load_checkpoint(&manifest, std::path::Path::new(dir))?;
+            let entry = manifest.model(&meta.model)?;
+            (
+                format!("{} ({})", meta.model, meta.method),
+                state.named_qws(entry),
+            )
+        }
+        (None, Some(fix)) => fixture_stack(fix)?,
+        _ => anyhow::bail!("audit wants exactly one of --checkpoint or --fixture"),
+    };
+
+    let mapped = mapper::map_model_with(&named, reorder_cfg)?;
+    let mut plan =
+        planner::DeploymentPlan::from_policy(&mapped, ResolutionPolicy::Percentile(pct));
+    let spent = timing::fill_replicas_factor(&mapped, &mut plan, replicate_budget);
+    let mut rep = audit::audit_deployment(&mapped, &plan);
+    // fold a budget underflow into the report so it reaches the table,
+    // the JSON artifact and the exit code alike
+    if let Some(d) = audit::replica_budget_diagnostic(&mapped, &plan, replicate_budget, spent) {
+        rep.push(d);
+    }
+    println!("{}", report::audit_table(&format!("audit of {label}"), &rep));
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let path = cfg.out_dir.join("audit.json");
+    std::fs::write(&path, report::audit_json(&rep).to_string())?;
+    println!("audit report written to {}", path.display());
+    anyhow::ensure!(
+        rep.summary.errors == 0,
+        "audit found {} error(s) — the artifact is faulty",
+        rep.summary.errors
+    );
     Ok(())
 }
 

@@ -477,6 +477,73 @@ pub fn timing_json(timing: &PipelineTiming) -> Json {
     ])
 }
 
+pub use crate::reram::audit::{AuditReport, AuditSummary};
+
+/// Render an audit report (markdown): the scan roll-up plus one row per
+/// diagnostic — stable code, severity, layer, tile and message (the
+/// `deploy --audit` / `audit` subcommand human view).
+pub fn audit_table(title: &str, report: &AuditReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("### {title}\n\n"));
+    out.push_str(&format!(
+        "{} tiles scanned: {} errors, {} warnings\n\n",
+        report.summary.tiles, report.summary.errors, report.summary.warnings
+    ));
+    if report.diagnostics.is_empty() {
+        out.push_str("no findings — every audited invariant holds\n");
+        return out;
+    }
+    out.push_str(
+        "| Code | Severity | Layer | Tile | Message |\n\
+         |------|----------|-------|------|---------|\n",
+    );
+    for d in &report.diagnostics {
+        out.push_str(&format!(
+            "| {} {} | {} | {} | {} | {} |\n",
+            d.code.code(),
+            d.code.name(),
+            d.severity,
+            d.layer,
+            d.tile,
+            d.message
+        ));
+    }
+    out
+}
+
+/// Serialize just the audit roll-up counts — what `deploy_report` and the
+/// bench artifacts embed to record they ran on a verified mapping.
+pub fn audit_summary_json(summary: &AuditSummary) -> Json {
+    obj(vec![
+        ("tiles_scanned", num(summary.tiles as f64)),
+        ("errors", num(summary.errors as f64)),
+        ("warnings", num(summary.warnings as f64)),
+    ])
+}
+
+/// Serialize a full audit report — the `<out>/audit.json` artifact
+/// (deterministic: object keys sort, diagnostics keep scan order).
+pub fn audit_json(report: &AuditReport) -> Json {
+    let diags = report
+        .diagnostics
+        .iter()
+        .map(|d| {
+            obj(vec![
+                ("code", s(d.code.code())),
+                ("name", s(d.code.name())),
+                ("severity", s(&d.severity.to_string())),
+                ("layer", s(&d.layer)),
+                ("tile", s(&d.tile)),
+                ("message", s(&d.message)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("summary", audit_summary_json(&report.summary)),
+        ("diagnostics", Json::Arr(diags)),
+    ])
+}
+
 /// Per-slice resolution summary (feeds Table 3's "Resolution" column from
 /// the measured mapping instead of asserting it).
 pub fn resolution_summary(bits_lsb_first: [u32; N_SLICES]) -> String {
@@ -775,5 +842,72 @@ mod tests {
         let lines: Vec<&str> = s.lines().collect();
         assert!(lines[2].contains("XB_3 | 1"));
         assert!(lines[5].contains("XB_0 | 3"));
+    }
+
+    fn audit_fixture() -> AuditReport {
+        use crate::reram::audit::{AuditCode, Diagnostic, Severity};
+        AuditReport {
+            summary: AuditSummary {
+                tiles: 48,
+                errors: 1,
+                warnings: 1,
+            },
+            diagnostics: vec![
+                Diagnostic {
+                    code: AuditCode::CensusMismatch,
+                    severity: Severity::Error,
+                    layer: "fc1/w".into(),
+                    tile: "XB_2/pos[0,1]".into(),
+                    message: "cached census 7 != store recount 6".into(),
+                },
+                Diagnostic {
+                    code: AuditCode::FormatBandDrift,
+                    severity: Severity::Warning,
+                    layer: "fc2/w".into(),
+                    tile: "XB_0/neg[0,0]".into(),
+                    message: "stored Dense where the density band (5.0%) chooses Compressed"
+                        .into(),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn audit_table_lists_findings_with_stable_codes() {
+        let t = audit_table("Deployment audit", &audit_fixture());
+        assert!(t.contains("48 tiles scanned: 1 errors, 1 warnings"));
+        assert!(t.contains("| A002 CensusMismatch | error | fc1/w | XB_2/pos[0,1] |"));
+        assert!(t.contains("| A009 FormatBandDrift | warning | fc2/w |"));
+        // a clean report renders the explicit all-clear line
+        let clean = AuditReport {
+            summary: AuditSummary {
+                tiles: 12,
+                errors: 0,
+                warnings: 0,
+            },
+            diagnostics: vec![],
+        };
+        let t = audit_table("Deployment audit", &clean);
+        assert!(t.contains("no findings"));
+        assert!(!t.contains("| Code |"));
+    }
+
+    #[test]
+    fn audit_json_roundtrips() {
+        let j = audit_json(&audit_fixture());
+        let back = crate::util::json::parse(&j.to_string()).unwrap();
+        let summary = back.get("summary").unwrap();
+        assert_eq!(summary.get("tiles_scanned").unwrap().as_usize(), Some(48));
+        assert_eq!(summary.get("errors").unwrap().as_usize(), Some(1));
+        assert_eq!(summary.get("warnings").unwrap().as_usize(), Some(1));
+        let diags = back.get("diagnostics").unwrap().as_arr().unwrap();
+        assert_eq!(diags.len(), 2);
+        assert_eq!(diags[0].get("code").unwrap().as_str(), Some("A002"));
+        assert_eq!(diags[0].get("severity").unwrap().as_str(), Some("error"));
+        assert_eq!(diags[1].get("code").unwrap().as_str(), Some("A009"));
+        assert_eq!(
+            diags[1].get("name").unwrap().as_str(),
+            Some("FormatBandDrift")
+        );
     }
 }

@@ -1,0 +1,886 @@
+//! Static verifier over deployment artifacts.
+//!
+//! The conventions the deployment stack lives by — cached censuses,
+//! CSR/bit-plane index exactness, per-layer permutations, Arc-shared
+//! replicas, the converting-column count that energy and timing both
+//! bill — exist as prose in the [`crate::reram`] module docs and as
+//! scattered bit-exactness tests. This pass proves a mapped deployment
+//! sound **before** anything executes: it walks every tile and layer of
+//! a [`MappedModel`] (plus, for a full deployment, its
+//! [`DeploymentPlan`] and replica view) without running inference and
+//! emits one typed [`Diagnostic`] per violated invariant.
+//!
+//! Diagnostic codes are stable (tests, CI and downstream tooling key on
+//! them); the full catalogue lives in the [`crate::reram`] module docs
+//! beside the conventions each code enforces:
+//!
+//! | code | name | checks |
+//! |------|------|--------|
+//! | A001 | CellValueOutOfRange | every stored cell in `1..=CELL_MAX` |
+//! | A002 | CensusMismatch | cached nonzero census == recount; layouts round-trip identically |
+//! | A003 | CompressedIndexInconsistent | CSR offsets/entries/active indexes exact |
+//! | A004 | BitPlaneMaskMismatch | plane shapes, zero padding, column index exact |
+//! | A005 | PermutationNotBijective | reorder permutations bijective + exact inverses |
+//! | A006 | PlanShapeMismatch | plan layers/replicas consistent with the mapping |
+//! | A007 | ResolutionOutOfBounds | every planned ADC resolution usable |
+//! | A008 | ReplicaAliasBroken | replica handles alias source tiles; area bill matches |
+//! | A009 | FormatBandDrift | tile layout matches the density-band policy |
+//! | A010 | TimingBillMismatch | converting-column bill == live-column recount |
+//! | A011 | ReplicaBudgetUnderflow | a positive replication budget actually buys replicas |
+//!
+//! Entry points: [`audit_model`] (mapping only, deep), [`audit_deployment`]
+//! (mapping + plan + replica view — what the `audit` CLI subcommand and
+//! `serve::CrossbarBackend` construction run), `quick_audit`
+//! (structural-only, cheap enough for the mapper's debug assertion), and
+//! [`audit_replicas`] / [`replica_budget_diagnostic`] for the replication
+//! artifacts on their own.
+
+use std::sync::Arc;
+
+use crate::quant::N_SLICES;
+
+use super::crossbar::{chosen_format, Crossbar, StorageFormat, TileFault};
+use super::energy;
+use super::mapper::{LayerMapping, MappedModel, ReplicatedModel};
+use super::planner::DeploymentPlan;
+use super::reorder::Permutation;
+use super::timing::{self, MAX_REPLICAS};
+
+/// How bad a finding is. `Error` means the artifact would execute
+/// incorrectly (or panic) — serving construction rejects it; `Warning`
+/// means it is suspicious but functionally sound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl std::fmt::Display for Severity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// Stable diagnostic codes — one per invariant class. The `A0xx` string
+/// form ([`AuditCode::code`]) is the contract tests and CI key on; the
+/// enum name matches it one-to-one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum AuditCode {
+    /// A001 — a stored cell value outside `1..=CELL_MAX`
+    CellValueOutOfRange,
+    /// A002 — cached nonzero census != recount over the actual store, or
+    /// a layout round-trip diverges
+    CensusMismatch,
+    /// A003 — compressed (CSR) offsets, entries or active indexes drifted
+    CompressedIndexInconsistent,
+    /// A004 — bit-plane masks malformed (shape, padding bits, column
+    /// index drift)
+    BitPlaneMaskMismatch,
+    /// A005 — a reorder permutation is not a bijection with an exact
+    /// inverse
+    PermutationNotBijective,
+    /// A006 — plan shape (layer count, names, replica counts) disagrees
+    /// with the mapping
+    PlanShapeMismatch,
+    /// A007 — a planned ADC resolution the cost/timing models cannot
+    /// price (0 bits panics them; > 32 saturates the clip)
+    ResolutionOutOfBounds,
+    /// A008 — a replica handle does not alias its source tiles, or the
+    /// fabricated-cell accounting disagrees with `energy`'s static bill
+    ReplicaAliasBroken,
+    /// A009 — a tile's storage layout is not what the density-band
+    /// policy ([`chosen_format`]) would choose for its census
+    FormatBandDrift,
+    /// A010 — a tile's converting-column count (what `energy` bills and
+    /// `timing` prices) disagrees with a recount of its live columns
+    TimingBillMismatch,
+    /// A011 — a positive replication budget bought zero replicas
+    ReplicaBudgetUnderflow,
+}
+
+impl AuditCode {
+    /// The stable `A0xx` identifier.
+    pub fn code(self) -> &'static str {
+        match self {
+            AuditCode::CellValueOutOfRange => "A001",
+            AuditCode::CensusMismatch => "A002",
+            AuditCode::CompressedIndexInconsistent => "A003",
+            AuditCode::BitPlaneMaskMismatch => "A004",
+            AuditCode::PermutationNotBijective => "A005",
+            AuditCode::PlanShapeMismatch => "A006",
+            AuditCode::ResolutionOutOfBounds => "A007",
+            AuditCode::ReplicaAliasBroken => "A008",
+            AuditCode::FormatBandDrift => "A009",
+            AuditCode::TimingBillMismatch => "A010",
+            AuditCode::ReplicaBudgetUnderflow => "A011",
+        }
+    }
+
+    /// The catalogue name (matches the enum variant).
+    pub fn name(self) -> &'static str {
+        match self {
+            AuditCode::CellValueOutOfRange => "CellValueOutOfRange",
+            AuditCode::CensusMismatch => "CensusMismatch",
+            AuditCode::CompressedIndexInconsistent => "CompressedIndexInconsistent",
+            AuditCode::BitPlaneMaskMismatch => "BitPlaneMaskMismatch",
+            AuditCode::PermutationNotBijective => "PermutationNotBijective",
+            AuditCode::PlanShapeMismatch => "PlanShapeMismatch",
+            AuditCode::ResolutionOutOfBounds => "ResolutionOutOfBounds",
+            AuditCode::ReplicaAliasBroken => "ReplicaAliasBroken",
+            AuditCode::FormatBandDrift => "FormatBandDrift",
+            AuditCode::TimingBillMismatch => "TimingBillMismatch",
+            AuditCode::ReplicaBudgetUnderflow => "ReplicaBudgetUnderflow",
+        }
+    }
+
+    /// One-line statement of the invariant the code enforces (the
+    /// catalogue entry; the module docs map each to its convention).
+    pub fn invariant(self) -> &'static str {
+        match self {
+            AuditCode::CellValueOutOfRange => "every stored cell value lies in 1..=CELL_MAX",
+            AuditCode::CensusMismatch => {
+                "the cached nonzero census equals a recount and survives layout round-trips"
+            }
+            AuditCode::CompressedIndexInconsistent => {
+                "CSR offsets are monotone and entries/active indexes are sorted, deduped, \
+                 in-bounds and exact"
+            }
+            AuditCode::BitPlaneMaskMismatch => {
+                "plane masks are tile-shaped with zero padding beyond the tile's rows and an \
+                 exact nonzero-column index"
+            }
+            AuditCode::PermutationNotBijective => {
+                "reorder permutations are bijections whose inverse round-trips exactly"
+            }
+            AuditCode::PlanShapeMismatch => {
+                "the plan carries one layer per mapped layer with sane replica counts"
+            }
+            AuditCode::ResolutionOutOfBounds => {
+                "every planned ADC resolution is priceable (1..=32 bits)"
+            }
+            AuditCode::ReplicaAliasBroken => {
+                "replica handles alias their source tiles and the fabricated-crossbar \
+                 accounting matches energy's static bill"
+            }
+            AuditCode::FormatBandDrift => {
+                "each tile's storage layout is the density-band policy's choice"
+            }
+            AuditCode::TimingBillMismatch => {
+                "the converting-column count billed by energy/timing equals the live-column \
+                 recount"
+            }
+            AuditCode::ReplicaBudgetUnderflow => {
+                "a positive replication budget fabricates at least one replica"
+            }
+        }
+    }
+
+    /// Default severity of a violation of this code.
+    fn severity(self) -> Severity {
+        match self {
+            AuditCode::FormatBandDrift => Severity::Warning,
+            _ => Severity::Error,
+        }
+    }
+}
+
+/// One audit finding, locatable down to the tile.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub code: AuditCode,
+    pub severity: Severity,
+    /// mapped layer name (`-` for model-wide findings)
+    pub layer: String,
+    /// tile label `XB_{k}/{pos|neg}[{tr},{tc}]` (`-` for layer-wide
+    /// findings)
+    pub tile: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    fn new(code: AuditCode, layer: &str, tile: &str, message: String) -> Diagnostic {
+        Diagnostic {
+            code,
+            severity: code.severity(),
+            layer: layer.to_string(),
+            tile: tile.to_string(),
+            message,
+        }
+    }
+
+    fn warning(code: AuditCode, layer: &str, tile: &str, message: String) -> Diagnostic {
+        Diagnostic {
+            severity: Severity::Warning,
+            ..Diagnostic::new(code, layer, tile, message)
+        }
+    }
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} {} [{}] layer {} tile {}: {}",
+            self.code.code(),
+            self.code.name(),
+            self.severity,
+            self.layer,
+            self.tile,
+            self.message
+        )
+    }
+}
+
+/// Roll-up counts of one audit run (what bench artifacts and
+/// `harness::deploy_report` record).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AuditSummary {
+    /// tiles scanned (all slice groups, both signs, every layer)
+    pub tiles: usize,
+    pub errors: usize,
+    pub warnings: usize,
+}
+
+/// Everything one audit run found.
+#[derive(Debug, Clone)]
+pub struct AuditReport {
+    pub summary: AuditSummary,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl AuditReport {
+    /// No findings at any severity.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// The distinct codes that fired (sorted, deduped) — what the
+    /// planted-violation property tests assert on.
+    pub fn codes(&self) -> Vec<AuditCode> {
+        let mut v: Vec<AuditCode> = self.diagnostics.iter().map(|d| d.code).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Whether any diagnostic carries `code`.
+    pub fn has(&self, code: AuditCode) -> bool {
+        self.diagnostics.iter().any(|d| d.code == code)
+    }
+
+    /// Append a finding produced outside the walk (e.g. the A011 budget
+    /// check), keeping the summary counts consistent.
+    pub fn push(&mut self, d: Diagnostic) {
+        match d.severity {
+            Severity::Error => self.summary.errors += 1,
+            Severity::Warning => self.summary.warnings += 1,
+        }
+        self.diagnostics.push(d);
+    }
+}
+
+impl std::fmt::Display for AuditReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "audit: {} tiles scanned, {} errors, {} warnings",
+            self.summary.tiles, self.summary.errors, self.summary.warnings
+        )?;
+        for d in &self.diagnostics {
+            write!(f, "\n  {d}")?;
+        }
+        Ok(())
+    }
+}
+
+fn finalize(diagnostics: Vec<Diagnostic>, tiles: usize) -> AuditReport {
+    let errors = diagnostics
+        .iter()
+        .filter(|d| d.severity == Severity::Error)
+        .count();
+    AuditReport {
+        summary: AuditSummary {
+            tiles,
+            errors,
+            warnings: diagnostics.len() - errors,
+        },
+        diagnostics,
+    }
+}
+
+fn tile_label(k: usize, sign: &str, tr: usize, tc: usize) -> String {
+    format!("XB_{k}/{sign}[{tr},{tc}]")
+}
+
+/// Lower one storage-level [`TileFault`] into its typed diagnostic.
+fn fault_diag(layer: &str, tile: &str, fault: TileFault) -> Diagnostic {
+    match fault {
+        TileFault::ValueOutOfRange { row, col, value } => Diagnostic::new(
+            AuditCode::CellValueOutOfRange,
+            layer,
+            tile,
+            format!("cell ({row},{col}) holds {value}, outside 1..=3"),
+        ),
+        TileFault::CensusMismatch { cached, actual } => Diagnostic::new(
+            AuditCode::CensusMismatch,
+            layer,
+            tile,
+            format!("cached census {cached} != store recount {actual}"),
+        ),
+        TileFault::IndexInconsistent(msg) => {
+            Diagnostic::new(AuditCode::CompressedIndexInconsistent, layer, tile, msg)
+        }
+        TileFault::PlaneMaskInconsistent(msg) => {
+            Diagnostic::new(AuditCode::BitPlaneMaskMismatch, layer, tile, msg)
+        }
+    }
+}
+
+/// Audit one tile: structural faults (A001–A004), the timing/energy
+/// bill (A010), the format band (A009, warning), and — when `deep` —
+/// the cross-layout round-trip (A002).
+fn audit_tile(layer: &str, label: &str, tile: &Crossbar, deep: bool, diags: &mut Vec<Diagnostic>) {
+    for fault in tile.verify_cells() {
+        diags.push(fault_diag(layer, label, fault));
+    }
+
+    // A010: the converting-column count — the exact quantity
+    // energy::slice_conversions bills and timing::tile_cycles prices —
+    // against an independent recount of columns that actually hold
+    // conductance (the cached index never feeds this sum).
+    let live = tile
+        .column_conductance_sums()
+        .iter()
+        .filter(|&&s| s > 0)
+        .count();
+    let billed = tile.converting_columns();
+    let expected = if tile.active_cols().is_some() {
+        live
+    } else {
+        tile.cols() // dense tiles convert every column by convention
+    };
+    if billed != expected {
+        diags.push(Diagnostic::new(
+            AuditCode::TimingBillMismatch,
+            layer,
+            label,
+            format!(
+                "energy/timing bill {billed} converting columns, {live} columns hold \
+                 programmed cells"
+            ),
+        ));
+    }
+
+    if tile.nonzero_cells() == 0 {
+        return; // fully-zero tiles are never fabricated; no band, no trips
+    }
+
+    // A009 (warning): the layout is not what the density-band policy
+    // would choose — legal after an explicit `with_storage`/`in_format`
+    // conversion, but drift a mapper path should never produce.
+    let want = chosen_format(tile.nonzero_cells(), tile.rows(), tile.cols());
+    if tile.format() != want {
+        diags.push(Diagnostic::warning(
+            AuditCode::FormatBandDrift,
+            layer,
+            label,
+            format!(
+                "stored {:?} where the density band ({:.1}%) chooses {want:?}",
+                tile.format(),
+                tile.density() * 100.0
+            ),
+        ));
+    }
+
+    // A002 (deep): all three layouts must round-trip to identical
+    // logical cells — compared through the conductance sums, which every
+    // layout recomputes from its own raw store.
+    if deep {
+        let sums = tile.column_conductance_sums();
+        for fmt in [
+            StorageFormat::Dense,
+            StorageFormat::Compressed,
+            StorageFormat::BitPlanes,
+        ] {
+            if fmt == tile.format() {
+                continue;
+            }
+            let rt = tile.in_format(fmt);
+            if rt.column_conductance_sums() != sums {
+                diags.push(Diagnostic::new(
+                    AuditCode::CensusMismatch,
+                    layer,
+                    label,
+                    format!("layout round-trip through {fmt:?} changes the logical cells"),
+                ));
+            }
+        }
+    }
+}
+
+/// Audit one permutation (A005): lengths, bijectivity, exact inverse,
+/// and the cached identity flag.
+fn audit_permutation(layer: &str, what: &str, n: usize, p: &Permutation, diags: &mut Vec<Diagnostic>) {
+    let (tn, to) = (p.to_new(), p.to_old());
+    if tn.len() != n || to.len() != n {
+        diags.push(Diagnostic::new(
+            AuditCode::PermutationNotBijective,
+            layer,
+            "-",
+            format!(
+                "{what} permutation covers {}/{} positions of {n} {what}s",
+                tn.len(),
+                to.len()
+            ),
+        ));
+        return;
+    }
+    let mut seen = vec![false; n];
+    for (old, &new) in tn.iter().enumerate() {
+        let new = new as usize;
+        if new >= n {
+            diags.push(Diagnostic::new(
+                AuditCode::PermutationNotBijective,
+                layer,
+                "-",
+                format!("{what} {old} maps to position {new}, outside 0..{n}"),
+            ));
+            return;
+        }
+        if seen[new] {
+            diags.push(Diagnostic::new(
+                AuditCode::PermutationNotBijective,
+                layer,
+                "-",
+                format!("two {what}s map to position {new}"),
+            ));
+            return;
+        }
+        seen[new] = true;
+        if to[new] as usize != old {
+            diags.push(Diagnostic::new(
+                AuditCode::PermutationNotBijective,
+                layer,
+                "-",
+                format!(
+                    "{what} inverse drifts: to_old[to_new[{old}]] = {}",
+                    to[new]
+                ),
+            ));
+            return;
+        }
+    }
+    let really_identity = tn.iter().enumerate().all(|(i, &v)| v as usize == i);
+    if p.is_identity() != really_identity {
+        diags.push(Diagnostic::new(
+            AuditCode::PermutationNotBijective,
+            layer,
+            "-",
+            format!(
+                "cached identity flag {} disagrees with the {what} contents",
+                p.is_identity()
+            ),
+        ));
+    }
+}
+
+/// Audit one mapped layer: every tile of every slice group and sign,
+/// plus its reorder permutations. Returns the tiles scanned.
+fn audit_layer(layer: &LayerMapping, deep: bool, diags: &mut Vec<Diagnostic>) -> usize {
+    let mut tiles = 0usize;
+    if layer.grids.len() != N_SLICES {
+        diags.push(Diagnostic::new(
+            AuditCode::PlanShapeMismatch,
+            &layer.name,
+            "-",
+            format!("{} slice grids for {N_SLICES} slices", layer.grids.len()),
+        ));
+    }
+    for (k, (pos, neg)) in layer.grids.iter().enumerate() {
+        for (sign, grid) in [("pos", pos), ("neg", neg)] {
+            if grid.tiles.len() != grid.row_tiles * grid.col_tiles {
+                diags.push(Diagnostic::new(
+                    AuditCode::PlanShapeMismatch,
+                    &layer.name,
+                    "-",
+                    format!(
+                        "XB_{k}/{sign} grid holds {} tiles for a {}x{} tiling",
+                        grid.tiles.len(),
+                        grid.row_tiles,
+                        grid.col_tiles
+                    ),
+                ));
+                continue;
+            }
+            for tr in 0..grid.row_tiles {
+                for tc in 0..grid.col_tiles {
+                    tiles += 1;
+                    let label = tile_label(k, sign, tr, tc);
+                    audit_tile(&layer.name, &label, grid.tile(tr, tc), deep, diags);
+                }
+            }
+        }
+    }
+    if let Some(ro) = &layer.reorder {
+        audit_permutation(&layer.name, "wordline", layer.rows, &ro.rows, diags);
+        audit_permutation(&layer.name, "column", layer.cols, &ro.cols, diags);
+    }
+    tiles
+}
+
+fn audit_model_impl(model: &MappedModel, deep: bool) -> AuditReport {
+    let mut diags = Vec::new();
+    let mut tiles = 0usize;
+    for layer in &model.layers {
+        tiles += audit_layer(layer, deep, &mut diags);
+    }
+    finalize(diags, tiles)
+}
+
+/// Deep audit of a mapping alone: structural tile checks, the
+/// timing/energy bill, format bands, permutations, and the three-layout
+/// round-trip.
+pub fn audit_model(model: &MappedModel) -> AuditReport {
+    audit_model_impl(model, true)
+}
+
+/// Structural-only audit (no layout round-trips): cheap enough for the
+/// mapper's post-map debug assertion.
+pub(crate) fn quick_audit(model: &MappedModel) -> AuditReport {
+    audit_model_impl(model, false)
+}
+
+/// Audit a plan against its mapping (A006 shape/replicas, A007
+/// resolutions). Emits no tile scans of its own.
+pub fn audit_plan(model: &MappedModel, plan: &DeploymentPlan) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    if plan.layers.len() != model.layers.len() {
+        diags.push(Diagnostic::new(
+            AuditCode::PlanShapeMismatch,
+            "-",
+            "-",
+            format!(
+                "plan carries {} layers, mapping has {}",
+                plan.layers.len(),
+                model.layers.len()
+            ),
+        ));
+        return diags;
+    }
+    for (layer, pl) in model.layers.iter().zip(&plan.layers) {
+        if pl.name != layer.name {
+            diags.push(Diagnostic::warning(
+                AuditCode::PlanShapeMismatch,
+                &layer.name,
+                "-",
+                format!("plan names this layer {:?}", pl.name),
+            ));
+        }
+        if pl.replicas == 0 {
+            diags.push(Diagnostic::warning(
+                AuditCode::PlanShapeMismatch,
+                &layer.name,
+                "-",
+                "plan asks for 0 replicas (treated as 1 everywhere)".to_string(),
+            ));
+        } else if pl.replicas > MAX_REPLICAS {
+            diags.push(Diagnostic::new(
+                AuditCode::PlanShapeMismatch,
+                &layer.name,
+                "-",
+                format!(
+                    "plan asks for {} replicas, above the {MAX_REPLICAS} ceiling",
+                    pl.replicas
+                ),
+            ));
+        }
+        for (k, &bits) in pl.adc_bits.iter().enumerate() {
+            if bits == 0 {
+                diags.push(Diagnostic::new(
+                    AuditCode::ResolutionOutOfBounds,
+                    &layer.name,
+                    "-",
+                    format!("XB_{k} planned at 0 bits — the ADC cost model cannot price it"),
+                ));
+            } else if bits > 32 {
+                diags.push(Diagnostic::warning(
+                    AuditCode::ResolutionOutOfBounds,
+                    &layer.name,
+                    "-",
+                    format!("XB_{k} planned at {bits} bits, beyond the 32-bit clip saturation"),
+                ));
+            }
+        }
+    }
+    diags
+}
+
+/// Count a layer's programmed tiles (the crossbars `energy` fabricates
+/// for one replica).
+fn programmed_tiles(layer: &LayerMapping) -> usize {
+    layer
+        .grids
+        .iter()
+        .flat_map(|(p, n)| [p, n])
+        .flat_map(|g| &g.tiles)
+        .filter(|t| t.nonzero_cells() > 0)
+        .count()
+}
+
+/// Audit a replica view against its mapping and plan (A008): every
+/// handle must `Arc::ptr_eq` its source layer (a replica is an alias,
+/// never a deep clone), handle counts must match the plan, and the
+/// fabricated-crossbar accounting the view implies must equal
+/// [`energy::plan_cost`]'s static bill. The plan must already be
+/// shape-valid with usable resolutions (run [`audit_plan`] first).
+pub fn audit_replicas(
+    model: &MappedModel,
+    plan: &DeploymentPlan,
+    rep: &ReplicatedModel,
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    if rep.layers.len() != model.layers.len() {
+        diags.push(Diagnostic::new(
+            AuditCode::ReplicaAliasBroken,
+            "-",
+            "-",
+            format!(
+                "replica view carries {} layers, mapping has {}",
+                rep.layers.len(),
+                model.layers.len()
+            ),
+        ));
+        return diags;
+    }
+    let mut fabricated = 0usize;
+    for ((layer, pl), handles) in model.layers.iter().zip(&plan.layers).zip(&rep.layers) {
+        let want = pl.replicas.max(1);
+        if handles.len() != want {
+            diags.push(Diagnostic::new(
+                AuditCode::ReplicaAliasBroken,
+                &layer.name,
+                "-",
+                format!(
+                    "replica view holds {} handles, plan fabricates {want}",
+                    handles.len()
+                ),
+            ));
+        }
+        for (i, h) in handles.iter().enumerate() {
+            if !Arc::ptr_eq(h, layer) {
+                diags.push(Diagnostic::new(
+                    AuditCode::ReplicaAliasBroken,
+                    &layer.name,
+                    "-",
+                    format!("replica handle {i} does not alias the source tiles"),
+                ));
+            }
+        }
+        fabricated += handles.len() * programmed_tiles(layer);
+    }
+    let billed = energy::plan_cost(model, plan).crossbars;
+    if fabricated != billed {
+        diags.push(Diagnostic::new(
+            AuditCode::ReplicaAliasBroken,
+            "-",
+            "-",
+            format!(
+                "replica view fabricates {fabricated} crossbars, energy bills {billed}"
+            ),
+        ));
+    }
+    diags
+}
+
+/// The A011 diagnostic for a replication budget that bought nothing:
+/// `factor` was positive but the water-fill spent `spent_cells` = 0.
+/// Returns `None` when the budget is non-positive or something was
+/// actually bought. `deploy --replicate-budget` turns this into a hard
+/// CLI error instead of shipping a silently unreplicated plan.
+pub fn replica_budget_diagnostic(
+    model: &MappedModel,
+    plan: &DeploymentPlan,
+    factor: f64,
+    spent_cells: usize,
+) -> Option<Diagnostic> {
+    if factor <= 0.0 || spent_cells > 0 {
+        return None;
+    }
+    let d = match timing::plan_timing(model, plan).bottleneck() {
+        Some(b) => {
+            let layer = &model.layers[b];
+            let cells = layer.fabricated_cells();
+            let budget = (factor * cells as f64) as usize;
+            Diagnostic::new(
+                AuditCode::ReplicaBudgetUnderflow,
+                &layer.name,
+                "-",
+                format!(
+                    "replication budget {factor}x allots {budget} fabricated cells but one \
+                     extra copy of the bottleneck layer costs {cells}; no replicas fabricated"
+                ),
+            )
+        }
+        None => Diagnostic::new(
+            AuditCode::ReplicaBudgetUnderflow,
+            "-",
+            "-",
+            format!(
+                "replication budget {factor}x requested but the model has no programmed tiles \
+                 to replicate"
+            ),
+        ),
+    };
+    Some(d)
+}
+
+/// Full deployment audit: the deep mapping walk, the plan checks, and —
+/// when the plan is shape-valid with priceable resolutions — the
+/// replica-view alias/accounting checks on the view the plan implies.
+/// This is what the `audit` CLI subcommand runs and what
+/// `serve::CrossbarBackend` construction rejects `Error` findings from.
+pub fn audit_deployment(model: &MappedModel, plan: &DeploymentPlan) -> AuditReport {
+    let mut report = audit_model(model);
+    let tiles = report.summary.tiles;
+    let mut diags = std::mem::take(&mut report.diagnostics);
+    let plan_diags = audit_plan(model, plan);
+    // the replica/energy cross-check prices the plan, which panics on a
+    // malformed shape or a 0-bit resolution — skip it when the plan
+    // checks already found errors
+    let plan_ok = !plan_diags.iter().any(|d| d.severity == Severity::Error);
+    diags.extend(plan_diags);
+    if plan_ok {
+        let replicas: Vec<usize> = plan.layers.iter().map(|l| l.replicas).collect();
+        let rep = model.replicated(&replicas);
+        diags.extend(audit_replicas(model, plan, &rep));
+    }
+    finalize(diags, tiles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reram::mapper;
+    use crate::reram::planner::PAPER_BITS;
+    use crate::reram::reorder::ReorderConfig;
+    use crate::tensor::Tensor;
+    use crate::util::fixtures;
+    use crate::util::rng::Rng;
+
+    fn mapped_fixture(seed: u64) -> MappedModel {
+        let stack = fixtures::sparse_stack(seed, &[64, 32, 10], 0.12);
+        let named: Vec<(String, Tensor)> =
+            stack.iter().map(|l| (l.name.clone(), l.w.clone())).collect();
+        mapper::map_model_with(&named, Some(ReorderConfig::default())).unwrap()
+    }
+
+    #[test]
+    fn clean_mapping_audits_clean() {
+        let model = mapped_fixture(0xA0D1);
+        let report = audit_model(&model);
+        assert!(report.is_clean(), "{report}");
+        assert!(report.summary.tiles > 0);
+        let plan = DeploymentPlan::uniform_for(&model, PAPER_BITS);
+        let dep = audit_deployment(&model, &plan);
+        assert!(dep.is_clean(), "{dep}");
+    }
+
+    #[test]
+    fn plan_shape_and_resolution_checks() {
+        let model = mapped_fixture(0xA0D2);
+        let mut plan = DeploymentPlan::uniform_for(&model, PAPER_BITS);
+
+        // short plan: A006 error, and audit_deployment still terminates
+        plan.layers.pop();
+        let report = audit_deployment(&model, &plan);
+        assert!(report.has(AuditCode::PlanShapeMismatch), "{report}");
+        assert!(report.summary.errors > 0);
+
+        // 0-bit resolution: A007 error, replica cross-check skipped
+        let mut plan = DeploymentPlan::uniform_for(&model, PAPER_BITS);
+        plan.layers[0].adc_bits[2] = 0;
+        let report = audit_deployment(&model, &plan);
+        assert!(report.has(AuditCode::ResolutionOutOfBounds), "{report}");
+        assert!(report.summary.errors > 0);
+
+        // absurd replica count: A006 error
+        let mut plan = DeploymentPlan::uniform_for(&model, PAPER_BITS);
+        plan.layers[0].replicas = MAX_REPLICAS + 1;
+        let report = audit_deployment(&model, &plan);
+        assert!(report.has(AuditCode::PlanShapeMismatch), "{report}");
+
+        // oversized bits: warning only — construction-legal
+        let mut plan = DeploymentPlan::uniform_for(&model, PAPER_BITS);
+        plan.layers[0].adc_bits[0] = 33;
+        let report = audit_deployment(&model, &plan);
+        assert!(report.has(AuditCode::ResolutionOutOfBounds));
+        assert_eq!(report.summary.errors, 0, "{report}");
+    }
+
+    #[test]
+    fn replica_budget_diagnostic_fires_only_on_underflow() {
+        let model = mapped_fixture(0xA0D3);
+        let plan = DeploymentPlan::uniform_for(&model, PAPER_BITS);
+        // non-positive factor or something spent: no diagnostic
+        assert!(replica_budget_diagnostic(&model, &plan, 0.0, 0).is_none());
+        assert!(replica_budget_diagnostic(&model, &plan, 2.0, 1000).is_none());
+        // positive factor, nothing spent: A011
+        let d = replica_budget_diagnostic(&model, &plan, 0.1, 0).expect("underflow diagnostic");
+        assert_eq!(d.code, AuditCode::ReplicaBudgetUnderflow);
+        assert_eq!(d.severity, Severity::Error);
+    }
+
+    #[test]
+    fn codes_are_stable_and_distinct() {
+        let all = [
+            AuditCode::CellValueOutOfRange,
+            AuditCode::CensusMismatch,
+            AuditCode::CompressedIndexInconsistent,
+            AuditCode::BitPlaneMaskMismatch,
+            AuditCode::PermutationNotBijective,
+            AuditCode::PlanShapeMismatch,
+            AuditCode::ResolutionOutOfBounds,
+            AuditCode::ReplicaAliasBroken,
+            AuditCode::FormatBandDrift,
+            AuditCode::TimingBillMismatch,
+            AuditCode::ReplicaBudgetUnderflow,
+        ];
+        for (i, c) in all.iter().enumerate() {
+            assert_eq!(c.code(), format!("A{:03}", i + 1));
+            assert!(!c.name().is_empty() && !c.invariant().is_empty());
+        }
+    }
+
+    /// Warnings and errors land in the right summary buckets and the
+    /// Display form carries the stable code.
+    #[test]
+    fn report_summary_counts_severities() {
+        let model = mapped_fixture(0xA0D4);
+        let mut plan = DeploymentPlan::uniform_for(&model, PAPER_BITS);
+        plan.layers[0].name = "mislabeled".into(); // A006 warning
+        let report = audit_deployment(&model, &plan);
+        assert_eq!(report.summary.errors, 0);
+        assert!(report.summary.warnings >= 1);
+        let shown = format!("{report}");
+        assert!(shown.contains("A006"), "{shown}");
+    }
+
+    /// Sanity for the seeded-random path the property suites build on:
+    /// a freshly mapped random model is clean at any density.
+    #[test]
+    fn random_densities_audit_clean() {
+        let mut rng = Rng::new(0xA0D5);
+        for density in [0.05, 0.3, 0.5, 0.8] {
+            let w = fixtures::weights_at_density(&mut rng, 96, 40, density);
+            let layer = mapper::map_layer("w", &w).unwrap();
+            let model = MappedModel {
+                layers: vec![Arc::new(layer)],
+            };
+            let report = audit_model(&model);
+            assert!(report.is_clean(), "density {density}: {report}");
+        }
+    }
+}

@@ -224,6 +224,23 @@ fn build_compressed(
     }
 }
 
+/// One structural fault [`Crossbar::verify_cells`] found in a tile's
+/// storage — the raw material `reram::audit` turns into typed
+/// diagnostics (each variant maps onto one stable audit code).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) enum TileFault {
+    /// a stored cell value outside `1..=CELL_MAX`
+    ValueOutOfRange { row: usize, col: usize, value: u8 },
+    /// cached census != a recount over the actual store
+    CensusMismatch { cached: usize, actual: usize },
+    /// compressed-layout inconsistency: `row_ptr` / entry / active-index
+    /// drift
+    IndexInconsistent(String),
+    /// bit-plane inconsistency: plane shape, stray padding bits, or
+    /// column-index drift
+    PlaneMaskInconsistent(String),
+}
+
 /// A single crossbar array holding 2-bit cells.
 #[derive(Debug, Clone)]
 pub struct Crossbar {
@@ -839,6 +856,242 @@ impl Crossbar {
             }
         }
     }
+
+    /// Structural self-check of the tile's storage: re-derives every
+    /// cached quantity (census, CSR offsets, active indexes, plane
+    /// padding) from the raw cell data and reports each disagreement as
+    /// a [`TileFault`]. Read-only — `reram::audit` turns the faults into
+    /// typed diagnostics; a clean tile returns an empty list.
+    pub(crate) fn verify_cells(&self) -> Vec<TileFault> {
+        let mut faults = Vec::new();
+        match &self.store {
+            CellArray::Dense(cells) => {
+                if cells.len() != self.rows * self.cols {
+                    faults.push(TileFault::IndexInconsistent(format!(
+                        "dense store holds {} cells for a {}x{} tile",
+                        cells.len(),
+                        self.rows,
+                        self.cols
+                    )));
+                    return faults;
+                }
+                let mut actual = 0usize;
+                for r in 0..self.rows {
+                    for c in 0..self.cols {
+                        let v = cells[r * self.cols + c];
+                        if v > CELL_MAX {
+                            faults.push(TileFault::ValueOutOfRange { row: r, col: c, value: v });
+                        }
+                        actual += (v != 0) as usize;
+                    }
+                }
+                if actual != self.nonzero {
+                    faults.push(TileFault::CensusMismatch {
+                        cached: self.nonzero,
+                        actual,
+                    });
+                }
+            }
+            CellArray::Compressed {
+                row_ptr,
+                entry_cols,
+                entry_vals,
+                active_rows,
+                active_cols,
+            } => {
+                if row_ptr.len() != self.rows + 1 {
+                    faults.push(TileFault::IndexInconsistent(format!(
+                        "row_ptr holds {} offsets for {} rows",
+                        row_ptr.len(),
+                        self.rows
+                    )));
+                    return faults;
+                }
+                if entry_cols.len() != entry_vals.len() {
+                    faults.push(TileFault::IndexInconsistent(format!(
+                        "{} entry columns vs {} entry values",
+                        entry_cols.len(),
+                        entry_vals.len()
+                    )));
+                    return faults;
+                }
+                if (0..self.rows).any(|r| row_ptr[r] > row_ptr[r + 1]) {
+                    faults.push(TileFault::IndexInconsistent(
+                        "row_ptr offsets decrease".into(),
+                    ));
+                    return faults;
+                }
+                if row_ptr[0] != 0 || row_ptr[self.rows] as usize != entry_cols.len() {
+                    faults.push(TileFault::IndexInconsistent(format!(
+                        "row_ptr spans {}..{} over {} entries",
+                        row_ptr[0],
+                        row_ptr[self.rows],
+                        entry_cols.len()
+                    )));
+                    return faults;
+                }
+                let mut want_rows: Vec<u16> = Vec::new();
+                let mut col_seen = vec![false; self.cols];
+                for r in 0..self.rows {
+                    let (lo, hi) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
+                    if hi > lo {
+                        want_rows.push(r as u16);
+                    }
+                    for i in lo..hi {
+                        let (c, v) = (entry_cols[i] as usize, entry_vals[i]);
+                        if c >= self.cols {
+                            faults.push(TileFault::IndexInconsistent(format!(
+                                "row {r} entry column {c} outside {} columns",
+                                self.cols
+                            )));
+                            continue;
+                        }
+                        if i > lo && entry_cols[i - 1] >= entry_cols[i] {
+                            faults.push(TileFault::IndexInconsistent(format!(
+                                "row {r} entry columns not strictly ascending at column {c}"
+                            )));
+                        }
+                        if !(1..=CELL_MAX).contains(&v) {
+                            faults.push(TileFault::ValueOutOfRange { row: r, col: c, value: v });
+                        }
+                        col_seen[c] = true;
+                    }
+                }
+                let want_cols: Vec<u16> = (0..self.cols)
+                    .filter(|&c| col_seen[c])
+                    .map(|c| c as u16)
+                    .collect();
+                if active_rows != &want_rows {
+                    faults.push(TileFault::IndexInconsistent(format!(
+                        "active-wordline index holds {} rows, entries span {}",
+                        active_rows.len(),
+                        want_rows.len()
+                    )));
+                }
+                if active_cols != &want_cols {
+                    faults.push(TileFault::IndexInconsistent(format!(
+                        "active-column index holds {} columns, entries span {}",
+                        active_cols.len(),
+                        want_cols.len()
+                    )));
+                }
+                if entry_cols.len() != self.nonzero {
+                    faults.push(TileFault::CensusMismatch {
+                        cached: self.nonzero,
+                        actual: entry_cols.len(),
+                    });
+                }
+            }
+            CellArray::BitPlanes {
+                plane0,
+                plane1,
+                active_cols,
+            } => {
+                if plane0.len() != self.cols || plane1.len() != self.cols {
+                    faults.push(TileFault::PlaneMaskInconsistent(format!(
+                        "{}/{} plane columns for a {}-column tile",
+                        plane0.len(),
+                        plane1.len(),
+                        self.cols
+                    )));
+                    return faults;
+                }
+                // valid-row masks: rows >= self.rows are zero padding by
+                // the packing convention
+                let (mask0, mask1) = if self.rows >= 128 {
+                    (!0u64, !0u64)
+                } else if self.rows >= 64 {
+                    (!0u64, (1u64 << (self.rows - 64)) - 1)
+                } else {
+                    ((1u64 << self.rows) - 1, 0u64)
+                };
+                let mut actual = 0usize;
+                let mut want_cols: Vec<u16> = Vec::new();
+                for c in 0..self.cols {
+                    let (p0, p1) = (plane0[c], plane1[c]);
+                    if (p0[0] & !mask0) | (p0[1] & !mask1) | (p1[0] & !mask0) | (p1[1] & !mask1)
+                        != 0
+                    {
+                        faults.push(TileFault::PlaneMaskInconsistent(format!(
+                            "column {c} holds plane bits beyond row {}",
+                            self.rows
+                        )));
+                    }
+                    let live = ((p0[0] | p1[0]) & mask0).count_ones()
+                        + ((p0[1] | p1[1]) & mask1).count_ones();
+                    actual += live as usize;
+                    if live > 0 {
+                        want_cols.push(c as u16);
+                    }
+                }
+                if active_cols != &want_cols {
+                    faults.push(TileFault::PlaneMaskInconsistent(format!(
+                        "active-column index holds {} columns, plane masks light {}",
+                        active_cols.len(),
+                        want_cols.len()
+                    )));
+                }
+                if actual != self.nonzero {
+                    faults.push(TileFault::CensusMismatch {
+                        cached: self.nonzero,
+                        actual,
+                    });
+                }
+            }
+        }
+        faults
+    }
+}
+
+/// Test-only corruption hooks: poke raw storage fields *past* the safe
+/// mutators so the audit property tests can plant each fault class
+/// ([`Crossbar::set`] and the builders maintain every invariant, so a
+/// planted violation needs a back door). Each panics when the tile is
+/// not in the layout it targets.
+#[cfg(any(test, feature = "bench"))]
+impl Crossbar {
+    /// Desync the cached nonzero census from the store.
+    pub fn corrupt_census(&mut self, delta: isize) {
+        self.nonzero = self.nonzero.wrapping_add_signed(delta);
+    }
+
+    /// Raw write into the dense byte array, bypassing the value-range
+    /// check and the census bookkeeping.
+    pub fn corrupt_dense_value(&mut self, r: usize, c: usize, v: u8) {
+        match &mut self.store {
+            CellArray::Dense(cells) => cells[r * self.cols + c] = v,
+            _ => panic!("corrupt_dense_value wants the dense layout"),
+        }
+    }
+
+    /// Flip one low-plane mask bit, bypassing census and column-index
+    /// maintenance.
+    pub fn corrupt_flip_plane_bit(&mut self, r: usize, c: usize) {
+        match &mut self.store {
+            CellArray::BitPlanes { plane0, .. } => plane0[c][r >> 6] ^= 1 << (r & 63),
+            _ => panic!("corrupt_flip_plane_bit wants the bit-plane layout"),
+        }
+    }
+
+    /// Rewrite one compressed entry's column, bypassing the ordering and
+    /// active-index maintenance.
+    pub fn corrupt_entry_col(&mut self, i: usize, col: u16) {
+        match &mut self.store {
+            CellArray::Compressed { entry_cols, .. } => entry_cols[i] = col,
+            _ => panic!("corrupt_entry_col wants the compressed layout"),
+        }
+    }
+
+    /// Drop the last entry of the nonzero-column index (compressed or
+    /// bit-plane layout) — the column still holds programmed cells, but
+    /// the ADC/energy/timing accounting no longer sees it.
+    pub fn corrupt_drop_active_col(&mut self) -> Option<u16> {
+        match &mut self.store {
+            CellArray::Compressed { active_cols, .. }
+            | CellArray::BitPlanes { active_cols, .. } => active_cols.pop(),
+            CellArray::Dense(_) => panic!("corrupt_drop_active_col wants an indexed layout"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1301,5 +1554,98 @@ mod tests {
             assert_eq!(xb.active_cols().unwrap(), &[0]);
             assert_eq!(xb.active_columns(), 1);
         }
+    }
+
+    /// Property: tiles built and mutated only through the safe mutators
+    /// pass `verify_cells` in every layout — the audit's structural
+    /// checks never false-positive on legal construction paths.
+    #[test]
+    fn verify_cells_clean_on_safe_mutation() {
+        check(25, |rng| {
+            let rows = 1 + rng.below(XBAR_ROWS);
+            let cols = 1 + rng.below(XBAR_COLS);
+            let mut xb = Crossbar::zeros(rows, cols);
+            for _ in 0..rng.below(1 + rows * cols / 4) {
+                xb.set(rng.below(rows), rng.below(cols), rng.below(4) as u8);
+            }
+            for fmt in ALL_FORMATS {
+                let faults = xb.in_format(fmt).verify_cells();
+                ensure(faults.is_empty(), format!("{fmt:?}: {faults:?}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn verify_cells_reports_planted_faults() {
+        let mut xb = Crossbar::zeros(8, 8);
+        for i in 0..6 {
+            xb.set(i, i, 1 + (i % 3) as u8);
+        }
+
+        // dense: raw out-of-range value (also desyncs nothing else)
+        let mut dense = xb.in_format(StorageFormat::Dense);
+        dense.corrupt_dense_value(7, 7, CELL_MAX + 2);
+        let faults = dense.verify_cells();
+        assert!(
+            faults.iter().any(|f| matches!(
+                f,
+                TileFault::ValueOutOfRange { row: 7, col: 7, value } if *value == CELL_MAX + 2
+            )),
+            "{faults:?}"
+        );
+        // the raw write also left the census stale (the cell went 0 -> 5)
+        assert!(faults
+            .iter()
+            .any(|f| matches!(f, TileFault::CensusMismatch { .. })));
+
+        // census desync fires in every layout
+        for fmt in ALL_FORMATS {
+            let mut t = xb.in_format(fmt);
+            t.corrupt_census(1);
+            assert!(
+                t.verify_cells()
+                    .iter()
+                    .any(|f| matches!(f, TileFault::CensusMismatch { cached, actual }
+                        if *cached == 7 && *actual == 6)),
+                "{fmt:?}"
+            );
+        }
+
+        // compressed: entry column rewritten out of order
+        let mut comp = xb.in_format(StorageFormat::Compressed);
+        comp.corrupt_entry_col(0, 5);
+        assert!(comp
+            .verify_cells()
+            .iter()
+            .any(|f| matches!(f, TileFault::IndexInconsistent(_))));
+
+        // compressed: dropped active column
+        let mut comp2 = xb.in_format(StorageFormat::Compressed);
+        comp2.corrupt_drop_active_col();
+        assert!(comp2
+            .verify_cells()
+            .iter()
+            .any(|f| matches!(f, TileFault::IndexInconsistent(_))));
+
+        // bit-planes: a flipped mask bit desyncs census or the index
+        let mut bp = xb.in_format(StorageFormat::BitPlanes);
+        bp.corrupt_flip_plane_bit(7, 7);
+        assert!(bp
+            .verify_cells()
+            .iter()
+            .any(|f| matches!(
+                f,
+                TileFault::CensusMismatch { .. } | TileFault::PlaneMaskInconsistent(_)
+            )));
+
+        // bit-planes: stray padding bit beyond the tile's rows
+        let mut pad = Crossbar::zeros(5, 4).in_format(StorageFormat::BitPlanes);
+        pad.set(1, 1, 2);
+        pad.corrupt_flip_plane_bit(6, 1); // row 6 of a 5-row tile
+        assert!(pad
+            .verify_cells()
+            .iter()
+            .any(|f| matches!(f, TileFault::PlaneMaskInconsistent(_))));
     }
 }

@@ -326,7 +326,17 @@ pub fn map_model_with(
         .iter()
         .map(|(n, w)| map_layer_with(n, w, reorder_cfg).map(Arc::new))
         .collect::<Result<Vec<_>>>()?;
-    Ok(MappedModel { layers })
+    let model = MappedModel { layers };
+    // a freshly mapped model must satisfy every structural invariant the
+    // audit catalogue states — in debug builds, prove it before handing
+    // the artifact out (the cheap structural pass; layout round-trips are
+    // covered by the deep audit at deploy/serve time)
+    #[cfg(debug_assertions)]
+    {
+        let report = super::audit::quick_audit(&model);
+        debug_assert_eq!(report.summary.errors, 0, "mapper emitted a faulty artifact: {report}");
+    }
+    Ok(model)
 }
 
 impl LayerMapping {

@@ -32,6 +32,11 @@
 //!                    census the energy model bills, plus the replication
 //!                    planner that water-fills an area budget onto
 //!                    bottleneck layers for throughput.
+//! * [`audit`]      — static verifier over the finished artifacts: walks
+//!                    every tile, plan row and replica handle *without
+//!                    running inference* and emits typed diagnostics for
+//!                    any convention the sections below state that the
+//!                    artifacts no longer satisfy.
 //!
 //! # Storage-format selection (Dense vs BitPlanes vs Compressed tiles)
 //!
@@ -149,8 +154,61 @@
 //! ([`planner::PAPER_BITS`]) in array form. Report emitters
 //! (`report::adc_table`, `report::plan_table`, `resolution_summary`)
 //! always render MSB-first with explicit `XB_k` labels.
+//!
+//! # Audit invariant catalogue (code → invariant → convention enforced)
+//!
+//! [`audit`] turns each convention above into a machine-checked invariant
+//! with a stable diagnostic code. `Error`-severity findings mean the
+//! deployment would execute incorrectly (or panic); serving construction
+//! ([`serve::CrossbarBackend`](crate::serve::CrossbarBackend)) refuses
+//! them, the mapper debug-asserts their absence after
+//! [`mapper::map_model_with`], and the `audit` CLI subcommand / `deploy
+//! --audit` flag reports them. The codes are stable — tests, CI and
+//! downstream tooling key on the `A0xx` strings:
+//!
+//! * **A001 `CellValueOutOfRange`** — every stored cell value lies in
+//!   `1..=CELL_MAX` (2-bit cells; zero cells are *absent*, not stored).
+//!   Enforces the cell model of the storage-format section.
+//! * **A002 `CensusMismatch`** — the cached programmed-cell census equals
+//!   a recount over the raw store, and all three layouts round-trip to
+//!   identical logical cells. Enforces the cached-census convention the
+//!   O(1) zero-tile skips and the planner's scoring loop rely on.
+//! * **A003 `CompressedIndexInconsistent`** — CSR row offsets are
+//!   monotone and the entry/active-wordline/active-column indexes are
+//!   sorted, deduped, in-bounds and exactly match the entries. Enforces
+//!   the compressed layout of the storage-format section.
+//! * **A004 `BitPlaneMaskMismatch`** — plane vectors are tile-shaped,
+//!   padding rows `>= tile.rows()` are zero, and the nonzero-column index
+//!   matches the masks. Enforces the BitPlanes packing convention.
+//! * **A005 `PermutationNotBijective`** — each layer's wordline/column
+//!   permutations are bijections whose cached inverse round-trips
+//!   exactly. Enforces the reorder convention.
+//! * **A006 `PlanShapeMismatch`** — the plan carries one row per mapped
+//!   layer with sane replica counts (`<=` [`timing::MAX_REPLICAS`]).
+//!   Enforces the plan/mapping pairing every cost and timing API asserts.
+//! * **A007 `ResolutionOutOfBounds`** — every planned ADC resolution is
+//!   priceable by [`adc::AdcModel`] (`>= 1` bit; `> 32` warns — the clip
+//!   saturates there). Enforces the ADC cost-model domain.
+//! * **A008 `ReplicaAliasBroken`** — replica handles `Arc::ptr_eq` their
+//!   source layer (a replica is an alias, never a deep clone) and the
+//!   fabricated-crossbar accounting matches [`energy`]'s static bill.
+//!   Enforces the replication convention.
+//! * **A009 `FormatBandDrift`** (warning) — each tile's storage layout is
+//!   what the three-band density policy ([`crossbar::chosen_format`])
+//!   would choose; explicit `with_storage` conversions legitimately trip
+//!   this, mapper output never should. Enforces the format-selection
+//!   policy.
+//! * **A010 `TimingBillMismatch`** — each tile's converting-column count
+//!   (the quantity [`energy`] bills and [`timing`] prices) equals an
+//!   independent recount of columns holding conductance. Enforces the
+//!   "cycle price = energy bill = executed work" identity of the timing
+//!   convention.
+//! * **A011 `ReplicaBudgetUnderflow`** — a positive `--replicate-budget`
+//!   fabricates at least one replica; a budget below one bottleneck copy
+//!   is a hard deploy error, not a silent no-replica plan.
 
 pub mod adc;
+pub mod audit;
 pub mod crossbar;
 pub mod energy;
 pub mod mapper;
@@ -161,6 +219,7 @@ pub mod sim;
 pub mod timing;
 
 pub use adc::AdcModel;
+pub use audit::{AuditCode, AuditReport, AuditSummary, Diagnostic, Severity};
 pub use crossbar::{pack_wave, Crossbar, StorageFormat, XBAR_COLS, XBAR_ROWS};
 pub use mapper::{LayerMapping, MappedModel, StorageRow, StorageStats};
 pub use planner::{DeploymentPlan, DescentStrategy, PlannerConfig};

@@ -171,6 +171,18 @@ impl Permutation {
     pub fn to_old(&self) -> &[u32] {
         &self.to_old
     }
+
+    /// Test-only raw constructor, bypassing [`Permutation::from_order`]'s
+    /// bijectivity asserts — the audit property tests use it to plant
+    /// broken permutations (`reram::audit` code A005).
+    #[cfg(any(test, feature = "bench"))]
+    pub fn from_raw_parts(to_new: Vec<u32>, to_old: Vec<u32>, ident: bool) -> Permutation {
+        Permutation {
+            to_new,
+            to_old,
+            ident,
+        }
+    }
 }
 
 /// One layer's planned permutations, stored in

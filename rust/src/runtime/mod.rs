@@ -31,6 +31,14 @@ pub struct Engine {
     cache: Mutex<HashMap<PathBuf, std::sync::Arc<Executable>>>,
 }
 
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("platform", &self.client.platform_name())
+            .finish_non_exhaustive()
+    }
+}
+
 impl Engine {
     /// CPU PJRT client (the testbed backend; see DESIGN.md §Hardware).
     pub fn cpu() -> Result<Self> {
@@ -77,6 +85,12 @@ impl Engine {
 /// so execution yields a single tuple literal that we decompose.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executable").finish_non_exhaustive()
+    }
 }
 
 impl Executable {

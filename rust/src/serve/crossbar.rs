@@ -46,12 +46,14 @@ use super::{BackendInfo, DenseLayer, InferenceBackend};
 
 /// Per-layer bias/activation metadata (everything of a [`DenseLayer`] that
 /// is not the mapped weights), shared across `replan`/`rebit` clones.
+#[derive(Debug)]
 struct StackMeta {
     bias: Option<Vec<f32>>,
     relu: bool,
 }
 
 /// Functional crossbar inference at configurable ADC resolutions.
+#[derive(Debug)]
 pub struct CrossbarBackend {
     name: String,
     model: Arc<MappedModel>,
@@ -275,6 +277,17 @@ impl CrossbarBackend {
             "plan has {} layers, stack has {}",
             plan.layers.len(),
             mapped.layers.len()
+        );
+        // a backend only ever deploys a verified artifact: run the full
+        // static audit and refuse any Error-severity finding (warnings —
+        // e.g. a deliberate off-band `with_storage` conversion — pass).
+        // `replan`/`rebit` clones skip this on purpose: they share the
+        // already-audited mapping and the planner's candidate loop calls
+        // them thousands of times.
+        let report = crate::reram::audit::audit_deployment(&mapped, &plan);
+        anyhow::ensure!(
+            report.summary.errors == 0,
+            "refusing to deploy a faulty artifact — {report}"
         );
         let input_dim = mapped.layers[0].rows;
         let num_classes = mapped.layers[mapped.layers.len() - 1].cols;

@@ -61,6 +61,12 @@ pub struct PendingInference {
     rx: Receiver<Result<Vec<f32>>>,
 }
 
+impl std::fmt::Debug for PendingInference {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PendingInference").finish_non_exhaustive()
+    }
+}
+
 impl PendingInference {
     pub fn wait(self) -> Result<Vec<f32>> {
         self.rx
@@ -142,6 +148,18 @@ pub struct ServingEngine {
     backend_name: String,
     opts: ServeOptions,
     resolved_workers: usize,
+}
+
+impl std::fmt::Debug for ServingEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServingEngine")
+            .field("backend", &self.backend_name)
+            .field("workers", &self.resolved_workers)
+            .field("input_dim", &self.input_dim)
+            .field("num_classes", &self.num_classes)
+            .field("accepting", &self.tx.is_some())
+            .finish_non_exhaustive()
+    }
 }
 
 impl ServingEngine {

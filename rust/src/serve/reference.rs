@@ -37,6 +37,18 @@ pub struct ReferenceBackend {
     intra_threads: usize,
 }
 
+impl std::fmt::Debug for ReferenceBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ReferenceBackend")
+            .field("name", &self.name)
+            .field("layers", &self.layers.len())
+            .field("input_dim", &self.input_dim)
+            .field("num_classes", &self.num_classes)
+            .field("intra_threads", &self.intra_threads)
+            .finish()
+    }
+}
+
 impl ReferenceBackend {
     pub fn new(name: &str, stack: &[DenseLayer]) -> Result<Self> {
         anyhow::ensure!(!stack.is_empty(), "empty dense stack");

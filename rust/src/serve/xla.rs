@@ -45,6 +45,17 @@ pub struct XlaBackend {
     num_classes: usize,
 }
 
+impl std::fmt::Debug for XlaBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaBackend")
+            .field("name", &self.name)
+            .field("native_batch", &self.native_batch)
+            .field("input_dim", &self.input_dim)
+            .field("num_classes", &self.num_classes)
+            .finish_non_exhaustive()
+    }
+}
+
 impl XlaBackend {
     /// Wrap the model's `eval` graph (accuracy counting only).
     pub fn for_eval(

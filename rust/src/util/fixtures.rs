@@ -264,6 +264,7 @@ pub fn planted_class_stack(train: &Dataset) -> Vec<DenseLayer> {
 /// constants inline — so a silently weakened clustering heuristic fails
 /// the build, and a deliberate change to the heuristic updates the
 /// recorded floor here, in one reviewed place.
+#[derive(Debug)]
 pub struct ReorderGolden {
     pub stack: Vec<DenseLayer>,
     /// active wordlines, natural / reordered, whole model — the floor the

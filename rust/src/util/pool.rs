@@ -26,8 +26,20 @@ pub struct Sender<T> {
     shared: Arc<Shared<T>>,
 }
 
+impl<T> std::fmt::Debug for Sender<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Sender").finish_non_exhaustive()
+    }
+}
+
 pub struct Receiver<T> {
     shared: Arc<Shared<T>>,
+}
+
+impl<T> std::fmt::Debug for Receiver<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Receiver").finish_non_exhaustive()
+    }
 }
 
 pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
@@ -147,6 +159,14 @@ impl<T> Drop for Receiver<T> {
 pub struct Prefetcher<T: Send + 'static> {
     rx: Receiver<T>,
     handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl<T: Send + 'static> std::fmt::Debug for Prefetcher<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Prefetcher")
+            .field("worker_alive", &self.handle.is_some())
+            .finish_non_exhaustive()
+    }
 }
 
 impl<T: Send + 'static> Prefetcher<T> {

@@ -1,0 +1,330 @@
+//! Mutation properties for the `reram::audit` static verifier: every
+//! diagnostic code (A001–A011) gets one seeded property that plants its
+//! violation class into an otherwise-clean deployment artifact — via the
+//! test-gated corruption hooks on `Crossbar`, the raw `Permutation`
+//! constructor, plan mutations, or replica-view tampering — and asserts
+//! the audit reports it. The clean-artifact tests at the bottom close the
+//! loop: a well-formed end-to-end deploy (all three `CellArray` layouts,
+//! reorder and replication on) produces zero diagnostics.
+
+use std::sync::Arc;
+
+use bitslice_reram::reram::audit::{self, AuditCode, Severity};
+use bitslice_reram::reram::crossbar::{Crossbar, StorageFormat, CELL_MAX};
+use bitslice_reram::reram::mapper::{self, LayerMapping, MappedModel};
+use bitslice_reram::reram::planner::DeploymentPlan;
+use bitslice_reram::reram::reorder::{LayerReorder, Permutation};
+use bitslice_reram::reram::timing::{self, MAX_REPLICAS};
+use bitslice_reram::reram::{ReorderConfig, ResolutionPolicy};
+use bitslice_reram::tensor::Tensor;
+use bitslice_reram::util::check::{check, ensure};
+use bitslice_reram::util::fixtures;
+use bitslice_reram::util::rng::Rng;
+
+/// One mapped 160x96 layer (2x1 row tiles, so one tile has 32 padded
+/// rows) at the given element density.
+fn mapped_layer(rng: &mut Rng, density: f64) -> LayerMapping {
+    let w = fixtures::weights_at_density(rng, 160, 96, density);
+    mapper::map_layer("fc1/w", &w).expect("fixture layer maps")
+}
+
+fn model_of(layer: LayerMapping) -> MappedModel {
+    MappedModel {
+        layers: vec![Arc::new(layer)],
+    }
+}
+
+/// Locate a programmed tile in `fmt`, as (slice, sign, tile) indices.
+fn find_tile(layer: &LayerMapping, fmt: StorageFormat) -> Option<(usize, usize, usize)> {
+    for (k, (pos, neg)) in layer.grids.iter().enumerate() {
+        for (s, grid) in [pos, neg].into_iter().enumerate() {
+            for (i, t) in grid.tiles.iter().enumerate() {
+                if t.nonzero_cells() > 0 && t.format() == fmt {
+                    return Some((k, s, i));
+                }
+            }
+        }
+    }
+    None
+}
+
+fn tile_mut(layer: &mut LayerMapping, at: (usize, usize, usize)) -> &mut Crossbar {
+    let (pos, neg) = &mut layer.grids[at.0];
+    let grid = if at.1 == 0 { pos } else { neg };
+    &mut grid.tiles[at.2]
+}
+
+/// Corrupt one programmed tile of `layer` (forced into `fmt` first so the
+/// layout-specific hook applies) and return the audit of the result.
+fn audit_corrupted(
+    rng: &mut Rng,
+    fmt: StorageFormat,
+    corrupt: impl Fn(&mut Rng, &mut Crossbar),
+) -> Result<audit::AuditReport, String> {
+    let mut layer = mapped_layer(rng, 0.3).with_storage(fmt);
+    let at = find_tile(&layer, fmt).ok_or("fixture layer has no programmed tile")?;
+    corrupt(rng, tile_mut(&mut layer, at));
+    Ok(audit::audit_model(&model_of(layer)))
+}
+
+fn ensure_flags(rep: &audit::AuditReport, code: AuditCode) -> Result<(), String> {
+    ensure(rep.has(code), format!("{} not reported:\n{rep}", code.code()))?;
+    ensure(rep.summary.errors > 0, format!("no errors counted:\n{rep}"))
+}
+
+#[test]
+fn a001_cell_value_out_of_range_detected() {
+    check(6, |rng| {
+        let rep = audit_corrupted(rng, StorageFormat::Dense, |rng, t| {
+            let (r, c) = (rng.below(t.rows()), rng.below(t.cols()));
+            t.corrupt_dense_value(r, c, CELL_MAX + 1 + rng.below(200) as u8);
+        })?;
+        ensure_flags(&rep, AuditCode::CellValueOutOfRange)
+    });
+}
+
+#[test]
+fn a002_census_mismatch_detected() {
+    check(6, |rng| {
+        // the census desync must surface in whatever CellArray the tile
+        // holds, so sweep all three layouts
+        let fmt = [
+            StorageFormat::Dense,
+            StorageFormat::Compressed,
+            StorageFormat::BitPlanes,
+        ][rng.below(3)];
+        let mut layer = mapped_layer(rng, 0.2 + rng.next_f32() as f64 * 0.4).with_storage(fmt);
+        let at = find_tile(&layer, fmt).ok_or("no programmed tile")?;
+        tile_mut(&mut layer, at).corrupt_census(1 + rng.below(5) as isize);
+        ensure_flags(
+            &audit::audit_model(&model_of(layer)),
+            AuditCode::CensusMismatch,
+        )
+    });
+}
+
+#[test]
+fn a003_compressed_index_inconsistent_detected() {
+    check(6, |rng| {
+        let rep = audit_corrupted(rng, StorageFormat::Compressed, |_, t| {
+            t.corrupt_drop_active_col();
+        })?;
+        ensure_flags(&rep, AuditCode::CompressedIndexInconsistent)
+    });
+}
+
+#[test]
+fn a004_bit_plane_mask_mismatch_detected() {
+    check(6, |rng| {
+        // flip a stray padding bit past the tile's rows: unambiguously a
+        // mask fault (an in-range flip may legally read as census drift)
+        let mut layer = mapped_layer(rng, 0.3).with_storage(StorageFormat::BitPlanes);
+        let at = (0..layer.grids.len())
+            .flat_map(|k| [(k, 0usize), (k, 1usize)])
+            .find_map(|(k, s)| {
+                let grid = if s == 0 { &layer.grids[k].0 } else { &layer.grids[k].1 };
+                grid.tiles
+                    .iter()
+                    .position(|t| t.nonzero_cells() > 0 && t.rows() < 128)
+                    .map(|i| (k, s, i))
+            })
+            .ok_or("no short-row programmed tile (fixture is 160 rows)")?;
+        let tile = tile_mut(&mut layer, at);
+        let pad_row = tile.rows() + rng.below(128 - tile.rows());
+        let col = tile.active_cols().and_then(|ac| ac.first().copied()).ok_or("no active col")?;
+        tile.corrupt_flip_plane_bit(pad_row, col as usize);
+        ensure_flags(
+            &audit::audit_model(&model_of(layer)),
+            AuditCode::BitPlaneMaskMismatch,
+        )
+    });
+}
+
+#[test]
+fn a005_permutation_not_bijective_detected() {
+    check(10, |rng| {
+        let mut layer = mapped_layer(rng, 0.3);
+        let n = layer.rows;
+        let ident: Vec<u32> = (0..n as u32).collect();
+        let (mut to_new, mut to_old, mut flag) = (ident.clone(), ident.clone(), true);
+        match rng.below(5) {
+            0 => {
+                // wrong length
+                to_new.pop();
+                to_old.pop();
+            }
+            1 => to_new[0] = n as u32, // out of bounds
+            2 => {
+                to_new[0] = to_new[1]; // two rows share a wordline
+            }
+            3 => {
+                to_old.swap(0, 1); // inverse drifts
+            }
+            _ => flag = false, // cached flag denies identity contents
+        }
+        layer.reorder = Some(LayerReorder {
+            rows: Permutation::from_raw_parts(to_new, to_old, flag),
+            cols: Permutation::identity(layer.cols),
+        });
+        ensure_flags(
+            &audit::audit_model(&model_of(layer)),
+            AuditCode::PermutationNotBijective,
+        )
+    });
+}
+
+#[test]
+fn a006_plan_shape_mismatch_detected() {
+    check(6, |rng| {
+        let model = model_of(mapped_layer(rng, 0.3));
+        let mut plan = DeploymentPlan::from_policy(&model, ResolutionPolicy::Lossless);
+        if rng.below(2) == 0 {
+            plan.layers.pop(); // layer-count drift
+        } else {
+            plan.layers[0].replicas = MAX_REPLICAS + 1 + rng.below(8);
+        }
+        let diags = audit::audit_plan(&model, &plan);
+        ensure(
+            diags
+                .iter()
+                .any(|d| d.code == AuditCode::PlanShapeMismatch && d.severity == Severity::Error),
+            format!("A006 not reported: {diags:?}"),
+        )
+    });
+}
+
+#[test]
+fn a007_resolution_out_of_bounds_detected() {
+    check(6, |rng| {
+        let model = model_of(mapped_layer(rng, 0.3));
+        let mut plan = DeploymentPlan::from_policy(&model, ResolutionPolicy::Lossless);
+        plan.layers[0].adc_bits[rng.below(4)] = 0;
+        let rep = audit::audit_deployment(&model, &plan);
+        ensure_flags(&rep, AuditCode::ResolutionOutOfBounds)
+    });
+}
+
+#[test]
+fn a008_replica_alias_broken_detected() {
+    check(6, |rng| {
+        let model = model_of(mapped_layer(rng, 0.3));
+        let plan = DeploymentPlan::from_policy(&model, ResolutionPolicy::Lossless);
+        let mut rep = model.replicated(&[plan.layers[0].replicas]);
+        if rng.below(2) == 0 {
+            // an extra handle the plan never fabricated
+            rep.layers[0].push(Arc::clone(&model.layers[0]));
+        } else {
+            // a deep clone where an alias is required
+            rep.layers[0][0] = Arc::new((*model.layers[0]).clone());
+        }
+        let diags = audit::audit_replicas(&model, &plan, &rep);
+        ensure(
+            diags.iter().any(|d| d.code == AuditCode::ReplicaAliasBroken),
+            format!("A008 not reported: {diags:?}"),
+        )
+    });
+}
+
+#[test]
+fn a009_format_band_drift_is_warning_only() {
+    check(6, |rng| {
+        // 10% weights land well inside the Compressed band; forcing Dense
+        // drifts every programmed tile without breaking any invariant
+        let layer = mapped_layer(rng, 0.1).with_storage(StorageFormat::Dense);
+        let rep = audit::audit_model(&model_of(layer));
+        ensure(
+            rep.has(AuditCode::FormatBandDrift),
+            format!("A009 not reported:\n{rep}"),
+        )?;
+        ensure(
+            rep.summary.errors == 0,
+            format!("band drift must never be an error:\n{rep}"),
+        )
+    });
+}
+
+#[test]
+fn a010_timing_bill_mismatch_detected() {
+    check(6, |rng| {
+        // dropping an active column starves the conversion bill while the
+        // store still holds conductance in that column
+        let rep = audit_corrupted(rng, StorageFormat::BitPlanes, |_, t| {
+            t.corrupt_drop_active_col();
+        })?;
+        ensure_flags(&rep, AuditCode::TimingBillMismatch)
+    });
+}
+
+#[test]
+fn a011_replica_budget_underflow_detected() {
+    check(4, |rng| {
+        let stack = fixtures::bottleneck_stack(rng.next_u64());
+        let named: Vec<(String, Tensor)> =
+            stack.iter().map(|l| (l.name.clone(), l.w.clone())).collect();
+        let model = mapper::map_model(&named).expect("fixture maps");
+        let mut plan = DeploymentPlan::from_policy(&model, ResolutionPolicy::Percentile(0.999));
+        // any factor under 1.0 prices below one bottleneck copy
+        let factor = 0.05 + rng.next_f32() as f64 * 0.9;
+        let spent = timing::fill_replicas_factor(&model, &mut plan, factor);
+        ensure(spent == 0, format!("underflow budget bought {spent} cells"))?;
+        let d = audit::replica_budget_diagnostic(&model, &plan, factor, spent)
+            .ok_or("A011 not reported")?;
+        ensure(
+            d.code == AuditCode::ReplicaBudgetUnderflow && d.severity == Severity::Error,
+            format!("wrong diagnostic: {d}"),
+        )
+    });
+}
+
+/// The acceptance bar's clean half: a mixed-density stack whose mapping
+/// holds tiles in all three `CellArray` layouts, deployed end to end with
+/// reorder and replication enabled, audits with zero diagnostics.
+#[test]
+fn clean_mixed_layout_deploy_audits_clean() {
+    let mut rng = Rng::new(0xA0D1);
+    // One layer per density band. The sign split and bit-slicing dilute a
+    // layer's element density by ~2x (sign) x ~1/4 (zero slice chunks),
+    // so: 8% mixed-sign -> ~3% cell density (Compressed band), 90%
+    // mixed-sign -> ~34% (BitPlanes band), and the Dense band (> 60%)
+    // needs an all-positive layer with high codes (~75% cell density).
+    let dense_w: Vec<f32> = (0..64 * 10).map(|_| 0.5 + 0.5 * rng.next_f32()).collect();
+    let named: Vec<(String, Tensor)> = vec![
+        (
+            "fc1/w".to_string(),
+            fixtures::weights_at_density(&mut rng, 160, 96, 0.08),
+        ),
+        (
+            "fc2/w".to_string(),
+            fixtures::weights_at_density(&mut rng, 96, 64, 0.90),
+        ),
+        (
+            "fc3/w".to_string(),
+            Tensor::new(vec![64, 10], dense_w).expect("fixture shape"),
+        ),
+    ];
+    let mapped =
+        mapper::map_model_with(&named, Some(ReorderConfig::default())).expect("stack maps");
+
+    let mut formats = std::collections::BTreeSet::new();
+    for layer in &mapped.layers {
+        for (pos, neg) in &layer.grids {
+            for t in [pos, neg].into_iter().flat_map(|g| &g.tiles) {
+                if t.nonzero_cells() > 0 {
+                    formats.insert(format!("{:?}", t.format()));
+                }
+            }
+        }
+    }
+    assert_eq!(
+        formats.len(),
+        3,
+        "fixture must exercise all three layouts, got {formats:?}"
+    );
+
+    let mut plan = DeploymentPlan::from_policy(&mapped, ResolutionPolicy::Percentile(0.999));
+    let spent = timing::fill_replicas_factor(&mapped, &mut plan, 2.0);
+    assert!(spent > 0, "a 2x budget must buy at least one replica");
+    let rep = audit::audit_deployment(&mapped, &plan);
+    assert!(rep.is_clean(), "clean deploy reported findings:\n{rep}");
+    assert!(rep.summary.tiles > 0);
+}

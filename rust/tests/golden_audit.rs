@@ -1,0 +1,43 @@
+//! Golden test for the `audit.json` artifact: the planted-MLP fixture
+//! deploy (the exact chain `bitslice-reram audit --fixture planted
+//! --reorder --replicate-budget 2.0` runs) must serialize byte-for-byte
+//! to the committed `tests/golden/audit.json`.
+//!
+//! The golden pins two things at once: the deploy is *clean* (no
+//! diagnostics — a regression in mapper/reorder/planner invariants shows
+//! up here first) and the artifact's shape is *stable* (key order,
+//! summary fields, the 64-tile scan of the 784x11 + 11x10 stack). A
+//! deliberate change to either regenerates the file in one reviewed
+//! place: paste the `left` value the assertion prints.
+
+use bitslice_reram::data::synthetic;
+use bitslice_reram::report;
+use bitslice_reram::reram::audit;
+use bitslice_reram::reram::planner::DeploymentPlan;
+use bitslice_reram::reram::timing;
+use bitslice_reram::reram::{mapper, ReorderConfig, ResolutionPolicy};
+use bitslice_reram::tensor::Tensor;
+use bitslice_reram::util::fixtures;
+
+const GOLDEN: &str = include_str!("golden/audit.json");
+
+#[test]
+fn planted_fixture_audit_json_matches_golden() {
+    let train = synthetic::mnist(2000, 11);
+    let stack = fixtures::planted_class_stack(&train);
+    let named: Vec<(String, Tensor)> = stack
+        .iter()
+        .map(|l| (l.name.clone(), l.w.clone()))
+        .collect();
+    let mapped = mapper::map_model_with(&named, Some(ReorderConfig::default()))
+        .expect("planted fixture maps");
+    let mut plan = DeploymentPlan::from_policy(&mapped, ResolutionPolicy::Percentile(0.999));
+    timing::fill_replicas_factor(&mapped, &mut plan, 2.0);
+    let rep = audit::audit_deployment(&mapped, &plan);
+    assert_eq!(
+        report::audit_json(&rep).to_string(),
+        GOLDEN.trim_end(),
+        "audit.json drifted from tests/golden/audit.json — if the change \
+         is deliberate, commit the new serialization as the golden file"
+    );
+}
