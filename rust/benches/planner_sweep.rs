@@ -4,29 +4,77 @@
 //! construction* (the regime Bl1 training reaches: discriminative weights
 //! live in the two low slices, the MSB group is nearly empty), then runs
 //! `reram::planner::plan_deployment` against the synthetic MNIST holdout
-//! across a sweep of accuracy budgets. Verifies the acceptance bar — at a
-//! 0.5 pt budget the planner lands on an operating point at least as cheap
-//! (by `energy::deployment_cost`) as the paper's hand-picked uniform
-//! `[3,3,3,1]` — times the search, and writes the per-layer `PlanRow`
-//! report to `BENCH_planner.json`.
+//! across a sweep of accuracy budgets. Verifies three acceptance bars:
 //!
-//! Run: `cargo bench --bench planner_sweep`
+//! 1. at a 0.5 pt budget the planner lands on an operating point at least
+//!    as cheap (by `energy::deployment_cost`) as the paper's hand-picked
+//!    uniform `[3,3,3,1]`;
+//! 2. the incremental evaluator (prefix-cached layer re-runs + exact
+//!    early-abort scoring) selects the **identical** plan to the uncached
+//!    search, and — in the full run — spends >= 3x fewer crossbar
+//!    layer-forwards or finishes >= 2x faster in wall-clock;
+//! 3. under one replica cell budget, the joint ADC/replica pass meets (or
+//!    beats) the sequential bits-then-replicas pipeline in steady-state
+//!    throughput on the bottleneck-skewed fixture.
+//!
+//! Writes the plan report plus the incremental/joint evidence to
+//! `BENCH_planner.json`.
+//!
+//! Run: `cargo bench --bench planner_sweep` (`-- --smoke` shrinks the
+//! datasets and records the ratios without gating on them — the CI path).
 
 #[path = "harness.rs"]
 mod harness;
 
 use std::time::Instant;
 
-use bitslice_reram::data::synthetic;
+use bitslice_reram::data::{synthetic, Dataset};
 use bitslice_reram::report;
-use bitslice_reram::reram::planner::{plan_deployment, PlannerConfig, PAPER_BITS};
-use bitslice_reram::reram::{energy, mapper};
-use bitslice_reram::serve::{self, ReferenceBackend};
+use bitslice_reram::reram::planner::{plan_deployment, DeploymentPlan, PlannerConfig, PAPER_BITS};
+use bitslice_reram::reram::{energy, mapper, timing};
+use bitslice_reram::serve::{self, DenseLayer, InferenceBackend, ReferenceBackend};
+use bitslice_reram::tensor::Tensor;
 use bitslice_reram::util::fixtures;
+use bitslice_reram::util::json::{num, obj, Json};
+use bitslice_reram::util::rng::Rng;
+
+/// A holdout whose labels are the stack's own lossless argmax — every
+/// example is classified correctly at the starting plan, so the accuracy
+/// floor bites exactly when a candidate's clipping flips a prediction.
+fn oracle_dataset(stack: &[DenseLayer], n: usize, seed: u64) -> anyhow::Result<Dataset> {
+    let dim = stack[0].w.shape()[0];
+    let classes = stack.last().expect("non-empty stack").w.shape()[1];
+    let mut rng = Rng::new(seed);
+    let feats: Vec<f32> = (0..n * dim).map(|_| rng.next_f32()).collect();
+    let reference = ReferenceBackend::new("oracle", stack)?;
+    let logits = reference.infer_batch(&Tensor::new(vec![n, dim], feats.clone())?)?;
+    let labels: Vec<i32> = (0..n)
+        .map(|i| {
+            let row = &logits.data()[i * classes..(i + 1) * classes];
+            // last max on ties — `serve::correct_by_argmax` semantics
+            (0..classes)
+                .max_by(|&a, &b| {
+                    row[a]
+                        .partial_cmp(&row[b])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .unwrap_or(0) as i32
+        })
+        .collect();
+    Ok(Dataset {
+        features: std::sync::Arc::new(feats),
+        labels: std::sync::Arc::new(labels),
+        example_shape: vec![dim],
+        num_classes: classes,
+        source: "oracle-bottleneck".into(),
+    })
+}
 
 fn main() -> anyhow::Result<()> {
-    let train = synthetic::mnist(2000, 11);
-    let holdout = synthetic::mnist(512, 12);
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (train_n, holdout_n) = if smoke { (600, 160) } else { (2000, 512) };
+    let train = synthetic::mnist(train_n, 11);
+    let holdout = synthetic::mnist(holdout_n, 12);
     // the shared class-template MLP, bit-slice sparse by construction
     // (see `util::fixtures::planted_class_stack` for the construction)
     let stack = fixtures::planted_class_stack(&train);
@@ -41,16 +89,16 @@ fn main() -> anyhow::Result<()> {
     let reference = ReferenceBackend::new("reference", &stack)?;
     let base_acc = serve::accuracy(&reference, &holdout)?;
     println!(
-        "reference accuracy on {}: {:.2}% ({} examples)",
+        "reference accuracy on {}: {:.2}% ({} examples{})",
         holdout.source,
         base_acc.accuracy * 100.0,
-        base_acc.examples
+        base_acc.examples,
+        if smoke { ", smoke" } else { "" }
     );
 
     harness::section("planner sweep over accuracy budgets");
     println!("budget (pt) | accuracy | evals | energy saving | vs uniform [3,3,3,1] energy");
     let mut headline = None;
-    let mut sweep_ms = Vec::new();
     for budget_pts in [0.0f64, 0.5, 2.0, 100.0] {
         // eval_examples 0: search on the full holdout, so every
         // accept/reject margin is measured on the same set the acceptance
@@ -63,30 +111,30 @@ fn main() -> anyhow::Result<()> {
         let t0 = Instant::now();
         let res = plan_deployment(&stack, &holdout, &cfg)?;
         let ms = t0.elapsed().as_secs_f64() * 1e3;
-        sweep_ms.push(ms);
         let (e, _, _) = res.savings();
         println!(
             "{:>11.1} | {:>7.2}% | {:>5} | {:>12.1}x | {:.3} ({:.1} ms)",
             budget_pts,
             res.accuracy * 100.0,
-            res.evaluations,
+            res.stats.evaluations,
             e,
             res.cost.energy / paper_cost.energy,
             ms,
         );
         if budget_pts == 0.5 {
-            headline = Some(res);
+            headline = Some((res, ms));
         }
     }
-    let headline = headline.expect("0.5 pt budget is in the sweep");
+    let (headline, cached_ms) = headline.expect("0.5 pt budget is in the sweep");
 
     harness::section("selected plan at the 0.5 pt budget");
     let plan_rows = energy::layer_costs(&mapped, &headline.plan);
     println!("{}", report::plan_table("planned per-layer deployment", &plan_rows));
     println!("plan: {}", headline.plan);
+    println!("search cost: {}", report::search_stats_line(&headline.stats));
 
-    // Acceptance bar: within a 0.5 pt drop budget the planner must find an
-    // operating point at least as cheap as the paper's uniform [3,3,3,1].
+    // Acceptance bar 1: within a 0.5 pt drop budget the planner must find
+    // an operating point at least as cheap as the paper's uniform [3,3,3,1].
     assert!(
         headline.accuracy >= headline.baseline_accuracy - 0.005 - 1e-12,
         "budget violated: {} vs baseline {}",
@@ -104,6 +152,104 @@ fn main() -> anyhow::Result<()> {
         headline.cost.energy, paper_cost.energy
     );
 
+    harness::section("incremental vs uncached search (same config, same holdout)");
+    // the 0.5 pt sweep row above IS the cached run (incremental defaults
+    // on); this re-runs the identical search through the from-scratch
+    // evaluator
+    let t0 = Instant::now();
+    let uncached = plan_deployment(
+        &stack,
+        &holdout,
+        &PlannerConfig {
+            accuracy_budget: 0.005,
+            eval_examples: 0,
+            incremental: false,
+            ..PlannerConfig::default()
+        },
+    )?;
+    let uncached_ms = t0.elapsed().as_secs_f64() * 1e3;
+    // Acceptance bar 2a: the cache must never change the outcome.
+    assert_eq!(headline.plan, uncached.plan, "incremental search changed the plan");
+    assert_eq!(
+        headline.accuracy, uncached.accuracy,
+        "incremental search changed the measured accuracy"
+    );
+    assert_eq!(uncached.stats.cache_hits, 0);
+    let forwards_ratio =
+        uncached.stats.layer_forwards as f64 / headline.stats.layer_forwards.max(1) as f64;
+    let wallclock_ratio = uncached_ms / cached_ms.max(1e-9);
+    println!(
+        "cached   {:>9} layer-forwards ({:>8.1} ms)  [{} cache hits, {} early-aborted]",
+        headline.stats.layer_forwards,
+        cached_ms,
+        headline.stats.cache_hits,
+        headline.stats.aborted_evals
+    );
+    println!(
+        "uncached {:>9} layer-forwards ({:>8.1} ms)",
+        uncached.stats.layer_forwards, uncached_ms
+    );
+    println!(
+        "ratios: {forwards_ratio:.2}x layer-forwards, {wallclock_ratio:.2}x wall-clock"
+    );
+    // Acceptance bar 2b (full run only — the smoke datasets are too small
+    // for stable ratios): the machinery must actually pay for itself.
+    if !smoke {
+        assert!(
+            forwards_ratio >= 3.0 || wallclock_ratio >= 2.0,
+            "incremental evaluation saved too little: {forwards_ratio:.2}x forwards, \
+             {wallclock_ratio:.2}x wall-clock"
+        );
+        println!("OK: >= 3x fewer layer-forwards or >= 2x wall-clock");
+    }
+
+    harness::section("joint ADC/replica pass vs sequential bits-then-replicas");
+    let bstack = fixtures::bottleneck_stack(0xBEEF);
+    let ds = oracle_dataset(&bstack, if smoke { 24 } else { 64 }, 9)?;
+    let jcfg = PlannerConfig {
+        eval_examples: 0,
+        ..PlannerConfig::default()
+    };
+    let seq = plan_deployment(&bstack, &ds, &jcfg)?;
+    let joint = plan_deployment(
+        &bstack,
+        &ds,
+        &PlannerConfig {
+            replicate_budget: Some(2.0),
+            ..jcfg
+        },
+    )?;
+    // the budget both pipelines get: 2x the starting plan's bottleneck
+    // cells (exactly what the joint pass anchored)
+    let named: Vec<(String, Tensor)> = bstack
+        .iter()
+        .map(|l| (l.name.clone(), l.w.clone()))
+        .collect();
+    let bmodel = mapper::map_model(&named)?;
+    let start = DeploymentPlan::from_policy(&bmodel, jcfg.start_policy);
+    let b = timing::plan_timing(&bmodel, &start)
+        .bottleneck()
+        .expect("bottleneck fixture has layers");
+    let budget_cells = 2 * bmodel.layers[b].fabricated_cells();
+    assert!(joint.replica_cells > 0, "the budget bought no replicas");
+    assert!(joint.replica_cells <= budget_cells, "budget overspent");
+    let mut seq_plan = seq.plan.clone();
+    timing::fill_replicas(&bmodel, &mut seq_plan, budget_cells);
+    let seq_tp = timing::plan_timing(&bmodel, &seq_plan).throughput_per_kcycle();
+    let joint_tp = timing::plan_timing(&bmodel, &joint.plan).throughput_per_kcycle();
+    println!(
+        "joint {joint_tp:.3} vs sequential {seq_tp:.3} examples/kcycle \
+         (budget {budget_cells} cells, joint spent {})",
+        joint.replica_cells
+    );
+    // Acceptance bar 3: joint never loses to sequential under the same
+    // budget (float-noise slack only).
+    assert!(
+        joint_tp >= seq_tp * 0.999,
+        "joint pass lost throughput: {joint_tp} vs {seq_tp}"
+    );
+    println!("OK: joint >= sequential throughput under one budget");
+
     harness::section("plan roll-up cost");
     harness::bench(
         "energy::plan_cost (784x11 + 11x10 mapping)",
@@ -113,20 +259,48 @@ fn main() -> anyhow::Result<()> {
         },
     );
 
-    let json = report::planner_json(
+    let plan_json = report::planner_json(
         &plan_rows,
         headline.baseline_accuracy,
         headline.accuracy,
         0.005,
         headline.savings(),
-        headline.evaluations,
-        &bitslice_reram::reram::timing::plan_timing(&mapped, &headline.plan),
+        &headline.stats,
+        &timing::plan_timing(&mapped, &headline.plan),
     );
+    let json = obj(vec![
+        ("smoke", Json::Bool(smoke)),
+        ("plan", plan_json),
+        (
+            "incremental",
+            obj(vec![
+                ("cached_layer_forwards", num(headline.stats.layer_forwards as f64)),
+                ("uncached_layer_forwards", num(uncached.stats.layer_forwards as f64)),
+                ("forwards_ratio", num(forwards_ratio)),
+                ("cached_ms", num(cached_ms)),
+                ("uncached_ms", num(uncached_ms)),
+                ("wallclock_ratio", num(wallclock_ratio)),
+                ("cache_hits", num(headline.stats.cache_hits as f64)),
+                ("aborted_evals", num(headline.stats.aborted_evals as f64)),
+                ("plans_identical", Json::Bool(true)),
+            ]),
+        ),
+        (
+            "joint",
+            obj(vec![
+                ("budget_cells", num(budget_cells as f64)),
+                ("replica_cells", num(joint.replica_cells as f64)),
+                ("joint_throughput_per_kcycle", num(joint_tp)),
+                ("sequential_throughput_per_kcycle", num(seq_tp)),
+                ("throughput_ratio", num(joint_tp / seq_tp.max(1e-12))),
+            ]),
+        ),
+    ]);
     std::fs::write("BENCH_planner.json", json.to_string())?;
     println!(
-        "wrote BENCH_planner.json ({} layers, search {:.1} ms)",
+        "wrote BENCH_planner.json ({} layers, cached search {:.1} ms)",
         plan_rows.len(),
-        sweep_ms[1]
+        cached_ms
     );
     Ok(())
 }

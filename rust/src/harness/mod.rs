@@ -14,7 +14,7 @@ use crate::coordinator::metrics::MetricsLog;
 use crate::coordinator::{checkpoint, TrainOutcome, Trainer};
 use crate::data::Dataset;
 use crate::report::{MethodRow, PlanRow, StorageRow};
-use crate::reram::planner::DeploymentPlan;
+use crate::reram::planner::{self, DeploymentPlan};
 use crate::reram::reorder::{self, ReorderConfig, ReorderRow};
 use crate::reram::timing::{self, PipelineTiming};
 use crate::reram::{audit, energy, mapper, resolution, ResolutionPolicy};
@@ -313,5 +313,54 @@ pub fn deploy_report(
         timing,
         replica_cells,
         audit,
+    })
+}
+
+/// Planner-search deployment report: the searched per-layer plan plus the
+/// savings rows and pipeline timing the deploy CLI prints for
+/// `--plan-budget`. Replicas are already part of `search.plan` when the
+/// config granted a replica budget (the joint pass spends it inside the
+/// search), so the rows and timing here price exactly what would be
+/// fabricated.
+pub struct PlanSearchReport {
+    /// the search outcome: selected plan, accuracies, costs, the
+    /// [`planner::SearchStats`] instrumentation and the replica spend
+    pub search: planner::PlanSearch,
+    /// per-layer savings rows of the selected plan (replicas included)
+    pub plan_rows: Vec<PlanRow>,
+    /// pipeline timing of the selected plan
+    pub timing: PipelineTiming,
+}
+
+impl std::fmt::Debug for PlanSearchReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlanSearchReport")
+            .field("plan", &self.search.plan.to_string())
+            .field("accuracy", &self.search.accuracy)
+            .field("stats", &self.search.stats)
+            .field("replica_cells", &self.search.replica_cells)
+            .finish_non_exhaustive()
+    }
+}
+
+/// Run the budgeted planner search on an already-mapped backend and roll
+/// its outcome up into report form — the `--plan-budget` half of the
+/// deploy CLI, shared with the planner bench. Pass
+/// `cfg.replicate_budget` to co-optimize ADC bits and pipeline replicas
+/// under one cell budget instead of filling replicas after the search.
+pub fn plan_search_report(
+    base: &crate::serve::CrossbarBackend,
+    reference: &crate::serve::ReferenceBackend,
+    holdout: &Dataset,
+    cfg: &planner::PlannerConfig,
+) -> Result<PlanSearchReport> {
+    let search = planner::plan_deployment_from(base, reference, holdout, cfg)?;
+    let mapped = base.mapped();
+    let plan_rows = energy::layer_costs(mapped, &search.plan);
+    let timing = timing::plan_timing(mapped, &search.plan);
+    Ok(PlanSearchReport {
+        search,
+        plan_rows,
+        timing,
     })
 }

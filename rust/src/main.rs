@@ -337,11 +337,16 @@ fn cmd_deploy(args: &Args) -> Result<()> {
             // record reorder intent only when the mapping actually carries
             // permutations (the pass may normalize to the identity)
             reorder: if xbar.is_reordered() { reorder_cfg } else { None },
+            // hand the replication budget to the search itself: the joint
+            // pass trades ADC bits against replicas under one cell budget
+            // instead of water-filling after the fact
+            replicate_budget,
             ..PlannerConfig::default()
         };
         // reuse xbar's mapping and the reference's quantized weights —
         // the search itself never re-maps
-        let search = planner::plan_deployment_from(&xbar, &reference, &test_ds, &planner_cfg)?;
+        let psr = harness::plan_search_report(&xbar, &reference, &test_ds, &planner_cfg)?;
+        let search = &psr.search;
         if !search.within_budget {
             println!(
                 "warning: no plan within the {:.2} pt budget (best drop {:.2} pt)",
@@ -349,37 +354,36 @@ fn cmd_deploy(args: &Args) -> Result<()> {
                 (search.baseline_accuracy - search.accuracy) * 100.0
             );
         }
-        let mapped = xbar.mapped();
-        // spend the replication budget on the *searched* plan, so latency
-        // is priced at the resolutions the search actually selected
-        let mut plan = search.plan.clone();
-        let spent =
-            timing::fill_replicas_factor(mapped, &mut plan, replicate_budget.unwrap_or(0.0));
         // the pre-search deployment above already hard-failed on a
         // too-small budget; the searched plan can still underflow if the
         // search moved the bottleneck to a bigger layer — warn, the plan
         // itself is sound
         if let Some(f) = replicate_budget {
-            if let Some(d) = audit::replica_budget_diagnostic(mapped, &plan, f, spent) {
+            let diag = audit::replica_budget_diagnostic(
+                xbar.mapped(),
+                &search.plan,
+                f,
+                search.replica_cells,
+            );
+            if let Some(d) = diag {
                 println!("warning: {d} (searched plan)");
             }
         }
-        let plan_timing = timing::plan_timing(mapped, &plan);
-        let plan_rows = energy::layer_costs(mapped, &plan);
         println!(
             "{}",
             report::plan_table(
                 &format!(
                     "planned deployment (budget {:.2} pt, {} candidate evaluations)",
                     plan_budget * 100.0,
-                    search.evaluations
+                    search.stats.evaluations
                 ),
-                &plan_rows
+                &psr.plan_rows
             )
         );
+        println!("search cost: {}", report::search_stats_line(&search.stats));
         println!(
             "{}",
-            report::timing_table("planned pipeline timing", &plan_timing)
+            report::timing_table("planned pipeline timing", &psr.timing)
         );
         let (se, st, sa) = search.savings();
         println!(
@@ -389,13 +393,13 @@ fn cmd_deploy(args: &Args) -> Result<()> {
             search.baseline_accuracy * 100.0,
         );
         let json = report::planner_json(
-            &plan_rows,
+            &psr.plan_rows,
             search.baseline_accuracy,
             search.accuracy,
             plan_budget,
             search.savings(),
-            search.evaluations,
-            &plan_timing,
+            &search.stats,
+            &psr.timing,
         );
         std::fs::create_dir_all(&cfg.out_dir)?;
         let path = cfg.out_dir.join("plan.json");

@@ -6,6 +6,7 @@
 
 use crate::quant::N_SLICES;
 use crate::reram::energy::AdcSavingRow;
+use crate::reram::planner::SearchStats;
 use crate::sparsity::SliceStats;
 use crate::util::json::{num, obj, s, Json};
 
@@ -183,17 +184,27 @@ pub fn plan_table(title: &str, rows: &[PlanRow]) -> String {
     out
 }
 
+/// One-line rendering of a search's instrumentation counters, for CLI
+/// output and bench logs.
+pub fn search_stats_line(stats: &SearchStats) -> String {
+    format!(
+        "{} evaluations, {} layer-forwards, {} cache hits, {} early-aborted",
+        stats.evaluations, stats.layer_forwards, stats.cache_hits, stats.aborted_evals
+    )
+}
+
 /// Serialize a planner run as the `BENCH_planner.json` / `plan.json`
 /// document. `timing` carries the per-layer latency/replica rows and the
 /// pipeline throughput roll-up of the same plan (see
-/// [`crate::reram::timing`]).
+/// [`crate::reram::timing`]); `stats` lands both at the legacy top-level
+/// `evaluations` key and in full under `search`.
 pub fn planner_json(
     rows: &[PlanRow],
     baseline_accuracy: f64,
     accuracy: f64,
     accuracy_budget: f64,
     savings: (f64, f64, f64),
-    evaluations: usize,
+    stats: &SearchStats,
     timing: &PipelineTiming,
 ) -> Json {
     let layers = rows
@@ -217,7 +228,16 @@ pub fn planner_json(
         ("baseline_accuracy", num(baseline_accuracy)),
         ("accuracy", num(accuracy)),
         ("accuracy_budget", num(accuracy_budget)),
-        ("evaluations", num(evaluations as f64)),
+        ("evaluations", num(stats.evaluations as f64)),
+        (
+            "search",
+            obj(vec![
+                ("evaluations", num(stats.evaluations as f64)),
+                ("layer_forwards", num(stats.layer_forwards as f64)),
+                ("cache_hits", num(stats.cache_hits as f64)),
+                ("aborted_evals", num(stats.aborted_evals as f64)),
+            ]),
+        ),
         (
             "savings",
             obj(vec![
@@ -682,18 +702,33 @@ mod tests {
 
     #[test]
     fn planner_json_roundtrips() {
+        let stats = SearchStats {
+            evaluations: 37,
+            layer_forwards: 1520,
+            cache_hits: 4880,
+            aborted_evals: 9,
+        };
         let j = planner_json(
             &[plan_row()],
             0.9767,
             0.9741,
             0.005,
             (16.3, 2.91, 2.0),
-            37,
+            &stats,
             &timing_fixture(),
         );
         let back = crate::util::json::parse(&j.to_string()).unwrap();
         assert_eq!(back.get("baseline_accuracy").unwrap().as_f64(), Some(0.9767));
+        // the legacy top-level key mirrors the full search object
         assert_eq!(back.get("evaluations").unwrap().as_usize(), Some(37));
+        let search = back.get("search").unwrap();
+        assert_eq!(search.get("evaluations").unwrap().as_usize(), Some(37));
+        assert_eq!(search.get("layer_forwards").unwrap().as_usize(), Some(1520));
+        assert_eq!(search.get("cache_hits").unwrap().as_usize(), Some(4880));
+        assert_eq!(search.get("aborted_evals").unwrap().as_usize(), Some(9));
+        let line = search_stats_line(&stats);
+        assert!(line.contains("37 evaluations"), "{line}");
+        assert!(line.contains("4880 cache hits"), "{line}");
         let layers = back.get("layers").unwrap().as_arr().unwrap();
         assert_eq!(layers[0].get("layer").unwrap().as_str(), Some("fc1/w"));
         assert_eq!(layers[0].get("replicas").unwrap().as_usize(), Some(1));

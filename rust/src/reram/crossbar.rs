@@ -117,6 +117,19 @@ pub fn pack_wave(bits: &[u8]) -> [u64; 2] {
     wave
 }
 
+/// Pack activation bit `bit` of each code straight into the `[u64; 2]`
+/// wave-mask form — [`pack_wave`] without the intermediate byte plane.
+/// Identical mask for identical codes: wordline `r` is driven exactly when
+/// `codes[r]` has bit `bit` set.
+pub fn pack_code_wave(codes: &[u8], bit: u32) -> [u64; 2] {
+    assert!(codes.len() <= XBAR_ROWS, "wave of {} wordlines", codes.len());
+    let mut wave = [0u64; 2];
+    for (r, &c) in codes.iter().enumerate() {
+        wave[r >> 6] |= (((c >> bit) & 1) as u64) << (r & 63);
+    }
+    wave
+}
+
 /// Physical cell storage of one tile — see the module docs for when each
 /// representation wins.
 #[derive(Debug, Clone)]
@@ -1196,6 +1209,20 @@ mod tests {
         StorageFormat::Compressed,
         StorageFormat::BitPlanes,
     ];
+
+    /// `pack_code_wave(codes, t)` is `pack_wave` of the extracted byte
+    /// plane, for every bit position and ragged wordline counts.
+    #[test]
+    fn pack_code_wave_matches_byte_plane_packing() {
+        let mut rng = Rng::new(91);
+        for rows in [1usize, 63, 64, 65, 127, XBAR_ROWS] {
+            let codes: Vec<u8> = (0..rows).map(|_| rng.below(256) as u8).collect();
+            for t in 0..8u32 {
+                let plane: Vec<u8> = codes.iter().map(|&c| (c >> t) & 1).collect();
+                assert_eq!(pack_code_wave(&codes, t), pack_wave(&plane), "rows {rows} bit {t}");
+            }
+        }
+    }
 
     /// Property: all three layouts agree bit-exactly, pairwise, on every
     /// read path — census, column sums, byte-plane currents, wave-mask

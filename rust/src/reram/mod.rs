@@ -155,6 +155,31 @@
 //! (`report::adc_table`, `report::plan_table`, `resolution_summary`)
 //! always render MSB-first with explicit `XB_k` labels.
 //!
+//! # Evaluation-cache convention (prefix reuse, exact early abort)
+//!
+//! The planner's holdout scoring exploits a structural property of the
+//! serving pipeline: activations are quantized **per row** (each layer's
+//! input codes depend only on that row's upstream arithmetic, never on
+//! the batch or on downstream layers), so two deployment plans that
+//! agree on `adc_bits` for layers `0..j` produce **bit-identical**
+//! layer-`j` inputs for every example. [`crate::serve::EvalCache`]
+//! caches the incumbent plan's per-layer activations for the whole
+//! holdout and scores a candidate by re-running only the suffix from
+//! its first diverging layer
+//! ([`crate::serve::CrossbarBackend::forward_from_layer`]); replica
+//! counts are deliberately ignored by the divergence check because
+//! sharded serving is bit-identical to unsharded (see the timing
+//! section above). Scoring against an accuracy floor aborts the scan as
+//! soon as `correct_so_far + examples_remaining < floor ×
+//! examples_total` — a monotone bound, so the abort decision is exactly
+//! the decision a full scan would reach, and cached search selects the
+//! **identical plan** to uncached search by construction. Examples are
+//! scanned hardest-first (ascending incumbent margin) so infeasible
+//! candidates die early; the order only affects *when* the abort fires,
+//! never the verdict. [`planner::SearchStats`] counts the work
+//! (`layer_forwards`, `cache_hits`, `aborted_evals`) and the `search`
+//! object in `plan.json` reports it.
+//!
 //! # Audit invariant catalogue (code → invariant → convention enforced)
 //!
 //! [`audit`] turns each convention above into a machine-checked invariant

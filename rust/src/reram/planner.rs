@@ -18,6 +18,19 @@
 //! a warm start: when it already holds the budget, the search jumps there
 //! and can only improve on it.
 //!
+//! Two machineries keep the search cheap and let it co-plan replication.
+//! Candidate evaluation is *incremental* by default
+//! ([`PlannerConfig::incremental`]): a [`crate::serve::EvalCache`] holds
+//! the incumbent plan's per-layer holdout activations, so a candidate
+//! whose resolutions first diverge at layer `j` re-runs only layers
+//! `j..`, and holdout scoring walks the hardest examples first so a
+//! candidate that provably cannot reach the accuracy floor aborts early —
+//! the selected plan is bit-identical to the uncached search, only the
+//! crossbar forwards spent change ([`SearchStats`] records both). And an
+//! optional *joint* pass ([`PlannerConfig::replicate_budget`]) trades ADC
+//! bits against pipeline replicas under one fabrication budget instead of
+//! water-filling replicas only after the bits are fixed.
+//!
 //! All bit arrays are LSB-first (see the bit-order convention in the
 //! [`crate::reram`] module docs).
 
@@ -25,12 +38,13 @@ use anyhow::Result;
 
 use crate::data::Dataset;
 use crate::quant::N_SLICES;
-use crate::serve::{self, CrossbarBackend, DenseLayer, ReferenceBackend};
+use crate::serve::{self, CrossbarBackend, DenseLayer, EvalCache, ReferenceBackend};
 
 use super::adc::AdcModel;
 use super::energy;
 use super::mapper::MappedModel;
 use super::resolution::{self, ResolutionPolicy};
+use super::timing;
 
 /// The paper's Table-3 operating point, LSB-first: 3-bit ADCs on
 /// XB_0..XB_2, 1-bit on the MSB group XB_3.
@@ -135,6 +149,26 @@ pub enum DescentStrategy {
     Binary,
 }
 
+/// Instrumentation counters for one planner run — the evidence that the
+/// incremental machinery actually saved work.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SearchStats {
+    /// candidate accuracy evaluations spent by the search, plus the two
+    /// full re-measures (reference and selected plan) of the final
+    /// validation when a holdout subsample forces one
+    pub evaluations: usize,
+    /// (example, layer) crossbar forwards actually executed: the start
+    /// plan's full pass, every candidate's re-run tail, and the selected
+    /// plan's final validation pass
+    pub layer_forwards: usize,
+    /// (example, layer) forwards *avoided* by reusing cached prefix
+    /// activations (zero when [`PlannerConfig::incremental`] is off)
+    pub cache_hits: usize,
+    /// candidate evaluations cut short because even a perfect remaining
+    /// tail could not lift them to the accuracy floor
+    pub aborted_evals: usize,
+}
+
 /// Planner search knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct PlannerConfig {
@@ -161,6 +195,26 @@ pub struct PlannerConfig {
     /// How each (layer, slice-group) resolution descends toward the
     /// budget floor (see [`DescentStrategy`]).
     pub descent: DescentStrategy,
+    /// Evaluate candidates through the incremental
+    /// [`crate::serve::EvalCache`]: layers upstream of a candidate's
+    /// first diverging resolution reuse the incumbent's cached boundary
+    /// activations, and holdout scoring aborts early against the
+    /// accuracy floor. Selections are bit-identical either way (see the
+    /// evaluation-cache convention in [`crate::reram`]); the switch
+    /// exists to measure the saving and as an escape hatch.
+    pub incremental: bool,
+    /// Joint ADC/replica co-optimization: `Some(factor)` grants the
+    /// search a replica cell budget of `factor` x the *starting* plan's
+    /// bottleneck-layer cells — the same budget
+    /// [`crate::reram::timing::fill_replicas_factor`] would spend on that
+    /// plan after the fact, so joint and sequential runs stay comparable.
+    /// The search first descends the post-replication bottleneck's
+    /// slowest slice groups (throughput-first), then runs the energy
+    /// descent, and finally spends the budget on the selected
+    /// resolutions; [`PlanSearch::replica_cells`] records the spend.
+    /// `None` keeps bits-then-replicas strictly sequential (and spends
+    /// nothing).
+    pub replicate_budget: Option<f64>,
 }
 
 impl Default for PlannerConfig {
@@ -172,6 +226,8 @@ impl Default for PlannerConfig {
             eval_examples: 256,
             reorder: None,
             descent: DescentStrategy::Binary,
+            incremental: true,
+            replicate_budget: None,
         }
     }
 }
@@ -194,8 +250,13 @@ pub struct PlanSearch {
     pub cost: energy::DeploymentCost,
     /// cost of the uniform 8-bit ISAAC baseline on the same mapping
     pub baseline_cost: energy::DeploymentCost,
-    /// candidate accuracy evaluations spent by the search
-    pub evaluations: usize,
+    /// what the search spent: evaluations, crossbar layer forwards,
+    /// prefix-cache hits, early-aborted evaluations
+    pub stats: SearchStats,
+    /// replica cells spent by the joint pass
+    /// ([`PlannerConfig::replicate_budget`]); 0 when no budget was
+    /// granted
+    pub replica_cells: usize,
     /// whether the selected plan holds the accuracy budget on the
     /// validation slice. Can be false even with a lossless
     /// `start_policy`: a lossy start can put the *starting* plan below
@@ -263,6 +324,78 @@ fn lowest_feasible(
     Ok(hi)
 }
 
+/// Candidate scorer shared by every search phase: either the incremental
+/// [`EvalCache`] (prefix layers reused, hardest examples first, early
+/// abort against the floor) or the plain replan-and-measure path. Both
+/// produce bit-identical accuracies and accept/reject verdicts, so the
+/// selected plan does not depend on [`PlannerConfig::incremental`] —
+/// only [`SearchStats::layer_forwards`] does.
+struct Evaluator<'a> {
+    base: &'a CrossbarBackend,
+    ds: &'a Dataset,
+    cache: Option<EvalCache>,
+    layers: usize,
+    stats: SearchStats,
+}
+
+impl<'a> Evaluator<'a> {
+    fn new(base: &'a CrossbarBackend, ds: &'a Dataset, incremental: bool) -> Result<Evaluator<'a>> {
+        let mut stats = SearchStats::default();
+        let cache = if incremental {
+            Some(EvalCache::new(base, ds, &mut stats)?)
+        } else {
+            None
+        };
+        Ok(Evaluator {
+            base,
+            ds,
+            cache,
+            layers: base.mapped().layers.len(),
+            stats,
+        })
+    }
+
+    /// Accuracy of the starting plan. The cache's build pass already
+    /// measured it; the uncached path pays one full accuracy pass — the
+    /// same price, so the two modes stay forward-for-forward comparable.
+    fn start_accuracy(&mut self) -> Result<f64> {
+        match &self.cache {
+            Some(c) => Ok(c.accuracy()),
+            None => {
+                self.stats.layer_forwards += self.layers * self.ds.len();
+                Ok(serve::accuracy(self.base, self.ds)?.accuracy)
+            }
+        }
+    }
+
+    /// Score one candidate against `floor`: `(feasible, accuracy)`. The
+    /// accuracy is `None` exactly when the cached scan aborted early —
+    /// feasible candidates always carry one.
+    fn eval(&mut self, cand: &DeploymentPlan, floor: f64) -> Result<(bool, Option<f64>)> {
+        self.stats.evaluations += 1;
+        match &mut self.cache {
+            Some(c) => {
+                let s = c.score(cand, Some(floor), &mut self.stats)?;
+                Ok((s.feasible, s.accuracy))
+            }
+            None => {
+                let be = self.base.replan("planner-candidate", cand.clone())?;
+                self.stats.layer_forwards += self.layers * self.ds.len();
+                let a = serve::accuracy(&be, self.ds)?.accuracy;
+                Ok((a >= floor, Some(a)))
+            }
+        }
+    }
+
+    /// Tell the cache the search accepted `cand` as its new incumbent.
+    fn promote(&mut self, cand: &DeploymentPlan) -> Result<()> {
+        match &mut self.cache {
+            Some(c) => c.promote(cand, &mut self.stats),
+            None => Ok(()),
+        }
+    }
+}
+
 /// Search a per-layer ADC deployment plan for `stack` under `cfg`,
 /// validating every candidate on `holdout`. Maps the stack once — in
 /// reordered layout when `cfg.reorder` asks for it — quantizes the
@@ -324,12 +457,24 @@ pub fn plan_deployment_from(
     )?;
     let model = base.mapped().clone();
     let baseline_accuracy = serve::accuracy(reference, &ds)?.accuracy;
-    let start_accuracy = serve::accuracy(&base, &ds)?.accuracy;
+
+    // the replica budget is anchored once, at the census-derived starting
+    // plan's bottleneck, so a joint run and a plain run followed by an
+    // external fill spend the *same* cell budget and stay comparable
+    let budget_cells = match cfg.replicate_budget {
+        Some(f) if f > 0.0 => timing::plan_timing(&model, base.plan())
+            .bottleneck()
+            .map(|b| (f * model.layers[b].fabricated_cells() as f64) as usize)
+            .unwrap_or(0),
+        _ => 0,
+    };
+
+    let mut ev = Evaluator::new(&base, &ds, cfg.incremental)?;
+    let start_accuracy = ev.start_accuracy()?;
     let floor = baseline_accuracy - cfg.accuracy_budget;
 
     let mut plan = base.plan().clone();
     let mut accuracy = start_accuracy;
-    let mut evaluations = 0usize;
 
     // candidate-move weights: conversions per (layer, slice group); the
     // tally reads the cached per-tile census, so scoring is O(tiles)
@@ -338,12 +483,6 @@ pub fn plan_deployment_from(
         .iter()
         .map(|l| std::array::from_fn(|k| energy::slice_conversions(l, k)))
         .collect();
-
-    let eval = |cand: &DeploymentPlan, evaluations: &mut usize| -> Result<f64> {
-        let be = base.replan("planner-candidate", cand.clone())?;
-        *evaluations += 1;
-        Ok(serve::accuracy(&be, &ds)?.accuracy)
-    };
 
     // Paper warm start: the hand-picked Table-3 point, clipped into
     // [min_bits, start bits] per group. If it holds the budget, jump —
@@ -355,10 +494,61 @@ pub fn plan_deployment_from(
         }
     }
     if warm != plan {
-        let a = eval(&warm, &mut evaluations)?;
-        if a >= floor {
+        let (ok, a) = ev.eval(&warm, floor)?;
+        if ok {
             plan = warm;
-            accuracy = a;
+            accuracy = a.expect("feasible evaluations always carry an accuracy");
+            ev.promote(&plan)?;
+        }
+    }
+
+    // Joint ADC/replica pass, throughput-first leg: with a replica budget
+    // on the table, repeatedly water-fill a *trial* copy of the plan to
+    // see where the pipeline would bottleneck after replication, then
+    // binary-search that layer's slowest slice group down to its accuracy
+    // floor. Lower bits shrink the bottleneck's sensing latency directly
+    // AND free budget cells for more replicas — the two levers a
+    // bits-then-replicas pipeline cannot trade against each other. Every
+    // visited group is frozen (floored or refused), so the loop ends
+    // after at most layers x N_SLICES visits; the energy descent below
+    // shares the frozen set and the final fill spends the budget on the
+    // selected resolutions.
+    let mut frozen = vec![[false; N_SLICES]; plan.layers.len()];
+    if budget_cells > 0 {
+        loop {
+            let mut trial = plan.clone();
+            timing::fill_replicas(&model, &mut trial, budget_cells);
+            let Some(b) = timing::plan_timing(&model, &trial).bottleneck() else {
+                break;
+            };
+            let groups = timing::group_latency(&model.layers[b], &trial.layers[b]);
+            let Some(k) = (0..N_SLICES)
+                .filter(|&k| !frozen[b][k] && plan.layers[b].adc_bits[k] > cfg.min_bits)
+                .max_by_key(|&k| groups[k])
+            else {
+                break; // the post-fill bottleneck has nothing left to lower
+            };
+            let hi = plan.layers[b].adc_bits[k];
+            let mut probed: Vec<(u32, f64)> = Vec::new();
+            let best = lowest_feasible(cfg.min_bits, hi, |v| {
+                let mut cand = plan.clone();
+                cand.layers[b].adc_bits[k] = v;
+                let (ok, a) = ev.eval(&cand, floor)?;
+                if ok {
+                    probed.push((v, a.expect("feasible evaluations always carry an accuracy")));
+                }
+                Ok(ok)
+            })?;
+            if best < hi {
+                plan.layers[b].adc_bits[k] = best;
+                accuracy = probed
+                    .iter()
+                    .find(|&&(v, _)| v == best)
+                    .expect("accepted resolution was probed feasible")
+                    .1;
+                ev.promote(&plan)?;
+            }
+            frozen[b][k] = true;
         }
     }
 
@@ -385,34 +575,31 @@ pub fn plan_deployment_from(
         // group) by one bit, best energy saving first. A group that fails
         // the budget is frozen — lowering *other* groups never makes it
         // more affordable.
-        DescentStrategy::Linear => {
-            let mut frozen = vec![[false; N_SLICES]; plan.layers.len()];
-            loop {
-                let moves = score(&plan, &frozen);
-                let mut progressed = false;
-                for &(_, l, k) in &moves {
-                    let mut cand = plan.clone();
-                    cand.layers[l].adc_bits[k] -= 1;
-                    let a = eval(&cand, &mut evaluations)?;
-                    if a >= floor {
-                        plan = cand;
-                        accuracy = a;
-                        progressed = true;
-                        break; // re-score remaining moves against the new plan
-                    }
-                    frozen[l][k] = true;
+        DescentStrategy::Linear => loop {
+            let moves = score(&plan, &frozen);
+            let mut progressed = false;
+            for &(_, l, k) in &moves {
+                let mut cand = plan.clone();
+                cand.layers[l].adc_bits[k] -= 1;
+                let (ok, a) = ev.eval(&cand, floor)?;
+                if ok {
+                    plan = cand;
+                    accuracy = a.expect("feasible evaluations always carry an accuracy");
+                    ev.promote(&plan)?;
+                    progressed = true;
+                    break; // re-score remaining moves against the new plan
                 }
-                if !progressed {
-                    break;
-                }
+                frozen[l][k] = true;
             }
-        }
+            if !progressed {
+                break;
+            }
+        },
         // Per-group binary search, best energy gain first. A group's gain
         // depends only on its *own* current bits, so fully descending one
         // group never re-orders the remaining ones — a single sorted pass
         // visits the same groups the greedy loop would.
         DescentStrategy::Binary => {
-            let frozen = vec![[false; N_SLICES]; plan.layers.len()];
             for &(_, l, k) in &score(&plan, &frozen) {
                 let b = plan.layers[l].adc_bits[k];
                 // accuracies of the feasible probes, so the accepted
@@ -421,10 +608,9 @@ pub fn plan_deployment_from(
                 let best = lowest_feasible(cfg.min_bits, b, |v| {
                     let mut cand = plan.clone();
                     cand.layers[l].adc_bits[k] = v;
-                    let a = eval(&cand, &mut evaluations)?;
-                    let ok = a >= floor;
+                    let (ok, a) = ev.eval(&cand, floor)?;
                     if ok {
-                        probed.push((v, a));
+                        probed.push((v, a.expect("feasible evaluations always carry an accuracy")));
                     }
                     Ok(ok)
                 })?;
@@ -435,10 +621,23 @@ pub fn plan_deployment_from(
                         .find(|&&(v, _)| v == best)
                         .expect("accepted resolution was probed feasible")
                         .1;
+                    ev.promote(&plan)?;
                 }
             }
         }
     }
+
+    let mut stats = ev.stats;
+
+    // Joint pass, final leg: spend the replica budget on the selected
+    // resolutions (phase-one trials were provisional — only this fill is
+    // fabricated). Replicas shard examples without changing any of them,
+    // so the validated accuracy below is unaffected.
+    let replica_cells = if budget_cells > 0 {
+        timing::fill_replicas(&model, &mut plan, budget_cells)
+    } else {
+        0
+    };
 
     // Final validation: the greedy loop selects on the (possibly
     // subsampled) eval set, so a plan can overfit its accept/reject
@@ -458,7 +657,10 @@ pub fn plan_deployment_from(
             holdout.clone()
         };
         let selected = base.replan("planner-selected", plan.clone())?;
-        evaluations += 1;
+        // two full accuracy passes run here — the reference and the
+        // selected plan — and only the crossbar one executes forwards
+        stats.evaluations += 2;
+        stats.layer_forwards += model.layers.len() * val.len();
         (
             serve::accuracy(reference, &val)?.accuracy,
             serve::accuracy(&selected, &val)?.accuracy,
@@ -474,7 +676,8 @@ pub fn plan_deployment_from(
         accuracy,
         cost,
         baseline_cost,
-        evaluations,
+        stats,
+        replica_cells,
         within_budget: accuracy >= baseline_accuracy - cfg.accuracy_budget,
     })
 }
@@ -576,7 +779,8 @@ mod tests {
         };
         let res = plan_deployment(&stack, &ds, &cfg).unwrap();
         assert_eq!(res.plan.uniform_bits(), Some([1, 1, 1, 1]));
-        assert!(res.evaluations > 0);
+        assert!(res.stats.evaluations > 0);
+        assert_eq!(res.replica_cells, 0, "no replica budget was granted");
         assert!(res.cost.energy < res.baseline_cost.energy);
         let (e, t, a) = res.savings();
         assert!(e > 1.0 && t > 1.0 && a > 1.0);
@@ -697,11 +901,122 @@ mod tests {
         let binary = run(DescentStrategy::Binary);
         assert_eq!(binary.plan, linear.plan, "descent strategies diverged");
         assert!(
-            binary.evaluations <= linear.evaluations,
+            binary.stats.evaluations <= linear.stats.evaluations,
             "binary spent {} evaluations, linear {}",
-            binary.evaluations,
-            linear.evaluations
+            binary.stats.evaluations,
+            linear.stats.evaluations
         );
         assert!(binary.within_budget && linear.within_budget);
+    }
+
+    /// Tentpole: the incremental evaluator must change the *cost* of the
+    /// search, never its outcome — same selected plan, same accuracy,
+    /// same evaluation sequence, fewer (or equal) crossbar forwards.
+    #[test]
+    fn incremental_search_matches_uncached_exactly() {
+        let mut rng = Rng::new(23);
+        let stack = toy_stack(&mut rng);
+        let ds = oracle_dataset(&stack, 48, 11);
+        for budget in [0.0, 0.05] {
+            let run = |incremental| {
+                let cfg = PlannerConfig {
+                    accuracy_budget: budget,
+                    incremental,
+                    ..PlannerConfig::default()
+                };
+                plan_deployment(&stack, &ds, &cfg).unwrap()
+            };
+            let cached = run(true);
+            let uncached = run(false);
+            assert_eq!(cached.plan, uncached.plan, "budget {budget}");
+            assert_eq!(cached.accuracy, uncached.accuracy, "budget {budget}");
+            assert_eq!(
+                cached.stats.evaluations, uncached.stats.evaluations,
+                "budget {budget}"
+            );
+            assert_eq!(uncached.stats.cache_hits, 0);
+            assert_eq!(uncached.stats.aborted_evals, 0);
+            assert!(cached.stats.cache_hits > 0, "budget {budget}");
+            assert!(
+                cached.stats.layer_forwards <= uncached.stats.layer_forwards,
+                "budget {budget}: cached spent {} forwards, uncached {}",
+                cached.stats.layer_forwards,
+                uncached.stats.layer_forwards
+            );
+        }
+    }
+
+    /// Satellite: the final full-holdout re-measure runs *two* accuracy
+    /// passes (reference and selected plan); the evaluation counter must
+    /// say so, and the selected plan's crossbar pass must land in
+    /// `layer_forwards`.
+    #[test]
+    fn final_validation_counts_its_two_passes() {
+        let mut rng = Rng::new(29);
+        let stack = toy_stack(&mut rng);
+        let ds = oracle_dataset(&stack, 64, 31);
+        // a min_bits floor above the lossless start turns every descent
+        // move off and clips the warm start into a no-op: the only
+        // accuracy passes left are the tail validation's two
+        let cfg = PlannerConfig {
+            eval_examples: 16,
+            min_bits: 32,
+            ..PlannerConfig::default()
+        };
+        let res = plan_deployment(&stack, &ds, &cfg).unwrap();
+        assert_eq!(res.stats.evaluations, 2, "reference + selected re-measure");
+        // cache build over the 16-example search slice, then the selected
+        // plan's full pass over the 48-example unseen tail
+        assert_eq!(res.stats.layer_forwards, 2 * 16 + 2 * 48);
+        assert_eq!(res.stats.aborted_evals, 0);
+    }
+
+    /// Tentpole: under one replica cell budget, the joint ADC/replica
+    /// pass must meet (or beat) the sequential pipeline — search bits
+    /// first, water-fill replicas afterwards — in steady-state pipeline
+    /// throughput.
+    #[test]
+    fn joint_replica_pass_meets_sequential_throughput() {
+        use crate::reram::timing;
+        use crate::util::fixtures;
+        let stack = fixtures::bottleneck_stack(0xBEEF);
+        let ds = oracle_dataset(&stack, 32, 9);
+        let cfg = PlannerConfig {
+            eval_examples: 0,
+            ..PlannerConfig::default()
+        };
+        let seq = plan_deployment(&stack, &ds, &cfg).unwrap();
+        let joint = plan_deployment(
+            &stack,
+            &ds,
+            &PlannerConfig {
+                replicate_budget: Some(2.0),
+                ..cfg
+            },
+        )
+        .unwrap();
+
+        // the budget the joint pass anchored at the shared starting plan
+        let named: Vec<(String, Tensor)> = stack
+            .iter()
+            .map(|l| (l.name.clone(), l.w.clone()))
+            .collect();
+        let model = map_model(&named).unwrap();
+        let start = DeploymentPlan::from_policy(&model, cfg.start_policy);
+        let b = timing::plan_timing(&model, &start).bottleneck().unwrap();
+        let budget = 2 * model.layers[b].fabricated_cells();
+        assert!(joint.replica_cells > 0, "the budget bought replicas");
+        assert!(joint.replica_cells <= budget, "budget overspent");
+        assert_eq!(seq.replica_cells, 0);
+
+        let mut seq_plan = seq.plan.clone();
+        timing::fill_replicas(&model, &mut seq_plan, budget);
+        let seq_tp = timing::plan_timing(&model, &seq_plan).throughput_per_kcycle();
+        let joint_tp = timing::plan_timing(&model, &joint.plan).throughput_per_kcycle();
+        assert!(
+            joint_tp >= seq_tp * 0.999,
+            "joint {joint_tp} vs sequential {seq_tp}"
+        );
+        assert!(joint.within_budget);
     }
 }

@@ -12,7 +12,7 @@ use crate::quant::{self, N_SLICES};
 use crate::tensor::Tensor;
 use crate::util::pool::{parallel_map, worker_threads};
 
-use super::crossbar::{pack_wave, StorageFormat};
+use super::crossbar::{pack_code_wave, StorageFormat};
 use super::mapper::LayerMapping;
 
 /// Quantize non-negative activations to codes (mirrors L2 `_act_quantize`)
@@ -56,11 +56,14 @@ pub fn adc_clip(current: u32, bits: u32) -> u32 {
 /// `SimScratch` per worker thread keeps the hot loop allocation-free.
 #[derive(Debug, Default)]
 pub struct SimScratch {
-    /// plane-major: `planes[t * rows + r]` is bit t of activation code r
+    /// plane-major: `planes[t * rows + r]` is bit t of activation code r.
+    /// Built only when the layer holds a byte-layout (Dense/Compressed)
+    /// programmed tile; empty for all-BitPlanes layers.
     planes: Vec<u8>,
-    /// the same bit-planes packed per tile row-span into the `[u64; 2]`
-    /// wave-mask form of the BitPlanes convention:
-    /// `waves[t * row_tiles + tr]` covers rows `tr * 128 ..` of plane t
+    /// the activation bit-planes packed per tile row-span into the
+    /// `[u64; 2]` wave-mask form of the BitPlanes convention:
+    /// `waves[t * row_tiles + tr]` covers rows `tr * 128 ..` of plane t.
+    /// Always built (straight from the codes), in every layout.
     waves: Vec<[u64; 2]>,
     /// current accumulator, sliced per tile to `tile.cols()`
     cur: Vec<u32>,
@@ -75,22 +78,25 @@ pub struct SimScratch {
 /// Run one example (activation code vector) through a mapped layer,
 /// writing the integer-domain result (code units) into `out`; multiply by
 /// `layer.step * act_step` for real units. `adc_bits[k]` is the resolution
-/// of slice group k (LSB-first). All 8 bit-planes are materialized once
-/// per example into `scratch` and the current buffer is reused across
-/// tiles and both storage representations, so repeated calls do not
-/// allocate. Fully-zero tiles (e.g. the empty negative grid of an
-/// all-positive layer) are skipped outright — they contribute no current,
-/// and the cached per-tile census makes the check O(1). Each bit-plane is
-/// additionally packed once per tile row-span into the `[u64; 2]`
-/// wave-mask form: bit-plane tiles consume the wave directly through the
-/// popcount path ([`Crossbar::bitline_currents_wave`]), and an all-zero
-/// wave skips the whole row-block — no wordline is driven, so every
-/// current is identically zero and every ADC conversion of that plane is
-/// dropped bit-exactly, in every layout. Within each programmed indexed
-/// tile, the ADC/recombination loop walks only the tile's nonzero-column
-/// index ([`Crossbar::bitline_currents_active`]): structurally-zero
-/// columns carry no current and no conversion, closing the remaining
-/// O(cols) term at extreme sparsity.
+/// of slice group k (LSB-first). The packed activation waves are built
+/// once per (plane, tile row-span) straight from the code vector
+/// ([`pack_code_wave`]); the 8 byte bit-planes are materialized only when
+/// the layer actually holds a byte-layout (Dense/Compressed) programmed
+/// tile that will scan them — an all-BitPlanes layer skips the byte
+/// transpose it never reads. All buffers live in `scratch` and the
+/// current buffer is reused across tiles and storage representations, so
+/// repeated calls do not allocate. Fully-zero tiles (e.g. the empty
+/// negative grid of an all-positive layer) are skipped outright — they
+/// contribute no current, and the cached per-tile census makes the check
+/// O(1). Bit-plane tiles consume the wave directly through the popcount
+/// path ([`Crossbar::bitline_currents_wave`]), and an all-zero wave skips
+/// the whole row-block — no wordline is driven, so every current is
+/// identically zero and every ADC conversion of that plane is dropped
+/// bit-exactly, in every layout. Within each programmed indexed tile, the
+/// ADC/recombination loop walks only the tile's nonzero-column index
+/// ([`Crossbar::bitline_currents_active`]): structurally-zero columns
+/// carry no current and no conversion, closing the remaining O(cols) term
+/// at extreme sparsity.
 ///
 /// Reordered mappings ([`LayerMapping::reorder`]) are handled entirely at
 /// the boundaries, per the convention in [`crate::reram::reorder`]: the
@@ -133,24 +139,37 @@ pub fn forward_codes_into(
         }
         _ => a_code,
     };
-    planes.clear();
-    planes.resize(8 * rows, 0);
-    for (r, &c) in codes.iter().enumerate() {
-        for t in 0..8usize {
-            planes[t * rows + r] = (c >> t) & 1;
-        }
-    }
-    // the same planes, packed once per tile row-span into wave masks —
-    // what the bit-plane tiles consume and the zero-wave skip tests
+    // packed wave masks, built straight from the codes once per
+    // (plane, tile row-span) — what the bit-plane tiles and the
+    // zero-wave skip consume, in every layout
     let row_tiles = rows.div_ceil(super::XBAR_ROWS);
     waves.clear();
     waves.resize(8 * row_tiles, [0u64; 2]);
     for (t, span) in waves.chunks_exact_mut(row_tiles).enumerate() {
-        let plane = &planes[t * rows..(t + 1) * rows];
         for (tr, wave) in span.iter_mut().enumerate() {
             let r0 = tr * super::XBAR_ROWS;
             let r1 = (r0 + super::XBAR_ROWS).min(rows);
-            *wave = pack_wave(&plane[r0..r1]);
+            *wave = pack_code_wave(&codes[r0..r1], t as u32);
+        }
+    }
+    // the byte bit-planes exist only for byte-layout (Dense/Compressed)
+    // tiles — an all-BitPlanes layer never reads them, so skip the
+    // transpose entirely
+    let needs_bytes = layer.grids.iter().any(|(pos, neg)| {
+        [pos, neg].into_iter().any(|grid| {
+            (0..grid.row_tiles * grid.col_tiles).any(|i| {
+                let tile = grid.tile(i / grid.col_tiles, i % grid.col_tiles);
+                tile.nonzero_cells() > 0 && tile.format() != StorageFormat::BitPlanes
+            })
+        })
+    });
+    planes.clear();
+    if needs_bytes {
+        planes.resize(8 * rows, 0);
+        for (r, &c) in codes.iter().enumerate() {
+            for t in 0..8usize {
+                planes[t * rows + r] = (c >> t) & 1;
+            }
         }
     }
     cur.resize(super::XBAR_COLS, 0);
@@ -168,7 +187,13 @@ pub fn forward_codes_into(
     let acc: &mut [i64] = if col_permuted { &mut phys[..] } else { &mut out[..] };
     // bit-serial over the 8 activation bit planes
     for t in 0..8u32 {
-        let bits = &planes[t as usize * rows..(t as usize + 1) * rows];
+        // empty when !needs_bytes — the byte branch is unreachable then,
+        // since every programmed tile dispatches to the wave path
+        let bits: &[u8] = if needs_bytes {
+            &planes[t as usize * rows..(t as usize + 1) * rows]
+        } else {
+            &[]
+        };
         let plane_waves = &waves[t as usize * row_tiles..(t as usize + 1) * row_tiles];
         for (k, (pos, neg)) in layer.grids.iter().enumerate() {
             let full = adc_bits[k];
@@ -514,6 +539,31 @@ mod tests {
             let m = layer.with_storage(fmt);
             assert_eq!(forward_codes(&m, &a, &LOSSLESS), want, "{fmt:?}");
         }
+    }
+
+    /// Satellite: an all-BitPlanes layer never reads the byte bit-planes,
+    /// so `forward_codes_into` must not build them — and skipping the
+    /// transpose must be invisible in the output.
+    #[test]
+    fn all_bitplane_layer_skips_byte_planes() {
+        let mut rng = Rng::new(83);
+        let w = random_sparse_tensor(&mut rng, 200, 40, 45);
+        let layer = map_layer("l", &w).unwrap();
+        let forced = layer.with_storage(StorageFormat::BitPlanes);
+        let code: Vec<u8> = (0..200).map(|_| rng.below(256) as u8).collect();
+        let mut scratch = SimScratch::default();
+        let mut out = Vec::new();
+        forward_codes_into(&forced, &code, &LOSSLESS, &mut scratch, &mut out);
+        assert!(
+            scratch.planes.is_empty(),
+            "all-BitPlanes layer materialized {} byte-plane entries",
+            scratch.planes.len()
+        );
+        assert_eq!(out, forward_codes(&layer, &code, &LOSSLESS));
+        // a byte-layout tile in the mix forces the planes back
+        let dense = layer.with_storage(StorageFormat::Dense);
+        forward_codes_into(&dense, &code, &LOSSLESS, &mut scratch, &mut out);
+        assert!(!scratch.planes.is_empty(), "byte layout needs byte planes");
     }
 
     #[test]

@@ -122,6 +122,25 @@ pub fn layer_timing(layer: &LayerMapping, pl: &PlanLayer) -> LayerTiming {
     }
 }
 
+/// Per-slice-group latency of one layer at its planned resolutions:
+/// `group_latency(..)[k]` is the slowest tile of slice group k over both
+/// sign grids — the group-resolved view of
+/// [`layer_timing`]'s `latency_cycles` (which is the max over groups).
+/// The joint ADC/replica pass uses it to pick which group of the
+/// bottleneck layer to lower next.
+pub fn group_latency(layer: &LayerMapping, pl: &PlanLayer) -> [u64; quant::N_SLICES] {
+    let mut out = [0u64; quant::N_SLICES];
+    for (k, (pos, neg)) in layer.grids.iter().enumerate() {
+        let bits = pl.adc_bits[k];
+        for grid in [pos, neg] {
+            for tile in &grid.tiles {
+                out[k] = out[k].max(tile_cycles(tile, bits));
+            }
+        }
+    }
+    out
+}
+
 /// Whole-pipeline timing under a plan.
 #[derive(Debug, Clone)]
 pub struct PipelineTiming {
@@ -346,6 +365,35 @@ mod tests {
             assert_eq!(t.latency_cycles, want_max);
             assert_eq!(t.conversion_cycles, want_sum);
             assert!(t.latency_cycles > 0);
+        }
+    }
+
+    /// `group_latency` is the per-group decomposition of
+    /// `layer_timing`'s latency: its max over groups is the layer
+    /// latency, and each entry recomputes directly from the tiles.
+    #[test]
+    fn group_latency_decomposes_layer_latency() {
+        let mut rng = Rng::new(29);
+        let w = fixtures::structured_sparse_weights(&mut rng, 300, 150, 0.2, 0.2, 0.4);
+        let m = map_layer("l", &w).unwrap();
+        let pl = PlanLayer {
+            name: "l".into(),
+            adc_bits: [3, 2, 4, 1],
+            replicas: 1,
+        };
+        let groups = group_latency(&m, &pl);
+        assert_eq!(
+            groups.iter().copied().max().unwrap(),
+            layer_timing(&m, &pl).latency_cycles
+        );
+        for (k, (pos, neg)) in m.grids.iter().enumerate() {
+            let want = [pos, neg]
+                .into_iter()
+                .flat_map(|g| g.tiles.iter())
+                .map(|t| tile_cycles(t, pl.adc_bits[k]))
+                .max()
+                .unwrap_or(0);
+            assert_eq!(groups[k], want, "group {k}");
         }
     }
 

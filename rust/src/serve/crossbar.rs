@@ -45,11 +45,12 @@ use crate::tensor::Tensor;
 use super::{BackendInfo, DenseLayer, InferenceBackend};
 
 /// Per-layer bias/activation metadata (everything of a [`DenseLayer`] that
-/// is not the mapped weights), shared across `replan`/`rebit` clones.
+/// is not the mapped weights), shared across `replan`/`rebit` clones and
+/// with the incremental evaluation cache ([`super::EvalCache`]).
 #[derive(Debug)]
-struct StackMeta {
-    bias: Option<Vec<f32>>,
-    relu: bool,
+pub(crate) struct StackMeta {
+    pub(crate) bias: Option<Vec<f32>>,
+    pub(crate) relu: bool,
 }
 
 /// Functional crossbar inference at configurable ADC resolutions.
@@ -257,6 +258,45 @@ impl CrossbarBackend {
         crate::reram::timing::plan_timing(&self.model, &self.plan)
     }
 
+    /// The shared per-layer bias/activation metadata — what the
+    /// evaluation cache needs to re-run layer steps under candidate
+    /// resolutions without a backend clone.
+    pub(crate) fn stack_meta(&self) -> &Arc<Vec<StackMeta>> {
+        &self.meta
+    }
+
+    /// Run layers `from_layer..` over a batch whose rows are already
+    /// layer-`from_layer` **input activations** (post-bias/ReLU outputs
+    /// of layer `from_layer - 1`; the raw features when `from_layer` is
+    /// 0), returning the final logits. `forward_from_layer(0, x)` is
+    /// exactly `infer_batch(x)` on the row-major path.
+    ///
+    /// This is the layer-at-a-time entry point behind
+    /// [`super::EvalCache`]: per-row activation quantization makes every
+    /// layer boundary depend only on the resolutions *upstream* of it
+    /// (see the evaluation-cache convention in [`crate::reram`]), so a
+    /// caller holding the incumbent plan's boundary activations can
+    /// resume a candidate that first diverges at layer `from_layer`
+    /// right here, bit-exactly.
+    pub fn forward_from_layer(&self, from_layer: usize, x: &Tensor) -> Result<Tensor> {
+        anyhow::ensure!(
+            from_layer < self.model.layers.len(),
+            "{}: layer {from_layer} out of range ({} layers)",
+            self.name,
+            self.model.layers.len()
+        );
+        let in_dim = self.model.layers[from_layer].rows;
+        super::rows_parallel(
+            &self.name,
+            x,
+            in_dim,
+            self.num_classes,
+            self.intra_threads,
+            || (SimScratch::default(), Vec::new(), Vec::new()),
+            |(scratch, raw, codes), row| self.infer_tail(from_layer, row, scratch, raw, codes),
+        )
+    }
+
     fn map_stack(stack: &[DenseLayer], reorder: Option<ReorderConfig>) -> Result<MappedModel> {
         anyhow::ensure!(!stack.is_empty(), "empty dense stack");
         let layers = stack
@@ -309,11 +349,13 @@ impl CrossbarBackend {
         })
     }
 
-    /// One example through the stack at each layer's own resolutions;
+    /// One example through layers `from_layer..` at each layer's own
+    /// resolutions (`from_layer` = 0 is the whole stack);
     /// `scratch`/`raw`/`codes` are reused across layers and examples by
     /// the caller.
-    fn infer_one(
+    fn infer_tail(
         &self,
+        from_layer: usize,
         row: &[f32],
         scratch: &mut SimScratch,
         raw: &mut Vec<i64>,
@@ -327,6 +369,7 @@ impl CrossbarBackend {
             .iter()
             .zip(self.meta.iter())
             .zip(&self.plan.layers)
+            .skip(from_layer)
         {
             Self::layer_step(
                 mapping,
@@ -345,10 +388,11 @@ impl CrossbarBackend {
 
     /// One layer's step for one activation row: quantize, run the mapped
     /// crossbars, rescale, bias, ReLU — exactly one iteration of
-    /// [`Self::infer_one`]'s loop, shared by the sharded path so both
-    /// orders run the identical per-row float operations.
+    /// [`Self::infer_tail`]'s loop, shared by the sharded path and the
+    /// evaluation cache so every caller runs the identical per-row float
+    /// operations.
     #[allow(clippy::too_many_arguments)]
-    fn layer_step(
+    pub(crate) fn layer_step(
         mapping: &mapper::LayerMapping,
         meta: &StackMeta,
         adc_bits: &[u32; N_SLICES],
@@ -463,7 +507,7 @@ impl InferenceBackend for CrossbarBackend {
             self.num_classes,
             self.intra_threads,
             || (SimScratch::default(), Vec::new(), Vec::new()),
-            |(scratch, raw, codes), row| self.infer_one(row, scratch, raw, codes),
+            |(scratch, raw, codes), row| self.infer_tail(0, row, scratch, raw, codes),
         )
     }
 }
@@ -659,6 +703,43 @@ mod tests {
             t.layers[0].effective_cycles() < t.layers[0].latency_cycles as f64,
             "replication divides the stage latency"
         );
+    }
+
+    /// `forward_from_layer(0, x)` is the whole forward; resuming at
+    /// layer 1 from the hand-computed layer-0 boundary reproduces the
+    /// final logits bit-exactly — the contract the evaluation cache
+    /// builds on.
+    #[test]
+    fn forward_from_layer_matches_full_forward() {
+        let mut rng = Rng::new(53);
+        let stack = toy_stack(&mut rng);
+        let be = CrossbarBackend::new("xb", &stack, ResolutionPolicy::Lossless).unwrap();
+        let x = Tensor::new(vec![4, 20], (0..80).map(|_| rng.next_f32()).collect()).unwrap();
+        let full = be.infer_batch(&x).unwrap();
+        assert_eq!(be.forward_from_layer(0, &x).unwrap().data(), full.data());
+
+        // layer-0 boundary by hand, one layer_step per row
+        let mut scratch = SimScratch::default();
+        let (mut raw, mut codes, mut row_out) = (Vec::new(), Vec::new(), Vec::new());
+        let mut boundary = Vec::new();
+        for i in 0..4 {
+            CrossbarBackend::layer_step(
+                &be.model.layers[0],
+                &be.meta[0],
+                &be.plan.layers[0].adc_bits,
+                &x.data()[i * 20..(i + 1) * 20],
+                &mut scratch,
+                &mut raw,
+                &mut codes,
+                &mut row_out,
+            );
+            boundary.extend_from_slice(&row_out);
+        }
+        let mid = Tensor::new(vec![4, 9], boundary).unwrap();
+        assert_eq!(be.forward_from_layer(1, &mid).unwrap().data(), full.data());
+
+        // out-of-range resume layers are rejected, not misapplied
+        assert!(be.forward_from_layer(2, &mid).is_err());
     }
 
     #[test]

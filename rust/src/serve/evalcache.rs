@@ -1,0 +1,567 @@
+//! Incremental plan-evaluation cache for the ADC planner.
+//!
+//! The planner's descent perturbs exactly one (layer, slice-group)
+//! resolution per candidate, yet scoring a candidate used to re-run the
+//! *entire* network over the *entire* holdout. This module keeps the
+//! incumbent plan's per-layer boundary activations for the whole holdout
+//! ([`EvalCache`]) and exploits two exact structural facts:
+//!
+//! 1. **Prefix reuse.** Activations are quantized per example row, so a
+//!    layer boundary depends only on the resolutions *upstream* of it
+//!    (see the evaluation-cache convention in [`crate::reram`]). A
+//!    candidate whose bits first diverge from the incumbent at layer `j`
+//!    reuses the cached boundaries for layers `0..=j` bit-exactly and
+//!    re-runs only layers `j..` — a cache hit per (example, skipped
+//!    layer).
+//! 2. **Early abort.** Against a fixed accuracy floor, examples are
+//!    scored hardest-first (incumbent-incorrect, then ascending logit
+//!    margin) and the scan stops as soon as the remaining examples could
+//!    not lift the candidate to the floor. Set accuracy is order
+//!    invariant and the cutoff only fires when infeasibility is already
+//!    decided, so the feasible/infeasible verdict — and therefore the
+//!    search's selected plan — is identical to a full scan.
+//!
+//! Completed feasible candidates double-buffer their recomputed tail
+//! boundaries; [`EvalCache::promote`] splices them in when the search
+//! accepts that candidate, so an accepted move costs no extra forwards.
+//! All scoring shares [`CrossbarBackend::layer_step`] and the one argmax
+//! (`serve::argmax_row`) with the from-scratch path, keeping cached and
+//! uncached accuracy bit-for-bit equal.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::quant::N_SLICES;
+use crate::reram::mapper::MappedModel;
+use crate::reram::planner::{DeploymentPlan, SearchStats};
+use crate::reram::sim::SimScratch;
+use crate::util::pool::{parallel_map, worker_threads};
+
+use super::crossbar::{CrossbarBackend, StackMeta};
+
+/// Verdict of one cached candidate evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CachedScore {
+    /// whether the candidate holds the floor it was scored against
+    /// (always `true` when scored without a floor)
+    pub feasible: bool,
+    /// measured holdout accuracy; `None` when the scan aborted early —
+    /// the candidate was already provably below the floor
+    pub accuracy: Option<f64>,
+}
+
+/// Tail boundaries of the last feasible *completed* candidate, kept until
+/// the search either promotes it (splice, no recompute) or moves on.
+#[derive(Debug)]
+struct Pending {
+    /// the candidate's per-layer resolutions
+    bits: Vec<[u32; N_SLICES]>,
+    /// first layer whose bits diverge from the incumbent
+    diverge: usize,
+    /// recomputed boundaries for layers `diverge+1 ..= L`, example-major
+    bufs: Vec<Vec<f32>>,
+    correct: Vec<bool>,
+    accuracy: f64,
+}
+
+/// The incumbent plan's holdout state: every layer-boundary activation,
+/// per-example correctness, and the hardness order the early-abort scan
+/// walks. See the module docs for the reuse and abort arguments.
+#[derive(Debug)]
+pub struct EvalCache {
+    model: Arc<MappedModel>,
+    meta: Arc<Vec<StackMeta>>,
+    labels: Vec<i32>,
+    num_classes: usize,
+    /// `dims[l]` = input width of layer l; `dims[L]` = logit width
+    dims: Vec<usize>,
+    /// `acts[0]` = features … `acts[L]` = logits, each example-major
+    /// (`n * dims[l]`), under the incumbent bits
+    acts: Vec<Vec<f32>>,
+    /// incumbent per-layer resolutions (replicas are irrelevant to the
+    /// math and deliberately not part of the divergence check)
+    bits: Vec<[u32; N_SLICES]>,
+    correct: Vec<bool>,
+    accuracy: f64,
+    /// example indices, hardest first: incumbent-incorrect, then
+    /// ascending logit margin — any order is exact, this one aborts soon
+    order: Vec<usize>,
+    pending: Option<Pending>,
+}
+
+/// Run one example from layer `from` (given its layer-`from` input
+/// activation) through the stack under per-layer `bits`, returning the
+/// boundaries it produces for layers `from+1 ..= L` (the last entry is
+/// the logits).
+#[allow(clippy::too_many_arguments)]
+fn run_tail(
+    model: &MappedModel,
+    meta: &[StackMeta],
+    bits: &[[u32; N_SLICES]],
+    from: usize,
+    input: &[f32],
+    scratch: &mut SimScratch,
+    raw: &mut Vec<i64>,
+    codes: &mut Vec<u8>,
+) -> Vec<Vec<f32>> {
+    let mut act = input.to_vec();
+    let mut outs = Vec::with_capacity(model.layers.len() - from);
+    for l in from..model.layers.len() {
+        let mut out = Vec::new();
+        CrossbarBackend::layer_step(
+            &model.layers[l],
+            &meta[l],
+            &bits[l],
+            &act,
+            scratch,
+            raw,
+            codes,
+            &mut out,
+        );
+        act.clone_from(&out);
+        outs.push(out);
+    }
+    outs
+}
+
+/// Run the examples `idxs` from layer `from` in parallel worker chunks;
+/// `input` is the example-major boundary buffer they start from. Returns
+/// `(example, tail boundaries)` pairs.
+fn run_examples(
+    model: &MappedModel,
+    meta: &[StackMeta],
+    bits: &[[u32; N_SLICES]],
+    from: usize,
+    input: &[f32],
+    in_dim: usize,
+    idxs: &[usize],
+) -> Vec<(usize, Vec<Vec<f32>>)> {
+    let threads = worker_threads();
+    let chunk = idxs.len().div_ceil(threads.max(1)).max(1);
+    let n_chunks = idxs.len().div_ceil(chunk);
+    let run_chunk = |ci: usize| {
+        let lo = ci * chunk;
+        let hi = ((ci + 1) * chunk).min(idxs.len());
+        let mut scratch = SimScratch::default();
+        let (mut raw, mut codes) = (Vec::new(), Vec::new());
+        let mut part = Vec::with_capacity(hi - lo);
+        for &e in &idxs[lo..hi] {
+            let row = &input[e * in_dim..(e + 1) * in_dim];
+            part.push((
+                e,
+                run_tail(model, meta, bits, from, row, &mut scratch, &mut raw, &mut codes),
+            ));
+        }
+        part
+    };
+    if n_chunks <= 1 {
+        run_chunk(0)
+    } else {
+        parallel_map(n_chunks, threads, run_chunk)
+            .into_iter()
+            .flatten()
+            .collect()
+    }
+}
+
+impl EvalCache {
+    /// Build the cache for `backend`'s current plan over `ds`: one full
+    /// forward of every example, recording every layer boundary. Counts
+    /// `layers x examples` onto `stats.layer_forwards` — the same price a
+    /// plain `serve::accuracy` pass would pay, now amortized over every
+    /// later candidate.
+    pub fn new(
+        backend: &CrossbarBackend,
+        ds: &Dataset,
+        stats: &mut SearchStats,
+    ) -> Result<EvalCache> {
+        anyhow::ensure!(!ds.is_empty(), "evaluation cache wants a non-empty holdout");
+        let model = Arc::clone(backend.mapped());
+        let meta = Arc::clone(backend.stack_meta());
+        let layers = model.layers.len();
+        let n = ds.len();
+        let dim = ds.dim();
+        anyhow::ensure!(
+            dim == model.layers[0].rows,
+            "dataset dim {dim} != model input {}",
+            model.layers[0].rows
+        );
+        let mut dims = Vec::with_capacity(layers + 1);
+        dims.push(dim);
+        for l in &model.layers {
+            dims.push(l.cols);
+        }
+        let num_classes = dims[layers];
+
+        let mut feats = vec![0.0f32; n * dim];
+        for e in 0..n {
+            ds.write_example(e, &mut feats[e * dim..(e + 1) * dim]);
+        }
+        let bits: Vec<[u32; N_SLICES]> =
+            backend.plan().layers.iter().map(|l| l.adc_bits).collect();
+
+        let idxs: Vec<usize> = (0..n).collect();
+        let results = run_examples(&model, &meta, &bits, 0, &feats, dim, &idxs);
+        stats.layer_forwards += layers * n;
+
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(layers + 1);
+        acts.push(feats);
+        for l in 0..layers {
+            acts.push(vec![0.0f32; n * dims[l + 1]]);
+        }
+        for (e, outs) in results {
+            for (off, out) in outs.into_iter().enumerate() {
+                let d = dims[off + 1];
+                acts[off + 1][e * d..(e + 1) * d].copy_from_slice(&out);
+            }
+        }
+
+        let labels = ds.labels.to_vec();
+        let logits = &acts[layers];
+        let correct: Vec<bool> = (0..n)
+            .map(|e| {
+                labels[e] >= 0
+                    && super::argmax_row(&logits[e * num_classes..(e + 1) * num_classes]) as i32
+                        == labels[e]
+            })
+            .collect();
+        let accuracy = correct.iter().filter(|&&c| c).count() as f64 / n as f64;
+
+        let mut cache = EvalCache {
+            model,
+            meta,
+            labels,
+            num_classes,
+            dims,
+            acts,
+            bits,
+            correct,
+            accuracy,
+            order: Vec::new(),
+            pending: None,
+        };
+        cache.reorder_hardness();
+        Ok(cache)
+    }
+
+    /// Holdout accuracy of the incumbent plan (bit-for-bit what
+    /// `serve::accuracy` measures for it).
+    pub fn accuracy(&self) -> f64 {
+        self.accuracy
+    }
+
+    /// Cached examples.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Always `false` — construction rejects an empty holdout.
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Sort examples hardest-first under the incumbent logits: ascending
+    /// margin `logit[label] - max_other`, which puts incorrect examples
+    /// (margin <= 0) before barely-correct ones. Padding labels sort
+    /// first — they can never become correct.
+    fn reorder_hardness(&mut self) {
+        let classes = self.num_classes;
+        let logits = &self.acts[self.acts.len() - 1];
+        let mut keyed: Vec<(f32, usize)> = (0..self.labels.len())
+            .map(|e| {
+                let r = &logits[e * classes..(e + 1) * classes];
+                let key = match self.labels[e] {
+                    l if l >= 0 && (l as usize) < classes => {
+                        let li = l as usize;
+                        let best_other = r
+                            .iter()
+                            .enumerate()
+                            .filter(|&(c, _)| c != li)
+                            .map(|(_, &v)| v)
+                            .fold(f32::NEG_INFINITY, f32::max);
+                        r[li] - best_other
+                    }
+                    _ => f32::NEG_INFINITY,
+                };
+                (key, e)
+            })
+            .collect();
+        keyed.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        self.order = keyed.into_iter().map(|(_, e)| e).collect();
+    }
+
+    /// Score a candidate plan against the cache. Layers before the first
+    /// diverging resolution are cache hits; the rest re-run. With a
+    /// `floor`, the hardest-first scan aborts as soon as the candidate
+    /// provably cannot reach it (`stats.aborted_evals`); without one it
+    /// always completes. A completed feasible candidate's tail
+    /// boundaries are kept for a free [`Self::promote`].
+    pub fn score(
+        &mut self,
+        cand: &DeploymentPlan,
+        floor: Option<f64>,
+        stats: &mut SearchStats,
+    ) -> Result<CachedScore> {
+        let layers = self.model.layers.len();
+        anyhow::ensure!(
+            cand.layers.len() == layers,
+            "candidate has {} layers, cache has {layers}",
+            cand.layers.len()
+        );
+        let cand_bits: Vec<[u32; N_SLICES]> = cand.layers.iter().map(|l| l.adc_bits).collect();
+        let n = self.labels.len();
+        let Some(diverge) = (0..layers).find(|&l| cand_bits[l] != self.bits[l]) else {
+            // the incumbent itself: every (example, layer) is a hit
+            stats.cache_hits += layers * n;
+            return Ok(CachedScore {
+                feasible: floor.is_none_or(|f| self.accuracy >= f),
+                accuracy: Some(self.accuracy),
+            });
+        };
+        stats.cache_hits += diverge * n;
+
+        let tail = layers - diverge;
+        let mut bufs: Vec<Vec<f32>> = (0..tail)
+            .map(|off| vec![0.0f32; n * self.dims[diverge + 1 + off]])
+            .collect();
+        let mut correct = vec![false; n];
+        let mut correct_so_far = 0usize;
+        let mut scanned = 0usize;
+        let block = (n / 8).clamp(32, 256);
+        while scanned < n {
+            if let Some(f) = floor {
+                // even a perfect tail cannot reach the floor: the final
+                // accuracy is bounded by this same ratio, so the verdict
+                // is already decided
+                if ((correct_so_far + (n - scanned)) as f64) / (n as f64) < f {
+                    stats.aborted_evals += 1;
+                    return Ok(CachedScore {
+                        feasible: false,
+                        accuracy: None,
+                    });
+                }
+            }
+            let hi = (scanned + block).min(n);
+            let idxs = &self.order[scanned..hi];
+            let results = run_examples(
+                &self.model,
+                &self.meta,
+                &cand_bits,
+                diverge,
+                &self.acts[diverge],
+                self.dims[diverge],
+                idxs,
+            );
+            stats.layer_forwards += tail * idxs.len();
+            for (e, outs) in results {
+                let logits = outs.last().expect("tail has at least one layer");
+                let ok = self.labels[e] >= 0
+                    && super::argmax_row(logits) as i32 == self.labels[e];
+                correct[e] = ok;
+                if ok {
+                    correct_so_far += 1;
+                }
+                for (off, out) in outs.into_iter().enumerate() {
+                    let d = self.dims[diverge + 1 + off];
+                    bufs[off][e * d..(e + 1) * d].copy_from_slice(&out);
+                }
+            }
+            scanned = hi;
+        }
+
+        let accuracy = correct_so_far as f64 / n as f64;
+        let feasible = floor.is_none_or(|f| accuracy >= f);
+        if feasible {
+            self.pending = Some(Pending {
+                bits: cand_bits,
+                diverge,
+                bufs,
+                correct,
+                accuracy,
+            });
+        }
+        Ok(CachedScore {
+            feasible,
+            accuracy: Some(accuracy),
+        })
+    }
+
+    /// Make `cand` the incumbent. When its completed evaluation is still
+    /// double-buffered the tail boundaries splice in for free; otherwise
+    /// (never scored, or a later candidate overwrote the buffer) one full
+    /// no-floor [`Self::score`] re-derives them. Clears the buffer either
+    /// way — a new incumbent invalidates any pending tail.
+    pub fn promote(&mut self, cand: &DeploymentPlan, stats: &mut SearchStats) -> Result<()> {
+        let cand_bits: Vec<[u32; N_SLICES]> = cand.layers.iter().map(|l| l.adc_bits).collect();
+        if cand_bits == self.bits {
+            self.pending = None;
+            return Ok(());
+        }
+        match self.pending.take() {
+            Some(p) if p.bits == cand_bits => {
+                for (off, buf) in p.bufs.into_iter().enumerate() {
+                    self.acts[p.diverge + 1 + off] = buf;
+                }
+                self.correct = p.correct;
+                self.accuracy = p.accuracy;
+                self.bits = cand_bits;
+                self.reorder_hardness();
+                Ok(())
+            }
+            _ => {
+                let rescored = self.score(cand, None, stats)?;
+                debug_assert!(rescored.feasible, "no-floor scores always complete");
+                self.promote(cand, stats)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reram::ResolutionPolicy;
+    use crate::serve::{self, dense_stack, DenseLayer, InferenceBackend, ReferenceBackend};
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn toy_stack(rng: &mut Rng) -> Vec<DenseLayer> {
+        let w1 = Tensor::new(vec![20, 9], rng.normal_vec(180, 0.15)).unwrap();
+        let w2 = Tensor::new(vec![9, 5], rng.normal_vec(45, 0.15)).unwrap();
+        let b1 = Tensor::new(vec![9], rng.normal_vec(9, 0.02)).unwrap();
+        let b2 = Tensor::new(vec![5], rng.normal_vec(5, 0.02)).unwrap();
+        dense_stack(&[("fc1/w".into(), w1), ("fc2/w".into(), w2)], &[b1, b2]).unwrap()
+    }
+
+    fn oracle_dataset(stack: &[DenseLayer], n: usize, seed: u64) -> Dataset {
+        let dim = stack[0].w.shape()[0];
+        let classes = stack[stack.len() - 1].w.shape()[1];
+        let mut rng = Rng::new(seed);
+        let feats: Vec<f32> = (0..n * dim).map(|_| rng.next_f32()).collect();
+        let x = Tensor::new(vec![n, dim], feats.clone()).unwrap();
+        let reference = ReferenceBackend::new("oracle", stack).unwrap();
+        let logits = reference.infer_batch(&x).unwrap();
+        let labels: Vec<i32> = (0..n)
+            .map(|i| {
+                super::super::argmax_row(&logits.data()[i * classes..(i + 1) * classes]) as i32
+            })
+            .collect();
+        Dataset {
+            features: Arc::new(feats),
+            labels: Arc::new(labels),
+            example_shape: vec![dim],
+            num_classes: classes,
+            source: "oracle".into(),
+        }
+    }
+
+    #[test]
+    fn cached_scores_match_full_accuracy_passes() {
+        let mut rng = Rng::new(61);
+        let stack = toy_stack(&mut rng);
+        let ds = oracle_dataset(&stack, 40, 5);
+        let be = CrossbarBackend::new("xb", &stack, ResolutionPolicy::Lossless).unwrap();
+        let mut stats = SearchStats::default();
+        let mut cache = EvalCache::new(&be, &ds, &mut stats).unwrap();
+        assert_eq!(stats.layer_forwards, 2 * 40, "build is one full pass");
+        assert_eq!(cache.len(), 40);
+        assert!(!cache.is_empty());
+        assert_eq!(
+            cache.accuracy(),
+            serve::accuracy(&be, &ds).unwrap().accuracy,
+            "incumbent accuracy must be the full-pass measure"
+        );
+
+        // the incumbent itself: a pure cache hit, no forwards
+        let before = stats.layer_forwards;
+        let s = cache.score(be.plan(), None, &mut stats).unwrap();
+        assert!(s.feasible);
+        assert_eq!(s.accuracy, Some(cache.accuracy()));
+        assert_eq!(stats.layer_forwards, before);
+        assert_eq!(stats.cache_hits, 2 * 40);
+
+        // candidates diverging at layer 1 and at layer 0 both agree
+        // bit-for-bit with an uncached replan + accuracy pass
+        for (l, bits) in [(1usize, [2u32, 2, 2, 1]), (0, [1, 1, 1, 1])] {
+            let mut cand = be.plan().clone();
+            cand.layers[l].adc_bits = bits;
+            let before = stats.layer_forwards;
+            let s = cache.score(&cand, None, &mut stats).unwrap();
+            let direct = serve::accuracy(
+                &be.replan("cand", cand.clone()).unwrap(),
+                &ds,
+            )
+            .unwrap()
+            .accuracy;
+            assert_eq!(s.accuracy, Some(direct), "diverge at layer {l}");
+            assert_eq!(
+                stats.layer_forwards - before,
+                (2 - l) * 40,
+                "only layers >= {l} re-run"
+            );
+        }
+    }
+
+    #[test]
+    fn abort_fires_only_when_provably_infeasible() {
+        let mut rng = Rng::new(67);
+        let stack = toy_stack(&mut rng);
+        let ds = oracle_dataset(&stack, 48, 7);
+        let be = CrossbarBackend::new("xb", &stack, ResolutionPolicy::Lossless).unwrap();
+        let mut stats = SearchStats::default();
+        let mut cache = EvalCache::new(&be, &ds, &mut stats).unwrap();
+        let mut cand = be.plan().clone();
+        cand.layers[0].adc_bits = [1, 1, 1, 1];
+
+        // an unreachable floor aborts before any forward runs
+        let before = stats.layer_forwards;
+        let s = cache.score(&cand, Some(2.0), &mut stats).unwrap();
+        assert!(!s.feasible);
+        assert_eq!(s.accuracy, None);
+        assert_eq!(stats.aborted_evals, 1);
+        assert_eq!(stats.layer_forwards, before, "aborted at zero scanned");
+
+        // a floor of zero always completes, with the true accuracy
+        let s = cache.score(&cand, Some(0.0), &mut stats).unwrap();
+        assert!(s.feasible);
+        let direct = serve::accuracy(&be.replan("cand", cand.clone()).unwrap(), &ds)
+            .unwrap()
+            .accuracy;
+        assert_eq!(s.accuracy, Some(direct));
+        assert_eq!(stats.aborted_evals, 1, "no new abort");
+    }
+
+    #[test]
+    fn promote_splices_and_fallback_rescores() {
+        let mut rng = Rng::new(71);
+        let stack = toy_stack(&mut rng);
+        let ds = oracle_dataset(&stack, 32, 9);
+        let be = CrossbarBackend::new("xb", &stack, ResolutionPolicy::Lossless).unwrap();
+        let mut stats = SearchStats::default();
+        let mut cache = EvalCache::new(&be, &ds, &mut stats).unwrap();
+
+        // promote straight from the double buffer: no extra forwards
+        let mut cand = be.plan().clone();
+        cand.layers[1].adc_bits = [3, 3, 3, 1];
+        let s = cache.score(&cand, None, &mut stats).unwrap();
+        let before = stats.layer_forwards;
+        cache.promote(&cand, &mut stats).unwrap();
+        assert_eq!(stats.layer_forwards, before, "buffered promote is free");
+        assert_eq!(cache.accuracy(), s.accuracy.unwrap());
+        // the promoted plan is now the incumbent — scoring it is a hit
+        let s2 = cache.score(&cand, None, &mut stats).unwrap();
+        assert_eq!(s2.accuracy, Some(cache.accuracy()));
+
+        // promoting a plan that was never scored falls back to one full
+        // rescore and still lands on the exact uncached measure
+        let mut other = be.plan().clone();
+        other.layers[0].adc_bits = [2, 2, 2, 2];
+        cache.promote(&other, &mut stats).unwrap();
+        let direct = serve::accuracy(&be.replan("other", other.clone()).unwrap(), &ds)
+            .unwrap()
+            .accuracy;
+        assert_eq!(cache.accuracy(), direct);
+    }
+}

@@ -32,6 +32,7 @@
 
 pub mod crossbar;
 pub mod engine;
+pub mod evalcache;
 pub mod reference;
 pub mod xla;
 
@@ -42,6 +43,7 @@ use crate::tensor::Tensor;
 use crate::util::pool::parallel_map;
 
 pub use self::crossbar::CrossbarBackend;
+pub use self::evalcache::EvalCache;
 pub use self::engine::{PendingInference, ServeOptions, ServingEngine, ServingStats};
 pub use self::reference::ReferenceBackend;
 pub use self::xla::XlaBackend;
@@ -84,6 +86,16 @@ pub trait InferenceBackend {
 /// A backend shared across serving-engine worker threads.
 pub type SharedBackend = std::sync::Arc<dyn InferenceBackend + Send + Sync>;
 
+/// The one argmax used for every accuracy count: greatest logit wins,
+/// the **last** maximum on exact ties (`max_by` semantics). Shared by
+/// [`correct_by_argmax`] and the evaluation cache so cached and
+/// from-scratch scoring can never disagree on a tie.
+pub(crate) fn argmax_row(r: &[f32]) -> usize {
+    (0..r.len())
+        .max_by(|&a, &b| r[a].partial_cmp(&r[b]).unwrap_or(std::cmp::Ordering::Equal))
+        .unwrap_or(0)
+}
+
 /// Host-side argmax accuracy count (the default `eval_batch` body).
 pub fn correct_by_argmax(logits: &Tensor, y: &[i32], num_classes: usize) -> f64 {
     let mut correct = 0.0;
@@ -92,10 +104,7 @@ pub fn correct_by_argmax(logits: &Tensor, y: &[i32], num_classes: usize) -> f64 
             continue;
         }
         let r = &logits.data()[row * num_classes..(row + 1) * num_classes];
-        let pred = (0..num_classes)
-            .max_by(|&a, &b| r[a].partial_cmp(&r[b]).unwrap_or(std::cmp::Ordering::Equal))
-            .unwrap_or(0);
-        if pred as i32 == label {
+        if argmax_row(r) as i32 == label {
             correct += 1.0;
         }
     }

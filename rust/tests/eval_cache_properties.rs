@@ -1,0 +1,239 @@
+//! Property suite for the incremental evaluation cache.
+//!
+//! The planner's prefix-cached scoring rests on one structural claim (the
+//! evaluation-cache convention in the `reram` module docs): per-row
+//! activation quantization makes every layer boundary depend only on the
+//! resolutions upstream of it, so a cached re-run from a candidate's
+//! first diverging layer is bit-exact against a from-scratch pass. These
+//! properties pin that claim across everything that could plausibly break
+//! it — random plans, all three tile storage layouts, reordered mappings,
+//! replica-sharded serving, promote chains, and the early-abort floor.
+
+use bitslice_reram::data::Dataset;
+use bitslice_reram::reram::crossbar::StorageFormat;
+use bitslice_reram::reram::planner::{DeploymentPlan, SearchStats};
+use bitslice_reram::reram::{ReorderConfig, ResolutionPolicy};
+use bitslice_reram::serve::{self, CrossbarBackend, EvalCache, InferenceBackend};
+use bitslice_reram::tensor::Tensor;
+use bitslice_reram::util::check::{check, ensure};
+use bitslice_reram::util::fixtures;
+use bitslice_reram::util::rng::Rng;
+
+/// Random labelled holdout for a stack (labels arbitrary — accuracy is a
+/// count either way, and exactness is what is under test).
+fn random_holdout(rng: &mut Rng, dim: usize, classes: usize, n: usize) -> Dataset {
+    Dataset {
+        features: std::sync::Arc::new((0..n * dim).map(|_| rng.next_f32()).collect()),
+        labels: std::sync::Arc::new((0..n).map(|_| rng.below(classes) as i32).collect()),
+        example_shape: vec![dim],
+        num_classes: classes,
+        source: "property-holdout".into(),
+    }
+}
+
+/// Random candidate: lower a random subset of (layer, slice) resolutions
+/// below the base plan's (never below 1 bit).
+fn perturb_plan(rng: &mut Rng, base: &DeploymentPlan) -> DeploymentPlan {
+    let mut p = base.clone();
+    for l in &mut p.layers {
+        for k in 0..4 {
+            if rng.below(3) == 0 {
+                l.adc_bits[k] = 1 + rng.below(l.adc_bits[k].max(1) as usize) as u32;
+            }
+        }
+    }
+    p
+}
+
+/// Ground truth for a candidate: a from-scratch accuracy pass on a
+/// replanned clone of the same backend.
+fn direct_accuracy(
+    backend: &CrossbarBackend,
+    cand: &DeploymentPlan,
+    ds: &Dataset,
+) -> Result<f64, String> {
+    let b = backend
+        .replan("direct", cand.clone())
+        .map_err(|e| e.to_string())?;
+    Ok(serve::accuracy(&b, ds).map_err(|e| e.to_string())?.accuracy)
+}
+
+/// Property: cached scoring equals the from-scratch accuracy **exactly**
+/// (same f64, not approximately) for random candidate plans under all
+/// three tile storage layouts, including across promote chains that move
+/// the incumbent.
+#[test]
+fn cached_scores_are_bit_exact_across_storage_layouts() {
+    check(6, |rng| {
+        let seed = rng.next_u64();
+        let dims = [10 + rng.below(60), 4 + rng.below(20), 2 + rng.below(8)];
+        let stack = fixtures::sparse_stack(seed, &dims, 0.15);
+        let ds = random_holdout(rng, dims[0], dims[2], 12 + rng.below(20));
+        let base = CrossbarBackend::with_layer_policy("xbar", &stack, ResolutionPolicy::Lossless)
+            .map_err(|e| e.to_string())?;
+        for fmt in [
+            StorageFormat::Dense,
+            StorageFormat::Compressed,
+            StorageFormat::BitPlanes,
+        ] {
+            let backend = CrossbarBackend::from_mapping(
+                "xbar-fmt",
+                base.mapped().with_storage(fmt),
+                &stack,
+                base.plan().clone(),
+            )
+            .map_err(|e| e.to_string())?;
+            let mut stats = SearchStats::default();
+            let mut cache =
+                EvalCache::new(&backend, &ds, &mut stats).map_err(|e| e.to_string())?;
+            ensure(
+                cache.accuracy()
+                    == serve::accuracy(&backend, &ds)
+                        .map_err(|e| e.to_string())?
+                        .accuracy,
+                format!("{fmt:?}: cache build accuracy"),
+            )?;
+            // a chain of candidates; every few rounds one becomes the
+            // incumbent, so later candidates splice against moved caches
+            for round in 0..4 {
+                let cand = perturb_plan(rng, backend.plan());
+                let got = cache
+                    .score(&cand, None, &mut stats)
+                    .map_err(|e| e.to_string())?;
+                let want = direct_accuracy(&backend, &cand, &ds)?;
+                ensure(
+                    got.accuracy == Some(want),
+                    format!("{fmt:?} round {round}: cached {:?} vs direct {want}", got.accuracy),
+                )?;
+                if rng.below(2) == 0 {
+                    cache.promote(&cand, &mut stats).map_err(|e| e.to_string())?;
+                    ensure(
+                        cache.accuracy() == want,
+                        format!("{fmt:?} round {round}: promoted accuracy"),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property: the same exactness holds on **reordered** mappings — the
+/// wordline/column permutations move where codes land in the tiles, not
+/// what the layer boundaries are.
+#[test]
+fn cached_scores_are_bit_exact_on_reordered_mappings() {
+    check(4, |rng| {
+        let seed = rng.next_u64();
+        let dims = [40 + rng.below(160), 8 + rng.below(30), 2 + rng.below(8)];
+        let stack = fixtures::sparse_stack(seed, &dims, 0.05);
+        let ds = random_holdout(rng, dims[0], dims[2], 10 + rng.below(14));
+        let backend = CrossbarBackend::with_layer_policy_reordered(
+            "xbar-ro",
+            &stack,
+            ResolutionPolicy::Lossless,
+            ReorderConfig::default(),
+        )
+        .map_err(|e| e.to_string())?;
+        let mut stats = SearchStats::default();
+        let mut cache = EvalCache::new(&backend, &ds, &mut stats).map_err(|e| e.to_string())?;
+        // a tail-only candidate first: diverges at the last layer, so the
+        // whole prefix must come from the cache
+        let mut tail_only = backend.plan().clone();
+        let last = tail_only.layers.len() - 1;
+        tail_only.layers[last].adc_bits[0] = 1;
+        let got = cache
+            .score(&tail_only, None, &mut stats)
+            .map_err(|e| e.to_string())?;
+        ensure(
+            got.accuracy == Some(direct_accuracy(&backend, &tail_only, &ds)?),
+            "reordered: tail-only candidate",
+        )?;
+        ensure(stats.cache_hits > 0, "prefix reuse on the tail-only candidate")?;
+        for _ in 0..3 {
+            let cand = perturb_plan(rng, backend.plan());
+            let got = cache
+                .score(&cand, None, &mut stats)
+                .map_err(|e| e.to_string())?;
+            let want = direct_accuracy(&backend, &cand, &ds)?;
+            ensure(
+                got.accuracy == Some(want),
+                format!("reordered: cached {:?} vs direct {want}", got.accuracy),
+            )?;
+            if rng.below(2) == 0 {
+                cache.promote(&cand, &mut stats).map_err(|e| e.to_string())?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property: `forward_from_layer(0, x)` is bit-identical to
+/// `infer_batch(x)` — including on replica-sharded plans, whose row
+/// sharding must stay invisible (the cache relies on this when it
+/// ignores replica counts in its divergence check).
+#[test]
+fn forward_from_layer_zero_is_infer_batch_even_with_replicas() {
+    check(6, |rng| {
+        let seed = rng.next_u64();
+        let dims = [10 + rng.below(60), 4 + rng.below(20), 2 + rng.below(8)];
+        let stack = fixtures::sparse_stack(seed, &dims, 0.15);
+        let base = CrossbarBackend::with_layer_policy("xbar", &stack, ResolutionPolicy::Lossless)
+            .map_err(|e| e.to_string())?;
+        let mut plan = perturb_plan(rng, base.plan());
+        for l in &mut plan.layers {
+            l.replicas = 1 + rng.below(3);
+        }
+        let backend = base.replan("xbar-rep", plan).map_err(|e| e.to_string())?;
+        let n = 1 + rng.below(8);
+        let x = Tensor::new(
+            vec![n, dims[0]],
+            (0..n * dims[0]).map(|_| rng.next_f32()).collect(),
+        )
+        .map_err(|e| e.to_string())?;
+        let full = backend.infer_batch(&x).map_err(|e| e.to_string())?;
+        let from0 = backend
+            .forward_from_layer(0, &x)
+            .map_err(|e| e.to_string())?;
+        ensure(full.data() == from0.data(), "forward_from_layer(0) == infer_batch")?;
+        Ok(())
+    });
+}
+
+/// Property: scoring against an accuracy floor never changes the verdict
+/// a full scan would reach — an abort happens only when the candidate
+/// provably cannot reach the floor, and completed scores carry the exact
+/// full-scan accuracy.
+#[test]
+fn floor_scoring_is_decision_identical_to_full_scans() {
+    check(6, |rng| {
+        let seed = rng.next_u64();
+        let dims = [10 + rng.below(60), 4 + rng.below(20), 2 + rng.below(8)];
+        let stack = fixtures::sparse_stack(seed, &dims, 0.15);
+        let ds = random_holdout(rng, dims[0], dims[2], 12 + rng.below(20));
+        let backend =
+            CrossbarBackend::with_layer_policy("xbar", &stack, ResolutionPolicy::Lossless)
+                .map_err(|e| e.to_string())?;
+        let mut stats = SearchStats::default();
+        let mut cache = EvalCache::new(&backend, &ds, &mut stats).map_err(|e| e.to_string())?;
+        for _ in 0..4 {
+            let cand = perturb_plan(rng, backend.plan());
+            let floor = rng.next_f32() as f64;
+            let floored = cache
+                .score(&cand, Some(floor), &mut stats)
+                .map_err(|e| e.to_string())?;
+            let want = direct_accuracy(&backend, &cand, &ds)?;
+            ensure(
+                floored.feasible == (want >= floor),
+                format!("verdict at floor {floor}: {floored:?} vs direct {want}"),
+            )?;
+            match floored.accuracy {
+                // completed scans report the exact accuracy
+                Some(a) => ensure(a == want, format!("completed scan {a} vs {want}"))?,
+                // aborts only fire on genuinely infeasible candidates
+                None => ensure(want < floor, format!("aborted feasible {want} >= {floor}"))?,
+            }
+        }
+        Ok(())
+    });
+}
