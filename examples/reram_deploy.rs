@@ -17,11 +17,11 @@
 //! reorder pass (`reram::reorder`) and the per-layer reorder table
 //! (active wordlines/columns vs natural order) is printed.
 //!
-//! With `--replicate-budget F`, extra crossbar replicas are water-filled
-//! onto the pipeline's bottleneck layers (`reram::timing`; F = multiples
-//! of the bottleneck layer's fabricated cells) and the serving section
-//! runs the replica-sharded backend — bit-identical logits, higher
-//! throughput.
+//! With `--replicate-budget F`, the planner's joint ADC/replica pass
+//! (`PlannerConfig::replicate_budget`; F = multiples of the bottleneck
+//! layer's fabricated cells, priced by `timing::factor_budget_cells`)
+//! co-optimizes resolutions and replicas, and the serving section runs
+//! the replica-sharded backend it selects.
 //!
 //! Run: `cargo run --release --example reram_deploy -- [--checkpoint DIR]
 //!       [--reorder] [--replicate-budget 2.0]`
@@ -176,21 +176,36 @@ fn main() -> Result<()> {
         test_ds.write_example(i, &mut x);
         requests.push(x);
     }
-    // with a replication budget, serve the replica-sharded deployment:
-    // batch rows fan out across the bottleneck layers' Arc-shared copies
-    // (bit-identical logits, higher throughput)
+    // with a replication budget, serve the replica-sharded deployment the
+    // planner's joint ADC/replica pass selects (PlannerConfig::
+    // replicate_budget prices the budget through timing::
+    // factor_budget_cells — the same anchor the deploy CLI uses, so the
+    // example cannot drift from the search): batch rows fan out across
+    // the bottleneck layers' Arc-shared copies
     let serve_backend = if replicate_budget > 0.0 {
-        let mapped = at_measured.mapped().clone();
-        let mut plan = at_measured.plan().clone();
-        timing::fill_replicas_factor(&mapped, &mut plan, replicate_budget);
+        let search = bitslice_reram::reram::planner::plan_deployment_from(
+            &at_measured,
+            &reference,
+            &test_ds,
+            &bitslice_reram::reram::PlannerConfig {
+                start_policy: ResolutionPolicy::Percentile(0.999),
+                replicate_budget: Some(replicate_budget),
+                ..Default::default()
+            },
+        )?;
+        println!(
+            "  joint ADC/replica search: {} replica cells spent, accuracy {:.2}%",
+            search.replica_cells,
+            search.accuracy * 100.0
+        );
         println!(
             "{}",
             report::timing_table(
-                "replicated pipeline timing (at deployed bits)",
-                &timing::plan_timing(&mapped, &plan)
+                "replicated pipeline timing (joint plan)",
+                &timing::plan_timing(at_measured.mapped(), &search.plan)
             )
         );
-        at_measured.replan("sim@p99.9-replicated", plan)?
+        at_measured.replan("sim@joint-replicated", search.plan)?
     } else {
         at_measured
     };

@@ -5,6 +5,7 @@
 //! everywhere.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -13,7 +14,8 @@ use crate::coordinator::evaluator::{self, EvalResult};
 use crate::coordinator::metrics::MetricsLog;
 use crate::coordinator::{checkpoint, TrainOutcome, Trainer};
 use crate::data::Dataset;
-use crate::report::{MethodRow, PlanRow, StorageRow};
+use crate::report::{MethodRow, NoiseRow, PlanRow, StorageRow};
+use crate::reram::device::{DeviceConfig, DeviceModel};
 use crate::reram::planner::{self, DeploymentPlan};
 use crate::reram::reorder::{self, ReorderConfig, ReorderRow};
 use crate::reram::timing::{self, PipelineTiming};
@@ -274,8 +276,9 @@ pub fn deploy_report(
         .collect();
     let savings = energy::savings_vs_baseline(&mapped, deployed_bits);
     let mut plan = DeploymentPlan::from_policy(&mapped, policy);
-    let replica_cells =
-        timing::fill_replicas_factor(&mapped, &mut plan, replicate_budget.unwrap_or(0.0));
+    let budget_cells =
+        timing::factor_budget_cells(&mapped, &plan, replicate_budget.unwrap_or(0.0));
+    let replica_cells = timing::fill_replicas(&mapped, &mut plan, budget_cells);
     // a positive budget that buys zero replicas is a config error (the
     // budget is below one copy of the bottleneck layer) — fail loudly
     // instead of shipping a silently unreplicated plan
@@ -363,4 +366,91 @@ pub fn plan_search_report(
         plan_rows,
         timing,
     })
+}
+
+/// Monte-Carlo robustness of one deployment: attach `trials` seeded
+/// realizations of `config` to `backend`
+/// ([`crate::serve::CrossbarBackend::with_device`]), score each on `ds`,
+/// and roll up mean/worst accuracy plus the per-layer slice-group
+/// variance of the sampled conductances. Fully deterministic: same
+/// backend, dataset, config and trial count always reproduce the same
+/// row, trial for trial.
+pub fn noise_report(
+    backend: &crate::serve::CrossbarBackend,
+    ds: &Dataset,
+    config: DeviceConfig,
+    trials: usize,
+) -> Result<NoiseRow> {
+    anyhow::ensure!(trials >= 1, "noise report needs at least one trial");
+    let ideal_accuracy = crate::serve::accuracy(backend, ds)?.accuracy;
+    let mut trial_accuracies = Vec::with_capacity(trials);
+    let mut layer_variance = Vec::new();
+    for i in 0..trials {
+        let dm = DeviceModel::for_model(backend.mapped(), config.trial(i));
+        if i == 0 {
+            layer_variance = backend
+                .mapped()
+                .layers
+                .iter()
+                .zip(dm.layer_variances())
+                .map(|(l, v)| (l.name.clone(), v))
+                .collect();
+        }
+        let noisy = backend.with_device(&format!("mc-trial-{i}"), Arc::new(dm))?;
+        trial_accuracies.push(crate::serve::accuracy(&noisy, ds)?.accuracy);
+    }
+    let mean_accuracy = trial_accuracies.iter().sum::<f64>() / trials as f64;
+    let worst_accuracy = trial_accuracies.iter().copied().fold(f64::INFINITY, f64::min);
+    Ok(NoiseRow {
+        config,
+        ideal_accuracy,
+        trial_accuracies,
+        mean_accuracy,
+        worst_accuracy,
+        layer_variance,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reram::ResolutionPolicy;
+    use crate::serve::CrossbarBackend;
+    use crate::util::fixtures;
+    use crate::util::rng::Rng;
+
+    /// The Monte-Carlo accuracy study is a pure function of (backend,
+    /// dataset, config, trials): two runs reproduce every trial accuracy
+    /// and the layer variance roll-up bit for bit.
+    #[test]
+    fn noise_report_is_reproducible_across_runs() {
+        let stack = fixtures::sparse_stack(9, &[24, 16, 6], 0.5);
+        let backend = CrossbarBackend::new("mc", &stack, ResolutionPolicy::Lossless).unwrap();
+        let n = 40usize;
+        let mut rng = Rng::new(123);
+        let ds = Dataset {
+            features: Arc::new((0..n * 24).map(|_| rng.next_f32()).collect()),
+            labels: Arc::new((0..n).map(|i| (i % 6) as i32).collect()),
+            example_shape: vec![24],
+            num_classes: 6,
+            source: "mc-repro".into(),
+        };
+        let config = DeviceConfig {
+            sigma: 0.25,
+            read_sigma: 1.0,
+            fault_rate: 0.02,
+            seed: 0xAB,
+        };
+        let a = noise_report(&backend, &ds, config, 4).unwrap();
+        let b = noise_report(&backend, &ds, config, 4).unwrap();
+        assert_eq!(a.trial_accuracies, b.trial_accuracies);
+        assert_eq!(a.ideal_accuracy, b.ideal_accuracy);
+        assert_eq!(a.mean_accuracy, b.mean_accuracy);
+        assert_eq!(a.worst_accuracy, b.worst_accuracy);
+        assert_eq!(a.layer_variance, b.layer_variance);
+        assert_eq!(a.trial_accuracies.len(), 4);
+        // distinct trial seeds: the model sampled for trial 0 is not the
+        // model sampled for trial 1
+        assert_ne!(config.trial(0).seed, config.trial(1).seed);
+    }
 }

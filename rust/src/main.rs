@@ -21,6 +21,11 @@
 //!            latency/replica/throughput rows land in plan.json)
 //!            [--audit]  print the static audit table and write
 //!            <out>/audit.json beside the other deploy artifacts
+//!            [--device-sigma 0.3 --fault-rate 0.01 --mc-trials 8]
+//!            device non-idealities (reram::device): run the Monte-Carlo
+//!            noise study at the deployed resolutions (writes
+//!            <out>/noise.json) and make the planner search reject plans
+//!            that only hold the budget on perfect devices
 //! audit      --checkpoint ... | --fixture planted|bottleneck
 //!            [--reorder --replicate-budget F --percentile F]
 //!            static verification only: map, plan, audit, exit non-zero on
@@ -211,6 +216,17 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     // cells, water-filled onto bottleneck layers for pipeline throughput
     let replicate_budget = args.f32_or("replicate-budget", 0.0)? as f64;
     let replicate_budget = (replicate_budget > 0.0).then_some(replicate_budget);
+    // device non-idealities: lognormal conductance spread + stuck-at
+    // faults, Monte-Carlo-sampled over --mc-trials seeded realizations
+    // (reram::device). When either knob is nonzero the deploy runs the
+    // noise study and the planner search validates every candidate under
+    // the same noise (PlannerConfig::device).
+    let device_cfg = bitslice_reram::reram::DeviceConfig {
+        sigma: args.f32_or("device-sigma", 0.0)?,
+        fault_rate: args.f32_or("fault-rate", 0.0)?,
+        ..Default::default()
+    };
+    let mc_trials = args.usize_or("mc-trials", 8)?;
     // print the static verifier's findings and write <out>/audit.json
     // (the audit itself always runs inside deploy_report)
     let show_audit = args.flag("audit");
@@ -331,6 +347,30 @@ fn cmd_deploy(args: &Args) -> Result<()> {
             ra.accuracy * 100.0,
         );
 
+        // Monte-Carlo noise study: accuracy over seeded device
+        // realizations at the deployed resolutions, plus where the
+        // conductance spread lands per layer and slice group
+        if !device_cfg.is_ideal() {
+            let row = harness::noise_report(&xbar, &test_ds, device_cfg, mc_trials)?;
+            println!(
+                "{}",
+                report::noise_table(
+                    &format!(
+                        "Monte-Carlo noise study ({mc_trials} trials, sigma {:.2}, \
+                         fault rate {:.3})",
+                        device_cfg.sigma, device_cfg.fault_rate
+                    ),
+                    std::slice::from_ref(&row)
+                )
+            );
+            let noise_path = cfg.out_dir.join("noise.json");
+            std::fs::write(
+                &noise_path,
+                report::noise_json(std::slice::from_ref(&row)).to_string(),
+            )?;
+            println!("noise study written to {}", noise_path.display());
+        }
+
         let planner_cfg = PlannerConfig {
             accuracy_budget: plan_budget,
             eval_examples: plan_examples,
@@ -341,6 +381,16 @@ fn cmd_deploy(args: &Args) -> Result<()> {
             // pass trades ADC bits against replicas under one cell budget
             // instead of water-filling after the fact
             replicate_budget,
+            // with non-ideality knobs set, the search must also hold the
+            // floor on the seeded device realizations — perfect-device
+            // plans are rejected (SearchStats::noise_rejections)
+            device: (!device_cfg.is_ideal()).then_some(
+                bitslice_reram::reram::DeviceValidation {
+                    config: device_cfg,
+                    trials: mc_trials,
+                    ..Default::default()
+                },
+            ),
             ..PlannerConfig::default()
         };
         // reuse xbar's mapping and the reference's quantized weights —
@@ -476,7 +526,8 @@ fn cmd_audit(args: &Args) -> Result<()> {
     let mapped = mapper::map_model_with(&named, reorder_cfg)?;
     let mut plan =
         planner::DeploymentPlan::from_policy(&mapped, ResolutionPolicy::Percentile(pct));
-    let spent = timing::fill_replicas_factor(&mapped, &mut plan, replicate_budget);
+    let budget = timing::factor_budget_cells(&mapped, &plan, replicate_budget);
+    let spent = timing::fill_replicas(&mapped, &mut plan, budget);
     let mut rep = audit::audit_deployment(&mapped, &plan);
     // fold a budget underflow into the report so it reaches the table,
     // the JSON artifact and the exit code alike

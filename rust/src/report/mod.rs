@@ -5,6 +5,7 @@
 //! paper-vs-measured side by side.
 
 use crate::quant::N_SLICES;
+use crate::reram::device::DeviceConfig;
 use crate::reram::energy::AdcSavingRow;
 use crate::reram::planner::SearchStats;
 use crate::sparsity::SliceStats;
@@ -188,8 +189,12 @@ pub fn plan_table(title: &str, rows: &[PlanRow]) -> String {
 /// output and bench logs.
 pub fn search_stats_line(stats: &SearchStats) -> String {
     format!(
-        "{} evaluations, {} layer-forwards, {} cache hits, {} early-aborted",
-        stats.evaluations, stats.layer_forwards, stats.cache_hits, stats.aborted_evals
+        "{} evaluations, {} layer-forwards, {} cache hits, {} early-aborted, {} noise-rejected",
+        stats.evaluations,
+        stats.layer_forwards,
+        stats.cache_hits,
+        stats.aborted_evals,
+        stats.noise_rejections
     )
 }
 
@@ -236,6 +241,7 @@ pub fn planner_json(
                 ("layer_forwards", num(stats.layer_forwards as f64)),
                 ("cache_hits", num(stats.cache_hits as f64)),
                 ("aborted_evals", num(stats.aborted_evals as f64)),
+                ("noise_rejections", num(stats.noise_rejections as f64)),
             ]),
         ),
         (
@@ -497,6 +503,99 @@ pub fn timing_json(timing: &PipelineTiming) -> Json {
     ])
 }
 
+/// One row of the Monte-Carlo noise study: accuracy statistics over N
+/// seeded device realizations of one non-ideality operating point
+/// ([`crate::harness::noise_report`] builds it, a sigma sweep of them is
+/// the Fig-2-style accuracy-vs-variation series of `BENCH_noise.json`).
+#[derive(Debug, Clone)]
+pub struct NoiseRow {
+    /// the operating point every trial shares (trial `i` derives its own
+    /// seed via [`DeviceConfig::trial`])
+    pub config: DeviceConfig,
+    /// accuracy with no device attached — the bit-exact ideal path
+    pub ideal_accuracy: f64,
+    /// per-trial accuracy, one seeded realization each
+    pub trial_accuracies: Vec<f64>,
+    pub mean_accuracy: f64,
+    pub worst_accuracy: f64,
+    /// per-layer per-slice-group mean squared conductance deviation
+    /// (LSB², trial 0's realization): which slice groups the non-ideality
+    /// actually lands on — sparse groups hold fewer programmed cells, so
+    /// less of the spread reaches their bitlines
+    pub layer_variance: Vec<(String, [f64; N_SLICES])>,
+}
+
+impl NoiseRow {
+    /// Accuracy lost to the non-ideality: ideal minus Monte-Carlo mean.
+    pub fn mean_drop(&self) -> f64 {
+        self.ideal_accuracy - self.mean_accuracy
+    }
+}
+
+/// Render the accuracy-vs-variation study (markdown): one row per
+/// operating point, mean/worst over that point's seeded trials.
+pub fn noise_table(title: &str, rows: &[NoiseRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("### {title}\n\n"));
+    out.push_str(
+        "| Sigma | Read sigma | Fault rate | Trials | Ideal | Mean | Worst | Mean drop (pt) |\n\
+         |-------|------------|------------|--------|-------|------|-------|----------------|\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "| {:.2} | {:.2} | {:.3} | {} | {:.2}% | {:.2}% | {:.2}% | {:.2} |\n",
+            r.config.sigma,
+            r.config.read_sigma,
+            r.config.fault_rate,
+            r.trial_accuracies.len(),
+            r.ideal_accuracy * 100.0,
+            r.mean_accuracy * 100.0,
+            r.worst_accuracy * 100.0,
+            r.mean_drop() * 100.0,
+        ));
+    }
+    out
+}
+
+/// Serialize one noise study series — the per-series body of
+/// `BENCH_noise.json` (the bench nests one per fixture).
+pub fn noise_json(rows: &[NoiseRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let layers = r
+                    .layer_variance
+                    .iter()
+                    .map(|(name, v)| {
+                        obj(vec![
+                            ("layer", s(name)),
+                            (
+                                "variance_lsb2_lsb_first",
+                                Json::Arr(v.iter().map(|&x| num(x)).collect()),
+                            ),
+                        ])
+                    })
+                    .collect();
+                obj(vec![
+                    ("sigma", num(r.config.sigma as f64)),
+                    ("read_sigma", num(r.config.read_sigma as f64)),
+                    ("fault_rate", num(r.config.fault_rate as f64)),
+                    ("seed", num(r.config.seed as f64)),
+                    ("ideal_accuracy", num(r.ideal_accuracy)),
+                    ("mean_accuracy", num(r.mean_accuracy)),
+                    ("worst_accuracy", num(r.worst_accuracy)),
+                    ("mean_drop", num(r.mean_drop())),
+                    (
+                        "trial_accuracies",
+                        Json::Arr(r.trial_accuracies.iter().map(|&a| num(a)).collect()),
+                    ),
+                    ("layer_variance", Json::Arr(layers)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 pub use crate::reram::audit::{AuditReport, AuditSummary};
 
 /// Render an audit report (markdown): the scan roll-up plus one row per
@@ -707,6 +806,7 @@ mod tests {
             layer_forwards: 1520,
             cache_hits: 4880,
             aborted_evals: 9,
+            noise_rejections: 3,
         };
         let j = planner_json(
             &[plan_row()],
@@ -726,6 +826,7 @@ mod tests {
         assert_eq!(search.get("layer_forwards").unwrap().as_usize(), Some(1520));
         assert_eq!(search.get("cache_hits").unwrap().as_usize(), Some(4880));
         assert_eq!(search.get("aborted_evals").unwrap().as_usize(), Some(9));
+        assert_eq!(search.get("noise_rejections").unwrap().as_usize(), Some(3));
         let line = search_stats_line(&stats);
         assert!(line.contains("37 evaluations"), "{line}");
         assert!(line.contains("4880 cache hits"), "{line}");

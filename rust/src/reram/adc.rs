@@ -13,34 +13,85 @@
 /// ISAAC baseline ADC resolution (bits).
 pub const BASELINE_BITS: u32 = 8;
 
+/// An ADC resolution outside the cost model's domain (the model prices
+/// `bits >= 1`; 0-bit ADCs do not exist). The fallible `try_*` accessors
+/// return this instead of panicking, so callers holding unvalidated
+/// resolutions — CLI-supplied plans, hand-built configs — can surface a
+/// typed error (`audit` reports the same condition as diagnostic A007).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResolutionError {
+    pub bits: u32,
+}
+
+impl std::fmt::Display for ResolutionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "ADC resolution {} bits is outside the cost model's domain (resolutions start at 1 bit)",
+            self.bits
+        )
+    }
+}
+
+impl std::error::Error for ResolutionError {}
+
 /// Relative ADC cost model (unitless; everything in Table 3 is a ratio).
 #[derive(Debug, Clone, Copy)]
 pub struct AdcModel;
 
 impl AdcModel {
-    /// Power ∝ 2^N / (N+1), Saberi et al. [17].
-    pub fn power(bits: u32) -> f64 {
-        assert!(bits >= 1);
-        (2.0f64).powi(bits as i32) / (bits as f64 + 1.0)
+    fn check(bits: u32) -> Result<u32, ResolutionError> {
+        if bits >= 1 {
+            Ok(bits)
+        } else {
+            Err(ResolutionError { bits })
+        }
     }
 
-    /// Sensing time ∝ N.
+    /// Power ∝ 2^N / (N+1), Saberi et al. [17]. Fallible form of
+    /// [`AdcModel::power`] for unvalidated resolutions.
+    pub fn try_power(bits: u32) -> Result<f64, ResolutionError> {
+        let bits = Self::check(bits)?;
+        Ok((2.0f64).powi(bits as i32) / (bits as f64 + 1.0))
+    }
+
+    /// Power ∝ 2^N / (N+1). Panics on a 0-bit resolution — callers with
+    /// unvalidated input use [`AdcModel::try_power`].
+    pub fn power(bits: u32) -> f64 {
+        Self::try_power(bits).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Sensing time ∝ N. Fallible form of [`AdcModel::sensing_time`].
+    pub fn try_sensing_time(bits: u32) -> Result<f64, ResolutionError> {
+        Ok(Self::check(bits)? as f64)
+    }
+
+    /// Sensing time ∝ N. Panics on a 0-bit resolution — callers with
+    /// unvalidated input use [`AdcModel::try_sensing_time`].
     pub fn sensing_time(bits: u32) -> f64 {
-        assert!(bits >= 1);
-        bits as f64
+        Self::try_sensing_time(bits).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Relative area (see [`AdcModel::area`]). Fallible form for
+    /// unvalidated resolutions.
+    pub fn try_area(bits: u32) -> Result<f64, ResolutionError> {
+        let bits = Self::check(bits)?;
+        Ok(if bits >= 6 {
+            (2.0f64).powf((bits as f64 - BASELINE_BITS as f64) / 2.0)
+        } else {
+            0.5
+        })
     }
 
     /// Relative area: 1.0 at 8 bits, 0.5 at 6 bits, flat (0.5) below 6
     /// (the paper: "the area of a 6-bit ADC is approximately the half of an
     /// 8-bit ADC but the area varies little when the resolution is lower
-    /// than 6"). Between 6 and 8 bits: geometric interpolation, 2^((N-8)/2).
+    /// than 6"). Between 6 and 8 bits: geometric interpolation, 2^((N-8)/2)
+    /// — the same formula continues above 8 bits, where area (and every
+    /// saving ratio) exceeds the baseline. Panics on a 0-bit resolution —
+    /// callers with unvalidated input use [`AdcModel::try_area`].
     pub fn area(bits: u32) -> f64 {
-        assert!(bits >= 1);
-        if bits >= 6 {
-            (2.0f64).powf((bits as f64 - BASELINE_BITS as f64) / 2.0)
-        } else {
-            0.5
-        }
+        Self::try_area(bits).unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Energy per conversion ∝ power x sensing time... the paper's Table 3
@@ -108,5 +159,42 @@ mod tests {
         assert_eq!(AdcModel::energy_saving(8), 1.0);
         assert_eq!(AdcModel::speedup(8), 1.0);
         assert_eq!(AdcModel::area_saving(8), 1.0);
+    }
+
+    #[test]
+    fn zero_bits_is_a_typed_error_not_a_panic() {
+        let err = ResolutionError { bits: 0 };
+        assert_eq!(AdcModel::try_power(0), Err(err));
+        assert_eq!(AdcModel::try_sensing_time(0), Err(err));
+        assert_eq!(AdcModel::try_area(0), Err(err));
+        let msg = err.to_string();
+        assert!(msg.contains("0 bits"), "error message: {msg}");
+        // Valid resolutions agree with the panicking accessors.
+        for n in 1..=12 {
+            assert_eq!(AdcModel::try_power(n), Ok(AdcModel::power(n)));
+            assert_eq!(AdcModel::try_sensing_time(n), Ok(AdcModel::sensing_time(n)));
+            assert_eq!(AdcModel::try_area(n), Ok(AdcModel::area(n)));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the cost model's domain")]
+    fn power_panics_with_the_typed_message_at_zero_bits() {
+        AdcModel::power(0);
+    }
+
+    #[test]
+    fn above_baseline_resolutions_cost_more_than_the_baseline() {
+        // The geometric area interpolation continues above 8 bits...
+        let a9 = AdcModel::area(9);
+        assert!((a9 - 2.0f64.sqrt()).abs() < 1e-12, "area(9) = {a9}");
+        assert_eq!(AdcModel::area(10), 2.0);
+        // ...so every "saving" ratio drops below 1: a 9-bit ADC is a cost,
+        // not a saving, relative to the 8-bit ISAAC baseline.
+        assert!(AdcModel::area_saving(9) < 1.0);
+        assert!(AdcModel::energy_saving(9) < 1.0);
+        assert!(AdcModel::speedup(9) < 1.0);
+        assert!((AdcModel::area_saving(10) - 0.5).abs() < 1e-12);
+        assert!((AdcModel::speedup(16) - 0.5).abs() < 1e-12);
     }
 }

@@ -515,8 +515,11 @@ impl Crossbar {
 
     /// The programmed cells as row-major `(row, col, val)` triples (row
     /// ascending, column ascending within a row) — the layout-neutral
-    /// interchange form `convert` rebuilds any representation from.
-    fn triples(&self) -> Vec<(usize, u16, u8)> {
+    /// interchange form `convert` rebuilds any representation from (and
+    /// [`super::device`] derives per-cell perturbations from: the triple
+    /// order is identical across layouts, so a seeded noise draw per
+    /// physical cell cannot depend on the storage representation).
+    pub(crate) fn triples(&self) -> Vec<(usize, u16, u8)> {
         let mut out = Vec::with_capacity(self.nonzero);
         match &self.store {
             CellArray::Dense(cells) => {

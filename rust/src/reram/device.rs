@@ -1,0 +1,463 @@
+//! Seeded device non-ideality model (ROADMAP item 1).
+//!
+//! Real ReRAM cells do not read back exactly: programmed conductances
+//! spread lognormally around their target (`R_deviation` with
+//! `pdf_type='lognorm'` in the HyperMetric RRAM model, arXiv:1904.12008),
+//! each sensing operation adds read noise, and a fraction of cells is
+//! stuck at ON or OFF. This module materializes those non-idealities as a
+//! [`DeviceModel`]: one perturbed conductance per programmed cell plus a
+//! read-noise seed per tile, derived deterministically from a
+//! [`DeviceConfig`] via `util::rng` so every Monte-Carlo trial is exactly
+//! reproducible.
+//!
+//! The model is *attached* at read time: [`crate::reram::sim`] routes
+//! programmed tiles through [`TileNoise::bitline_currents`] when a
+//! `DeviceModel` is supplied and takes the untouched integer path when it
+//! is not (the ideal path stays bit-exact and zero-overhead). The full
+//! convention catalogue — seed derivation, perturbation point, stuck-at
+//! semantics for zero cells — lives in the device-model section of the
+//! [`crate::reram`] module docs.
+
+use crate::quant::N_SLICES;
+use crate::util::rng::Rng;
+
+use super::crossbar::CELL_MAX;
+use super::mapper::{LayerMapping, MappedModel};
+
+/// Domain-separation tag for per-tile read-noise seeds, so the read
+/// stream never collides with the per-cell programming stream of the
+/// same tile.
+const READ_TAG: u64 = 0x5EAD_0000_0000_0001;
+
+/// One SplitMix64-finalizer step folding `v` into the running seed `h` —
+/// the stateless mixing function every device seed is derived with.
+/// Same constants as [`Rng::next_u64`]'s output scrambler, applied to a
+/// keyed value instead of a counter.
+#[inline]
+fn mix(h: u64, v: u64) -> u64 {
+    let mut z = h ^ v.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Non-ideality knobs. The all-zero default is the ideal device: a model
+/// built from it perturbs nothing and the simulator's outputs stay
+/// bit-exact to the unattached path.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct DeviceConfig {
+    /// Lognormal conductance spread: a programmed cell of value `v` reads
+    /// back `v * exp(sigma * N(0,1))` (multiplicative, so the deviation
+    /// scales with the conductance level — the lognorm `R_deviation`
+    /// shape).
+    pub sigma: f32,
+    /// Additive per-conversion read noise, in bitline-current LSB units:
+    /// each sensed column current gains `read_sigma * N(0,1)` before the
+    /// ADC clips it.
+    pub read_sigma: f32,
+    /// Stuck-at fault rate over programmed cells: a faulty cell is stuck
+    /// OFF (conductance 0) or ON (conductance [`CELL_MAX`]) with equal
+    /// probability. Structurally-zero cells are never fabricated and
+    /// cannot fault (see the stuck-at convention in [`crate::reram`]).
+    pub fault_rate: f32,
+    /// Root seed every per-cell and per-tile stream derives from.
+    pub seed: u64,
+}
+
+impl DeviceConfig {
+    /// True when the config perturbs nothing — a [`DeviceModel`] built
+    /// from it is the identity on every read.
+    pub fn is_ideal(&self) -> bool {
+        self.sigma == 0.0 && self.read_sigma == 0.0 && self.fault_rate == 0.0
+    }
+
+    /// The config of Monte-Carlo trial `i`: same knobs, an independent
+    /// derived seed. Trial seeds never equal the root seed itself, so a
+    /// deployment device and its MC trials are distinct draws.
+    pub fn trial(&self, i: usize) -> DeviceConfig {
+        DeviceConfig {
+            seed: mix(self.seed, 0x7817_A100_0000_0000 ^ i as u64),
+            ..*self
+        }
+    }
+}
+
+/// Per-tile realization of the non-idealities: the perturbed conductance
+/// of every programmed cell (layout-neutral — built from the tile's
+/// row-major triples, identical across Dense/Compressed/BitPlanes), the
+/// columns that hold at least one programmed cell (the only columns a
+/// deployment fabricates and senses), and the seed of the tile's
+/// read-noise stream.
+#[derive(Debug, Clone)]
+pub struct TileNoise {
+    /// `(row, col, conductance)` per programmed cell, row-major. Stuck-OFF
+    /// cells stay listed with conductance 0.
+    cells: Vec<(u16, u16, f32)>,
+    /// ascending columns with >= 1 programmed cell
+    active_cols: Vec<u16>,
+    read_seed: u64,
+}
+
+impl TileNoise {
+    /// Accumulate this tile's noisy bitline currents for one packed
+    /// activation wave (the BitPlanes wave convention: wordline `r` is bit
+    /// `r & 63` of word `r >> 6`) into `fcur`, and return the columns that
+    /// were sensed. Only `active_cols` slots of `fcur` are written (they
+    /// are zeroed first); read noise — a pure function of (tile seed,
+    /// plane, wave content, column) — is added per sensed column, so the
+    /// same activations always see the same noise regardless of batch
+    /// composition, evaluation order or storage layout.
+    pub(crate) fn bitline_currents(
+        &self,
+        wave: &[u64; 2],
+        read_sigma: f32,
+        plane: u32,
+        fcur: &mut [f32],
+    ) -> &[u16] {
+        for &c in &self.active_cols {
+            fcur[c as usize] = 0.0;
+        }
+        for &(r, c, g) in &self.cells {
+            if (wave[(r >> 6) as usize] >> (r & 63)) & 1 != 0 {
+                fcur[c as usize] += g;
+            }
+        }
+        if read_sigma > 0.0 {
+            for &c in &self.active_cols {
+                let h = mix(mix(mix(self.read_seed, plane as u64), wave[0]), wave[1] ^ c as u64);
+                fcur[c as usize] += read_sigma * Rng::new(h).normal();
+            }
+        }
+        &self.active_cols
+    }
+}
+
+/// One sign grid's tile noise, parallel to `TileGrid::tiles` (`None` for
+/// unprogrammed tiles, which are never fabricated).
+#[derive(Debug, Clone)]
+struct GridNoise {
+    col_tiles: usize,
+    tiles: Vec<Option<TileNoise>>,
+}
+
+/// Per-layer slice of a [`DeviceModel`], parallel to
+/// [`LayerMapping::grids`]: `grids[k][sign]` covers slice group `k`'s
+/// positive (`sign = 0`) / negative (`sign = 1`) tile grid.
+#[derive(Debug, Clone)]
+pub struct LayerDevice {
+    pub(crate) read_sigma: f32,
+    grids: Vec<[GridNoise; 2]>,
+    /// mean squared conductance deviation `(g - v)^2` per slice group, in
+    /// LSB² units over the layer's programmed cells (0.0 for empty groups)
+    pub variance: [f64; N_SLICES],
+}
+
+impl LayerDevice {
+    /// The noise realization of tile `(tr, tc)` in slice group `k`, sign
+    /// grid `sign` (0 = positive, 1 = negative); `None` iff the tile holds
+    /// no programmed cell.
+    #[inline]
+    pub(crate) fn tile(&self, k: usize, sign: usize, tr: usize, tc: usize) -> Option<&TileNoise> {
+        let g = &self.grids[k][sign];
+        g.tiles[tr * g.col_tiles + tc].as_ref()
+    }
+
+    fn for_layer(layer: &LayerMapping, li: usize, cfg: &DeviceConfig) -> LayerDevice {
+        let mut variance = [0.0f64; N_SLICES];
+        let mut counts = [0usize; N_SLICES];
+        let grids = layer
+            .grids
+            .iter()
+            .enumerate()
+            .map(|(k, (pos, neg))| {
+                [(0usize, pos), (1usize, neg)].map(|(si, grid)| {
+                    let tiles = (0..grid.row_tiles * grid.col_tiles)
+                        .map(|i| {
+                            let (tr, tc) = (i / grid.col_tiles, i % grid.col_tiles);
+                            let tile = grid.tile(tr, tc);
+                            if tile.nonzero_cells() == 0 {
+                                return None;
+                            }
+                            let tile_seed = [li, k, si, tr, tc]
+                                .iter()
+                                .fold(cfg.seed, |h, &v| mix(h, v as u64));
+                            let mut cells = Vec::with_capacity(tile.nonzero_cells());
+                            let mut seen = vec![false; tile.cols()];
+                            for (r, c, v) in tile.triples() {
+                                // independent per-cell stream: physical
+                                // coordinates in, fault class + lognormal
+                                // factor out
+                                let mut rng =
+                                    Rng::new(mix(mix(tile_seed, r as u64), c as u64));
+                                let u = rng.next_f32();
+                                let g = if u < cfg.fault_rate * 0.5 {
+                                    0.0 // stuck OFF
+                                } else if u < cfg.fault_rate {
+                                    CELL_MAX as f32 // stuck ON
+                                } else {
+                                    v as f32 * (cfg.sigma * rng.normal()).exp()
+                                };
+                                variance[k] += f64::from(g - v as f32).powi(2);
+                                counts[k] += 1;
+                                cells.push((r as u16, c, g));
+                                seen[c as usize] = true;
+                            }
+                            let active_cols = seen
+                                .iter()
+                                .enumerate()
+                                .filter_map(|(c, &s)| s.then_some(c as u16))
+                                .collect();
+                            Some(TileNoise {
+                                cells,
+                                active_cols,
+                                read_seed: mix(tile_seed, READ_TAG),
+                            })
+                        })
+                        .collect();
+                    GridNoise {
+                        col_tiles: grid.col_tiles,
+                        tiles,
+                    }
+                })
+            })
+            .collect();
+        for k in 0..N_SLICES {
+            if counts[k] > 0 {
+                variance[k] /= counts[k] as f64;
+            }
+        }
+        LayerDevice {
+            read_sigma: cfg.read_sigma,
+            grids,
+            variance,
+        }
+    }
+}
+
+/// One sampled device realization of a whole mapped model: every
+/// programmed cell's perturbed conductance plus per-tile read-noise
+/// seeds, parallel to `model.layers`. Build once per Monte-Carlo trial
+/// ([`DeviceConfig::trial`]) and attach to the serving backend
+/// ([`crate::serve::CrossbarBackend::with_device`]).
+#[derive(Debug, Clone)]
+pub struct DeviceModel {
+    pub config: DeviceConfig,
+    pub layers: Vec<LayerDevice>,
+}
+
+impl DeviceModel {
+    /// Sample the non-idealities of `cfg` over every programmed cell of
+    /// `model`. Deterministic: per-cell streams are seeded from the cell's
+    /// *physical* coordinates (layer, slice group, sign, tile row, tile
+    /// col, row, col), so the realization is independent of storage
+    /// layout and of the order tiles are visited in — only the mapping
+    /// itself (including any reorder permutation, which changes physical
+    /// coordinates) and the seed matter.
+    pub fn for_model(model: &MappedModel, cfg: DeviceConfig) -> DeviceModel {
+        DeviceModel {
+            config: cfg,
+            layers: model
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(li, layer)| LayerDevice::for_layer(layer, li, &cfg))
+                .collect(),
+        }
+    }
+
+    /// Per-layer, per-slice-group mean squared conductance deviation in
+    /// LSB² units — the variance decomposition the Monte-Carlo harness
+    /// reports (sparser slice groups accumulate less of it per bitline).
+    pub fn layer_variances(&self) -> Vec<[f64; N_SLICES]> {
+        self.layers.iter().map(|l| l.variance).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reram::mapper::map_model;
+    use crate::tensor::Tensor;
+    use crate::util::check::{check, ensure};
+
+    fn toy_model(rng: &mut Rng, rows: usize, cols: usize, fill: usize) -> MappedModel {
+        let mut data = vec![0.0f32; rows * cols];
+        for v in data.iter_mut() {
+            if rng.below(100) < fill {
+                *v = (rng.next_f32() - 0.5) * 2.0;
+            }
+        }
+        let w = Tensor::new(vec![rows, cols], data).unwrap();
+        map_model(&[("l".into(), w)]).unwrap()
+    }
+
+    fn all_cells(dev: &DeviceModel) -> Vec<(usize, usize, usize, usize, usize, u16, u16, f32)> {
+        let mut out = Vec::new();
+        for (li, layer) in dev.layers.iter().enumerate() {
+            for (k, pair) in layer.grids.iter().enumerate() {
+                for (si, g) in pair.iter().enumerate() {
+                    for (ti, tn) in g.tiles.iter().enumerate() {
+                        if let Some(tn) = tn {
+                            for &(r, c, v) in &tn.cells {
+                                out.push((li, k, si, ti / g.col_tiles, ti % g.col_tiles, r, c, v));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical_and_seeds_differ() {
+        let mut rng = Rng::new(3);
+        let model = toy_model(&mut rng, 200, 40, 30);
+        let cfg = DeviceConfig {
+            sigma: 0.2,
+            read_sigma: 0.1,
+            fault_rate: 0.01,
+            seed: 42,
+        };
+        let a = DeviceModel::for_model(&model, cfg);
+        let b = DeviceModel::for_model(&model, cfg);
+        assert_eq!(all_cells(&a), all_cells(&b), "same seed must reproduce");
+        let c = DeviceModel::for_model(&model, DeviceConfig { seed: 43, ..cfg });
+        assert_ne!(all_cells(&a), all_cells(&c), "different seeds must differ");
+    }
+
+    #[test]
+    fn ideal_config_is_identity_on_every_cell() {
+        let mut rng = Rng::new(5);
+        let model = toy_model(&mut rng, 150, 30, 40);
+        let dev = DeviceModel::for_model(&model, DeviceConfig::default());
+        assert!(DeviceConfig::default().is_ideal());
+        for (li, k, si, tr, tc, r, c, g) in all_cells(&dev) {
+            let (pos, neg) = &model.layers[0].grids[k];
+            let grid = if si == 0 { pos } else { neg };
+            let want = grid.tile(tr, tc).get(r as usize, c as usize);
+            assert_ne!(want, 0, "only programmed cells are listed");
+            assert_eq!(g, want as f32, "layer {li} ideal cell must read exactly");
+        }
+        assert_eq!(dev.layer_variances(), vec![[0.0; N_SLICES]]);
+    }
+
+    #[test]
+    fn fault_rate_one_sticks_every_cell() {
+        let mut rng = Rng::new(7);
+        let model = toy_model(&mut rng, 100, 20, 50);
+        let cfg = DeviceConfig {
+            fault_rate: 1.0,
+            seed: 9,
+            ..DeviceConfig::default()
+        };
+        let dev = DeviceModel::for_model(&model, cfg);
+        let cells = all_cells(&dev);
+        assert!(!cells.is_empty());
+        let (off, on): (Vec<_>, Vec<_>) = cells.iter().partition(|c| c.7 == 0.0);
+        assert!(cells.iter().all(|c| c.7 == 0.0 || c.7 == CELL_MAX as f32));
+        // u < 0.5 -> OFF, else ON: both classes show up at any real size
+        assert!(!off.is_empty() && !on.is_empty(), "off {} on {}", off.len(), on.len());
+    }
+
+    #[test]
+    fn lognormal_spread_is_multiplicative_and_unbiased_in_log() {
+        let mut rng = Rng::new(11);
+        let model = toy_model(&mut rng, 300, 60, 60);
+        let cfg = DeviceConfig {
+            sigma: 0.25,
+            seed: 21,
+            ..DeviceConfig::default()
+        };
+        let dev = DeviceModel::for_model(&model, cfg);
+        let cells = all_cells(&dev);
+        // every conductance is value * exp(sigma * n): positive, and the
+        // log-ratio is N(0, sigma^2)
+        let mut ratios = Vec::new();
+        for &(_, k, si, tr, tc, r, c, g) in &cells {
+            let (pos, neg) = &model.layers[0].grids[k];
+            let grid = if si == 0 { pos } else { neg };
+            let v = grid.tile(tr, tc).get(r as usize, c as usize) as f32;
+            assert!(g > 0.0, "lognormal spread keeps conductance positive");
+            ratios.push(f64::from((g / v).ln()));
+        }
+        let n = ratios.len() as f64;
+        let mean = ratios.iter().sum::<f64>() / n;
+        let var = ratios.iter().map(|r| (r - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.02, "log-ratio mean {mean}");
+        assert!((var.sqrt() - 0.25).abs() < 0.02, "log-ratio std {}", var.sqrt());
+        // and the reported per-group variance agrees with a recount
+        let vars = dev.layer_variances();
+        assert!(vars[0].iter().any(|&v| v > 0.0));
+    }
+
+    /// Read noise is a pure function of (tile, plane, wave, column):
+    /// repeated senses of the same wave reproduce exactly, different waves
+    /// and planes draw independently.
+    #[test]
+    fn read_noise_is_deterministic_per_wave() {
+        let tn = TileNoise {
+            cells: vec![(0, 0, 2.0), (1, 0, 1.0), (64, 3, 3.0)],
+            active_cols: vec![0, 3],
+            read_seed: 77,
+        };
+        let wave = [0b11u64, 0b1u64];
+        let mut a = vec![0.0f32; 4];
+        let mut b = vec![0.0f32; 4];
+        assert_eq!(tn.bitline_currents(&wave, 0.5, 2, &mut a), &[0, 3]);
+        tn.bitline_currents(&wave, 0.5, 2, &mut b);
+        assert_eq!(a, b, "same wave, same noise");
+        // noiseless: exact integer accumulation over driven wordlines
+        tn.bitline_currents(&wave, 0.0, 2, &mut b);
+        assert_eq!(&b[..], &[3.0, 0.0, 0.0, 3.0]);
+        // a different plane draws different noise
+        tn.bitline_currents(&wave, 0.5, 3, &mut b);
+        assert_ne!(a, b, "plane is part of the read stream");
+    }
+
+    /// Property: the realization is independent of the traversal order the
+    /// builder happens to use — rebuilding from a converted (different
+    /// storage layout) model yields identical noise, because seeds come
+    /// from physical coordinates, not enumeration position.
+    #[test]
+    fn realization_is_storage_layout_neutral() {
+        use crate::reram::crossbar::StorageFormat;
+        check(4, |rng| {
+            let model = toy_model(rng, 1 + rng.below(300), 1 + rng.below(100), rng.below(101));
+            let cfg = DeviceConfig {
+                sigma: 0.3,
+                read_sigma: 0.2,
+                fault_rate: 0.05,
+                seed: rng.next_u64(),
+            };
+            let want = all_cells(&DeviceModel::for_model(&model, cfg));
+            for fmt in [
+                StorageFormat::Dense,
+                StorageFormat::Compressed,
+                StorageFormat::BitPlanes,
+            ] {
+                let forced = model.with_storage(fmt);
+                let got = all_cells(&DeviceModel::for_model(&forced, cfg));
+                ensure(got == want, format!("{fmt:?} realization diverged"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn trial_seeds_are_distinct_and_stable() {
+        let cfg = DeviceConfig {
+            sigma: 0.1,
+            seed: 5,
+            ..DeviceConfig::default()
+        };
+        let seeds: Vec<u64> = (0..32).map(|i| cfg.trial(i).seed).collect();
+        let mut uniq = seeds.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len(), "trial seeds collide");
+        assert!(!seeds.contains(&cfg.seed), "a trial reuses the root seed");
+        assert_eq!(cfg.trial(3), cfg.trial(3), "trials are deterministic");
+        assert_eq!(cfg.trial(3).sigma, cfg.sigma, "knobs carry over");
+    }
+}

@@ -37,6 +37,11 @@
 //!                    running inference* and emits typed diagnostics for
 //!                    any convention the sections below state that the
 //!                    artifacts no longer satisfy.
+//! * [`device`]     — seeded non-ideality model: lognormal conductance
+//!                    spread, additive read noise and stuck-at faults per
+//!                    programmed cell, applied at read time when a
+//!                    [`device::DeviceModel`] is attached (see the
+//!                    device-model convention below).
 //!
 //! # Storage-format selection (Dense vs BitPlanes vs Compressed tiles)
 //!
@@ -180,6 +185,43 @@
 //! (`layer_forwards`, `cache_hits`, `aborted_evals`) and the `search`
 //! object in `plan.json` reports it.
 //!
+//! # Device-model convention (seeds, perturbation point, stuck-at zeros)
+//!
+//! A [`device::DeviceModel`] is one sampled realization of the
+//! non-idealities in a [`device::DeviceConfig`] over a mapped model, and
+//! every draw in it is a **pure function of physical coordinates** — no
+//! sequential RNG stream ever spans two cells, tiles or examples, so the
+//! realization cannot depend on storage layout, tile visit order or batch
+//! composition. Per-cell streams are seeded by folding `(seed, layer,
+//! slice group k, sign, tile row, tile col, row, col)` through a
+//! SplitMix64 finalizer; the first uniform draw classifies stuck-at
+//! faults (`u < rate/2` → stuck OFF at conductance 0, `u < rate` → stuck
+//! ON at [`crossbar::CELL_MAX`]), and healthy cells read back `v *
+//! exp(sigma * N(0,1))` (the lognormal `R_deviation` shape). Coordinates
+//! are *physical* — post-reorder — so a reordered mapping is a different
+//! device realization, but any fixed mapping perturbs identically across
+//! all three storage layouts (cells are enumerated through the layout-
+//! neutral row-major triples).
+//!
+//! The perturbation point is the bitline read: with a model attached,
+//! [`sim`] routes every programmed tile through the device's
+//! fractional-conductance accumulation (wave-gated sum of perturbed
+//! conductances, plus per-conversion read noise seeded by `(tile, plane,
+//! wave content, column)`), rounds to the nearest current LSB, and only
+//! then applies the ADC clip — slices, signs and planes recombine
+//! downstream exactly as in the ideal path. Detached, the integer path
+//! runs untouched (zero overhead); attached with an all-zero config, the
+//! float path reproduces the integer path bit-exactly (sums of exact
+//! small integers, identity rounding).
+//!
+//! Stuck-at semantics for zero cells: a structurally-zero cell is never
+//! fabricated, so it cannot fault or add noise — faults apply to
+//! *programmed* cells only, an unprogrammed column is never sensed (read
+//! noise covers only columns holding a programmed cell, mirroring the
+//! active-column ADC skip), and the zero-wave / zero-tile skips remain
+//! valid under noise because an undriven wordline and an unfabricated
+//! tile contribute no current on any device.
+//!
 //! # Audit invariant catalogue (code → invariant → convention enforced)
 //!
 //! [`audit`] turns each convention above into a machine-checked invariant
@@ -235,6 +277,7 @@
 pub mod adc;
 pub mod audit;
 pub mod crossbar;
+pub mod device;
 pub mod energy;
 pub mod mapper;
 pub mod planner;
@@ -243,11 +286,12 @@ pub mod resolution;
 pub mod sim;
 pub mod timing;
 
-pub use adc::AdcModel;
+pub use adc::{AdcModel, ResolutionError};
 pub use audit::{AuditCode, AuditReport, AuditSummary, Diagnostic, Severity};
 pub use crossbar::{pack_wave, Crossbar, StorageFormat, XBAR_COLS, XBAR_ROWS};
+pub use device::{DeviceConfig, DeviceModel};
 pub use mapper::{LayerMapping, MappedModel, StorageRow, StorageStats};
-pub use planner::{DeploymentPlan, DescentStrategy, PlannerConfig};
+pub use planner::{DeploymentPlan, DescentStrategy, DeviceValidation, PlannerConfig};
 pub use reorder::{LayerReorder, Permutation, ReorderConfig, ReorderRow};
 pub use resolution::ResolutionPolicy;
 pub use timing::{LayerTiming, PipelineTiming};

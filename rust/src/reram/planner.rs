@@ -34,6 +34,8 @@
 //! All bit arrays are LSB-first (see the bit-order convention in the
 //! [`crate::reram`] module docs).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::data::Dataset;
@@ -41,6 +43,7 @@ use crate::quant::N_SLICES;
 use crate::serve::{self, CrossbarBackend, DenseLayer, EvalCache, ReferenceBackend};
 
 use super::adc::AdcModel;
+use super::device::{DeviceConfig, DeviceModel};
 use super::energy;
 use super::mapper::MappedModel;
 use super::resolution::{self, ResolutionPolicy};
@@ -158,8 +161,8 @@ pub struct SearchStats {
     /// validation when a holdout subsample forces one
     pub evaluations: usize,
     /// (example, layer) crossbar forwards actually executed: the start
-    /// plan's full pass, every candidate's re-run tail, and the selected
-    /// plan's final validation pass
+    /// plan's full pass, every candidate's re-run tail, every Monte-Carlo
+    /// trial pass, and the selected plan's final validation pass
     pub layer_forwards: usize,
     /// (example, layer) forwards *avoided* by reusing cached prefix
     /// activations (zero when [`PlannerConfig::incremental`] is off)
@@ -167,6 +170,46 @@ pub struct SearchStats {
     /// candidate evaluations cut short because even a perfect remaining
     /// tail could not lift them to the accuracy floor
     pub aborted_evals: usize,
+    /// candidates that held the floor on the ideal device but failed the
+    /// Monte-Carlo quantile gate ([`PlannerConfig::device`]) — the plans
+    /// that only work on hardware that does not exist
+    pub noise_rejections: usize,
+}
+
+/// Monte-Carlo noise gate for candidate plans ([`PlannerConfig::device`]):
+/// a candidate that holds the accuracy floor on the ideal simulator must
+/// also hold it on at least `ceil(quantile * trials)` of `trials` seeded
+/// device realizations ([`DeviceConfig::trial`]) before the search may
+/// accept it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceValidation {
+    /// non-ideality knobs; `config.seed` roots the per-trial seeds. An
+    /// ideal config (all-zero knobs) disables the gate — there is nothing
+    /// to validate against.
+    pub config: DeviceConfig,
+    /// seeded realizations each ideal-feasible candidate faces
+    pub trials: usize,
+    /// fraction of trials that must hold the floor; the requirement is
+    /// `ceil(quantile * trials)` clamped into `[1, trials]`, so 1.0 =
+    /// every trial, 0.5 = the median realization
+    pub quantile: f64,
+}
+
+impl Default for DeviceValidation {
+    fn default() -> Self {
+        DeviceValidation {
+            config: DeviceConfig::default(),
+            trials: 8,
+            quantile: 0.75,
+        }
+    }
+}
+
+impl DeviceValidation {
+    /// Trials that must pass: `ceil(quantile * trials)` in `[1, trials]`.
+    pub fn required_passes(&self) -> usize {
+        ((self.quantile * self.trials as f64).ceil() as usize).clamp(1, self.trials.max(1))
+    }
 }
 
 /// Planner search knobs.
@@ -205,9 +248,9 @@ pub struct PlannerConfig {
     pub incremental: bool,
     /// Joint ADC/replica co-optimization: `Some(factor)` grants the
     /// search a replica cell budget of `factor` x the *starting* plan's
-    /// bottleneck-layer cells — the same budget
-    /// [`crate::reram::timing::fill_replicas_factor`] would spend on that
-    /// plan after the fact, so joint and sequential runs stay comparable.
+    /// bottleneck-layer cells
+    /// ([`crate::reram::timing::factor_budget_cells`]), one shared anchor
+    /// for every caller, so joint and sequential runs stay comparable.
     /// The search first descends the post-replication bottleneck's
     /// slowest slice groups (throughput-first), then runs the energy
     /// descent, and finally spends the budget on the selected
@@ -215,6 +258,16 @@ pub struct PlannerConfig {
     /// `None` keeps bits-then-replicas strictly sequential (and spends
     /// nothing).
     pub replicate_budget: Option<f64>,
+    /// Monte-Carlo noise validation ([`DeviceValidation`]): every
+    /// candidate that holds the floor on the ideal simulator is re-scored
+    /// on `trials` seeded device realizations and rejected unless the
+    /// floor holds at the configured quantile — so the search cannot
+    /// select a plan that only survives on perfect devices. The ideal
+    /// evaluation still runs first (through the incremental
+    /// [`crate::serve::EvalCache`] when enabled), pruning most candidates
+    /// before any noisy pass is spent. `None` = ideal-only validation,
+    /// the pre-device behaviour.
+    pub device: Option<DeviceValidation>,
 }
 
 impl Default for PlannerConfig {
@@ -228,6 +281,7 @@ impl Default for PlannerConfig {
             descent: DescentStrategy::Binary,
             incremental: true,
             replicate_budget: None,
+            device: None,
         }
     }
 }
@@ -335,22 +389,46 @@ struct Evaluator<'a> {
     ds: &'a Dataset,
     cache: Option<EvalCache>,
     layers: usize,
+    /// one device-attached backend per Monte-Carlo trial, sharing the
+    /// base mapping; empty = no noise gate
+    noisy: Vec<CrossbarBackend>,
+    /// trials that must hold the floor ([`DeviceValidation::required_passes`])
+    required: usize,
     stats: SearchStats,
 }
 
 impl<'a> Evaluator<'a> {
-    fn new(base: &'a CrossbarBackend, ds: &'a Dataset, incremental: bool) -> Result<Evaluator<'a>> {
+    fn new(
+        base: &'a CrossbarBackend,
+        ds: &'a Dataset,
+        incremental: bool,
+        device: Option<DeviceValidation>,
+    ) -> Result<Evaluator<'a>> {
         let mut stats = SearchStats::default();
         let cache = if incremental {
             Some(EvalCache::new(base, ds, &mut stats)?)
         } else {
             None
         };
+        // each trial's realization is built once (per-cell sampling over
+        // the whole mapping) and Arc-shared across every candidate replan
+        let noisy = match device {
+            Some(v) if v.trials > 0 && !v.config.is_ideal() => (0..v.trials)
+                .map(|i| {
+                    let dm = DeviceModel::for_model(base.mapped(), v.config.trial(i));
+                    base.with_device(&format!("planner-mc-{i}"), Arc::new(dm))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            _ => Vec::new(),
+        };
+        let required = device.map_or(0, |v| v.required_passes());
         Ok(Evaluator {
             base,
             ds,
             cache,
             layers: base.mapped().layers.len(),
+            noisy,
+            required,
             stats,
         })
     }
@@ -369,21 +447,48 @@ impl<'a> Evaluator<'a> {
     }
 
     /// Score one candidate against `floor`: `(feasible, accuracy)`. The
-    /// accuracy is `None` exactly when the cached scan aborted early —
-    /// feasible candidates always carry one.
+    /// accuracy is the **ideal-device** measure and is `None` exactly when
+    /// the cached scan aborted early — feasible candidates always carry
+    /// one. With a noise gate configured, an ideal-feasible candidate must
+    /// additionally hold the floor on the required number of Monte-Carlo
+    /// device realizations; the gate runs *after* the ideal verdict so the
+    /// prefix cache and early abort prune candidates before any noisy
+    /// trial pass is spent, and the trial scan itself stops as soon as the
+    /// quantile is met or provably unreachable.
     fn eval(&mut self, cand: &DeploymentPlan, floor: f64) -> Result<(bool, Option<f64>)> {
         self.stats.evaluations += 1;
-        match &mut self.cache {
+        let (ok, a) = match &mut self.cache {
             Some(c) => {
                 let s = c.score(cand, Some(floor), &mut self.stats)?;
-                Ok((s.feasible, s.accuracy))
+                (s.feasible, s.accuracy)
             }
             None => {
                 let be = self.base.replan("planner-candidate", cand.clone())?;
                 self.stats.layer_forwards += self.layers * self.ds.len();
                 let a = serve::accuracy(&be, self.ds)?.accuracy;
-                Ok((a >= floor, Some(a)))
+                (a >= floor, Some(a))
             }
+        };
+        if !ok || self.noisy.is_empty() {
+            return Ok((ok, a));
+        }
+        let trials = self.noisy.len();
+        let mut passes = 0usize;
+        for (i, nb) in self.noisy.iter().enumerate() {
+            if passes >= self.required || passes + (trials - i) < self.required {
+                break; // verdict already decided either way
+            }
+            let be = nb.replan("planner-mc-candidate", cand.clone())?;
+            self.stats.layer_forwards += self.layers * self.ds.len();
+            if serve::accuracy(&be, self.ds)?.accuracy >= floor {
+                passes += 1;
+            }
+        }
+        if passes >= self.required {
+            Ok((ok, a))
+        } else {
+            self.stats.noise_rejections += 1;
+            Ok((false, None))
         }
     }
 
@@ -459,17 +564,15 @@ pub fn plan_deployment_from(
     let baseline_accuracy = serve::accuracy(reference, &ds)?.accuracy;
 
     // the replica budget is anchored once, at the census-derived starting
-    // plan's bottleneck, so a joint run and a plain run followed by an
-    // external fill spend the *same* cell budget and stay comparable
+    // plan's bottleneck ([`timing::factor_budget_cells`]), so a joint run
+    // and a plain run followed by an external fill spend the *same* cell
+    // budget and stay comparable
     let budget_cells = match cfg.replicate_budget {
-        Some(f) if f > 0.0 => timing::plan_timing(&model, base.plan())
-            .bottleneck()
-            .map(|b| (f * model.layers[b].fabricated_cells() as f64) as usize)
-            .unwrap_or(0),
-        _ => 0,
+        Some(f) => timing::factor_budget_cells(&model, base.plan(), f),
+        None => 0,
     };
 
-    let mut ev = Evaluator::new(&base, &ds, cfg.incremental)?;
+    let mut ev = Evaluator::new(&base, &ds, cfg.incremental, cfg.device)?;
     let start_accuracy = ev.start_accuracy()?;
     let floor = baseline_accuracy - cfg.accuracy_budget;
 
@@ -969,6 +1072,108 @@ mod tests {
         // plan's full pass over the 48-example unseen tail
         assert_eq!(res.stats.layer_forwards, 2 * 16 + 2 * 48);
         assert_eq!(res.stats.aborted_evals, 0);
+    }
+
+    #[test]
+    fn required_passes_rounds_up_and_clamps() {
+        let mut v = DeviceValidation {
+            trials: 8,
+            quantile: 0.75,
+            ..DeviceValidation::default()
+        };
+        assert_eq!(v.required_passes(), 6);
+        v.quantile = 1.0;
+        assert_eq!(v.required_passes(), 8);
+        v.quantile = 0.51;
+        assert_eq!(v.required_passes(), 5, "ceil, not round");
+        v.quantile = 0.0;
+        assert_eq!(v.required_passes(), 1, "at least one trial must pass");
+        v.quantile = 7.0;
+        assert_eq!(v.required_passes(), 8, "never more than every trial");
+    }
+
+    /// An ideal device config (or zero trials) disables the gate: the
+    /// search must select exactly the plan the ungated search selects,
+    /// with zero noise rejections and no extra forwards.
+    #[test]
+    fn ideal_device_gate_is_inert() {
+        let mut rng = Rng::new(31);
+        let stack = toy_stack(&mut rng);
+        let ds = oracle_dataset(&stack, 24, 13);
+        let cfg = PlannerConfig::default();
+        let plain = plan_deployment(&stack, &ds, &cfg).unwrap();
+        for device in [
+            Some(DeviceValidation::default()), // all-zero knobs = ideal
+            Some(DeviceValidation {
+                config: DeviceConfig {
+                    sigma: 0.3,
+                    seed: 5,
+                    ..DeviceConfig::default()
+                },
+                trials: 0,
+                quantile: 1.0,
+            }),
+        ] {
+            let gated = plan_deployment(&stack, &ds, &PlannerConfig { device, ..cfg }).unwrap();
+            assert_eq!(gated.plan, plain.plan);
+            assert_eq!(gated.stats.noise_rejections, 0);
+            assert_eq!(gated.stats.layer_forwards, plain.stats.layer_forwards);
+        }
+    }
+
+    /// Acceptance criterion: on the planted fixture, noise-validated
+    /// planning must reject at least one plan the ideal search accepts —
+    /// and therefore keep strictly more ADC resolution than the
+    /// perfect-device search selects.
+    #[test]
+    fn noise_validated_search_rejects_perfect_device_plans() {
+        use crate::data::synthetic;
+        use crate::util::fixtures;
+        let train = synthetic::mnist(600, 11);
+        let holdout = synthetic::mnist(160, 12);
+        let stack = fixtures::planted_class_stack(&train);
+        let cfg = PlannerConfig {
+            eval_examples: 0,
+            ..PlannerConfig::default()
+        };
+        let ideal = plan_deployment(&stack, &holdout, &cfg).unwrap();
+        assert_eq!(ideal.stats.noise_rejections, 0);
+        let noisy = plan_deployment(
+            &stack,
+            &holdout,
+            &PlannerConfig {
+                device: Some(DeviceValidation {
+                    config: DeviceConfig {
+                        sigma: 0.6,
+                        read_sigma: 2.0,
+                        fault_rate: 0.05,
+                        seed: 0xD3,
+                    },
+                    trials: 4,
+                    quantile: 1.0,
+                }),
+                ..cfg
+            },
+        )
+        .unwrap();
+        assert!(
+            noisy.stats.noise_rejections >= 1,
+            "no ideal-accepted candidate was rejected under noise"
+        );
+        let total_bits = |p: &DeploymentPlan| {
+            p.layers
+                .iter()
+                .map(|l| l.adc_bits.iter().sum::<u32>())
+                .sum::<u32>()
+        };
+        assert!(
+            total_bits(&noisy.plan) > total_bits(&ideal.plan),
+            "noise validation must keep more resolution: noisy {} vs ideal {}",
+            noisy.plan,
+            ideal.plan
+        );
+        // the reported headline accuracy stays the ideal-device measure
+        assert_eq!(noisy.baseline_accuracy, ideal.baseline_accuracy);
     }
 
     /// Tentpole: under one replica cell budget, the joint ADC/replica

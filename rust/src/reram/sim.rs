@@ -13,6 +13,7 @@ use crate::tensor::Tensor;
 use crate::util::pool::{parallel_map, worker_threads};
 
 use super::crossbar::{pack_code_wave, StorageFormat};
+use super::device::LayerDevice;
 use super::mapper::LayerMapping;
 
 /// Quantize non-negative activations to codes (mirrors L2 `_act_quantize`)
@@ -73,6 +74,10 @@ pub struct SimScratch {
     /// physical-column accumulator, un-permuted into `out` at the end
     /// (reordered mappings only)
     phys: Vec<i64>,
+    /// float bitline-current accumulator for the noisy device path,
+    /// sliced per tile like `cur`; untouched (never even sized) when no
+    /// device model is attached
+    fcur: Vec<f32>,
 }
 
 /// Run one example (activation code vector) through a mapped layer,
@@ -116,6 +121,35 @@ pub fn forward_codes_into(
     scratch: &mut SimScratch,
     out: &mut Vec<i64>,
 ) {
+    forward_codes_device_into(layer, a_code, adc_bits, None, scratch, out);
+}
+
+/// [`forward_codes_into`] with an optional device non-ideality model (the
+/// layer's slice of a [`crate::reram::device::DeviceModel`]). With
+/// `device` attached, every programmed tile reads through
+/// [`TileNoise::bitline_currents`][crate::reram::device::TileNoise]:
+/// currents accumulate in float over the tile's perturbed conductances,
+/// per-conversion read noise is added, and the result is rounded to the
+/// nearest current LSB (clamped at 0 — a bitline cannot source negative
+/// current) before the usual ADC clip. Only columns holding at least one
+/// programmed cell are sensed, matching the indexed ideal path, and the
+/// zero-wave / zero-tile skips stay in force (no wordline driven ⇒ no
+/// conversion ⇒ no read noise). `device = None` is byte-for-byte the
+/// ideal path: the float buffer is never touched and no branch runs per
+/// cell. An all-zero [`DeviceConfig`][crate::reram::device::DeviceConfig]
+/// attached is bit-exact to `None`: conductances are the exact integers,
+/// float accumulation of ≤ 128 cells × [`CELL_MAX`] is exact, and
+/// round-to-nearest is the identity on integers.
+///
+/// [`CELL_MAX`]: crate::reram::crossbar::CELL_MAX
+pub fn forward_codes_device_into(
+    layer: &LayerMapping,
+    a_code: &[u8],
+    adc_bits: &[u32; N_SLICES],
+    device: Option<&LayerDevice>,
+    scratch: &mut SimScratch,
+    out: &mut Vec<i64>,
+) {
     assert_eq!(a_code.len(), layer.rows, "activation length");
     let rows = layer.rows;
     out.clear();
@@ -126,6 +160,7 @@ pub fn forward_codes_into(
         cur,
         perm_codes,
         phys,
+        fcur,
     } = scratch;
     // way in: permute codes into physical wordline order (reorder only)
     let codes: &[u8] = match &layer.reorder {
@@ -154,8 +189,9 @@ pub fn forward_codes_into(
     }
     // the byte bit-planes exist only for byte-layout (Dense/Compressed)
     // tiles — an all-BitPlanes layer never reads them, so skip the
-    // transpose entirely
-    let needs_bytes = layer.grids.iter().any(|(pos, neg)| {
+    // transpose entirely; the noisy device path reads the packed waves
+    // exclusively, so it never needs them either
+    let needs_bytes = device.is_none() && layer.grids.iter().any(|(pos, neg)| {
         [pos, neg].into_iter().any(|grid| {
             (0..grid.row_tiles * grid.col_tiles).any(|i| {
                 let tile = grid.tile(i / grid.col_tiles, i % grid.col_tiles);
@@ -173,6 +209,9 @@ pub fn forward_codes_into(
         }
     }
     cur.resize(super::XBAR_COLS, 0);
+    if device.is_some() {
+        fcur.resize(super::XBAR_COLS, 0.0);
+    }
     // the accumulator runs in physical column order; unless the *column*
     // permutation is real, physical == logical and it writes `out`
     // directly (a rows-only reorder needs no output detour)
@@ -197,7 +236,7 @@ pub fn forward_codes_into(
         let plane_waves = &waves[t as usize * row_tiles..(t as usize + 1) * row_tiles];
         for (k, (pos, neg)) in layer.grids.iter().enumerate() {
             let full = adc_bits[k];
-            for (grid, sign) in [(pos, 1i64), (neg, -1i64)] {
+            for (si, (grid, sign)) in [(pos, 1i64), (neg, -1i64)].into_iter().enumerate() {
                 for tr in 0..grid.row_tiles {
                     let r0 = tr * super::XBAR_ROWS;
                     let wave = &plane_waves[tr];
@@ -215,6 +254,26 @@ pub fn forward_codes_into(
                             continue; // unprogrammed tile: no current
                         }
                         let c0 = tc * super::XBAR_COLS;
+                        // noisy device path: accumulate the tile's
+                        // perturbed conductances in float over the same
+                        // packed wave, round to the nearest current LSB,
+                        // then clip as usual — only programmed columns
+                        // are sensed, as on the indexed ideal path
+                        if let Some(dev) = device {
+                            let tn = dev
+                                .tile(k, si, tr, tc)
+                                .expect("programmed tile has a device realization");
+                            let fcur = &mut fcur[..tile.cols()];
+                            let active = tn.bitline_currents(wave, dev.read_sigma, t, fcur);
+                            for &j in active {
+                                let j = j as usize;
+                                let i_raw = fcur[j].max(0.0).round() as u32;
+                                let i_adc = adc_clip(i_raw, full) as i64;
+                                acc[c0 + j] +=
+                                    sign * i_adc * (1i64 << t) * (1i64 << (2 * k));
+                            }
+                            continue;
+                        }
                         let cur = &mut cur[..tile.cols()];
                         // bit-plane tiles take the popcount path on the
                         // packed wave; byte layouts scan the byte plane
@@ -710,6 +769,134 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Property (device model satellite): attaching an all-zero
+    /// [`DeviceConfig`] must be bit-exact to the unattached ideal path —
+    /// conductances are the exact integers, float accumulation of a tile
+    /// row-block is exact, rounding is the identity — across all three
+    /// storage layouts and at clipping resolutions.
+    #[test]
+    fn ideal_device_attached_is_bit_exact_across_layouts() {
+        use crate::reram::device::{DeviceConfig, DeviceModel};
+        check(6, |rng| {
+            let rows = 1 + rng.below(300);
+            let cols = 1 + rng.below(100);
+            let w = random_sparse_tensor(rng, rows, cols, rng.below(101));
+            let model = crate::reram::mapper::map_model(&[("l".into(), w)]).unwrap();
+            let code: Vec<u8> = (0..rows).map(|_| rng.below(256) as u8).collect();
+            let cfg = DeviceConfig {
+                seed: rng.next_u64(),
+                ..DeviceConfig::default()
+            };
+            ensure(cfg.is_ideal(), "all-zero knobs are the ideal device")?;
+            let mut scratch = SimScratch::default();
+            let mut out = Vec::new();
+            for bits in [LOSSLESS, [3, 3, 3, 1]] {
+                let want = forward_codes(&model.layers[0], &code, &bits);
+                for fmt in [
+                    StorageFormat::Dense,
+                    StorageFormat::Compressed,
+                    StorageFormat::BitPlanes,
+                ] {
+                    let m = model.with_storage(fmt);
+                    let dev = DeviceModel::for_model(&m, cfg);
+                    forward_codes_device_into(
+                        &m.layers[0],
+                        &code,
+                        &bits,
+                        Some(&dev.layers[0]),
+                        &mut scratch,
+                        &mut out,
+                    );
+                    ensure(
+                        out == want,
+                        format!("ideal device diverged in {fmt:?} at {bits:?}"),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Property (device model satellite): one seed, one noise realization —
+    /// the noisy forward is bit-identical across Dense/Compressed/BitPlanes
+    /// and across repeated runs, for natural and reordered mappings alike.
+    #[test]
+    fn noisy_device_forward_is_layout_neutral_and_deterministic() {
+        use crate::reram::device::{DeviceConfig, DeviceModel};
+        use crate::reram::mapper::map_model_with;
+        use crate::reram::reorder::ReorderConfig;
+        check(6, |rng| {
+            let rows = 1 + rng.below(300);
+            let cols = 1 + rng.below(100);
+            let w = random_sparse_tensor(rng, rows, cols, 5 + rng.below(90));
+            let weights = vec![("l".to_string(), w)];
+            let natural = map_model_with(&weights, None).unwrap();
+            let reordered = map_model_with(&weights, Some(ReorderConfig::default())).unwrap();
+            let cfg = DeviceConfig {
+                sigma: 0.3,
+                read_sigma: 0.2,
+                fault_rate: 0.02,
+                seed: rng.next_u64(),
+            };
+            let code: Vec<u8> = (0..rows).map(|_| rng.below(256) as u8).collect();
+            let bits = [3u32, 3, 3, 1];
+            let mut scratch = SimScratch::default();
+            for model in [&natural, &reordered] {
+                let mut outs: Vec<Vec<i64>> = Vec::new();
+                for fmt in [
+                    StorageFormat::Dense,
+                    StorageFormat::Compressed,
+                    StorageFormat::BitPlanes,
+                ] {
+                    let m = model.with_storage(fmt);
+                    let dev = DeviceModel::for_model(&m, cfg);
+                    let mut a = Vec::new();
+                    let mut b = Vec::new();
+                    forward_codes_device_into(
+                        &m.layers[0],
+                        &code,
+                        &bits,
+                        Some(&dev.layers[0]),
+                        &mut scratch,
+                        &mut a,
+                    );
+                    forward_codes_device_into(
+                        &m.layers[0],
+                        &code,
+                        &bits,
+                        Some(&dev.layers[0]),
+                        &mut scratch,
+                        &mut b,
+                    );
+                    ensure(a == b, format!("{fmt:?} noisy forward not reproducible"))?;
+                    outs.push(a);
+                }
+                ensure(
+                    outs[1] == outs[0] && outs[2] == outs[0],
+                    "noise realization depends on storage layout",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    /// The ideal path never touches the float buffer — attaching no device
+    /// keeps the noisy-path scratch at zero capacity.
+    #[test]
+    fn ideal_path_never_sizes_the_float_buffer() {
+        let mut rng = Rng::new(91);
+        let w = random_sparse_tensor(&mut rng, 200, 40, 45);
+        let layer = map_layer("l", &w).unwrap();
+        let code: Vec<u8> = (0..200).map(|_| rng.below(256) as u8).collect();
+        let mut scratch = SimScratch::default();
+        let mut out = Vec::new();
+        forward_codes_into(&layer, &code, &LOSSLESS, &mut scratch, &mut out);
+        assert!(
+            scratch.fcur.is_empty(),
+            "device-path buffer sized on the ideal path"
+        );
     }
 
     #[test]

@@ -230,21 +230,22 @@ pub fn fill_replicas(model: &MappedModel, plan: &mut DeploymentPlan, budget_cell
     budget_cells - remaining
 }
 
-/// [`fill_replicas`] with the CLI's budget unit: `factor` multiples of
-/// the **bottleneck layer's** fabricated cells (so `2.0` buys about two
-/// extra copies of the slowest layer). This is the one definition of
-/// what `--replicate-budget F` means — the deploy CLI, the harness
-/// report and the example all call it. Non-positive factors (and models
-/// with no bottleneck) change nothing and spend nothing.
-pub fn fill_replicas_factor(model: &MappedModel, plan: &mut DeploymentPlan, factor: f64) -> usize {
+/// The CLI's budget unit converted to cells: `factor` multiples of the
+/// **bottleneck layer's** fabricated cells under `plan` (so `2.0` buys
+/// about two extra copies of the slowest layer). This is the one
+/// definition of what `--replicate-budget F` means — the deploy CLI, the
+/// harness report, the example and the planner's joint ADC/replica pass
+/// all price the factor through it (the planner hands the budget to its
+/// own water-fill, everyone else to [`fill_replicas`]). Non-positive
+/// factors and models with no bottleneck price to zero cells.
+pub fn factor_budget_cells(model: &MappedModel, plan: &DeploymentPlan, factor: f64) -> usize {
     if factor <= 0.0 {
         return 0;
     }
-    let budget = plan_timing(model, plan)
+    plan_timing(model, plan)
         .bottleneck()
         .map(|b| (factor * model.layers[b].fabricated_cells() as f64) as usize)
-        .unwrap_or(0);
-    fill_replicas(model, plan, budget)
+        .unwrap_or(0)
 }
 
 #[cfg(test)]
@@ -479,26 +480,33 @@ mod tests {
         );
     }
 
-    /// The factor form is the budget in multiples of the bottleneck
-    /// layer's cells — the one definition the CLI/harness/example share.
+    /// The factor form prices the budget in multiples of the bottleneck
+    /// layer's cells — the one definition the CLI/harness/example/planner
+    /// share — and water-filling that budget matches an explicit cell
+    /// count exactly.
     #[test]
-    fn fill_replicas_factor_matches_explicit_budget() {
+    fn factor_budget_matches_explicit_cells() {
         let (model, plan) = skewed_model();
         let b = plan_timing(&model, &plan).bottleneck().unwrap();
         let cells = model.layers[b].fabricated_cells();
+        assert_eq!(factor_budget_cells(&model, &plan, 2.0), 2 * cells);
 
         let mut by_factor = plan.clone();
-        let spent_f = fill_replicas_factor(&model, &mut by_factor, 2.0);
+        let budget = factor_budget_cells(&model, &by_factor, 2.0);
+        let spent_f = fill_replicas(&model, &mut by_factor, budget);
         let mut by_cells = plan.clone();
         let spent_c = fill_replicas(&model, &mut by_cells, 2 * cells);
         assert_eq!(spent_f, spent_c);
         assert_eq!(by_factor, by_cells);
 
-        // non-positive factors are no-ops
-        let mut untouched = plan.clone();
-        assert_eq!(fill_replicas_factor(&model, &mut untouched, 0.0), 0);
-        assert_eq!(fill_replicas_factor(&model, &mut untouched, -1.0), 0);
-        assert_eq!(untouched, plan);
+        // non-positive factors price to nothing
+        assert_eq!(factor_budget_cells(&model, &plan, 0.0), 0);
+        assert_eq!(factor_budget_cells(&model, &plan, -1.0), 0);
+
+        // ...and a model with no bottleneck to nothing either
+        let z = map_model(&[("z".into(), Tensor::zeros(vec![64, 32]))]).unwrap();
+        let zp = DeploymentPlan::uniform_for(&z, [3, 3, 3, 1]);
+        assert_eq!(factor_budget_cells(&z, &zp, 2.0), 0);
     }
 
     /// The replica ceiling bounds a runaway budget.

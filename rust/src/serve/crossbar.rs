@@ -35,6 +35,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::quant::N_SLICES;
+use crate::reram::device::{DeviceModel, LayerDevice};
 use crate::reram::mapper::{self, MappedModel, StorageRow, StorageStats};
 use crate::reram::planner::DeploymentPlan;
 use crate::reram::reorder::ReorderConfig;
@@ -60,6 +61,9 @@ pub struct CrossbarBackend {
     model: Arc<MappedModel>,
     meta: Arc<Vec<StackMeta>>,
     plan: DeploymentPlan,
+    /// attached device non-ideality realization ([`crate::reram::device`]);
+    /// `None` = the ideal device, the byte-for-byte unperturbed path
+    device: Option<Arc<DeviceModel>>,
     input_dim: usize,
     num_classes: usize,
     intra_threads: usize,
@@ -175,10 +179,51 @@ impl CrossbarBackend {
             model: Arc::clone(&self.model),
             meta: Arc::clone(&self.meta),
             plan,
+            device: self.device.clone(),
             input_dim: self.input_dim,
             num_classes: self.num_classes,
             intra_threads: self.intra_threads,
         })
+    }
+
+    /// Same mapping, same plan, with a device non-ideality realization
+    /// attached ([`crate::reram::device`]): every subsequent forward reads
+    /// through the realization's perturbed conductances and read noise
+    /// instead of the exact programmed cells. The realization must be
+    /// built from **this backend's mapping**
+    /// (`DeviceModel::for_model(backend.mapped(), cfg)`) — a layer-count
+    /// mismatch is rejected here, a deeper structural mismatch panics at
+    /// read time. The `Arc` is shared by `replan`/`rebit` clones, so the
+    /// planner's Monte-Carlo candidate evaluations reuse one realization
+    /// across thousands of plans.
+    pub fn with_device(&self, name: &str, device: Arc<DeviceModel>) -> Result<CrossbarBackend> {
+        anyhow::ensure!(
+            device.layers.len() == self.model.layers.len(),
+            "device model has {} layers, mapping has {}",
+            device.layers.len(),
+            self.model.layers.len()
+        );
+        Ok(CrossbarBackend {
+            name: name.to_string(),
+            model: Arc::clone(&self.model),
+            meta: Arc::clone(&self.meta),
+            plan: self.plan.clone(),
+            device: Some(device),
+            input_dim: self.input_dim,
+            num_classes: self.num_classes,
+            intra_threads: self.intra_threads,
+        })
+    }
+
+    /// The attached device realization, if any (`None` = ideal device).
+    pub fn device(&self) -> Option<&Arc<DeviceModel>> {
+        self.device.as_ref()
+    }
+
+    /// Layer `li`'s slice of the attached device realization.
+    #[inline]
+    pub(crate) fn layer_device(&self, li: usize) -> Option<&LayerDevice> {
+        self.device.as_deref().map(|d| &d.layers[li])
     }
 
     /// Same mapping at uniform per-slice resolutions — thin wrapper over
@@ -343,6 +388,7 @@ impl CrossbarBackend {
             model: Arc::new(mapped),
             meta: Arc::new(meta),
             plan,
+            device: None,
             input_dim,
             num_classes,
             intra_threads: crate::util::pool::worker_threads(),
@@ -363,18 +409,20 @@ impl CrossbarBackend {
     ) -> Vec<f32> {
         let mut act: Vec<f32> = row.to_vec();
         let mut next: Vec<f32> = Vec::new();
-        for ((mapping, meta), pl) in self
+        for (li, ((mapping, meta), pl)) in self
             .model
             .layers
             .iter()
             .zip(self.meta.iter())
             .zip(&self.plan.layers)
+            .enumerate()
             .skip(from_layer)
         {
             Self::layer_step(
                 mapping,
                 meta,
                 &pl.adc_bits,
+                self.layer_device(li),
                 &act,
                 scratch,
                 raw,
@@ -387,15 +435,17 @@ impl CrossbarBackend {
     }
 
     /// One layer's step for one activation row: quantize, run the mapped
-    /// crossbars, rescale, bias, ReLU — exactly one iteration of
-    /// [`Self::infer_tail`]'s loop, shared by the sharded path and the
-    /// evaluation cache so every caller runs the identical per-row float
-    /// operations.
+    /// crossbars (through `device`'s perturbed conductances when a
+    /// realization is attached), rescale, bias, ReLU — exactly one
+    /// iteration of [`Self::infer_tail`]'s loop, shared by the sharded
+    /// path and the evaluation cache so every caller runs the identical
+    /// per-row float operations.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn layer_step(
         mapping: &mapper::LayerMapping,
         meta: &StackMeta,
         adc_bits: &[u32; N_SLICES],
+        device: Option<&LayerDevice>,
         row: &[f32],
         scratch: &mut SimScratch,
         raw: &mut Vec<i64>,
@@ -404,7 +454,7 @@ impl CrossbarBackend {
     ) {
         let a_step = sim::act_quantize_into(row, codes);
         let scale = mapping.step * a_step;
-        sim::forward_codes_into(mapping, codes, adc_bits, scratch, raw);
+        sim::forward_codes_device_into(mapping, codes, adc_bits, device, scratch, raw);
         out.clear();
         out.extend(raw.iter().map(|&v| v as f32 * scale));
         if let Some(bias) = &meta.bias {
@@ -440,7 +490,12 @@ impl CrossbarBackend {
         let rep = self.model.replicated(&replicas);
         let mut act: Vec<f32> = x.data().to_vec();
         let mut width = dim;
-        for ((handles, meta), pl) in rep.layers.iter().zip(self.meta.iter()).zip(&self.plan.layers)
+        for (li, ((handles, meta), pl)) in rep
+            .layers
+            .iter()
+            .zip(self.meta.iter())
+            .zip(&self.plan.layers)
+            .enumerate()
         {
             let out_w = handles[0].cols;
             let shards = handles.len().min(cores).min(b.max(1));
@@ -456,6 +511,7 @@ impl CrossbarBackend {
                         mapping,
                         meta,
                         &pl.adc_bits,
+                        self.layer_device(li),
                         &act[i * width..(i + 1) * width],
                         &mut scratch,
                         &mut raw,
@@ -727,6 +783,7 @@ mod tests {
                 &be.model.layers[0],
                 &be.meta[0],
                 &be.plan.layers[0].adc_bits,
+                None,
                 &x.data()[i * 20..(i + 1) * 20],
                 &mut scratch,
                 &mut raw,
@@ -740,6 +797,70 @@ mod tests {
 
         // out-of-range resume layers are rejected, not misapplied
         assert!(be.forward_from_layer(2, &mid).is_err());
+    }
+
+    /// Device-model contract at the backend level: an all-zero config
+    /// attached is bit-identical to no device at all; a real sigma changes
+    /// the logits but stays deterministic (same realization, same answer —
+    /// including through the replica-sharded path, which shards the same
+    /// realization); `replan` clones keep the attachment.
+    #[test]
+    fn device_attachment_is_exact_at_zero_and_deterministic() {
+        use crate::reram::device::{DeviceConfig, DeviceModel};
+        let mut rng = Rng::new(61);
+        let stack = toy_stack(&mut rng);
+        let be = CrossbarBackend::new("xb", &stack, ResolutionPolicy::Lossless).unwrap();
+        let x = Tensor::new(vec![4, 20], (0..80).map(|_| rng.next_f32()).collect()).unwrap();
+        let want = be.infer_batch(&x).unwrap();
+
+        let ideal = Arc::new(DeviceModel::for_model(
+            be.mapped(),
+            DeviceConfig {
+                seed: 7,
+                ..DeviceConfig::default()
+            },
+        ));
+        let attached = be.with_device("xb-ideal", ideal).unwrap();
+        assert_eq!(
+            attached.infer_batch(&x).unwrap().data(),
+            want.data(),
+            "sigma=0 / fault-rate=0 attached must be bit-exact to the ideal path"
+        );
+
+        let cfg = DeviceConfig {
+            sigma: 0.4,
+            read_sigma: 0.3,
+            fault_rate: 0.05,
+            seed: 7,
+        };
+        let noisy = be
+            .with_device("xb-noisy", Arc::new(DeviceModel::for_model(be.mapped(), cfg)))
+            .unwrap();
+        let a = noisy.infer_batch(&x).unwrap();
+        assert_ne!(a.data(), want.data(), "a real sigma must perturb the logits");
+        assert_eq!(
+            a.data(),
+            noisy.infer_batch(&x).unwrap().data(),
+            "one realization, one answer"
+        );
+        // replan keeps the attachment (the planner's MC loop relies on it)
+        let replanned = noisy.replan("xb-noisy-replan", noisy.plan().clone()).unwrap();
+        assert!(replanned.device().is_some());
+        assert_eq!(replanned.infer_batch(&x).unwrap().data(), a.data());
+        // the replica-sharded path runs the same realization bit-identically
+        let mut plan = noisy.plan().clone();
+        plan.layers[0].replicas = 3;
+        let sharded = noisy.replan("xb-noisy-rep", plan).unwrap();
+        assert_eq!(sharded.infer_batch(&x).unwrap().data(), a.data());
+        // a realization for a different mapping is rejected
+        let other = CrossbarBackend::new(
+            "xb2",
+            &toy_stack(&mut rng)[..1],
+            ResolutionPolicy::Lossless,
+        )
+        .unwrap();
+        let wrong = Arc::new(DeviceModel::for_model(other.mapped(), cfg));
+        assert!(be.with_device("bad", wrong).is_err());
     }
 
     #[test]

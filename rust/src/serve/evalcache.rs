@@ -34,6 +34,7 @@ use anyhow::Result;
 
 use crate::data::Dataset;
 use crate::quant::N_SLICES;
+use crate::reram::device::DeviceModel;
 use crate::reram::mapper::MappedModel;
 use crate::reram::planner::{DeploymentPlan, SearchStats};
 use crate::reram::sim::SimScratch;
@@ -73,6 +74,10 @@ struct Pending {
 pub struct EvalCache {
     model: Arc<MappedModel>,
     meta: Arc<Vec<StackMeta>>,
+    /// the backend's device realization at build time — every cached
+    /// boundary and every rescored tail reads through the same (possibly
+    /// ideal) device, so the cache stays exact for noisy backends too
+    device: Option<Arc<DeviceModel>>,
     labels: Vec<i32>,
     num_classes: usize,
     /// `dims[l]` = input width of layer l; `dims[L]` = logit width
@@ -100,6 +105,7 @@ fn run_tail(
     model: &MappedModel,
     meta: &[StackMeta],
     bits: &[[u32; N_SLICES]],
+    device: Option<&DeviceModel>,
     from: usize,
     input: &[f32],
     scratch: &mut SimScratch,
@@ -114,6 +120,7 @@ fn run_tail(
             &model.layers[l],
             &meta[l],
             &bits[l],
+            device.map(|d| &d.layers[l]),
             &act,
             scratch,
             raw,
@@ -129,10 +136,12 @@ fn run_tail(
 /// Run the examples `idxs` from layer `from` in parallel worker chunks;
 /// `input` is the example-major boundary buffer they start from. Returns
 /// `(example, tail boundaries)` pairs.
+#[allow(clippy::too_many_arguments)]
 fn run_examples(
     model: &MappedModel,
     meta: &[StackMeta],
     bits: &[[u32; N_SLICES]],
+    device: Option<&DeviceModel>,
     from: usize,
     input: &[f32],
     in_dim: usize,
@@ -151,7 +160,9 @@ fn run_examples(
             let row = &input[e * in_dim..(e + 1) * in_dim];
             part.push((
                 e,
-                run_tail(model, meta, bits, from, row, &mut scratch, &mut raw, &mut codes),
+                run_tail(
+                    model, meta, bits, device, from, row, &mut scratch, &mut raw, &mut codes,
+                ),
             ));
         }
         part
@@ -180,6 +191,7 @@ impl EvalCache {
         anyhow::ensure!(!ds.is_empty(), "evaluation cache wants a non-empty holdout");
         let model = Arc::clone(backend.mapped());
         let meta = Arc::clone(backend.stack_meta());
+        let device = backend.device().cloned();
         let layers = model.layers.len();
         let n = ds.len();
         let dim = ds.dim();
@@ -203,7 +215,7 @@ impl EvalCache {
             backend.plan().layers.iter().map(|l| l.adc_bits).collect();
 
         let idxs: Vec<usize> = (0..n).collect();
-        let results = run_examples(&model, &meta, &bits, 0, &feats, dim, &idxs);
+        let results = run_examples(&model, &meta, &bits, device.as_deref(), 0, &feats, dim, &idxs);
         stats.layer_forwards += layers * n;
 
         let mut acts: Vec<Vec<f32>> = Vec::with_capacity(layers + 1);
@@ -232,6 +244,7 @@ impl EvalCache {
         let mut cache = EvalCache {
             model,
             meta,
+            device,
             labels,
             num_classes,
             dims,
@@ -349,6 +362,7 @@ impl EvalCache {
                 &self.model,
                 &self.meta,
                 &cand_bits,
+                self.device.as_deref(),
                 diverge,
                 &self.acts[diverge],
                 self.dims[diverge],

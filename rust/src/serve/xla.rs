@@ -13,6 +13,13 @@
 //! Both flavors have a graph-fixed batch shape; this backend owns the
 //! split/zero-pad logic that previously lived in `coordinator/evaluator.rs`
 //! (pad rows carry label `-1`, so they never count as correct).
+//!
+//! The reram logits graphs are dispatched **one example per run**: their
+//! `_act_quantize` censuses the whole batch for the activation qstep,
+//! while every Rust backend quantizes per example row, so multi-row
+//! dispatch made a row's logits depend on its batch mates. Single-row
+//! dispatch (zero-padded to the graph's fixed batch) collapses the
+//! batch-global census to the row's own — see `XlaBackend::per_row`.
 
 use std::sync::Arc;
 
@@ -43,6 +50,15 @@ pub struct XlaBackend {
     native_batch: usize,
     input_dim: usize,
     num_classes: usize,
+    /// dispatch one example per graph run, zero-padded to the fixed batch
+    /// shape. The reram graphs' `_act_quantize` takes its activation
+    /// qstep over the *whole batch*, while every Rust backend quantizes
+    /// per example row — so a row's logits used to depend on which other
+    /// rows shared its batch. With a single real row per dispatch the
+    /// batch-global census reduces to that row's own (zero pad rows never
+    /// raise a max-abs census), restoring batch-composition invariance at
+    /// the cost of one graph run per example.
+    per_row: bool,
 }
 
 impl std::fmt::Debug for XlaBackend {
@@ -76,6 +92,7 @@ impl XlaBackend {
             native_batch: entry.batch,
             input_dim: entry.input_numel(),
             num_classes: entry.num_classes,
+            per_row: false,
         })
     }
 
@@ -144,11 +161,17 @@ impl XlaBackend {
             native_batch: x_spec.shape[0],
             input_dim: x_spec.shape[1..].iter().product(),
             num_classes,
+            // reram graphs quantize activations with a batch-global qstep
+            // — see the `per_row` field: single-row dispatch makes their
+            // outputs batch-composition invariant and consistent with the
+            // Rust backends' per-row quantization
+            per_row: graph_name.starts_with("reram"),
         })
     }
 
-    /// Split `x` into native-batch chunks, zero-padding the last; calls
-    /// `run` with (chunk literal, rows valid in this chunk).
+    /// Split `x` into native-batch chunks (single-example chunks when
+    /// `per_row` is set), zero-padding the tail of each; calls `run` with
+    /// (chunk literal, rows valid in this chunk).
     fn for_chunks<F>(&self, x: &Tensor, mut run: F) -> Result<()>
     where
         F: FnMut(&Tensor, usize, usize) -> Result<()>,
@@ -163,12 +186,13 @@ impl XlaBackend {
             self.name,
             self.input_dim
         );
+        let step = if self.per_row { 1 } else { self.native_batch };
         let data = x.data();
         let mut chunk_shape = vec![self.native_batch];
         chunk_shape.extend_from_slice(&shape[1..]);
         let mut pos = 0usize;
         while pos < b {
-            let valid = (b - pos).min(self.native_batch);
+            let valid = (b - pos).min(step);
             let mut chunk = vec![0.0f32; self.native_batch * dim];
             chunk[..valid * dim].copy_from_slice(&data[pos * dim..(pos + valid) * dim]);
             let xt = Tensor::new(chunk_shape.clone(), chunk)?;

@@ -265,7 +265,8 @@ fn a011_replica_budget_underflow_detected() {
         let mut plan = DeploymentPlan::from_policy(&model, ResolutionPolicy::Percentile(0.999));
         // any factor under 1.0 prices below one bottleneck copy
         let factor = 0.05 + rng.next_f32() as f64 * 0.9;
-        let spent = timing::fill_replicas_factor(&model, &mut plan, factor);
+        let budget = timing::factor_budget_cells(&model, &plan, factor);
+        let spent = timing::fill_replicas(&model, &mut plan, budget);
         ensure(spent == 0, format!("underflow budget bought {spent} cells"))?;
         let d = audit::replica_budget_diagnostic(&model, &plan, factor, spent)
             .ok_or("A011 not reported")?;
@@ -322,7 +323,8 @@ fn clean_mixed_layout_deploy_audits_clean() {
     );
 
     let mut plan = DeploymentPlan::from_policy(&mapped, ResolutionPolicy::Percentile(0.999));
-    let spent = timing::fill_replicas_factor(&mapped, &mut plan, 2.0);
+    let budget = timing::factor_budget_cells(&mapped, &plan, 2.0);
+    let spent = timing::fill_replicas(&mapped, &mut plan, budget);
     assert!(spent > 0, "a 2x budget must buy at least one replica");
     let rep = audit::audit_deployment(&mapped, &plan);
     assert!(rep.is_clean(), "clean deploy reported findings:\n{rep}");

@@ -32,7 +32,8 @@ fn planted_fixture_audit_json_matches_golden() {
     let mapped = mapper::map_model_with(&named, Some(ReorderConfig::default()))
         .expect("planted fixture maps");
     let mut plan = DeploymentPlan::from_policy(&mapped, ResolutionPolicy::Percentile(0.999));
-    timing::fill_replicas_factor(&mapped, &mut plan, 2.0);
+    let budget = timing::factor_budget_cells(&mapped, &plan, 2.0);
+    timing::fill_replicas(&mapped, &mut plan, budget);
     let rep = audit::audit_deployment(&mapped, &plan);
     assert_eq!(
         report::audit_json(&rep).to_string(),
