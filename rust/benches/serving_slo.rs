@@ -1,0 +1,262 @@
+//! §Perf: persistent work-stealing executor + SLO-aware batch assembly.
+//!
+//! Serves the bottleneck-skewed fixture (replica-sharded, so every batch
+//! fans out across replica lanes) under two regimes:
+//!
+//! * **baseline** — `ParallelMode::ScopedSpawn` (fresh OS threads per
+//!   parallel region, the pre-executor behavior) with the greedy
+//!   drain-now batcher;
+//! * **executor** — the persistent work-stealing pool
+//!   (`ParallelMode::Executor`) with the SLO-aware batcher
+//!   ([`SloPolicy::from_timing`], priced from the plan's `reram::timing`
+//!   cycle model and calibrated against a measured batch).
+//!
+//! Acceptance bars (full run, recorded-not-enforced under `--smoke`):
+//!
+//! * outputs **bit-identical** across both modes at every sweep point;
+//! * >= 1.3x p99 latency at a fixed paced offered load;
+//! * >= 1.2x throughput at small batches (`max_batch` <= 4);
+//! * **zero OS-thread creation** inside the steady-state executor-mode
+//!   serving loop (the pool's spawn counter must not move).
+//!
+//! Results land in `BENCH_slo.json`.
+//!
+//! Run: `cargo bench --bench serving_slo [-- --smoke]`
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bitslice_reram::report;
+use bitslice_reram::reram::timing;
+use bitslice_reram::serve::{
+    CrossbarBackend, InferenceBackend, ServeOptions, ServingEngine, SharedBackend, SloPolicy,
+};
+use bitslice_reram::tensor::Tensor;
+use bitslice_reram::util::fixtures;
+use bitslice_reram::util::json::{num, obj, s, Json};
+use bitslice_reram::util::pool::{
+    os_threads_spawned, set_parallel_mode, worker_threads, ParallelMode,
+};
+use bitslice_reram::util::rng::Rng;
+
+const IN_DIM: usize = 64;
+const P99_FLOOR: f64 = 1.3;
+const SMALL_BATCH_FLOOR: f64 = 1.2;
+
+/// Submit `requests` at a fixed pace (open-loop offered load), wait for
+/// every response, return (outputs, serving row).
+fn drive_paced(
+    backend: SharedBackend,
+    opts: ServeOptions,
+    requests: &[Vec<f32>],
+    interval: Duration,
+) -> (Vec<Vec<f32>>, report::ServingRow) {
+    let eng = ServingEngine::start(backend, opts).expect("start serving engine");
+    let mut pending = Vec::with_capacity(requests.len());
+    let start = Instant::now();
+    for (i, x) in requests.iter().enumerate() {
+        // pace against the schedule, not the previous send, so a slow
+        // server cannot slow the offered load down
+        let due = interval * i as u32;
+        if let Some(wait) = due.checked_sub(start.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        pending.push(eng.submit(x.clone()).expect("submit"));
+    }
+    let out: Vec<Vec<f32>> = pending
+        .into_iter()
+        .map(|p| p.wait().expect("response"))
+        .collect();
+    let stats = eng.shutdown();
+    println!(
+        "{:<24}: p50 {:.3} ms, p99 {:.3} ms, mean batch {:.1}, {} violations",
+        stats.backend,
+        stats.latency_ms(0.50),
+        stats.latency_ms(0.99),
+        stats.mean_batch,
+        stats.slo_violations,
+    );
+    (out, stats.row())
+}
+
+/// Closed-loop small-batch serving: submit everything, wait for all.
+fn drive_closed(
+    backend: SharedBackend,
+    opts: ServeOptions,
+    requests: &[Vec<f32>],
+) -> (Vec<Vec<f32>>, report::ServingRow) {
+    let eng = ServingEngine::start(backend, opts).expect("start serving engine");
+    let out = eng.infer_many(requests.to_vec()).expect("serving requests");
+    let stats = eng.shutdown();
+    println!(
+        "{:<24}: {:>8.0} req/s, p99 {:.3} ms, mean batch {:.1}",
+        stats.backend,
+        stats.throughput_rps,
+        stats.latency_ms(0.99),
+        stats.mean_batch
+    );
+    (out, stats.row())
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let paced_n = if smoke { 64 } else { 384 };
+    let closed_n = if smoke { 96 } else { 512 };
+    let stack = fixtures::bottleneck_stack(0x510);
+
+    // replica-sharded deployment: every batch fans out across lanes, so
+    // per-call thread spawning (the baseline) sits on the hot path
+    let base = CrossbarBackend::with_bits("xbar@slo", &stack, [3, 3, 3, 1])?;
+    let model = base.mapped().clone();
+    let mut plan = base.plan().clone();
+    let timing0 = timing::plan_timing(&model, &plan);
+    let bneck = timing0.bottleneck().expect("programmed stack");
+    timing::fill_replicas(&model, &mut plan, 2 * model.layers[bneck].fabricated_cells());
+    assert!(plan.layers[bneck].replicas >= 2, "budget buys replicas");
+    let sharded = base.replan("xbar@slo", plan.clone())?;
+    let timing1 = timing::plan_timing(&model, &plan);
+    let backend: SharedBackend = Arc::new(sharded);
+
+    // reference outputs, computed once on the executor path
+    set_parallel_mode(ParallelMode::Executor);
+    let mut rng = Rng::new(11);
+    let paced_reqs: Vec<Vec<f32>> = (0..paced_n)
+        .map(|_| (0..IN_DIM).map(|_| rng.next_f32()).collect())
+        .collect();
+    let closed_reqs: Vec<Vec<f32>> = (0..closed_n)
+        .map(|_| (0..IN_DIM).map(|_| rng.next_f32()).collect())
+        .collect();
+
+    // calibrate the cycle model against one measured single-example
+    // batch, so the SLO policy prices service time in real wall ms
+    harness::section("calibration (executor mode, batch 1)");
+    let x1 = Tensor::new(vec![1, IN_DIM], paced_reqs[0].clone())?;
+    let cal = harness::bench("sharded infer_batch b=1", Duration::from_millis(200), || {
+        let _ = std::hint::black_box(backend.infer_batch(&x1).unwrap());
+    });
+    let m1_ms = cal.mean.as_secs_f64() * 1e3;
+    let model_ms_per_example =
+        (timing1.pipeline_fill_cycles() as f64 + timing1.bottleneck_cycles()) / 1000.0;
+    let ms_per_kcycle = m1_ms / model_ms_per_example.max(1e-12);
+    let max_batch = 8usize;
+    let mut policy = SloPolicy::from_timing(&timing1, 0.0, ms_per_kcycle);
+    // target: the predicted full-batch service plus ~4 arrivals of slack
+    policy.target_ms = policy.predicted_service_ms(max_batch) + 4.0 * m1_ms;
+    let interval = Duration::from_secs_f64(m1_ms / 1e3);
+    println!(
+        "batch-1 mean {m1_ms:.3} ms -> {ms_per_kcycle:.4} ms/kcycle, \
+         SLO target {:.3} ms, offered interval {:.3} ms",
+        policy.target_ms,
+        interval.as_secs_f64() * 1e3
+    );
+
+    // fixed offered load: executor + SLO batcher vs scoped-spawn + greedy
+    harness::section(&format!("paced load: {paced_n} requests, 1 worker"));
+    let paced_opts = |slo: Option<SloPolicy>| ServeOptions {
+        max_batch,
+        workers: 1,
+        queue_depth: 1024,
+        slo,
+        ..ServeOptions::default()
+    };
+    set_parallel_mode(ParallelMode::ScopedSpawn);
+    let (paced_base_out, paced_base_row) =
+        drive_paced(backend.clone(), paced_opts(None), &paced_reqs, interval);
+    set_parallel_mode(ParallelMode::Executor);
+    // warm the pool, then freeze the spawn counter over the whole
+    // steady-state loop — the executor must not create a single thread
+    let _ = backend.infer_batch(&x1)?;
+    let spawned_before = os_threads_spawned();
+    let (paced_exec_out, paced_exec_row) =
+        drive_paced(backend.clone(), paced_opts(Some(policy)), &paced_reqs, interval);
+    let spawned_after = os_threads_spawned();
+    assert_eq!(
+        spawned_after, spawned_before,
+        "steady-state serving must not spawn OS threads (executor pool only)"
+    );
+    assert_eq!(
+        paced_base_out, paced_exec_out,
+        "paced sweep point: outputs must be bit-identical across modes"
+    );
+    let p99_speedup = paced_base_row.latency_p99_ms / paced_exec_row.latency_p99_ms.max(1e-12);
+    println!(
+        "p99: {:.3} -> {:.3} ms ({p99_speedup:.2}x)",
+        paced_base_row.latency_p99_ms, paced_exec_row.latency_p99_ms
+    );
+
+    // small-batch throughput: closed loop, max_batch <= 4
+    harness::section(&format!("small batches: {closed_n} requests, max_batch 4"));
+    let small_opts = ServeOptions {
+        max_batch: 4,
+        workers: 2,
+        queue_depth: 1024,
+        ..ServeOptions::default()
+    };
+    set_parallel_mode(ParallelMode::ScopedSpawn);
+    let (small_base_out, small_base_row) = drive_closed(backend.clone(), small_opts, &closed_reqs);
+    set_parallel_mode(ParallelMode::Executor);
+    let (small_exec_out, small_exec_row) = drive_closed(backend.clone(), small_opts, &closed_reqs);
+    assert_eq!(
+        small_base_out, small_exec_out,
+        "small-batch sweep point: outputs must be bit-identical across modes"
+    );
+    let small_speedup = small_exec_row.throughput_rps / small_base_row.throughput_rps.max(1e-12);
+    println!(
+        "small-batch throughput: {:.0} -> {:.0} req/s ({small_speedup:.2}x)",
+        small_base_row.throughput_rps, small_exec_row.throughput_rps
+    );
+
+    let cores = worker_threads();
+    if smoke {
+        println!("(smoke run: speedup floors recorded, not enforced)");
+    } else if cores < 2 {
+        println!("(single-core host: no parallel regions to accelerate, floors skipped)");
+    } else {
+        assert!(
+            p99_speedup >= P99_FLOOR,
+            "SLO-aware executor serving only {p99_speedup:.2}x p99 (floor {P99_FLOOR}x)"
+        );
+        assert!(
+            small_speedup >= SMALL_BATCH_FLOOR,
+            "executor small-batch serving only {small_speedup:.2}x (floor {SMALL_BATCH_FLOOR}x)"
+        );
+        println!(
+            "OK: p99 {p99_speedup:.2}x >= {P99_FLOOR}x, \
+             small-batch {small_speedup:.2}x >= {SMALL_BATCH_FLOOR}x ({cores} cores)"
+        );
+    }
+
+    let doc = obj(vec![
+        ("smoke", Json::Bool(smoke)),
+        ("cores", num(cores as f64)),
+        ("paced_requests", num(paced_n as f64)),
+        ("closed_requests", num(closed_n as f64)),
+        ("batch1_mean_ms", num(m1_ms)),
+        ("ms_per_kcycle", num(ms_per_kcycle)),
+        ("slo_target_ms", num(policy.target_ms)),
+        ("offered_interval_ms", num(interval.as_secs_f64() * 1e3)),
+        ("p99_speedup", num(p99_speedup)),
+        ("p99_floor", num(P99_FLOOR)),
+        ("small_batch_speedup", num(small_speedup)),
+        ("small_batch_floor", num(SMALL_BATCH_FLOOR)),
+        ("threads_spawned_in_loop", num((spawned_after - spawned_before) as f64)),
+        ("bit_identical", Json::Bool(true)),
+        ("bottleneck_layer", s(&timing1.layers[bneck].layer)),
+        ("timing", report::timing_json(&timing1)),
+        (
+            "serving",
+            report::serving_json(&[
+                paced_base_row,
+                paced_exec_row,
+                small_base_row,
+                small_exec_row,
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_slo.json", doc.to_string())?;
+    println!("wrote BENCH_slo.json");
+    Ok(())
+}

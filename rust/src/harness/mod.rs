@@ -22,6 +22,7 @@ use crate::reram::timing::{self, PipelineTiming};
 use crate::reram::{audit, energy, mapper, resolution, ResolutionPolicy};
 use crate::runtime::{Engine, Manifest};
 use crate::sparsity::{self, SliceStats, TracePoint};
+use crate::util::pool::{parallel_map, worker_threads};
 
 /// Everything a single training run produces.
 pub struct RunResult {
@@ -374,7 +375,10 @@ pub fn plan_search_report(
 /// and roll up mean/worst accuracy plus the per-layer slice-group
 /// variance of the sampled conductances. Fully deterministic: same
 /// backend, dataset, config and trial count always reproduce the same
-/// row, trial for trial.
+/// row, trial for trial — each trial's realization is seeded by its own
+/// index, so scoring them in parallel on the executor
+/// ([`crate::util::pool::parallel_map`], which returns results in trial
+/// order) changes nothing about the numbers.
 pub fn noise_report(
     backend: &crate::serve::CrossbarBackend,
     ds: &Dataset,
@@ -383,21 +387,30 @@ pub fn noise_report(
 ) -> Result<NoiseRow> {
     anyhow::ensure!(trials >= 1, "noise report needs at least one trial");
     let ideal_accuracy = crate::serve::accuracy(backend, ds)?.accuracy;
-    let mut trial_accuracies = Vec::with_capacity(trials);
-    let mut layer_variance = Vec::new();
-    for i in 0..trials {
+    let trial_results = parallel_map(trials, worker_threads(), |i| {
         let dm = DeviceModel::for_model(backend.mapped(), config.trial(i));
-        if i == 0 {
-            layer_variance = backend
+        // the variance roll-up is trial-0's realization, as before
+        let variance = (i == 0).then(|| {
+            backend
                 .mapped()
                 .layers
                 .iter()
                 .zip(dm.layer_variances())
                 .map(|(l, v)| (l.name.clone(), v))
-                .collect();
-        }
+                .collect::<Vec<_>>()
+        });
         let noisy = backend.with_device(&format!("mc-trial-{i}"), Arc::new(dm))?;
-        trial_accuracies.push(crate::serve::accuracy(&noisy, ds)?.accuracy);
+        let accuracy = crate::serve::accuracy(&noisy, ds)?.accuracy;
+        Ok::<_, anyhow::Error>((accuracy, variance))
+    });
+    let mut trial_accuracies = Vec::with_capacity(trials);
+    let mut layer_variance = Vec::new();
+    for result in trial_results {
+        let (accuracy, variance) = result?;
+        if let Some(v) = variance {
+            layer_variance = v;
+        }
+        trial_accuracies.push(accuracy);
     }
     let mean_accuracy = trial_accuracies.iter().sum::<f64>() / trials as f64;
     let worst_accuracy = trial_accuracies.iter().copied().fold(f64::INFINITY, f64::min);

@@ -97,18 +97,28 @@ pub struct ServingRow {
     pub latency_mean_ms: f64,
     pub latency_p50_ms: f64,
     pub latency_p99_ms: f64,
+    /// the engine's latency target when it served under an SLO policy
+    pub slo_ms: Option<f64>,
+    /// requests that finished over the target (0 when `slo_ms` is None)
+    pub slo_violations: usize,
 }
 
-/// Render the serving-throughput table (markdown).
+/// Render the serving-throughput table (markdown). The SLO column shows
+/// `violations/requests @ target` for rows served under a policy, `-`
+/// otherwise.
 pub fn serving_table(rows: &[ServingRow]) -> String {
     let mut out = String::new();
     out.push_str(
-        "| Backend | Max batch | Workers | Requests | Errors | Mean batch | req/s | p50 ms | p99 ms |\n\
-         |---------|-----------|---------|----------|--------|------------|-------|--------|--------|\n",
+        "| Backend | Max batch | Workers | Requests | Errors | Mean batch | req/s | p50 ms | p99 ms | SLO |\n\
+         |---------|-----------|---------|----------|--------|------------|-------|--------|--------|-----|\n",
     );
     for r in rows {
+        let slo = match r.slo_ms {
+            Some(target) => format!("{}/{} @ {target} ms", r.slo_violations, r.requests),
+            None => "-".to_string(),
+        };
         out.push_str(&format!(
-            "| {} | {} | {} | {} | {} | {:.1} | {:.0} | {:.3} | {:.3} |\n",
+            "| {} | {} | {} | {} | {} | {:.1} | {:.0} | {:.3} | {:.3} | {} |\n",
             r.backend,
             r.max_batch,
             r.workers,
@@ -118,6 +128,7 @@ pub fn serving_table(rows: &[ServingRow]) -> String {
             r.throughput_rps,
             r.latency_p50_ms,
             r.latency_p99_ms,
+            slo,
         ));
     }
     out
@@ -143,6 +154,16 @@ pub fn serving_json(rows: &[ServingRow]) -> Json {
                             ("p50", num(r.latency_p50_ms)),
                             ("p99", num(r.latency_p99_ms)),
                         ]),
+                    ),
+                    (
+                        "slo",
+                        match r.slo_ms {
+                            Some(target) => obj(vec![
+                                ("target_ms", num(target)),
+                                ("violations", num(r.slo_violations as f64)),
+                            ]),
+                            None => Json::Null,
+                        },
                     ),
                 ])
             })
@@ -732,6 +753,8 @@ mod tests {
             latency_mean_ms: 3.2,
             latency_p50_ms: 2.9,
             latency_p99_ms: 9.4,
+            slo_ms: None,
+            slo_violations: 0,
         }
     }
 
@@ -742,6 +765,12 @@ mod tests {
         assert!(t.contains("| 32 |"));
         assert!(t.contains("842"));
         assert!(t.contains("9.400"));
+        assert!(t.contains("| - |"), "no SLO policy renders as a dash: {t}");
+        let mut slo_row = serving_row();
+        slo_row.slo_ms = Some(10.0);
+        slo_row.slo_violations = 12;
+        let t = serving_table(&[slo_row]);
+        assert!(t.contains("| 12/1000 @ 10 ms |"), "{t}");
     }
 
     #[test]
@@ -755,6 +784,14 @@ mod tests {
         assert_eq!(row.get("errors").unwrap().as_usize(), Some(7));
         let lat = row.get("latency_ms").unwrap();
         assert_eq!(lat.get("p99").unwrap().as_f64(), Some(9.4));
+        assert!(matches!(row.get("slo"), Some(Json::Null)), "no policy -> null slo");
+        let mut slo_row = serving_row();
+        slo_row.slo_ms = Some(10.0);
+        slo_row.slo_violations = 12;
+        let back = crate::util::json::parse(&serving_json(&[slo_row]).to_string()).unwrap();
+        let slo = back.as_arr().unwrap()[0].get("slo").unwrap();
+        assert_eq!(slo.get("target_ms").unwrap().as_f64(), Some(10.0));
+        assert_eq!(slo.get("violations").unwrap().as_usize(), Some(12));
     }
 
     fn plan_row() -> PlanRow {

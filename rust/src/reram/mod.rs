@@ -144,6 +144,39 @@
 //! `bottleneck_cycles`, `throughput_per_kcycle` and
 //! `pipeline_fill_cycles` roll-ups.
 //!
+//! # Threading / scheduling convention (executor lifecycle, determinism)
+//!
+//! Every hot parallel region — batch rows in the serving backends,
+//! `sim::forward` chunks, replica lanes in the sharded path, evaluation-
+//! cache candidate scoring, Monte-Carlo noise trials — runs on **one
+//! long-lived work-stealing executor**
+//! ([`crate::util::pool::executor`]): per-worker deques, round-robin
+//! injection, idle workers steal, and nested scopes help-first steal
+//! their own tasks so a region started from inside a worker can never
+//! deadlock. The pool spawns its [`crate::util::pool::worker_threads`]
+//! workers once per process (override with the `RERAM_THREADS` env var;
+//! CI and benches use it to pin parallelism) and **never again** —
+//! steady-state serving creates zero OS threads, which
+//! [`crate::util::pool::os_threads_spawned`] asserts in the SLO bench. A
+//! task panic fails its submitting scope, not the pool: workers catch
+//! the unwind and keep serving.
+//!
+//! **Determinism:** scheduling is free, results are not. Every parallel
+//! region assigns output **by index** (chunk index, batch-row index, or
+//! replica-lane row claims scattered back by row) and keeps each item's
+//! reduction order fixed, so executor, scoped-spawn
+//! ([`crate::util::pool::ParallelMode`] — the A/B baseline kept for
+//! benches) and serial execution are bit-identical, whatever order
+//! steals happen in.
+//!
+//! **Scratch reuse:** workers own persistent type-keyed scratch slots
+//! ([`crate::util::pool::with_scratch`]); the wave-pack buffers in
+//! [`sim::SimScratch`] and the quantize/accumulate vectors are borrowed
+//! from the slot for a chunk and returned, so they are reused not just
+//! within one batch but **across** batches and callers — the hot path
+//! stops paying per-call allocation exactly where it stopped paying
+//! per-call thread spawns.
+//!
 //! # Bit-order convention (LSB-first `adc_bits` vs MSB-first `XB_k`)
 //!
 //! Every per-slice array in this codebase — `adc_bits: [u32; N_SLICES]`,

@@ -10,7 +10,7 @@
 
 use crate::quant::{self, N_SLICES};
 use crate::tensor::Tensor;
-use crate::util::pool::{parallel_map, worker_threads};
+use crate::util::pool::{parallel_map, with_scratch, worker_threads};
 
 use super::crossbar::{pack_code_wave, StorageFormat};
 use super::device::LayerDevice;
@@ -339,8 +339,10 @@ pub fn forward_codes(layer: &LayerMapping, a_code: &[u8], adc_bits: &[u32; N_SLI
 /// (accumulate all examples per cell pass) was implemented and measured
 /// 0.68x — the per-example current accumulators evict the tile from L1 —
 /// so this simpler form is kept; it already runs at ~1e10 cell-ops/s,
-/// 100x over the DESIGN.md target. Examples are chunked per worker so each
-/// thread reuses one [`SimScratch`] across its whole share of the batch.
+/// 100x over the DESIGN.md target. Examples are chunked per worker and
+/// each chunk borrows the executor worker's persistent scratch slot
+/// ([`crate::util::pool::with_scratch`]), so the [`SimScratch`] wave-pack
+/// buffers are reused not just within a batch but **across** batches.
 pub fn forward(layer: &LayerMapping, x: &Tensor, adc_bits: &[u32; N_SLICES]) -> Tensor {
     let shape = x.shape();
     assert_eq!(shape.len(), 2);
@@ -353,17 +355,17 @@ pub fn forward(layer: &LayerMapping, x: &Tensor, adc_bits: &[u32; N_SLICES]) -> 
     let parts = parallel_map(b.div_ceil(chunk), threads, |ci| {
         let lo = ci * chunk;
         let hi = (lo + chunk).min(b);
-        let mut scratch = SimScratch::default();
-        let mut raw = Vec::new();
-        let mut codes = Vec::new();
-        let mut part = Vec::with_capacity((hi - lo) * layer.cols);
-        for i in lo..hi {
-            let a_step = act_quantize_into(&data[i * rows..(i + 1) * rows], &mut codes);
-            let scale = layer.step * a_step;
-            forward_codes_into(layer, &codes, adc_bits, &mut scratch, &mut raw);
-            part.extend(raw.iter().map(|&v| v as f32 * scale));
-        }
-        part
+        with_scratch::<(SimScratch, Vec<i64>, Vec<u8>), _>(|state| {
+            let (scratch, raw, codes) = state;
+            let mut part = Vec::with_capacity((hi - lo) * layer.cols);
+            for i in lo..hi {
+                let a_step = act_quantize_into(&data[i * rows..(i + 1) * rows], codes);
+                let scale = layer.step * a_step;
+                forward_codes_into(layer, codes, adc_bits, scratch, raw);
+                part.extend(raw.iter().map(|&v| v as f32 * scale));
+            }
+            part
+        })
     });
     let mut data = Vec::with_capacity(b * layer.cols);
     for p in parts {

@@ -20,15 +20,20 @@
 //! When the plan carries per-layer replicas
 //! ([`crate::reram::planner::PlanLayer::replicas`] > 1 anywhere),
 //! `infer_batch` switches to a layer-major path: each layer processes the
-//! whole batch before the next starts, with the batch rows sharded across
-//! the layer's replica handles ([`mapper::MappedModel::replicated`] —
-//! `Arc`s on the same tiles, one per shard thread via
-//! [`crate::util::pool::parallel_map`]). Rows are independent and every
-//! shard runs the exact per-row pipeline of the unsharded path, so the
-//! result is **bit-identical** to it — replication buys wall-clock on the
-//! bottleneck layers, never a different answer. Shards are capped at the
-//! host's worker count: simulated replicas beyond the cores can't run
-//! anywhere (physical ones would).
+//! whole batch before the next starts, with one **lane** per replica
+//! handle ([`mapper::MappedModel::replicated`] — `Arc`s on the same
+//! tiles). Lanes run as tasks on the persistent executor
+//! ([`crate::util::pool::parallel_map`]) and claim batch rows
+//! dynamically off a shared atomic counter — work stealing, not static
+//! even sharding: a lane that draws cheap rows simply claims more, so the
+//! slowest replica no longer sets the whole batch's latency. Each lane
+//! writes its finished rows back **by row index** into the layer's output
+//! buffer and every lane runs the exact per-row pipeline of the unsharded
+//! path, so the result is **bit-identical** to it regardless of claim
+//! order — replication buys wall-clock on the bottleneck layers, never a
+//! different answer. Lanes are capped at the host's worker count:
+//! simulated replicas beyond the cores can't run anywhere (physical ones
+//! would).
 
 use std::sync::Arc;
 
@@ -337,8 +342,10 @@ impl CrossbarBackend {
             in_dim,
             self.num_classes,
             self.intra_threads,
-            || (SimScratch::default(), Vec::new(), Vec::new()),
-            |(scratch, raw, codes), row| self.infer_tail(from_layer, row, scratch, raw, codes),
+            |state: &mut (SimScratch, Vec<i64>, Vec<u8>), row| {
+                let (scratch, raw, codes) = state;
+                self.infer_tail(from_layer, row, scratch, raw, codes)
+            },
         )
     }
 
@@ -470,8 +477,10 @@ impl CrossbarBackend {
     }
 
     /// Layer-major batch path for replicated plans: every layer runs the
-    /// whole batch, rows sharded across its replica handles in parallel.
-    /// Bit-identical to the row-major path (see the module docs).
+    /// whole batch, with one lane per replica handle claiming rows off a
+    /// shared counter (work stealing — see the module docs). Lanes write
+    /// by row index, so the result is bit-identical to the row-major path
+    /// no matter which lane ends up computing which row.
     fn infer_batch_sharded(&self, x: &Tensor) -> Result<Tensor> {
         let shape = x.shape();
         anyhow::ensure!(!shape.is_empty(), "batch tensor wants a leading axis");
@@ -486,7 +495,7 @@ impl CrossbarBackend {
         let cores = crate::util::pool::worker_threads();
         let replicas: Vec<usize> = self.plan.layers.iter().map(|l| l.replicas).collect();
         // one Arc handle per replica, all on the same tiles — the mapper's
-        // replica view is what each shard thread drives
+        // replica view is what each lane drives
         let rep = self.model.replicated(&replicas);
         let mut act: Vec<f32> = x.data().to_vec();
         let mut width = dim;
@@ -498,37 +507,48 @@ impl CrossbarBackend {
             .enumerate()
         {
             let out_w = handles[0].cols;
-            let shards = handles.len().min(cores).min(b.max(1));
-            let chunk = b.div_ceil(shards.max(1)).max(1);
-            let run_shard = |si: usize| -> Vec<f32> {
-                let mapping: &mapper::LayerMapping = &handles[si % handles.len()];
-                let (lo, hi) = (si * chunk, ((si + 1) * chunk).min(b));
-                let mut scratch = SimScratch::default();
-                let (mut raw, mut codes, mut row_out) = (Vec::new(), Vec::new(), Vec::new());
-                let mut part = Vec::with_capacity((hi - lo) * out_w);
-                for i in lo..hi {
-                    Self::layer_step(
-                        mapping,
-                        meta,
-                        &pl.adc_bits,
-                        self.layer_device(li),
-                        &act[i * width..(i + 1) * width],
-                        &mut scratch,
-                        &mut raw,
-                        &mut codes,
-                        &mut row_out,
-                    );
-                    part.extend_from_slice(&row_out);
-                }
-                part
+            let lanes = handles.len().min(cores).min(b.max(1)).max(1);
+            let device = self.layer_device(li);
+            let next_row = std::sync::atomic::AtomicUsize::new(0);
+            let act_ref: &[f32] = &act;
+            // Each lane owns one replica handle and claims rows one at a
+            // time; a lane stuck on an expensive row simply claims fewer.
+            let run_lane = |lane: usize| -> Vec<(usize, Vec<f32>)> {
+                let mapping: &mapper::LayerMapping = &handles[lane % handles.len()];
+                crate::util::pool::with_scratch::<(SimScratch, Vec<i64>, Vec<u8>), _>(|state| {
+                    let (scratch, raw, codes) = state;
+                    let mut part = Vec::new();
+                    let mut row_out = Vec::new();
+                    loop {
+                        let i = next_row.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= b {
+                            return part;
+                        }
+                        Self::layer_step(
+                            mapping,
+                            meta,
+                            &pl.adc_bits,
+                            device,
+                            &act_ref[i * width..(i + 1) * width],
+                            scratch,
+                            raw,
+                            codes,
+                            &mut row_out,
+                        );
+                        part.push((i, std::mem::take(&mut row_out)));
+                    }
+                })
             };
-            let n_shards = b.div_ceil(chunk);
-            let mut next = Vec::with_capacity(b * out_w);
-            if n_shards <= 1 {
-                next.extend(run_shard(0));
+            let mut next = vec![0.0f32; b * out_w];
+            if lanes <= 1 {
+                for (i, row) in run_lane(0) {
+                    next[i * out_w..(i + 1) * out_w].copy_from_slice(&row);
+                }
             } else {
-                for part in crate::util::pool::parallel_map(n_shards, n_shards, run_shard) {
-                    next.extend(part);
+                for part in crate::util::pool::parallel_map(lanes, lanes, run_lane) {
+                    for (i, row) in part {
+                        next[i * out_w..(i + 1) * out_w].copy_from_slice(&row);
+                    }
                 }
             }
             act = next;
@@ -562,8 +582,10 @@ impl InferenceBackend for CrossbarBackend {
             self.input_dim,
             self.num_classes,
             self.intra_threads,
-            || (SimScratch::default(), Vec::new(), Vec::new()),
-            |(scratch, raw, codes), row| self.infer_tail(0, row, scratch, raw, codes),
+            |state: &mut (SimScratch, Vec<i64>, Vec<u8>), row| {
+                let (scratch, raw, codes) = state;
+                self.infer_tail(0, row, scratch, raw, codes)
+            },
         )
     }
 }

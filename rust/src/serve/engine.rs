@@ -9,6 +9,14 @@
 //! and aggregate throughput are recorded and exported as
 //! [`crate::report::ServingRow`]s.
 //!
+//! With an [`SloPolicy`] attached ([`ServeOptions::slo`]), batch assembly
+//! becomes latency-aware: workers pull with
+//! [`crate::util::pool::Receiver::recv_batch_by`], keeping a batch open
+//! until the oldest queued request's age plus the predicted service time
+//! (a linear model priced from the plan's [`crate::reram::timing`]
+//! cycles) approaches the SLO target — a batch closes when waiting longer
+//! would endanger the deadline, not only when `max_batch` fills.
+//!
 //! Because host backends are batch-composition invariant (see the
 //! `serve` module contract), a request's result does not depend on which
 //! batch the engine happened to pack it into.
@@ -37,6 +45,8 @@ pub struct ServeOptions {
     /// ceiling on the auto-sized pool (`workers == 0`); explicit `workers`
     /// values are taken as-is
     pub worker_cap: usize,
+    /// latency target; `None` keeps the greedy drain-now batcher
+    pub slo: Option<SloPolicy>,
 }
 
 impl Default for ServeOptions {
@@ -46,7 +56,64 @@ impl Default for ServeOptions {
             workers: 0,
             queue_depth: 256,
             worker_cap: 8,
+            slo: None,
         }
+    }
+}
+
+/// Latency SLO for batch assembly: a target plus a linear service-time
+/// model (`fixed + per_example * batch`). [`Self::from_timing`] prices
+/// the model from the active plan's [`crate::reram::timing`] cycle
+/// counts: the pipeline-fill latency is the fixed term and the
+/// bottleneck stage's effective cycles the per-example term.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloPolicy {
+    /// enqueue→response latency target (ms) a request should meet
+    pub target_ms: f64,
+    /// batch-size-independent service cost (ms)
+    pub service_fixed_ms: f64,
+    /// marginal service cost per batched example (ms)
+    pub service_per_example_ms: f64,
+}
+
+impl SloPolicy {
+    /// A bare target with zero service estimates: batches stay open until
+    /// the oldest request's age alone reaches the target.
+    pub fn new(target_ms: f64) -> SloPolicy {
+        SloPolicy {
+            target_ms,
+            service_fixed_ms: 0.0,
+            service_per_example_ms: 0.0,
+        }
+    }
+
+    /// Price the service model from a plan's pipeline timing.
+    /// `ms_per_kcycle` converts model cycles to wall milliseconds (the
+    /// deployment's clock; calibrate against a measured batch when
+    /// simulating).
+    pub fn from_timing(
+        timing: &crate::reram::timing::PipelineTiming,
+        target_ms: f64,
+        ms_per_kcycle: f64,
+    ) -> SloPolicy {
+        SloPolicy {
+            target_ms,
+            service_fixed_ms: timing.pipeline_fill_cycles() as f64 / 1000.0 * ms_per_kcycle,
+            service_per_example_ms: timing.bottleneck_cycles() / 1000.0 * ms_per_kcycle,
+        }
+    }
+
+    /// Predicted wall-clock service time (ms) for a batch of `batch`.
+    pub fn predicted_service_ms(&self, batch: usize) -> f64 {
+        self.service_fixed_ms + self.service_per_example_ms * batch as f64
+    }
+
+    /// Latest instant a batch holding a request enqueued at `enqueued`
+    /// may stay open: waiting past it leaves less than the predicted
+    /// worst-case (`max_batch`-sized) service time before the target.
+    fn close_deadline(&self, enqueued: Instant, max_batch: usize) -> Instant {
+        let slack_ms = (self.target_ms - self.predicted_service_ms(max_batch)).max(0.0);
+        enqueued + Duration::from_secs_f64(slack_ms / 1e3)
     }
 }
 
@@ -99,18 +166,26 @@ pub struct ServingStats {
     pub infer_time: Duration,
     pub throughput_rps: f64,
     pub mean_batch: f64,
+    /// the SLO target the engine served under, when one was set (ms)
+    pub slo_ms: Option<f64>,
+    /// requests whose enqueue→response latency exceeded the target
+    pub slo_violations: usize,
     /// per-request enqueue→response latencies, sorted ascending (ms)
     pub latencies_ms: Vec<f64>,
 }
 
 impl ServingStats {
-    /// Latency percentile in milliseconds, `p` in [0, 1].
+    /// Latency percentile in milliseconds, `p` in [0, 1]. Ceiling
+    /// nearest-rank — the repo-wide percentile convention shared with
+    /// `SliceCurrents::percentile` (p99 of 100 samples is the 99th
+    /// smallest, never interpolated between observations).
     pub fn latency_ms(&self, p: f64) -> f64 {
-        if self.latencies_ms.is_empty() {
+        let n = self.latencies_ms.len();
+        if n == 0 {
             return 0.0;
         }
-        let idx = ((self.latencies_ms.len() as f64 - 1.0) * p.clamp(0.0, 1.0)).round() as usize;
-        self.latencies_ms[idx]
+        let rank = (p.clamp(0.0, 1.0) * n as f64).ceil() as usize;
+        self.latencies_ms[rank.saturating_sub(1).min(n - 1)]
     }
 
     pub fn mean_latency_ms(&self) -> f64 {
@@ -133,6 +208,8 @@ impl ServingStats {
             latency_mean_ms: self.mean_latency_ms(),
             latency_p50_ms: self.latency_ms(0.50),
             latency_p99_ms: self.latency_ms(0.99),
+            slo_ms: self.slo_ms,
+            slo_violations: self.slo_violations,
         }
     }
 }
@@ -189,12 +266,19 @@ impl ServingEngine {
             let backend = backend.clone();
             let stats = stats.clone();
             let max_batch = opts.max_batch.max(1);
+            let slo = opts.slo;
             let dim = info.input_dim;
             let classes = info.num_classes;
             let handle = std::thread::Builder::new()
                 .name(format!("serve-{w}"))
                 .spawn(move || {
-                    while let Some(reqs) = rx.recv_batch(max_batch) {
+                    let next_batch = || match slo {
+                        Some(policy) => rx.recv_batch_by(max_batch, |req: &InferRequest| {
+                            Some(policy.close_deadline(req.enqueued, max_batch))
+                        }),
+                        None => rx.recv_batch(max_batch),
+                    };
+                    while let Some(reqs) = next_batch() {
                         let b = reqs.len();
                         let mut xdata = Vec::with_capacity(b * dim);
                         for r in &reqs {
@@ -337,6 +421,11 @@ impl ServingEngine {
             inner.latencies.iter().map(|d| d.as_secs_f64() * 1e3).collect();
         latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
         let requests = inner.latencies.len();
+        let slo_ms = self.opts.slo.map(|p| p.target_ms);
+        let slo_violations = match slo_ms {
+            Some(target) => latencies_ms.iter().filter(|&&l| l > target).count(),
+            None => 0,
+        };
         ServingStats {
             backend: self.backend_name.clone(),
             max_batch: self.opts.max_batch.max(1),
@@ -356,6 +445,8 @@ impl ServingEngine {
             } else {
                 inner.batched_examples as f64 / inner.batches as f64
             },
+            slo_ms,
+            slo_violations,
             latencies_ms,
         }
     }
@@ -601,5 +692,118 @@ mod tests {
         assert_eq!(row.requests, 8);
         assert_eq!(row.workers, 2);
         assert!(row.latency_p50_ms <= row.latency_p99_ms);
+        assert_eq!(row.slo_ms, None);
+        assert_eq!(row.slo_violations, 0);
+    }
+
+    /// Ceiling nearest-rank, the `SliceCurrents::percentile` convention:
+    /// p50 of 10 samples is the 5th smallest, p99 the 10th — never an
+    /// interpolation between observations.
+    #[test]
+    fn latency_percentiles_use_ceiling_nearest_rank() {
+        let stats = ServingStats {
+            backend: "x".into(),
+            max_batch: 1,
+            workers: 1,
+            requests: 10,
+            batches: 10,
+            errors: 0,
+            elapsed: Duration::from_secs(1),
+            infer_time: Duration::ZERO,
+            throughput_rps: 10.0,
+            mean_batch: 1.0,
+            slo_ms: None,
+            slo_violations: 0,
+            latencies_ms: (1..=10).map(f64::from).collect(),
+        };
+        assert_eq!(stats.latency_ms(0.50), 5.0);
+        assert_eq!(stats.latency_ms(0.99), 10.0);
+        assert_eq!(stats.latency_ms(0.0), 1.0);
+        assert_eq!(stats.latency_ms(1.0), 10.0);
+        assert_eq!(stats.latency_ms(0.11), 2.0);
+    }
+
+    /// The linear service model priced from a pipeline timing: fill
+    /// cycles are the fixed term, bottleneck effective cycles the
+    /// per-example term.
+    #[test]
+    fn slo_policy_prices_service_time_from_timing() {
+        use crate::reram::timing::{LayerTiming, PipelineTiming};
+        let timing = PipelineTiming {
+            layers: vec![LayerTiming {
+                layer: "fc1/w".into(),
+                replicas: 2,
+                latency_cycles: 2000,
+                conversion_cycles: 2000,
+            }],
+        };
+        let policy = SloPolicy::from_timing(&timing, 10.0, 1.0);
+        assert_eq!(policy.target_ms, 10.0);
+        assert_eq!(policy.service_fixed_ms, 2.0);
+        assert_eq!(policy.service_per_example_ms, 1.0);
+        assert_eq!(policy.predicted_service_ms(4), 6.0);
+    }
+
+    /// With an SLO target far above the workload, a worker holds the
+    /// first request's batch open for late arrivals instead of draining
+    /// immediately — the whole set lands in one full batch.
+    #[test]
+    fn slo_batcher_holds_batches_open_for_late_arrivals() {
+        let backend: crate::serve::SharedBackend = Arc::new(SumBackend {
+            dim: 3,
+            classes: 2,
+            fail: false,
+        });
+        let eng = ServingEngine::start(
+            backend,
+            ServeOptions {
+                max_batch: 4,
+                workers: 1,
+                slo: Some(SloPolicy::new(10_000.0)),
+                ..ServeOptions::default()
+            },
+        )
+        .unwrap();
+        let first = eng.submit(vec![0.0; 3]).unwrap();
+        // the worker has ~10s of slack: these arrive well inside it
+        std::thread::sleep(Duration::from_millis(30));
+        let rest: Vec<_> = (0..3).map(|_| eng.submit(vec![0.0; 3]).unwrap()).collect();
+        assert!(first.wait().is_ok());
+        for p in rest {
+            assert!(p.wait().is_ok());
+        }
+        let stats = eng.shutdown();
+        assert_eq!(stats.requests, 4);
+        assert_eq!(stats.batches, 1, "batch should close on max_batch, not early");
+        assert_eq!(stats.mean_batch, 4.0);
+        assert_eq!(stats.slo_ms, Some(10_000.0));
+    }
+
+    /// An unmeetable target (0 ms) drains batches immediately and counts
+    /// every request as a violation.
+    #[test]
+    fn slo_violations_are_counted_against_the_target() {
+        let backend: crate::serve::SharedBackend = Arc::new(SumBackend {
+            dim: 3,
+            classes: 2,
+            fail: false,
+        });
+        let eng = ServingEngine::start(
+            backend,
+            ServeOptions {
+                max_batch: 4,
+                workers: 1,
+                slo: Some(SloPolicy::new(0.0)),
+                ..ServeOptions::default()
+            },
+        )
+        .unwrap();
+        let _ = eng.infer_many((0..6).map(|_| vec![0.0; 3]).collect()).unwrap();
+        let stats = eng.shutdown();
+        assert_eq!(stats.requests, 6);
+        assert_eq!(stats.slo_violations, 6, "0 ms target: every request violates");
+        let row = stats.row();
+        assert_eq!(row.slo_ms, Some(0.0));
+        assert_eq!(row.slo_violations, 6);
     }
 }

@@ -38,7 +38,7 @@ use crate::reram::device::DeviceModel;
 use crate::reram::mapper::MappedModel;
 use crate::reram::planner::{DeploymentPlan, SearchStats};
 use crate::reram::sim::SimScratch;
-use crate::util::pool::{parallel_map, worker_threads};
+use crate::util::pool::{parallel_map, with_scratch, worker_threads};
 
 use super::crossbar::{CrossbarBackend, StackMeta};
 
@@ -153,19 +153,16 @@ fn run_examples(
     let run_chunk = |ci: usize| {
         let lo = ci * chunk;
         let hi = ((ci + 1) * chunk).min(idxs.len());
-        let mut scratch = SimScratch::default();
-        let (mut raw, mut codes) = (Vec::new(), Vec::new());
-        let mut part = Vec::with_capacity(hi - lo);
-        for &e in &idxs[lo..hi] {
-            let row = &input[e * in_dim..(e + 1) * in_dim];
-            part.push((
-                e,
-                run_tail(
-                    model, meta, bits, device, from, row, &mut scratch, &mut raw, &mut codes,
-                ),
-            ));
-        }
-        part
+        with_scratch::<(SimScratch, Vec<i64>, Vec<u8>), _>(|state| {
+            let (scratch, raw, codes) = state;
+            let mut part = Vec::with_capacity(hi - lo);
+            for &e in &idxs[lo..hi] {
+                let row = &input[e * in_dim..(e + 1) * in_dim];
+                let tail = run_tail(model, meta, bits, device, from, row, scratch, raw, codes);
+                part.push((e, tail));
+            }
+            part
+        })
     };
     if n_chunks <= 1 {
         run_chunk(0)

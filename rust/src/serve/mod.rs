@@ -40,11 +40,11 @@ use anyhow::Result;
 
 use crate::data::Dataset;
 use crate::tensor::Tensor;
-use crate::util::pool::parallel_map;
+use crate::util::pool::{parallel_map, with_scratch};
 
 pub use self::crossbar::CrossbarBackend;
 pub use self::evalcache::EvalCache;
-pub use self::engine::{PendingInference, ServeOptions, ServingEngine, ServingStats};
+pub use self::engine::{PendingInference, ServeOptions, ServingEngine, ServingStats, SloPolicy};
 pub use self::reference::ReferenceBackend;
 pub use self::xla::XlaBackend;
 
@@ -205,22 +205,24 @@ pub fn accuracy(backend: &dyn InferenceBackend, ds: &Dataset) -> Result<Accuracy
 }
 
 /// Shared per-row batch driver for the host backends: validates the batch
-/// shape, splits rows into per-thread chunks (each with its own scratch
-/// state from `make_state`), and reassembles `(b, out_dim)` logits.
-/// `threads = 1` runs inline with no thread spawn — the right setting when
-/// a `ServingEngine` worker pool already provides the parallelism.
-pub(crate) fn rows_parallel<S, M, F>(
+/// shape, splits rows into per-thread chunks, and reassembles
+/// `(b, out_dim)` logits. Each chunk borrows its scratch state `S` from
+/// the running thread's persistent slot
+/// ([`crate::util::pool::with_scratch`]): on the long-lived executor
+/// workers and serving-engine threads the wave-pack buffers of one batch
+/// are reused by the next instead of reallocated per call. `threads = 1`
+/// runs inline with no task submission — the right setting when a
+/// `ServingEngine` worker pool already provides the parallelism.
+pub(crate) fn rows_parallel<S, F>(
     name: &str,
     x: &Tensor,
     input_dim: usize,
     out_dim: usize,
     threads: usize,
-    make_state: M,
     per_row: F,
 ) -> Result<Tensor>
 where
-    S: Send,
-    M: Fn() -> S + Sync,
+    S: Default + 'static,
     F: Fn(&mut S, &[f32]) -> Vec<f32> + Sync,
 {
     let shape = x.shape();
@@ -233,12 +235,13 @@ where
     );
     let data = x.data();
     let run_chunk = |lo: usize, hi: usize| -> Vec<f32> {
-        let mut state = make_state();
-        let mut part = Vec::with_capacity((hi - lo) * out_dim);
-        for i in lo..hi {
-            part.extend(per_row(&mut state, &data[i * dim..(i + 1) * dim]));
-        }
-        part
+        with_scratch::<S, _>(|state| {
+            let mut part = Vec::with_capacity((hi - lo) * out_dim);
+            for i in lo..hi {
+                part.extend(per_row(state, &data[i * dim..(i + 1) * dim]));
+            }
+            part
+        })
     };
     let threads = threads.clamp(1, b.max(1));
     let out = if threads == 1 {

@@ -149,8 +149,10 @@ impl InferenceBackend for ReferenceBackend {
             self.input_dim,
             self.num_classes,
             self.intra_threads,
-            || (Vec::new(), Vec::new()),
-            |(acc, codes), row| self.infer_one(row, acc, codes),
+            |state: &mut (Vec<i64>, Vec<u8>), row| {
+                let (acc, codes) = state;
+                self.infer_one(row, acc, codes)
+            },
         )
     }
 }

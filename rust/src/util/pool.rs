@@ -1,14 +1,568 @@
-//! Threading substrate: bounded SPSC channel + parallel-for.
+//! Threading substrate: persistent work-stealing executor, bounded
+//! channel + parallel-for.
 //!
-//! Replaces tokio for the two places the coordinator needs concurrency:
+//! Concurrency in this crate flows through three primitives:
 //!
+//! * [`executor`] — ONE long-lived worker pool per process, per-worker
+//!   deques with idle-steal, and a scoped submission API ([`Executor::scope`])
+//!   that accepts non-`'static` closures exactly like `std::thread::scope`.
+//!   Every hot parallel region ([`parallel_map`], [`parallel_for_chunks`],
+//!   the serving backends' intra-batch fan-out, the simulator's batched
+//!   forward, the planner's candidate evaluation, the Monte-Carlo noise
+//!   trials) runs as executor tasks: the steady-state serving loop creates
+//!   **zero** OS threads (asserted by `benches/serving_slo.rs` via
+//!   [`os_threads_spawned`]).
+//! * [`bounded`] — bounded blocking queue (MPSC-capable): backpressure for
+//!   the [`Prefetcher`] and the serving engine's request queue, including
+//!   the deadline-bounded batch assembly ([`Receiver::recv_batch_by`])
+//!   behind SLO-aware serving.
 //! * [`Prefetcher`] — a producer thread materializes batches ahead of the
-//!   training loop with bounded backpressure (the XLA step is the consumer).
-//! * [`parallel_for_chunks`] — fan simulation/analysis work (crossbar
-//!   column sums, dataset generation) across cores with scoped threads.
+//!   training loop with bounded backpressure.
+//!
+//! # Determinism
+//!
+//! Executor-backed [`parallel_map`] / [`parallel_for_chunks`] write results
+//! by index into pre-split chunks, so the output is **bit-identical** to
+//! the sequential loop regardless of which worker runs which chunk or in
+//! what order steals happen. [`set_parallel_mode`] can force the legacy
+//! per-call `std::thread::scope` spawning — the measured baseline of the
+//! serving bench — and both modes produce identical results by
+//! construction.
+//!
+//! # Worker count
+//!
+//! [`worker_threads`] is the one worker-count policy: the `RERAM_THREADS`
+//! environment variable when set to a positive integer (CI and benches pin
+//! parallelism deterministically with it), otherwise the platform's
+//! available parallelism, falling back to 4. The value is read **once** per
+//! process (the executor is sized from it); changing the variable after
+//! the first parallel region has no effect.
 
-use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::any::Any;
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Worker-count policy + OS-thread accounting
+// ---------------------------------------------------------------------------
+
+/// Process-wide count of OS threads this module has created (executor
+/// workers, prefetcher producers, legacy scoped spawns). The serving bench
+/// snapshots it around the steady-state loop to prove the executor path
+/// spawns nothing per batch.
+static OS_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// How many OS threads `util::pool` has created so far in this process.
+pub fn os_threads_spawned() -> usize {
+    OS_THREADS.load(Ordering::SeqCst)
+}
+
+/// Pure policy behind [`worker_threads`], split out so the `RERAM_THREADS`
+/// parsing is unit-testable without process-global env mutation: a positive
+/// integer overrides, anything else falls back.
+fn threads_policy(env: Option<&str>, fallback: usize) -> usize {
+    match env.and_then(|v| v.trim().parse::<usize>().ok()) {
+        Some(n) if n >= 1 => n,
+        _ => fallback,
+    }
+}
+
+/// The one worker-count policy shared by every parallel consumer — the
+/// batched simulator forward (`reram::sim::forward`), the host backends'
+/// intra-batch fan-out, the serving engine's worker pool and the
+/// [`executor`] itself: the `RERAM_THREADS` env override when set to a
+/// positive integer, else available hardware parallelism, falling back to
+/// 4 when the platform cannot report it. Cached on first call (the
+/// executor is sized from it), so the whole process always agrees.
+/// Callers that want fewer threads clamp the result (e.g. the serving
+/// engine caps its pool at `ServeOptions::worker_cap`); none should
+/// consult `available_parallelism` directly.
+pub fn worker_threads() -> usize {
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| {
+        let fallback = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        threads_policy(std::env::var("RERAM_THREADS").ok().as_deref(), fallback)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Persistent work-stealing executor
+// ---------------------------------------------------------------------------
+
+/// A unit of scoped work. The closure's true lifetime is the spawning
+/// scope's `'scope`; it is transmuted to `'static` for storage and the
+/// scope's wait loop guarantees it runs (or is dropped) before `'scope`
+/// ends.
+struct Task {
+    scope: Arc<ScopeState>,
+    run: Box<dyn FnOnce() + Send + 'static>,
+}
+
+/// Shared completion state of one [`Executor::scope`] call.
+struct ScopeState {
+    /// spawned-but-not-finished task count
+    pending: AtomicUsize,
+    /// event counter: bumped on every spawn *and* every completion of this
+    /// scope's tasks, so the waiter's sleep/re-scan protocol can never miss
+    /// a task parked in a deque (see [`Executor::wait_scope`])
+    events: Mutex<u64>,
+    done: Condvar,
+    /// first panic payload from any task (resumed by the scope owner)
+    panic: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+}
+
+impl ScopeState {
+    fn new() -> ScopeState {
+        ScopeState {
+            pending: AtomicUsize::new(0),
+            events: Mutex::new(0),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        }
+    }
+
+    fn bump(&self) {
+        *self.events.lock().unwrap() += 1;
+        self.done.notify_all();
+    }
+}
+
+/// Run one task, capturing its panic into the scope and signalling
+/// completion last (so `pending == 0` implies the panic slot is final).
+fn execute(task: Task) {
+    let scope = task.scope;
+    if let Err(p) = catch_unwind(AssertUnwindSafe(task.run)) {
+        let mut slot = scope.panic.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(p);
+        }
+    }
+    scope.pending.fetch_sub(1, Ordering::AcqRel);
+    scope.bump();
+}
+
+struct ExecShared {
+    /// one deque per worker; submissions are distributed round-robin and
+    /// idle workers steal from siblings' tails
+    deques: Vec<Mutex<VecDeque<Task>>>,
+    /// wake generation: bumped under the lock on every submission so a
+    /// worker that scanned empty deques can detect a racing push before it
+    /// sleeps
+    idle: Mutex<u64>,
+    wake: Condvar,
+    next: AtomicUsize,
+}
+
+impl ExecShared {
+    /// Pop from `home`'s own deque, else steal from siblings (oldest
+    /// first, round-robin from `home + 1`).
+    fn find_task(&self, home: usize) -> Option<Task> {
+        let n = self.deques.len();
+        if let Some(t) = self.deques[home % n].lock().unwrap().pop_front() {
+            return Some(t);
+        }
+        for off in 1..n {
+            let j = (home + off) % n;
+            if let Some(t) = self.deques[j].lock().unwrap().pop_back() {
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    /// Remove one queued task belonging to `scope`, newest first — the
+    /// scope owner's help-first wait steals its own work back so a scope
+    /// can always make progress even when every worker is busy (or blocked
+    /// waiting on a *nested* scope — the no-deadlock argument).
+    fn steal_scope_task(&self, scope: &Arc<ScopeState>) -> Option<Task> {
+        for dq in &self.deques {
+            let mut dq = dq.lock().unwrap();
+            if let Some(pos) = dq.iter().rposition(|t| Arc::ptr_eq(&t.scope, scope)) {
+                return dq.remove(pos);
+            }
+        }
+        None
+    }
+}
+
+thread_local! {
+    /// This thread's executor worker index (worker threads only) — used to
+    /// keep a worker's own spawns on its own deque.
+    static WORKER_HOME: RefCell<Option<usize>> = const { RefCell::new(None) };
+}
+
+/// The persistent work-stealing executor: one long-lived pool of
+/// [`worker_threads`] workers per process ([`executor`]), per-worker
+/// deques with idle-steal, and the scoped no-`'static` submission API
+/// ([`Executor::scope`]). Workers live for the whole process — the hot
+/// paths never pay thread creation.
+pub struct Executor {
+    shared: Arc<ExecShared>,
+    workers: usize,
+    /// executor worker threads created (== `workers` after construction;
+    /// never grows again — the assertion behind the serving bench's
+    /// zero-spawn gate)
+    spawned: AtomicUsize,
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executor")
+            .field("workers", &self.workers)
+            .finish_non_exhaustive()
+    }
+}
+
+/// The process-wide executor, created on first use and sized by
+/// [`worker_threads`]. Workers are never torn down.
+pub fn executor() -> &'static Executor {
+    static EXECUTOR: OnceLock<Executor> = OnceLock::new();
+    EXECUTOR.get_or_init(|| Executor::new(worker_threads()))
+}
+
+impl Executor {
+    fn new(workers: usize) -> Executor {
+        let workers = workers.max(1);
+        let shared = Arc::new(ExecShared {
+            deques: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            idle: Mutex::new(0),
+            wake: Condvar::new(),
+            next: AtomicUsize::new(0),
+        });
+        let exec = Executor {
+            shared: shared.clone(),
+            workers,
+            spawned: AtomicUsize::new(0),
+        };
+        for w in 0..workers {
+            let shared = shared.clone();
+            OS_THREADS.fetch_add(1, Ordering::SeqCst);
+            exec.spawned.fetch_add(1, Ordering::SeqCst);
+            std::thread::Builder::new()
+                .name(format!("xb-worker-{w}"))
+                .spawn(move || {
+                    WORKER_HOME.with(|h| *h.borrow_mut() = Some(w));
+                    loop {
+                        // record the wake generation BEFORE scanning: a push
+                        // that lands after the scan bumps it, so the sleep
+                        // check below cannot miss it
+                        let gen = *shared.idle.lock().unwrap();
+                        if let Some(t) = shared.find_task(w) {
+                            execute(t);
+                            continue;
+                        }
+                        let mut idle = shared.idle.lock().unwrap();
+                        while *idle == gen {
+                            idle = shared.wake.wait(idle).unwrap();
+                        }
+                    }
+                })
+                .expect("spawn executor worker");
+        }
+        exec
+    }
+
+    /// Worker-pool size (fixed for the process lifetime).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Executor worker threads created so far — stays equal to
+    /// [`Self::workers`] forever; the serving bench asserts the
+    /// process-wide [`os_threads_spawned`] counter around its steady-state
+    /// loop.
+    pub fn threads_spawned(&self) -> usize {
+        self.spawned.load(Ordering::SeqCst)
+    }
+
+    fn inject(&self, task: Task) {
+        let slot = WORKER_HOME
+            .with(|h| *h.borrow())
+            .unwrap_or_else(|| self.shared.next.fetch_add(1, Ordering::Relaxed));
+        self.shared.deques[slot % self.workers]
+            .lock()
+            .unwrap()
+            .push_back(task);
+        // bump the wake generation under the lock so sleeping workers
+        // can't miss the push
+        *self.shared.idle.lock().unwrap() += 1;
+        self.shared.wake.notify_all();
+    }
+
+    /// Scoped task submission, `std::thread::scope`-shaped: tasks may
+    /// borrow from the caller's stack (no `'static` bound); `scope` does
+    /// not return until every spawned task has finished, and the first
+    /// task panic (or the closure's own) is propagated to the caller.
+    ///
+    /// While waiting, the calling thread **helps**: it steals back tasks
+    /// belonging to its own scope and runs them inline. That keeps small
+    /// fan-outs latency-bound by the caller itself, and makes nested
+    /// scopes deadlock-free — a worker blocked in an inner `scope` drains
+    /// that inner scope's queue with its own hands.
+    pub fn scope<'env, T>(
+        &'static self,
+        f: impl for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> T,
+    ) -> T {
+        let state = Arc::new(ScopeState::new());
+        let scope = Scope {
+            exec: self,
+            state: state.clone(),
+            _scope: std::marker::PhantomData,
+            _env: std::marker::PhantomData,
+        };
+        let result = catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        // ALWAYS drain before returning/unwinding: spawned closures borrow
+        // the caller's stack and must not outlive this frame
+        self.wait_scope(&state);
+        match result {
+            Err(p) => resume_unwind(p),
+            Ok(v) => {
+                if let Some(p) = state.panic.lock().unwrap().take() {
+                    resume_unwind(p);
+                }
+                v
+            }
+        }
+    }
+
+    fn wait_scope(&self, state: &Arc<ScopeState>) {
+        loop {
+            if state.pending.load(Ordering::Acquire) == 0 {
+                return;
+            }
+            if let Some(t) = self.shared.steal_scope_task(state) {
+                execute(t);
+                continue;
+            }
+            // every remaining task is currently executing on a worker (or
+            // was spawned after our scan — spawns bump the event counter):
+            // sleep until an event, then re-scan
+            let e0 = {
+                let events = state.events.lock().unwrap();
+                *events
+            };
+            if state.pending.load(Ordering::Acquire) == 0 {
+                return;
+            }
+            if self.shared.steal_scope_task(state).is_none() {
+                let mut events = state.events.lock().unwrap();
+                while *events == e0 && state.pending.load(Ordering::Acquire) > 0 {
+                    events = state.done.wait(events).unwrap();
+                }
+            } else {
+                continue;
+            }
+        }
+    }
+}
+
+/// Handle for spawning tasks inside one [`Executor::scope`] call.
+pub struct Scope<'scope, 'env: 'scope> {
+    exec: &'static Executor,
+    state: Arc<ScopeState>,
+    _scope: std::marker::PhantomData<&'scope mut &'scope ()>,
+    _env: std::marker::PhantomData<&'env mut &'env ()>,
+}
+
+impl std::fmt::Debug for Scope<'_, '_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Scope")
+            .field("pending", &self.state.pending.load(Ordering::Relaxed))
+            .finish_non_exhaustive()
+    }
+}
+
+impl<'scope, 'env> Scope<'scope, 'env> {
+    /// Submit one task. It may run on any worker or inline on the scope
+    /// owner while it waits; panics are captured and re-thrown by `scope`.
+    pub fn spawn<F>(&'scope self, f: F)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        self.state.pending.fetch_add(1, Ordering::AcqRel);
+        let run: Box<dyn FnOnce() + Send + 'scope> = Box::new(f);
+        // SAFETY: `Executor::scope` blocks until `pending` reaches zero
+        // before its stack frame (and thus anything `f` borrows from
+        // `'scope`/`'env`) can be invalidated — including when the scope
+        // closure itself panics. The transmute only erases the lifetime
+        // bound; layout of the fat pointer is unchanged.
+        let run: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(run) };
+        self.exec.inject(Task {
+            scope: self.state.clone(),
+            run,
+        });
+        // wake the scope owner too: it may be sleeping in `wait_scope`
+        // after a nested task spawned this one
+        self.state.bump();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker-local scratch
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static SCRATCH: RefCell<HashMap<std::any::TypeId, Box<dyn Any>>> =
+        RefCell::new(HashMap::new());
+}
+
+/// Borrow this thread's scratch slot of type `T`, creating it with
+/// `Default` on first use. On persistent executor workers (and the serving
+/// engine's long-lived worker threads) the slot survives across tasks and
+/// batches — the wave-pack buffers and `SimScratch` allocations of one
+/// batch are reused by the next instead of being reallocated per call.
+///
+/// The slot is *taken out* for the duration of `f` (a nested `with_scratch`
+/// of the same `T` on the same thread simply gets a fresh value), and it is
+/// dropped if `f` panics. Callers must not assume anything about the
+/// scratch's contents beyond `T`'s own reuse contract — every user resets
+/// what it reads.
+pub fn with_scratch<T, R>(f: impl FnOnce(&mut T) -> R) -> R
+where
+    T: Default + 'static,
+{
+    let key = std::any::TypeId::of::<T>();
+    let mut v: Box<T> = SCRATCH
+        .with(|m| m.borrow_mut().remove(&key))
+        .and_then(|b| b.downcast::<T>().ok())
+        .unwrap_or_default();
+    let r = f(&mut v);
+    SCRATCH.with(|m| m.borrow_mut().insert(key, v));
+    r
+}
+
+// ---------------------------------------------------------------------------
+// Parallel-for front ends
+// ---------------------------------------------------------------------------
+
+/// Which engine the parallel-for front ends run on. The default
+/// ([`ParallelMode::Executor`]) submits chunk tasks to the persistent
+/// [`executor`]; [`ParallelMode::ScopedSpawn`] is the legacy per-call
+/// `std::thread::scope` spawning, kept as the measured baseline for
+/// `benches/serving_slo.rs` and for A/B bit-exactness checks. Results are
+/// bit-identical across modes by construction (chunking and write-by-index
+/// are shared); only thread-creation cost differs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParallelMode {
+    /// persistent work-stealing executor (the default)
+    Executor,
+    /// spawn scoped OS threads per call (legacy baseline)
+    ScopedSpawn,
+}
+
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+/// Current engine for [`parallel_map`] / [`parallel_for_chunks`].
+pub fn parallel_mode() -> ParallelMode {
+    if MODE.load(Ordering::Relaxed) == 1 {
+        ParallelMode::ScopedSpawn
+    } else {
+        ParallelMode::Executor
+    }
+}
+
+/// Switch the parallel-for engine process-wide. Benchmark/test knob —
+/// production code never calls this; callers that flip it must restore
+/// [`ParallelMode::Executor`].
+pub fn set_parallel_mode(mode: ParallelMode) {
+    MODE.store(
+        match mode {
+            ParallelMode::Executor => 0,
+            ParallelMode::ScopedSpawn => 1,
+        },
+        Ordering::Relaxed,
+    );
+}
+
+/// Parallel-for over disjoint chunks of a slice (no `'static` bound).
+/// Chunk tasks run on the persistent executor (see [`ParallelMode`]).
+pub fn parallel_for_chunks<T: Send, F>(data: &mut [T], chunk: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let chunk = chunk.max(1);
+    if data.len() <= chunk {
+        if !data.is_empty() {
+            f(0, data);
+        }
+        return;
+    }
+    match parallel_mode() {
+        ParallelMode::ScopedSpawn => {
+            std::thread::scope(|scope| {
+                for (ci, part) in data.chunks_mut(chunk).enumerate() {
+                    let f = &f;
+                    OS_THREADS.fetch_add(1, Ordering::SeqCst);
+                    scope.spawn(move || f(ci * chunk, part));
+                }
+            });
+        }
+        ParallelMode::Executor => {
+            executor().scope(|s| {
+                for (ci, part) in data.chunks_mut(chunk).enumerate() {
+                    let f = &f;
+                    s.spawn(move || f(ci * chunk, part));
+                }
+            });
+        }
+    }
+}
+
+/// Map over index ranges in parallel, collecting results in order. The
+/// result is bit-identical to `(0..n).map(f).collect()` regardless of
+/// engine, worker count or steal order (each index writes its own slot).
+pub fn parallel_map<R: Send, F>(n: usize, threads: usize, f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let per = n.div_ceil(threads);
+    match parallel_mode() {
+        ParallelMode::ScopedSpawn => {
+            std::thread::scope(|scope| {
+                for (ti, slot) in out.chunks_mut(per).enumerate() {
+                    let f = &f;
+                    OS_THREADS.fetch_add(1, Ordering::SeqCst);
+                    scope.spawn(move || {
+                        for (j, s) in slot.iter_mut().enumerate() {
+                            *s = Some(f(ti * per + j));
+                        }
+                    });
+                }
+            });
+        }
+        ParallelMode::Executor => {
+            executor().scope(|s| {
+                for (ti, slot) in out.chunks_mut(per).enumerate() {
+                    let f = &f;
+                    s.spawn(move || {
+                        for (j, sl) in slot.iter_mut().enumerate() {
+                            *sl = Some(f(ti * per + j));
+                        }
+                    });
+                }
+            });
+        }
+    }
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Bounded channel
+// ---------------------------------------------------------------------------
 
 struct Shared<T> {
     queue: Mutex<QueueState<T>>,
@@ -130,10 +684,45 @@ impl<T> Receiver<T> {
     /// `None` once closed and drained. Safe to call from several consumer
     /// threads sharing one `Arc<Receiver>` (the serving-engine workers).
     pub fn recv_batch(&self, max: usize) -> Option<Vec<T>> {
+        self.recv_batch_by(max, |_| None)
+    }
+
+    /// Deadline-bounded dynamic-batch receive — SLO-aware batch assembly.
+    ///
+    /// Blocks until at least one item is queued, then asks `deadline_of`
+    /// for the **oldest** queued item's close deadline:
+    ///
+    /// * `None` — drain immediately (plain [`Self::recv_batch`] behavior).
+    /// * `Some(deadline)` — keep the batch open, waiting for more items,
+    ///   until it holds `max` items, the queue closes, or `deadline`
+    ///   passes; then drain up to `max`.
+    ///
+    /// The serving engine derives the deadline from the oldest request's
+    /// enqueue time plus the plan's predicted service time, so a batch
+    /// closes exactly when waiting longer would endanger the SLO — not
+    /// only when `max` fills. `None` once closed and drained.
+    pub fn recv_batch_by<F>(&self, max: usize, deadline_of: F) -> Option<Vec<T>>
+    where
+        F: Fn(&T) -> Option<Instant>,
+    {
         let max = max.max(1);
         let mut q = self.shared.queue.lock().unwrap();
         loop {
             if !q.items.is_empty() {
+                if let Some(deadline) = deadline_of(&q.items[0]) {
+                    while q.items.len() < max && !q.closed {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        let (guard, _timeout) = self
+                            .shared
+                            .cond
+                            .wait_timeout(q, deadline - now)
+                            .unwrap();
+                        q = guard;
+                    }
+                }
                 let take = q.items.len().min(max);
                 let items: Vec<T> = q.items.drain(..take).collect();
                 self.shared.cond.notify_all();
@@ -175,6 +764,7 @@ impl<T: Send + 'static> Prefetcher<T> {
         F: FnMut(usize) -> T + Send + 'static,
     {
         let (tx, rx) = bounded(depth);
+        OS_THREADS.fetch_add(1, Ordering::SeqCst);
         let handle = std::thread::Builder::new()
             .name("prefetch".into())
             .spawn(move || {
@@ -207,59 +797,11 @@ impl<T: Send + 'static> Drop for Prefetcher<T> {
     }
 }
 
-/// The one worker-count policy shared by every parallel consumer — the
-/// batched simulator forward (`reram::sim::forward`), the host backends'
-/// intra-batch fan-out and the serving engine's worker pool: available
-/// hardware parallelism, falling back to 4 when the platform cannot
-/// report it. Callers that want fewer threads clamp the result (e.g. the
-/// serving engine caps its pool at 8); none should consult
-/// `available_parallelism` directly, so sim and serving always agree.
-pub fn worker_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-}
-
-/// Parallel-for over disjoint chunks of a slice, scoped (no 'static bound).
-pub fn parallel_for_chunks<T: Send, F>(data: &mut [T], chunk: usize, f: F)
-where
-    F: Fn(usize, &mut [T]) + Sync,
-{
-    let chunk = chunk.max(1);
-    std::thread::scope(|scope| {
-        for (ci, part) in data.chunks_mut(chunk).enumerate() {
-            let f = &f;
-            scope.spawn(move || f(ci * chunk, part));
-        }
-    });
-}
-
-/// Map over index ranges in parallel, collecting results in order.
-pub fn parallel_map<R: Send, F>(n: usize, threads: usize, f: F) -> Vec<R>
-where
-    F: Fn(usize) -> R + Sync,
-{
-    let threads = threads.max(1).min(n.max(1));
-    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let per = n.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for part in out.chunks_mut(per).enumerate() {
-            let (ti, slot) = part;
-            let f = &f;
-            scope.spawn(move || {
-                for (j, s) in slot.iter_mut().enumerate() {
-                    *s = Some(f(ti * per + j));
-                }
-            });
-        }
-    });
-    out.into_iter().map(|x| x.unwrap()).collect()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
 
     #[test]
     fn channel_delivers_in_order() {
@@ -339,6 +881,47 @@ mod tests {
         assert_eq!(consumer.join().unwrap(), Some(vec![7]));
     }
 
+    /// With a deadline in the future, the batch stays open until more
+    /// items arrive (closing at `max`), and an expired deadline closes it
+    /// with whatever is queued.
+    #[test]
+    fn recv_batch_by_waits_for_deadline_or_max() {
+        let (tx, rx) = bounded(16);
+        tx.send(1usize).unwrap();
+        let consumer = std::thread::spawn(move || {
+            rx.recv_batch_by(3, |_| Some(Instant::now() + Duration::from_secs(10)))
+        });
+        // the consumer holds the batch open while the deadline is far out;
+        // two more sends hit `max` and close it
+        std::thread::sleep(Duration::from_millis(30));
+        tx.send(2).unwrap();
+        tx.send(3).unwrap();
+        assert_eq!(consumer.join().unwrap(), Some(vec![1, 2, 3]));
+
+        // an already-expired deadline drains immediately, even below max
+        let (tx2, rx2) = bounded(4);
+        tx2.send(9usize).unwrap();
+        let got = rx2.recv_batch_by(3, |_| Some(Instant::now() - Duration::from_millis(1)));
+        assert_eq!(got, Some(vec![9]));
+        drop(tx2);
+    }
+
+    /// A closed queue releases a deadline-bounded batch immediately — the
+    /// shutdown path must not sit out the whole SLO window.
+    #[test]
+    fn recv_batch_by_returns_on_close() {
+        let (tx, rx) = bounded(4);
+        tx.send(1usize).unwrap();
+        let t0 = Instant::now();
+        let consumer = std::thread::spawn(move || {
+            rx.recv_batch_by(8, |_| Some(Instant::now() + Duration::from_secs(30)))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        drop(tx); // close: the open batch must drain now
+        assert_eq!(consumer.join().unwrap(), Some(vec![1]));
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
     #[test]
     fn prefetcher_yields_all_items_then_none() {
         let p = Prefetcher::spawn(10, 3, |i| i * i);
@@ -368,5 +951,117 @@ mod tests {
     fn parallel_map_preserves_order() {
         let out = parallel_map(257, 8, |i| i * 3);
         assert_eq!(out, (0..257).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    /// Executor and legacy scoped-spawn engines produce identical results
+    /// (the cross-path bit-exactness contract the serving bench asserts at
+    /// every sweep point).
+    #[test]
+    fn parallel_map_modes_agree() {
+        let want: Vec<usize> = (0..1000).map(|i| i.wrapping_mul(2654435761)).collect();
+        let a = parallel_map(1000, 7, |i| i.wrapping_mul(2654435761));
+        set_parallel_mode(ParallelMode::ScopedSpawn);
+        let b = parallel_map(1000, 7, |i| i.wrapping_mul(2654435761));
+        set_parallel_mode(ParallelMode::Executor);
+        assert_eq!(a, want);
+        assert_eq!(b, want);
+    }
+
+    /// The executor is persistent: after warmup, repeated parallel regions
+    /// create no further executor threads.
+    #[test]
+    fn executor_never_respawns_workers() {
+        let exec = executor();
+        let _ = parallel_map(64, 8, |i| i); // warm
+        let spawned = exec.threads_spawned();
+        assert_eq!(spawned, exec.workers());
+        for _ in 0..50 {
+            let _ = parallel_map(64, 8, |i| i * i);
+        }
+        assert_eq!(exec.threads_spawned(), spawned);
+    }
+
+    /// Scoped tasks may borrow the caller's stack, and steal order never
+    /// changes the result.
+    #[test]
+    fn executor_scope_borrows_locals() {
+        let data: Vec<u64> = (0..513).collect();
+        let mut out = vec![0u64; 513];
+        executor().scope(|s| {
+            for (slot, chunk) in out.chunks_mut(64).zip(data.chunks(64)) {
+                s.spawn(move || {
+                    for (o, &v) in slot.iter_mut().zip(chunk) {
+                        *o = v * v;
+                    }
+                });
+            }
+        });
+        assert_eq!(out, (0..513).map(|v| v * v).collect::<Vec<u64>>());
+    }
+
+    /// Nested scopes must not deadlock even when tasks outnumber workers:
+    /// the inner scope's owner steals its own tasks back and runs them
+    /// inline.
+    #[test]
+    fn executor_nested_scopes_make_progress() {
+        let n = executor().workers().max(2) * 4;
+        let total: usize = parallel_map(n, n, |i| {
+            // inner parallel region from inside an executor task
+            parallel_map(8, 8, move |j| i + j).into_iter().sum::<usize>()
+        })
+        .into_iter()
+        .sum();
+        let want: usize = (0..n).map(|i| (0..8).map(|j| i + j).sum::<usize>()).sum();
+        assert_eq!(total, want);
+    }
+
+    /// A panicking task propagates to the scope owner (like
+    /// `std::thread::scope`) and the pool survives to run later work.
+    #[test]
+    fn executor_propagates_task_panics_and_survives() {
+        let result = std::panic::catch_unwind(|| {
+            executor().scope(|s| {
+                for i in 0..8 {
+                    s.spawn(move || {
+                        if i == 5 {
+                            panic!("boom {i}");
+                        }
+                    });
+                }
+            });
+        });
+        assert!(result.is_err(), "task panic must reach the scope owner");
+        // the executor still works afterwards
+        assert_eq!(parallel_map(100, 4, |i| i + 1).iter().sum::<usize>(), 5050);
+    }
+
+    #[test]
+    fn with_scratch_reuses_per_thread_state() {
+        // first use: default; the pushed value survives to the next call
+        // on the same thread
+        with_scratch::<Vec<u32>, _>(|v| {
+            assert!(v.is_empty());
+            v.push(7);
+        });
+        with_scratch::<Vec<u32>, _>(|v| {
+            assert_eq!(v.as_slice(), &[7]);
+            v.clear();
+        });
+        // nested use of the same type gets a fresh value, not a RefCell
+        // panic
+        with_scratch::<Vec<u32>, _>(|outer| {
+            outer.push(1);
+            with_scratch::<Vec<u32>, _>(|inner| assert!(inner.is_empty()));
+        });
+    }
+
+    #[test]
+    fn threads_policy_parses_override() {
+        assert_eq!(threads_policy(Some("3"), 8), 3);
+        assert_eq!(threads_policy(Some(" 12 "), 8), 12);
+        // zero, junk or absent fall back
+        assert_eq!(threads_policy(Some("0"), 8), 8);
+        assert_eq!(threads_policy(Some("lots"), 8), 8);
+        assert_eq!(threads_policy(None, 8), 8);
     }
 }

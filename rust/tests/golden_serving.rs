@@ -1,0 +1,140 @@
+//! Golden test for the deploy CLI's serving/timing serializations: a
+//! fixed [`ServingRow`] pair (with and without an SLO policy) and the
+//! `timing` object of `plan.json` must serialize byte-for-byte to the
+//! committed `tests/golden/serving.json` — the rsjsonnet-style binary
+//! golden ROADMAP item 3 asks for.
+//!
+//! The golden pins the artifact *shape* (alphabetical key order of the
+//! JSON writer, the `slo` sub-object vs `null`, integer-vs-decimal
+//! number formatting) against literal inputs whose every float prints
+//! exactly. A deliberate format change regenerates the file in one
+//! reviewed place: paste the `left` value the assertion prints.
+//!
+//! A second test drives the real deploy chain — bottleneck fixture →
+//! [`CrossbarBackend::timing`] → [`SloPolicy::from_timing`] →
+//! [`ServingEngine`] → `stats.row()` → the same serializers — and checks
+//! the structure (not the timing-dependent numbers) of what the CLI
+//! would write.
+//!
+//! [`ServingRow`]: bitslice_reram::report::ServingRow
+
+use std::sync::Arc;
+
+use bitslice_reram::report::{serving_json, timing_json, PipelineTiming, ServingRow, TimingRow};
+use bitslice_reram::serve::{
+    CrossbarBackend, ServeOptions, ServingEngine, SharedBackend, SloPolicy,
+};
+use bitslice_reram::util::fixtures;
+use bitslice_reram::util::json::obj;
+
+const GOLDEN: &str = include_str!("golden/serving.json");
+
+fn serving_rows() -> Vec<ServingRow> {
+    vec![
+        ServingRow {
+            backend: "crossbar@lossless".into(),
+            max_batch: 32,
+            workers: 4,
+            requests: 1000,
+            errors: 7,
+            mean_batch: 12.5,
+            throughput_rps: 842.0,
+            latency_mean_ms: 3.2,
+            latency_p50_ms: 2.9,
+            latency_p99_ms: 9.4,
+            slo_ms: None,
+            slo_violations: 0,
+        },
+        ServingRow {
+            backend: "crossbar@slo".into(),
+            max_batch: 16,
+            workers: 2,
+            requests: 500,
+            errors: 0,
+            mean_batch: 8.0,
+            throughput_rps: 610.5,
+            latency_mean_ms: 4.25,
+            latency_p50_ms: 4.0,
+            latency_p99_ms: 11.75,
+            slo_ms: Some(12.0),
+            slo_violations: 3,
+        },
+    ]
+}
+
+fn timing_fixture() -> PipelineTiming {
+    PipelineTiming {
+        layers: vec![
+            TimingRow {
+                layer: "fc1/w".into(),
+                replicas: 1,
+                latency_cycles: 800,
+                conversion_cycles: 800,
+            },
+            TimingRow {
+                layer: "fc2/w".into(),
+                replicas: 2,
+                latency_cycles: 2000,
+                conversion_cycles: 6000,
+            },
+        ],
+    }
+}
+
+#[test]
+fn serving_and_timing_json_match_golden() {
+    let doc = obj(vec![
+        ("serving", serving_json(&serving_rows())),
+        ("timing", timing_json(&timing_fixture())),
+    ]);
+    assert_eq!(
+        doc.to_string(),
+        GOLDEN.trim_end(),
+        "serving/timing serialization drifted from tests/golden/serving.json — \
+         if the change is deliberate, commit the new serialization as the golden file"
+    );
+}
+
+/// The full chain the deploy CLI runs: plan timing prices an SLO policy,
+/// the engine serves under it, and the row/timing serializers produce a
+/// document with the golden's shape.
+#[test]
+fn deploy_chain_produces_golden_shaped_document() {
+    let stack = fixtures::bottleneck_stack(0xD0C5);
+    let xbar = CrossbarBackend::with_bits("xbar@deploy", &stack, [3, 3, 3, 1]).unwrap();
+    let timing = xbar.timing();
+    let policy = SloPolicy::from_timing(&timing, 250.0, 1e-3);
+    assert!(policy.predicted_service_ms(1) > 0.0, "fixture converts somewhere");
+    let backend: SharedBackend = Arc::new(xbar);
+    let eng = ServingEngine::start(
+        backend,
+        ServeOptions {
+            max_batch: 8,
+            workers: 2,
+            slo: Some(policy),
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    let out = eng.infer_many((0..12).map(|i| vec![i as f32 / 12.0; 64]).collect()).unwrap();
+    assert_eq!(out.len(), 12);
+    let stats = eng.shutdown();
+    let doc = obj(vec![
+        ("serving", serving_json(&[stats.row()])),
+        ("timing", timing_json(&timing)),
+    ]);
+    let back = bitslice_reram::util::json::parse(&doc.to_string()).unwrap();
+    let row = &back.get("serving").unwrap().as_arr().unwrap()[0];
+    assert_eq!(row.get("backend").unwrap().as_str(), Some("xbar@deploy"));
+    assert_eq!(row.get("requests").unwrap().as_usize(), Some(12));
+    let slo = row.get("slo").unwrap();
+    assert_eq!(slo.get("target_ms").unwrap().as_f64(), Some(250.0));
+    assert!(slo.get("violations").unwrap().as_usize().is_some());
+    let t = back.get("timing").unwrap();
+    assert!(t.get("bottleneck_layer").unwrap().as_str().is_some());
+    assert!(t.get("pipeline_fill_cycles").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(
+        t.get("layers").unwrap().as_arr().unwrap().len(),
+        timing.layers.len()
+    );
+}

@@ -1,0 +1,200 @@
+//! Serving-engine concurrency edges: racing `try_submit` against a full
+//! bounded queue, shutdown with requests still queued, and a backend
+//! that panics inside the work-stealing executor path.
+//!
+//! The gated backend (blocks inside `infer_batch` until released over a
+//! channel) makes the queue states deterministic: with `workers: 1`,
+//! `max_batch: 1` the worker is provably stuck inside the backend after
+//! one `started` handshake, so whatever the bounded queue holds at that
+//! point stays put until the gate opens.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use bitslice_reram::serve::{
+    BackendInfo, InferenceBackend, ServeOptions, ServingEngine, SharedBackend,
+};
+use bitslice_reram::tensor::Tensor;
+use bitslice_reram::util::pool::{bounded, os_threads_spawned, parallel_map, Receiver, Sender};
+
+/// Blocks inside `infer_batch` until released; answers zeros.
+struct GateBackend {
+    started: Sender<()>,
+    release: Receiver<()>,
+}
+
+impl InferenceBackend for GateBackend {
+    fn name(&self) -> &str {
+        "gate"
+    }
+    fn info(&self) -> BackendInfo {
+        BackendInfo {
+            input_dim: 1,
+            num_classes: 1,
+            native_batch: None,
+            logits: true,
+        }
+    }
+    fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
+        let _ = self.started.send(());
+        self.release.recv(); // hold the worker until released
+        Tensor::new(vec![x.shape()[0], 1], vec![0.0; x.shape()[0]])
+    }
+}
+
+/// Start a 1-worker, 1-deep engine and park its worker inside the
+/// backend; returns the engine, the parked request, and the gates.
+fn parked_engine(queue_depth: usize) -> (ServingEngine, Receiver<()>, Sender<()>) {
+    let (started_tx, started_rx) = bounded::<()>(64);
+    let (release_tx, release_rx) = bounded::<()>(64);
+    let backend: SharedBackend = Arc::new(GateBackend {
+        started: started_tx,
+        release: release_rx,
+    });
+    let eng = ServingEngine::start(
+        backend,
+        ServeOptions {
+            max_batch: 1,
+            workers: 1,
+            queue_depth,
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    (eng, started_rx, release_tx)
+}
+
+/// Many producers hammering `try_submit` against a provably full queue
+/// must all shed with `Ok(None)` — no blocking, no panic, no phantom
+/// acceptance — and the queue must accept again once drained.
+#[test]
+fn racing_try_submit_sheds_cleanly_on_a_full_queue() {
+    let (eng, started_rx, release_tx) = parked_engine(1);
+    // the worker holds r1 inside the backend, r2 fills the single slot
+    let r1 = eng.submit(vec![0.0]).unwrap();
+    started_rx.recv().expect("worker entered the backend");
+    let r2 = eng.submit(vec![0.0]).unwrap();
+    const PRODUCERS: usize = 8;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..PRODUCERS)
+            .map(|_| {
+                scope.spawn(|| {
+                    (0..50)
+                        .map(|_| eng.try_submit(vec![0.0]).unwrap())
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            for attempt in h.join().unwrap() {
+                assert!(attempt.is_none(), "full queue must shed every racer");
+            }
+        }
+    });
+    // open the gate: both accepted requests complete...
+    release_tx.send(()).unwrap();
+    release_tx.send(()).unwrap();
+    assert!(r1.wait().is_ok());
+    assert!(r2.wait().is_ok());
+    // ...and with room again a try_submit goes through
+    let r3 = eng.try_submit(vec![0.0]).unwrap().expect("drained queue accepts");
+    let _ = started_rx.recv();
+    release_tx.send(()).unwrap();
+    assert!(r3.wait().is_ok());
+    let stats = eng.shutdown();
+    assert_eq!(stats.requests, 3, "shed attempts never reach the backend");
+}
+
+/// Shutdown with requests still queued behind a stuck worker: every
+/// outstanding waiter resolves (the drain serves them), none hang.
+#[test]
+fn shutdown_drains_queued_requests_and_resolves_waiters() {
+    let (eng, started_rx, release_tx) = parked_engine(4);
+    let r1 = eng.submit(vec![0.0]).unwrap();
+    started_rx.recv().expect("worker entered the backend");
+    // these sit in the queue while shutdown begins
+    let r2 = eng.submit(vec![0.0]).unwrap();
+    let r3 = eng.submit(vec![0.0]).unwrap();
+    let shutdown = std::thread::spawn(move || eng.shutdown());
+    // the worker is released batch by batch; shutdown is blocked joining
+    // it until the queue drains
+    for _ in 0..3 {
+        release_tx.send(()).unwrap();
+    }
+    assert!(r1.wait().is_ok(), "in-flight request resolves");
+    assert!(r2.wait().is_ok(), "queued request resolves");
+    assert!(r3.wait().is_ok(), "queued request resolves");
+    let stats = shutdown.join().unwrap();
+    assert_eq!(stats.requests, 3);
+    assert_eq!(stats.errors, 0);
+}
+
+/// Panics on examples with a negative first feature, inside an executor
+/// task — the panic unwinds through `parallel_map` into the serving
+/// worker's catch.
+struct PoisonBackend;
+
+impl InferenceBackend for PoisonBackend {
+    fn name(&self) -> &str {
+        "poison"
+    }
+    fn info(&self) -> BackendInfo {
+        BackendInfo {
+            input_dim: 2,
+            num_classes: 1,
+            native_batch: None,
+            logits: true,
+        }
+    }
+    fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
+        let b = x.shape()[0];
+        let data = x.data();
+        let mut out = Vec::with_capacity(b);
+        for i in 0..b {
+            let (v0, v1) = (data[i * 2], data[i * 2 + 1]);
+            // 8 tasks on 4 lanes so the executor scope really engages,
+            // whatever batch size the engine assembled
+            let parts = parallel_map(8, 4, |k| {
+                assert!(v0 >= 0.0, "poisoned example");
+                if k == 0 {
+                    v0 + v1
+                } else {
+                    0.0
+                }
+            });
+            out.push(parts.iter().sum::<f32>());
+        }
+        Tensor::new(vec![b, 1], out)
+    }
+}
+
+/// A backend panicking inside the work-stealing path fails its batch as
+/// a per-request error; the executor's workers survive the unwind (no
+/// respawn) and keep serving later requests bit-correctly.
+#[test]
+fn backend_panic_under_work_stealing_fails_the_batch_not_the_pool() {
+    let backend: SharedBackend = Arc::new(PoisonBackend);
+    let eng = ServingEngine::start(
+        backend,
+        ServeOptions {
+            max_batch: 4,
+            workers: 1,
+            queue_depth: 16,
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    // warm the executor pool, then freeze the spawn counter
+    assert_eq!(eng.infer_many(vec![vec![1.0, 2.0]]).unwrap(), vec![vec![3.0]]);
+    let spawned = os_threads_spawned();
+    let poisoned = eng.submit(vec![-1.0, 0.0]).unwrap();
+    let err = poisoned.wait().expect_err("poisoned example must error");
+    assert!(err.to_string().contains("panicked"), "{err}");
+    // the pool and the serving worker both survived
+    let after = eng.infer_many(vec![vec![2.0, 3.0], vec![4.0, 5.0]]).unwrap();
+    assert_eq!(after, vec![vec![5.0], vec![9.0]]);
+    assert_eq!(os_threads_spawned(), spawned, "panic must not respawn workers");
+    let stats = eng.shutdown();
+    assert_eq!(stats.requests, 4);
+    assert_eq!(stats.errors, 1);
+}
